@@ -1,0 +1,36 @@
+//! Ablation: refmt (reshape/transpose fix-up) elision — DESIGN.md calls
+//! out the fix-up ops Algorithm 1 inserts on merge-dimension conflicts.
+//! This bench counts them per merged model and shows the effect of the
+//! inverse-pair elision pass on graph size and estimated cost.
+
+use netfuse::devmodel::V100;
+use netfuse::fuse;
+use netfuse::rewriter;
+use netfuse::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
+    println!("# refmt ablation: fix-up ops inserted by Algorithm 1 per merged graph");
+    println!("# model      M   nodes  refmts  after-elision  est-cost-delta");
+    for model in ["resnet", "resnext", "bert", "xlnet"] {
+        let g = rt.manifest.model(model)?.graph.clone();
+        for m in [2usize, 8, 32] {
+            let merged = fuse::merge(&g, m)?;
+            let refmts = merged.nodes.iter().filter(|n| n.kind == "refmt").count();
+            let opt = fuse::elide_refmt_pairs(&merged);
+            let refmts_after = opt.nodes.iter().filter(|n| n.kind == "refmt").count();
+            let c0 = rewriter::graph_cost(&V100, &merged, 1);
+            let c1 = rewriter::graph_cost(&V100, &opt, 1);
+            println!(
+                "{:<10} {:>3} {:>6} {:>7} {:>14} {:>14.2}%",
+                model,
+                m,
+                merged.nodes.len(),
+                refmts,
+                refmts_after,
+                (c0 - c1) / c0 * 100.0
+            );
+        }
+    }
+    Ok(())
+}

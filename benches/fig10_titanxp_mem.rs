@@ -1,0 +1,13 @@
+//! Bench: paper Figure 10 (Appendix B) — peak memory on the 12 GB
+//! TITAN Xp profile. (The paper's own Appendix B notes its allocator
+//! behaved inconsistently here; we reproduce the systematic model.)
+
+use netfuse::devmodel::TITAN_XP;
+use netfuse::figures::{self, FigOpts};
+
+fn main() -> anyhow::Result<()> {
+    let mut opts = FigOpts::default();
+    opts.device = TITAN_XP;
+    println!("{}", figures::fig7(&opts)?);
+    Ok(())
+}

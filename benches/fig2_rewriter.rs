@@ -1,0 +1,10 @@
+//! Bench: paper Figure 2 + §2.2 — the TASO-like greedy rewriter does not
+//! find the cross-model grouped-conv merge; Algorithm 1 encodes it
+//! directly. Also prints the §2.2 search-space growth argument.
+
+use netfuse::figures;
+
+fn main() -> anyhow::Result<()> {
+    println!("{}", figures::fig2()?);
+    Ok(())
+}

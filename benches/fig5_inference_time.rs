@@ -1,0 +1,20 @@
+//! Bench: paper Figure 5 — mean inference time of Sequential / Concurrent
+//! / NetFuse for a varying number of models (bs=1), on the V100 device
+//! model AND measured on CPU PJRT with the mini models.
+//!
+//! Full sweep: NETFUSE_BENCH_FULL=1 cargo bench --bench fig5_inference_time
+
+use netfuse::figures::{self, FigOpts};
+use netfuse::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("NETFUSE_BENCH_FULL").is_ok();
+    let mut opts = FigOpts::default();
+    if !full {
+        opts.m_sweep = vec![2, 8, 32];
+        opts.samples = 5;
+    }
+    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
+    println!("{}", figures::fig5(Some(&rt), &opts)?);
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Bench: paper Figure 6 — BERT inference time normalized to NETFUSE for
+//! batch sizes 1..8. Reproduces the crossover where a saturated GPU
+//! stops benefiting from merging (bs=8).
+
+use netfuse::figures::{self, FigOpts};
+use netfuse::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("NETFUSE_BENCH_FULL").is_ok();
+    let mut opts = FigOpts::default();
+    opts.models = vec!["bert".into()];
+    if !full {
+        opts.m_sweep = vec![8, 32];
+        opts.samples = 5;
+    }
+    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
+    println!("{}", figures::fig6(Some(&rt), &opts)?);
+    Ok(())
+}

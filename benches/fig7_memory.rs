@@ -1,0 +1,14 @@
+//! Bench: paper Figure 7 — peak memory (workspace + framework base) per
+//! strategy on the V100 profile, plus the measured-bytes table from the
+//! mini-model manifest. Reproduces the Concurrent OOM at 16 models.
+
+use netfuse::figures::{self, FigOpts};
+use netfuse::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let opts = FigOpts::default();
+    println!("{}", figures::fig7(&opts)?);
+    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
+    println!("{}", figures::fig7_measured(&rt, &opts)?);
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Bench: paper Figure 8 — the (Ap, Bm) hybrid sweep at 32 models:
+//! sequential (1p,32m) ... concurrent (32p,1m), plus NETFUSE.
+
+use netfuse::figures::{self, FigOpts};
+use netfuse::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("NETFUSE_BENCH_FULL").is_ok();
+    let mut opts = FigOpts::default();
+    opts.m_sweep = vec![32];
+    if !full {
+        opts.models = vec!["resnext".into(), "xlnet".into()];
+        opts.samples = 5;
+    }
+    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
+    println!("{}", figures::fig8(Some(&rt), &opts)?);
+    Ok(())
+}

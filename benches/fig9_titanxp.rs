@@ -1,0 +1,14 @@
+//! Bench: paper Figure 9 (Appendix B) — Figure 5 on the TITAN Xp device
+//! model. Gains are smaller than V100 (fewer SMs = less parallel
+//! headroom), matching the paper's observation.
+
+use netfuse::devmodel::TITAN_XP;
+use netfuse::figures::{self, FigOpts};
+
+fn main() -> anyhow::Result<()> {
+    let mut opts = FigOpts::default();
+    opts.device = TITAN_XP;
+    opts.measured = false; // CPU wall-clock is hardware-independent here
+    println!("{}", figures::fig5(None, &opts)?);
+    Ok(())
+}

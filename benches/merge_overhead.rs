@@ -1,0 +1,12 @@
+//! Bench: §4 merge overhead — Algorithm 1 + weight stacking wall time
+//! per model family and instance count. The paper reports <= 600 ms for
+//! 32 ResNeXt-50 instances (amortized offline; sub-linear in M).
+
+use netfuse::figures::{self, FigOpts};
+use netfuse::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
+    println!("{}", figures::merge_overhead(&rt, &FigOpts::default())?);
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Microbenchmarks for the coordinator's hot-path substrates: tensor
+//! concat/stack/split (the batcher inner loop), weight-bank stacking,
+//! JSON manifest parsing, and the PJRT round-trip. Used by the §Perf
+//! pass to find and track L3 bottlenecks.
+
+use netfuse::coordinator::service;
+use netfuse::fuse;
+use netfuse::runtime::Runtime;
+use netfuse::tensor::Tensor;
+use netfuse::util::bench::Bench;
+use netfuse::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(1);
+
+    // batcher inner loop: pack 32 CNN inputs on the channel axis
+    let xs: Vec<Tensor> = (0..32).map(|_| Tensor::randn(&[1, 3, 16, 16], &mut rng)).collect();
+    let refs: Vec<&Tensor> = xs.iter().collect();
+    b.run("tensor/concat-ch 32x[1,3,16,16]", || {
+        std::hint::black_box(Tensor::concat(&refs, 1).unwrap());
+    });
+    b.run("tensor/stack 32x[1,3,16,16]", || {
+        std::hint::black_box(Tensor::stack(&refs).unwrap());
+    });
+    let big = Tensor::concat(&refs, 1)?;
+    b.run("tensor/split 32 of [1,96,16,16]", || {
+        std::hint::black_box(big.split(32, 1).unwrap());
+    });
+    let batch = Tensor::stack(&refs)?;
+    b.run("tensor/swap01 [32,1,3,16,16]", || {
+        std::hint::black_box(batch.swap01().unwrap());
+    });
+
+    // manifest parse (startup path)
+    let manifest_text = std::fs::read_to_string("artifacts/manifest.json")?;
+    b.run("json/parse manifest", || {
+        std::hint::black_box(netfuse::util::json::Json::parse(&manifest_text).unwrap());
+    });
+
+    // weight-bank stacking (fleet load path)
+    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
+    let g = rt.manifest.model("resnet")?.graph.clone();
+    let banks = service::load_banks(&rt, "resnet", 8)?;
+    let merged = fuse::merge(&g, 8)?;
+    b.run("fuse/merge-weights resnet m=8", || {
+        std::hint::black_box(fuse::weights::merge_weights(&merged, &banks).unwrap());
+    });
+    b.run("fuse/merge-plan resnet m=8", || {
+        std::hint::black_box(fuse::merge(&g, 8).unwrap());
+    });
+
+    // PJRT round-trip (request hot path): one bert single inference
+    let fleet = netfuse::coordinator::Fleet::load(&rt, "bert", 2, 1)?;
+    let x = Tensor::randn(&fleet.request_shape(), &mut rng);
+    b.run("runtime/bert single run", || {
+        std::hint::black_box(fleet.single(0).run(&x).unwrap());
+    });
+    let xs2: Vec<Tensor> = (0..2).map(|_| Tensor::randn(&fleet.request_shape(), &mut rng)).collect();
+    let refs2: Vec<&Tensor> = xs2.iter().collect();
+    b.run("runtime/bert fused m=2 round", || {
+        std::hint::black_box(
+            fleet.run_round(netfuse::coordinator::StrategyKind::NetFuse, &refs2).unwrap(),
+        );
+    });
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Regenerate every table and figure in the paper's evaluation (§5 +
+//! Appendix B) and write them under `results/`.
+//!
+//! ```bash
+//! cargo run --release --example paper_figures            # full sweep
+//! cargo run --release --example paper_figures -- --quick # CI-speed
+//! ```
+//!
+//! Output files (also summarized to stdout):
+//!   results/fig2.txt            rewriter baseline vs Algorithm 1
+//!   results/fig5.txt            inference time vs #models (V100 + CPU)
+//!   results/fig6.txt            BERT batch-size sweep
+//!   results/fig7.txt            peak memory (V100)
+//!   results/fig8.txt            hybrid configurations
+//!   results/fig9.txt            inference time (TITAN Xp)
+//!   results/fig10.txt           peak memory (TITAN Xp)
+//!   results/merge_overhead.txt  §4 merge cost
+//!   results/headline.txt        §5.2 headline speedups
+
+use std::fs;
+use std::path::Path;
+
+use netfuse::devmodel::{self, sim, TITAN_XP, V100};
+use netfuse::figures::{self, FigOpts};
+use netfuse::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut opts = if quick { FigOpts::quick() } else { FigOpts::default() };
+    let rt = Runtime::open(Path::new("artifacts"))?;
+    fs::create_dir_all("results")?;
+
+    let mut save = |name: &str, body: &str| -> anyhow::Result<()> {
+        fs::write(format!("results/{name}.txt"), body)?;
+        println!("=== {name} ===\n{body}");
+        Ok(())
+    };
+
+    save("fig2", &figures::fig2()?)?;
+    save("fig5", &figures::fig5(Some(&rt), &opts)?)?;
+    save("fig6", &figures::fig6(Some(&rt), &opts)?)?;
+    {
+        let mut s = figures::fig7(&opts)?;
+        s.push('\n');
+        s.push_str(&figures::fig7_measured(&rt, &opts)?);
+        save("fig7", &s)?;
+    }
+    save("fig8", &figures::fig8(Some(&rt), &opts)?)?;
+    {
+        let mut o = opts.clone();
+        o.device = devmodel::TITAN_XP;
+        o.measured = false;
+        save("fig9", &figures::fig5(None, &o)?)?;
+        save("fig10", &figures::fig7(&o)?)?;
+    }
+    save("merge_overhead", &figures::merge_overhead(&rt, &opts)?)?;
+
+    // §5.2 headline numbers: max NETFUSE speedup per model
+    let mut headline = String::from(
+        "# §5.2 headline: max NETFUSE speedup vs best memory-fitting baseline\n\
+         # (paper: 2.6x / 3.4x / 2.7x / 3.6x on V100; ~3.0x max on TITAN Xp)\n",
+    );
+    for dev in [V100, TITAN_XP] {
+        for model in figures::MODELS {
+            let mut best = 0.0f64;
+            let mut best_m = 0;
+            for &m in &opts.m_sweep {
+                if m < 2 {
+                    continue;
+                }
+                let s = sim::speedup_vs_best_baseline(&dev, model, m, 1)?;
+                if s > best {
+                    best = s;
+                    best_m = m;
+                }
+            }
+            headline.push_str(&format!(
+                "{:<8} {:<8} {:.2}x (at M={})\n",
+                dev.name, model, best, best_m
+            ));
+        }
+    }
+    save("headline", &headline)?;
+    println!("wrote results/*.txt");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: merge two fine-tuned BERT instances with NETFUSE and show
+//! the merged executable returns exactly the per-model results.
+//!
+//! This example runs the **Pallas-kernel** lowering of the model
+//! (`*_pallas` artifacts): the batched-matmul / group-norm hot-spots in
+//! the HLO executed here come from `python/compile/kernels/*.py`.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use netfuse::coordinator::{Fleet, StrategyKind};
+use netfuse::runtime::Runtime;
+use netfuse::tensor::Tensor;
+use netfuse::util::rng::Rng;
+use netfuse::util::stats::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // A fleet = M fine-tuned instances of one architecture. `_pallas`
+    // selects the artifacts lowered through the Layer-1 Pallas kernels.
+    let m = 4;
+    let fleet = Fleet::load_with(&rt, "bert", m, 1, "_pallas")?;
+    println!("loaded bert x{m} (merged layout: {})", fleet.layout);
+
+    // one request per instance — different inputs, different weights
+    let mut rng = Rng::new(7);
+    let xs: Vec<Tensor> = (0..m)
+        .map(|_| Tensor::randn(&fleet.request_shape(), &mut rng))
+        .collect();
+    let refs: Vec<&Tensor> = xs.iter().collect();
+
+    // warm both executables (first call pays compilation/upload costs)
+    fleet.run_round(StrategyKind::Sequential, &refs)?;
+    fleet.run_round(StrategyKind::NetFuse, &refs)?;
+
+    // baseline: each instance separately
+    let t = std::time::Instant::now();
+    let singles = fleet.run_round(StrategyKind::Sequential, &refs)?;
+    let t_seq = t.elapsed().as_secs_f64();
+
+    // NETFUSE: one merged executable
+    let t = std::time::Instant::now();
+    let fused = fleet.run_round(StrategyKind::NetFuse, &refs)?;
+    let t_nf = t.elapsed().as_secs_f64();
+
+    for (i, (a, b)) in singles.iter().zip(&fused).enumerate() {
+        let err = a.max_abs_diff(b)?;
+        println!("instance {i}: max |single - fused| = {err:.2e}");
+        assert!(err < 1e-3, "merged outputs must match per-model outputs");
+    }
+    println!(
+        "sequential: {}   netfuse: {}   (one warm round; see benches for statistics)",
+        fmt_secs(t_seq),
+        fmt_secs(t_nf)
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,252 @@
+"""AOT pipeline: author -> merge -> lower -> artifacts/.
+
+Runs ONCE at build time (``make artifacts``); Python is never on the
+request path. For every (model, M, batch-size, backend) variant the
+experiments need, this script:
+
+  1. builds the single-instance graph (models/*),
+  2. runs NETFUSE Algorithm 1 for the merged variants (netfuse.merge),
+  3. lowers the interpreter's JAX function to **HLO text** — not
+     ``.serialize()``: the image's xla_extension 0.5.1 rejects jax>=0.5
+     protos with 64-bit instruction ids; the HLO text parser reassigns
+     ids and round-trips cleanly (see /opt/xla-example/README.md),
+  4. writes per-instance weight banks (``weights/<model>.nft``), golden
+     input/output vectors for the Rust integration tests
+     (``golden/*.nft``), and a ``manifest.json`` describing every
+     executable's signature so the Rust runtime can load and drive them.
+
+Artifact inventory (DESIGN.md §3):
+  singles   4 models x bs in {1,2,4,8}            (Sequential/Concurrent/Hybrid)
+  merged    4 models x M in {2,4,8,16,32}, bs=1   (Fig 5/7/8/9/10)
+  bert+bs   bert merged, bs in {2,4,8} x M        (Fig 6)
+  pallas    bert & resnet, single + M=4, bs=1     (kernel-integration path)
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import models, netfuse, weights
+from .graphir import Graph
+from .model import Interpreter, input_shape, pack_inputs
+
+MODELS = ("resnet", "resnext", "bert", "xlnet")
+M_SWEEP = (2, 4, 8, 16, 32)
+BS_SWEEP = (1, 2, 4, 8)
+MAX_INSTANCES = 32
+GOLDEN_M = 2
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_graph(g: Graph, bs: int, backend: str) -> tuple[str, Interpreter,
+                                                          tuple, tuple]:
+    interp = Interpreter(g, backend)
+    ishape = input_shape(g, bs)
+    x_spec = jax.ShapeDtypeStruct(ishape, jnp.float32)
+    p_specs = []
+    wshapes = {}
+    for n in g.nodes:
+        for wname in sorted(n.weights):
+            wshapes[f"{n.id}.{wname}"] = tuple(n.weights[wname])
+    for key in interp.order:
+        p_specs.append(jax.ShapeDtypeStruct(wshapes[key], jnp.float32))
+    lowered = jax.jit(interp).lower(x_spec, *p_specs)
+    oshape = tuple(lowered.out_info.shape)
+    return to_hlo_text(lowered), interp, ishape, oshape
+
+
+def act_bytes(g: Graph, bs: int) -> int:
+    """Peak-ish activation workspace: sum of all intermediate tensors
+    (upper bound; the paper's 'inference workspace')."""
+    interp = Interpreter(g, "xla")
+    sizes = []
+
+    x = jnp.zeros(input_shape(g, bs), jnp.float32)
+    banks = {}
+    for n in g.nodes:
+        for wname in sorted(n.weights):
+            banks[f"{n.id}.{wname}"] = jnp.zeros(n.weights[wname], jnp.float32)
+    env = {"input": x}
+    for n in g.nodes:
+        ins = [env[s] for s in n.inputs]
+        w = [banks[f"{n.id}.{k}"] for k in sorted(n.weights)]
+        env[n.id] = jax.eval_shape(
+            lambda *a: interp._eval(n, list(a[:len(ins)]), list(a[len(ins):])),
+            *ins, *w)
+        # keep shapes abstract downstream
+        env[n.id] = jax.ShapeDtypeStruct(env[n.id].shape, env[n.id].dtype)
+        sizes.append(4 * int(np.prod(env[n.id].shape)))
+    return int(sum(sizes))
+
+
+def weight_bytes(g: Graph) -> int:
+    return 4 * sum(int(np.prod(s)) for n in g.nodes
+                   for s in n.weights.values())
+
+
+def artifact_entry(name, g, bs, backend, hlo_path, interp, ishape, oshape):
+    return {
+        "name": name,
+        "model": g.name.split("_x")[0],
+        "m": g.merged_m,
+        "bs": bs,
+        "backend": backend,
+        "hlo": os.path.basename(hlo_path),
+        "layout": g.layout,
+        "input": {"shape": list(ishape), "dtype": "f32"},
+        "output": {"shape": list(oshape), "dtype": "f32"},
+        "params": [{"key": k} for k in interp.order],
+        "mem": {"weights_bytes": weight_bytes(g),
+                "act_bytes": act_bytes(g, bs)},
+        "graph": g.to_json(),
+    }
+
+
+def build_all(out_dir: str, quick: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+
+    m_sweep = (2, 4) if quick else M_SWEEP
+    bs_sweep = (1, 2) if quick else BS_SWEEP
+    max_inst = max(m_sweep)
+
+    manifest = {"version": 1, "artifacts": [], "models": {}}
+
+    for mname in MODELS:
+        g = models.build(mname)
+        banks = weights.init_banks(g, max_inst)
+
+        # ---- weight bank file (all instances, keyed m{i}/node.weight)
+        bank_file = os.path.join(out_dir, "weights", f"{mname}.nft")
+        flat = {}
+        for i, bank in enumerate(banks):
+            for k, v in bank.items():
+                flat[f"m{i}/{k}"] = v
+        weights.write_nft(bank_file, flat)
+
+        manifest["models"][mname] = {
+            "graph": g.to_json(),
+            "instances": max_inst,
+            "weights": f"weights/{mname}.nft",
+        }
+
+        # ---- single-model executables per batch size
+        for bs in bs_sweep:
+            name = f"{mname}_single_bs{bs}"
+            hlo, interp, ishape, oshape = lower_graph(g, bs, "xla")
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(hlo)
+            manifest["artifacts"].append(
+                artifact_entry(name, g, bs, "xla", path, interp, ishape,
+                               oshape))
+            print(f"  {name}: {len(hlo)} chars")
+
+        # ---- merged executables (bs=1; bert also sweeps bs for Fig 6)
+        for m in m_sweep:
+            mg = netfuse.merge(g, m)
+            for bs in (bs_sweep if mname == "bert" else (1,)):
+                name = f"{mname}_fused_m{m}_bs{bs}"
+                hlo, interp, ishape, oshape = lower_graph(mg, bs, "xla")
+                path = os.path.join(out_dir, f"{name}.hlo.txt")
+                with open(path, "w") as f:
+                    f.write(hlo)
+                manifest["artifacts"].append(
+                    artifact_entry(name, mg, bs, "xla", path, interp,
+                                   ishape, oshape))
+            print(f"  {mname} fused m={m}")
+
+        # ---- pallas-kernel variants (the L1 path the quickstart runs)
+        if mname in ("resnet", "bert"):
+            for g2, tag in ((g, "single"), (netfuse.merge(g, 4), "fused_m4")):
+                name = f"{mname}_{tag}_bs1_pallas"
+                hlo, interp, ishape, oshape = lower_graph(g2, 1, "pallas")
+                path = os.path.join(out_dir, f"{name}.hlo.txt")
+                with open(path, "w") as f:
+                    f.write(hlo)
+                manifest["artifacts"].append(
+                    artifact_entry(name, g2, 1, "pallas", path, interp,
+                                   ishape, oshape))
+            print(f"  {mname} pallas variants")
+
+        # ---- golden vectors for the rust integration tests
+        write_golden(out_dir, mname, g, banks)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+    # build stamp so `make artifacts` can skip when inputs are unchanged
+    with open(os.path.join(out_dir, ".stamp"), "w") as f:
+        f.write(source_digest())
+
+
+def write_golden(out_dir, mname, g, banks):
+    """Fixed-seed inputs + single & merged (M=2) outputs for rust tests."""
+    m, bs = GOLDEN_M, 1
+    mg = netfuse.merge(g, m)
+    mw = netfuse.merge_weights(g, mg, banks[:m])
+    single = Interpreter(g, "xla")
+    merged = Interpreter(mg, "xla")
+    rng = np.random.default_rng(12345)
+    xs = [rng.normal(size=(bs, *g.input_shape)).astype(np.float32)
+          for _ in range(m)]
+    tensors = {}
+    for i, x in enumerate(xs):
+        tensors[f"x{i}"] = x
+        y = single(jnp.asarray(x),
+                   *[jnp.asarray(banks[i][k]) for k in single.order])
+        tensors[f"y{i}"] = np.asarray(y)
+    xm = pack_inputs(xs, mg.layout)
+    ym = merged(xm, *[jnp.asarray(mw[k]) for k in merged.order])
+    tensors["x_fused"] = np.asarray(xm)
+    tensors["y_fused"] = np.asarray(ym)
+    weights.write_nft(
+        os.path.join(out_dir, "golden", f"{mname}.nft"), tensors)
+
+
+def source_digest() -> str:
+    h = hashlib.sha256()
+    root = os.path.dirname(os.path.abspath(__file__))
+    for dirpath, _, files in sorted(os.walk(root)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(dirpath, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for fast iteration")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    stamp = os.path.join(out, ".stamp")
+    if os.path.exists(stamp):
+        with open(stamp) as f:
+            if f.read() == source_digest():
+                print("artifacts up to date")
+                return
+    build_all(out, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,272 @@
+"""Declarative graph IR for NETFUSE.
+
+A DNN is a DAG of op nodes. This IR is the interchange format between the
+Python author/merge/lowering path and the Rust merge planner
+(``rust/src/graph``): both sides round-trip the same JSON.
+
+The IR deliberately mirrors the subset of TorchScript graphs the paper's
+implementation manipulates: op kind + attributes + weight slots, and the
+*merge dimension* classification of Algorithm 1 (Batch / Channel /
+DontCare).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------------------
+# Merge-dimension classification (paper §3, Algorithm 1 lines 12-16).
+# ---------------------------------------------------------------------------
+
+BATCH = "Batch"
+CHANNEL = "Channel"
+DONTCARE = "DontCare"
+
+#: op kind -> merge dimension required when fusing M instances.
+MERGE_DIM = {
+    "dense": BATCH,          # matmul -> batch matmul (concat on batch)
+    "attention": BATCH,      # composed of matmuls -> batch matmuls
+    "xl_attention": BATCH,
+    "conv2d": CHANNEL,       # conv -> grouped conv (concat on channel)
+    "layernorm": CHANNEL,    # layer norm -> group norm
+    "batchnorm": CHANNEL,    # per-channel already
+    "groupnorm": CHANNEL,
+    # non-trainable ops merge seamlessly (paper §3.1)
+    "relu": DONTCARE,
+    "gelu": DONTCARE,
+    "add": DONTCARE,
+    "maxpool2d": DONTCARE,
+    "global_avgpool": DONTCARE,
+    "flatten": DONTCARE,
+    "refmt": DONTCARE,       # layout fix-up inserted by Algorithm 1
+    "slice_m": DONTCARE,     # per-instance slice (unmerged heads, §6)
+    "stack_m": DONTCARE,     # recombine per-instance head outputs
+}
+
+#: ops that carry weights (everything else is non-trainable).
+TRAINABLE = {
+    "conv2d", "dense", "layernorm", "batchnorm", "groupnorm",
+    "attention", "xl_attention",
+}
+
+ALL_KINDS = sorted(MERGE_DIM)
+
+
+@dataclass
+class Node:
+    """One operation in the graph.
+
+    id      -- unique string id within the graph.
+    kind    -- one of ALL_KINDS.
+    inputs  -- ids of producer nodes, or the special id "input".
+    attrs   -- kind-specific attributes (ints/floats/strings/bools).
+    weights -- ordered {name: shape} of this node's parameters.
+    mergeable -- False for task-specific layers left un-merged (paper §6:
+                 common backbones are merged, customized heads are not).
+    """
+
+    id: str
+    kind: str
+    inputs: list[str]
+    attrs: dict = field(default_factory=dict)
+    weights: dict = field(default_factory=dict)
+    mergeable: bool = True
+
+    def to_json(self) -> dict:
+        return {
+            "id": self.id,
+            "kind": self.kind,
+            "inputs": list(self.inputs),
+            "attrs": dict(self.attrs),
+            "weights": {k: list(v) for k, v in self.weights.items()},
+            "mergeable": self.mergeable,
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "Node":
+        return Node(
+            id=d["id"],
+            kind=d["kind"],
+            inputs=list(d["inputs"]),
+            attrs=dict(d.get("attrs", {})),
+            weights={k: tuple(v) for k, v in d.get("weights", {}).items()},
+            mergeable=bool(d.get("mergeable", True)),
+        )
+
+
+@dataclass
+class Graph:
+    """A DNN as a topologically ordered list of nodes.
+
+    input_shape excludes the batch dimension: for CNNs (C, H, W), for
+    transformers (S, H). ``layout`` records how a *merged* graph packs M
+    instances: "single" (unmerged), "channel" ([bs, M*C, ...]) or "batch"
+    ([M, bs, ...]).
+    """
+
+    name: str
+    input_shape: tuple
+    nodes: list[Node]
+    output: str
+    merged_m: int = 1
+    layout: str = "single"
+
+    def node(self, nid: str) -> Node:
+        for n in self.nodes:
+            if n.id == nid:
+                return n
+        raise KeyError(f"no node {nid!r} in graph {self.name!r}")
+
+    def consumers(self, nid: str) -> list[Node]:
+        return [n for n in self.nodes if nid in n.inputs]
+
+    def validate(self) -> None:
+        """Structural checks shared with the Rust side."""
+        seen: set[str] = set()
+        if not self.nodes:
+            raise ValueError("empty graph")
+        for n in self.nodes:
+            if n.id in seen or n.id == "input":
+                raise ValueError(f"duplicate/reserved node id {n.id!r}")
+            if n.kind not in MERGE_DIM:
+                raise ValueError(f"unknown op kind {n.kind!r}")
+            for src in n.inputs:
+                if src != "input" and src not in seen:
+                    raise ValueError(
+                        f"node {n.id!r} uses {src!r} before definition "
+                        "(graph must be topologically ordered)")
+            if n.kind in TRAINABLE and n.kind != "refmt" and not n.weights:
+                raise ValueError(f"trainable node {n.id!r} has no weights")
+            if n.kind not in TRAINABLE and n.weights:
+                raise ValueError(f"non-trainable node {n.id!r} has weights")
+            seen.add(n.id)
+        if self.output not in seen:
+            raise ValueError(f"output {self.output!r} is not a node")
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "input_shape": list(self.input_shape),
+            "nodes": [n.to_json() for n in self.nodes],
+            "output": self.output,
+            "merged_m": self.merged_m,
+            "layout": self.layout,
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "Graph":
+        return Graph(
+            name=d["name"],
+            input_shape=tuple(d["input_shape"]),
+            nodes=[Node.from_json(n) for n in d["nodes"]],
+            output=d["output"],
+            merged_m=int(d.get("merged_m", 1)),
+            layout=d.get("layout", "single"),
+        )
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_json(), indent=1)
+
+    @staticmethod
+    def loads(s: str) -> "Graph":
+        return Graph.from_json(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# Builder helper
+# ---------------------------------------------------------------------------
+
+class GraphBuilder:
+    """Tiny fluent builder used by python/compile/models/*."""
+
+    def __init__(self, name: str, input_shape: tuple):
+        self.name = name
+        self.input_shape = tuple(input_shape)
+        self.nodes: list[Node] = []
+        self._n = 0
+
+    def fresh(self, kind: str) -> str:
+        self._n += 1
+        return f"{kind}_{self._n}"
+
+    def add(self, kind: str, inputs, attrs=None, weights=None,
+            mergeable: bool = True, id: str | None = None) -> str:
+        if isinstance(inputs, str):
+            inputs = [inputs]
+        nid = id or self.fresh(kind)
+        self.nodes.append(Node(
+            id=nid, kind=kind, inputs=list(inputs),
+            attrs=dict(attrs or {}), weights=dict(weights or {}),
+            mergeable=mergeable,
+        ))
+        return nid
+
+    # -- trainable ops ------------------------------------------------------
+    def conv2d(self, x, cin, cout, k, stride=1, padding=None, groups=1,
+               mergeable=True):
+        if padding is None:
+            padding = k // 2
+        return self.add(
+            "conv2d", x,
+            attrs={"cin": cin, "cout": cout, "k": k, "stride": stride,
+                   "padding": padding, "groups": groups},
+            weights={"w": (cout, cin // groups, k, k), "b": (cout,)},
+            mergeable=mergeable)
+
+    def dense(self, x, fin, fout, mergeable=True):
+        return self.add("dense", x, attrs={"fin": fin, "fout": fout},
+                        weights={"w": (fin, fout), "b": (fout,)},
+                        mergeable=mergeable)
+
+    def layernorm(self, x, dim):
+        return self.add("layernorm", x, attrs={"dim": dim},
+                        weights={"gamma": (dim,), "beta": (dim,)})
+
+    def batchnorm(self, x, c):
+        return self.add("batchnorm", x, attrs={"c": c},
+                        weights={"gamma": (c,), "beta": (c,),
+                                 "mean": (c,), "var": (c,)})
+
+    def groupnorm(self, x, c, groups):
+        return self.add("groupnorm", x, attrs={"c": c, "groups": groups},
+                        weights={"gamma": (c,), "beta": (c,)})
+
+    def attention(self, x, hidden, heads):
+        w = {"wq": (hidden, hidden), "wk": (hidden, hidden),
+             "wv": (hidden, hidden), "wo": (hidden, hidden)}
+        return self.add("attention", x,
+                        attrs={"hidden": hidden, "heads": heads}, weights=w)
+
+    def xl_attention(self, x, hidden, heads):
+        # Transformer-XL style: extra relative-position projection and the
+        # two learned bias vectors (u: content bias, v: position bias).
+        w = {"wq": (hidden, hidden), "wk": (hidden, hidden),
+             "wv": (hidden, hidden), "wo": (hidden, hidden),
+             "wr": (hidden, hidden), "u": (hidden,), "v": (hidden,)}
+        return self.add("xl_attention", x,
+                        attrs={"hidden": hidden, "heads": heads}, weights=w)
+
+    # -- non-trainable ops --------------------------------------------------
+    def relu(self, x):
+        return self.add("relu", x)
+
+    def gelu(self, x):
+        return self.add("gelu", x)
+
+    def residual(self, x, y):
+        return self.add("add", [x, y])
+
+    def maxpool2d(self, x, k=2, stride=2):
+        return self.add("maxpool2d", x, attrs={"k": k, "stride": stride})
+
+    def global_avgpool(self, x):
+        return self.add("global_avgpool", x)
+
+    def flatten(self, x):
+        return self.add("flatten", x)
+
+    def build(self, output: str) -> Graph:
+        g = Graph(self.name, self.input_shape, self.nodes, output)
+        g.validate()
+        return g

@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels (interpret mode) + pure-jnp oracles."""
+
+from .batch_matmul import batch_matmul
+from .grouped_conv import grouped_conv
+from .group_norm import group_norm
+from . import ref

@@ -1,0 +1,57 @@
+"""Pallas batch-matmul kernel — the merged fully-connected hot path.
+
+Merging M dense layers turns M (N,K)x(K,F) GEMMs into one batched GEMM
+with a leading pair axis (paper §3.1, "Matrix multiplication"). The grid
+iterates over (pair, F-tile); each grid step keeps one pair's K panel
+resident in VMEM and contracts on the MXU.
+
+TPU mapping (DESIGN.md §6): the B axis is embarrassingly parallel (zero
+cross-pair traffic — that is the *input-weight locality* the paper needs),
+the (N, K, F) tile is chosen so x-tile + w-tile + out-tile fit VMEM, and
+the dot is MXU-shaped (pad N/K/F up to multiples of 128 at real scale).
+Runs under interpret=True here: CPU PJRT cannot execute Mosaic calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref):
+    # one (pair, F-tile) step: [1,N,K] @ [1,K,Ft] + [1,Ft]
+    x = x_ref[0]
+    w = w_ref[0]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    o_ref[0] = acc + b_ref[0][None, :]
+
+
+def _pick_ftile(f: int) -> int:
+    # largest power-of-two tile <= 128 dividing F; keeps the MXU busy at
+    # real scale without wasting VMEM on padding at mini scale.
+    t = 1
+    while t * 2 <= min(f, 128) and f % (t * 2) == 0:
+        t *= 2
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def batch_matmul(x, w, b, interpret: bool = True):
+    """x: [B, N, K], w: [B, K, F], b: [B, F] -> [B, N, F]."""
+    bsz, n, k = x.shape
+    _, _, f = w.shape
+    ft = _pick_ftile(f)
+    grid = (bsz, f // ft)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n, k), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, k, ft), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, ft), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, n, ft), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n, f), x.dtype),
+        interpret=interpret,
+    )(x, w, b)

@@ -1,0 +1,72 @@
+"""Pallas grouped-convolution kernel — the merged conv hot path.
+
+Merging M convolutions of G groups each yields one grouped convolution of
+M*G groups (paper §3.1 + Appendix A). The grid iterates over groups: each
+grid step loads exactly one group's input slab and filter block into VMEM
+and never touches another group's data — the TPU expression of the
+paper's "isolated input-weight pairs".
+
+The conv itself is computed as shift-and-matmul: for each of the k*k
+filter taps we take the strided window of the (pre-padded) input and
+contract [Cg] x [Co, Cg] on the MXU, accumulating in f32. This avoids
+im2col's VMEM blow-up and keeps every FLOP on the systolic array; the
+k*k loop is unrolled at trace time (k is 1 or 3 everywhere in the model
+zoo).
+
+Runs under interpret=True (CPU PJRT cannot run Mosaic custom-calls);
+real-TPU VMEM/MXU estimates are in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(k: int, stride: int, ho: int, wo: int):
+    def kernel(x_ref, w_ref, b_ref, o_ref):
+        x = x_ref[...]          # [N, Cg, Hp, Wp]   one group's inputs
+        w = w_ref[...]          # [Co, Cg, k, k]    one group's filters
+        acc = jnp.zeros(o_ref.shape, jnp.float32)
+        for ki in range(k):
+            for kj in range(k):
+                # strided window aligned with output pixels
+                win = jax.lax.slice(
+                    x, (0, 0, ki, kj),
+                    (x.shape[0], x.shape[1],
+                     ki + (ho - 1) * stride + 1, kj + (wo - 1) * stride + 1),
+                    (1, 1, stride, stride))      # [N, Cg, Ho, Wo]
+                acc = acc + jnp.einsum(
+                    "nchw,oc->nohw", win, w[:, :, ki, kj],
+                    preferred_element_type=jnp.float32)
+        o_ref[...] = acc + b_ref[...][None, :, None, None]
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "padding", "groups", "interpret"))
+def grouped_conv(x, w, b, stride=1, padding=0, groups=1,
+                 interpret: bool = True):
+    """NCHW grouped conv. x: [N, G*Cg, H, W], w: [G*Co, Cg, k, k]."""
+    n, c, h, wd = x.shape
+    co_total, cg, k, _ = w.shape
+    assert c == groups * cg, (c, groups, cg)
+    co = co_total // groups
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    hp, wp = h + 2 * padding, wd + 2 * padding
+    ho = (hp - k) // stride + 1
+    wo = (wp - k) // stride + 1
+    kern = _make_kernel(k, stride, ho, wo)
+    return pl.pallas_call(
+        kern,
+        grid=(groups,),
+        in_specs=[
+            pl.BlockSpec((n, cg, hp, wp), lambda g: (0, g, 0, 0)),
+            pl.BlockSpec((co, cg, k, k), lambda g: (g, 0, 0, 0)),
+            pl.BlockSpec((co,), lambda g: (g,)),
+        ],
+        out_specs=pl.BlockSpec((n, co, ho, wo), lambda g: (0, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, co_total, ho, wo), x.dtype),
+        interpret=interpret,
+    )(xp, w, b)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest/hypothesis sweep shapes and
+assert the Pallas implementations (interpret mode) match to float32
+tolerance. They are also the "xla" kernel backend used by the fast figure
+artifacts (DESIGN.md): plain lax ops that XLA CPU fuses natively.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def batch_matmul_ref(x, w, b=None):
+    """x: [B, N, K], w: [B, K, F], b: [B, F] -> [B, N, F]."""
+    y = jnp.einsum("bnk,bkf->bnf", x, w)
+    if b is not None:
+        y = y + b[:, None, :]
+    return y
+
+
+def grouped_conv_ref(x, w, b=None, stride=1, padding=0, groups=1):
+    """NCHW grouped convolution.
+
+    x: [N, G*Cg, H, W], w: [G*Co, Cg, k, k] -> [N, G*Co, Ho, Wo].
+    """
+    y = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups,
+    )
+    if b is not None:
+        y = y + b[None, :, None, None]
+    return y
+
+
+def group_norm_ref(x, gamma, beta, groups, eps=1e-5):
+    """Row-wise group normalization on the last axis.
+
+    x: [N, G*Cg]; each (row, group) chunk of Cg channels is normalized
+    independently then affine-transformed. With G = M this is exactly M
+    merged layer norms (paper Sec 3.1).
+    """
+    n, c = x.shape
+    cg = c // groups
+    xg = x.reshape(n, groups, cg)
+    mu = xg.mean(axis=-1, keepdims=True)
+    var = ((xg - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xg - mu) / jnp.sqrt(var + eps)
+    return y.reshape(n, c) * gamma[None, :] + beta[None, :]

@@ -1,0 +1,289 @@
+"""Layer-2: graph-IR -> JAX interpreter.
+
+Turns a (single or merged) :class:`graphir.Graph` into a JAX function
+``fn(x, *params) -> y`` suitable for ``jax.jit(...).lower(...)``. The
+conv / matmul / norm hot-spots dispatch to the Layer-1 Pallas kernels
+(``backend="pallas"``) or to the pure-jnp oracles (``backend="xla"``,
+used by the fast figure artifacts — see DESIGN.md §3).
+
+Tensor conventions
+------------------
+single graphs      CNN: [bs, C, H, W] (NCHW);  seq: [bs, S, H]
+channel packing    CNN: [bs, M*C, H, W];        seq: [bs, S, M*H]
+batch packing      [M, bs, ...] (new leading instance axis)
+
+``refmt`` nodes translate between packings (rank-4/5 tensors are NCHW-ish
+with channel axis 1; rank-2/3 tensors are channel-last). ``slice_m`` /
+``dense(mergeable=False)`` / ``stack_m`` implement the per-instance heads
+the merge leaves untouched (paper §6).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .graphir import Graph, Node
+from .kernels import batch_matmul, grouped_conv, group_norm
+from .kernels import ref
+
+EPS = 1e-5
+
+
+def param_order(g: Graph) -> list[str]:
+    """Deterministic parameter ordering shared with the Rust runtime:
+    topological node order, then sorted weight names within a node."""
+    out = []
+    for n in g.nodes:
+        for wname in sorted(n.weights):
+            out.append(f"{n.id}.{wname}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# packing helpers (shared by tests and aot)
+# ---------------------------------------------------------------------------
+
+def pack_inputs(xs, layout: str):
+    """Stack M per-instance inputs into the merged graph's input tensor."""
+    xs = [jnp.asarray(x) for x in xs]
+    if layout == "channel":        # CNN: concat on channel axis (NCHW)
+        return jnp.concatenate(xs, axis=1)
+    if layout == "batch":          # seq: new leading instance axis
+        return jnp.stack(xs, axis=0)
+    raise ValueError(f"bad layout {layout!r}")
+
+
+def unpack_outputs(y, m: int, layout_out: str = "batch"):
+    """Split the merged output back into M per-instance outputs."""
+    if layout_out == "batch":
+        return [y[i] for i in range(m)]
+    c = y.shape[1] // m
+    return [y[:, i * c:(i + 1) * c] for i in range(m)]
+
+
+# ---------------------------------------------------------------------------
+# interpreter
+# ---------------------------------------------------------------------------
+
+class Interpreter:
+    def __init__(self, g: Graph, backend: str = "xla"):
+        if backend not in ("xla", "pallas"):
+            raise ValueError(f"bad backend {backend!r}")
+        g.validate()
+        self.g = g
+        self.backend = backend
+        self.order = param_order(g)
+
+    # -- primitive dispatch ---------------------------------------------------
+
+    def _bmm(self, x3, w3, b2):
+        if self.backend == "pallas":
+            return batch_matmul(x3, w3, b2)
+        return ref.batch_matmul_ref(x3, w3, b2)
+
+    def _dense2d(self, x2, w, b):
+        return self._bmm(x2[None], w[None], b[None])[0]
+
+    def _conv(self, x, w, b, stride, padding, groups):
+        if self.backend == "pallas":
+            return grouped_conv(x, w, b, stride=stride, padding=padding,
+                                groups=groups)
+        return ref.grouped_conv_ref(x, w, b, stride=stride, padding=padding,
+                                    groups=groups)
+
+    def _gn_rows(self, x2, gamma, beta, groups):
+        if self.backend == "pallas":
+            return group_norm(x2, gamma, beta, groups)
+        return ref.group_norm_ref(x2, gamma, beta, groups)
+
+    # -- op implementations -----------------------------------------------------
+
+    def _mm_any(self, x, w, b):
+        """Matmul on the last axis; ``w`` rank-3 means merged (bmm over the
+        leading instance axis), rank-2 means single."""
+        if w.ndim == 3:
+            lead, mid = x.shape[0], x.shape[1:-1]
+            x3 = x.reshape(lead, -1, x.shape[-1])
+            y = self._bmm(x3, w, b)
+            return y.reshape(lead, *mid, w.shape[-1])
+        mid = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        y = self._dense2d(x2, w, b)
+        return y.reshape(*mid, w.shape[-1])
+
+    def _proj(self, x, w):
+        """Bias-free hidden projection (attention q/k/v/o)."""
+        zeros = jnp.zeros(
+            (w.shape[0], w.shape[-1]) if w.ndim == 3 else (w.shape[-1],),
+            x.dtype)
+        return self._mm_any(x, w, zeros)
+
+    def _op_layernorm(self, n: Node, x, gamma, beta):
+        mid = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        y = self._gn_rows(x2, gamma, beta, groups=1)
+        return y.reshape(*mid, x.shape[-1])
+
+    def _op_groupnorm(self, n: Node, x, gamma, beta):
+        groups = n.attrs["groups"]
+        mid = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        y = self._gn_rows(x2, gamma, beta, groups=groups)
+        return y.reshape(*mid, x.shape[-1])
+
+    def _op_batchnorm(self, n: Node, x, gamma, beta, mean, var):
+        # inference-mode BN over NCHW channel axis 1
+        sh = (1, -1, 1, 1)
+        inv = jax.lax.rsqrt(var + EPS)
+        return (x - mean.reshape(sh)) * (inv * gamma).reshape(sh) \
+            + beta.reshape(sh)
+
+    def _op_attention(self, n: Node, x, wk, wo, wq, wv):
+        heads = n.attrs["heads"]
+        q, k, v = self._proj(x, wq), self._proj(x, wk), self._proj(x, wv)
+        *lead, s, h = q.shape
+        hd = h // heads
+        spl = lambda t: t.reshape(*lead, s, heads, hd)
+        scores = jnp.einsum("...snd,...tnd->...nst", spl(q), spl(k)) \
+            / math.sqrt(hd)
+        attn = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("...nst,...tnd->...snd", attn, spl(v))
+        return self._proj(out.reshape(*lead, s, h), wo)
+
+    def _rel_pos_emb(self, s: int, h: int):
+        # deterministic sinusoidal relative-position table [S, H]
+        pos = jnp.arange(s)[:, None].astype(jnp.float32)
+        i = jnp.arange(h // 2)[None, :].astype(jnp.float32)
+        ang = pos / jnp.power(10000.0, 2 * i / h)
+        return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+    def _op_xl_attention(self, n: Node, x, u, v, wk, wo, wq, wr, wv):
+        """Transformer-XL relative attention: content stream (q+u)·k plus
+        position stream (q+v)·r — strictly more compute than vanilla
+        attention, mirroring the paper's XLNet observation (§5.2)."""
+        heads = n.attrs["heads"]
+        hidden = n.attrs["hidden"]
+        s = x.shape[-2]
+        q, k, vv = self._proj(x, wq), self._proj(x, wk), self._proj(x, wv)
+        r = self._rel_pos_emb(s, hidden)            # [S, H]
+        *lead, ss, h = q.shape
+        hd = h // heads
+        spl = lambda t: t.reshape(*lead, ss, heads, hd)
+        if wr.ndim == 3:                            # merged: per-instance
+            rp = jnp.einsum("sh,mhf->msf", r, wr)   # [M, S, H]
+            rph = rp.reshape(rp.shape[0], ss, heads, hd)
+            qc = q + u[:, None, None, :]
+            qp = q + v[:, None, None, :]
+            ac = jnp.einsum("mbsnd,mbtnd->mbnst", spl(qc), spl(k))
+            bd = jnp.einsum("mbsnd,mtnd->mbnst", spl(qp), rph)
+        else:
+            rp = r @ wr
+            rph = rp.reshape(ss, heads, hd)
+            qc = q + u[None, None, :]
+            qp = q + v[None, None, :]
+            ac = jnp.einsum("bsnd,btnd->bnst", spl(qc), spl(k))
+            bd = jnp.einsum("bsnd,tnd->bnst", spl(qp), rph)
+        attn = jax.nn.softmax((ac + bd) / math.sqrt(hd), axis=-1)
+        out = jnp.einsum("...nst,...tnd->...snd", attn, spl(vv))
+        return self._proj(out.reshape(*lead, ss, h), wo)
+
+    def _op_refmt(self, n: Node, x):
+        m = self.g.merged_m
+        src, dst = n.attrs["src"], n.attrs["dst"]
+        if src == dst:
+            return x
+        if src == "batch":
+            if x.ndim == 5:                    # [M, bs, C, h, w] -> NCHW
+                t = jnp.moveaxis(x, 0, 1)      # [bs, M, C, h, w]
+                return t.reshape(t.shape[0], -1, *t.shape[3:])
+            # [M, bs, (S,) H] -> [bs, (S,) M*H]
+            t = jnp.moveaxis(x, 0, -2)
+            return t.reshape(*t.shape[:-2], m * x.shape[-1])
+        # channel -> batch
+        if x.ndim == 4:                        # [bs, M*C, h, w]
+            c = x.shape[1] // m
+            t = x.reshape(x.shape[0], m, c, *x.shape[2:])
+            return jnp.moveaxis(t, 1, 0)
+        h = x.shape[-1] // m
+        t = x.reshape(*x.shape[:-1], m, h)
+        return jnp.moveaxis(t, -2, 0)
+
+    # -- evaluation -------------------------------------------------------------
+
+    def __call__(self, x, *params):
+        if len(params) != len(self.order):
+            raise ValueError(
+                f"expected {len(self.order)} params, got {len(params)}")
+        pmap = dict(zip(self.order, params))
+        env = {"input": x}
+        for n in self.g.nodes:
+            ins = [env[s] for s in n.inputs]
+            w = [pmap[f"{n.id}.{k}"] for k in sorted(n.weights)]
+            env[n.id] = self._eval(n, ins, w)
+        return env[self.g.output]
+
+    def _eval(self, n: Node, ins, w):
+        k = n.kind
+        if k == "conv2d":
+            b, wt = w                               # sorted: b, w
+            return self._conv(ins[0], wt, b, n.attrs["stride"],
+                              n.attrs["padding"], n.attrs["groups"])
+        if k == "dense":
+            b, wt = w
+            return self._mm_any(ins[0], wt, b)
+        if k == "layernorm":
+            beta, gamma = w
+            return self._op_layernorm(n, ins[0], gamma, beta)
+        if k == "groupnorm":
+            beta, gamma = w
+            return self._op_groupnorm(n, ins[0], gamma, beta)
+        if k == "batchnorm":
+            beta, gamma, mean, var = w
+            return self._op_batchnorm(n, ins[0], gamma, beta, mean, var)
+        if k == "attention":
+            wk, wo, wq, wv = w
+            return self._op_attention(n, ins[0], wk, wo, wq, wv)
+        if k == "xl_attention":
+            u, v, wk, wo, wq, wr, wv = w
+            return self._op_xl_attention(n, ins[0], u, v, wk, wo, wq, wr, wv)
+        if k == "relu":
+            return jax.nn.relu(ins[0])
+        if k == "gelu":
+            return jax.nn.gelu(ins[0])
+        if k == "add":
+            return ins[0] + ins[1]
+        if k == "maxpool2d":
+            kk, s = n.attrs["k"], n.attrs["stride"]
+            return jax.lax.reduce_window(
+                ins[0], -jnp.inf, jax.lax.max,
+                (1, 1, kk, kk), (1, 1, s, s), "VALID")
+        if k == "global_avgpool":
+            return ins[0].mean(axis=(2, 3), keepdims=True)
+        if k == "flatten":
+            return ins[0].reshape(ins[0].shape[0], -1)
+        if k == "refmt":
+            return self._op_refmt(n, ins[0])
+        if k == "slice_m":
+            return ins[0][n.attrs["index"]]
+        if k == "stack_m":
+            return jnp.stack(ins, axis=0)
+        raise ValueError(f"unhandled op kind {k!r}")
+
+
+def input_shape(g: Graph, bs: int) -> tuple:
+    """Concrete input tensor shape for batch size ``bs``."""
+    m = g.merged_m
+    if g.layout == "channel":
+        c, h, w = g.input_shape
+        return (bs, m * c, h, w)
+    if g.layout == "batch":
+        return (m, bs, *g.input_shape)
+    return (bs, *g.input_shape)
+
+
+def as_fn(g: Graph, backend: str = "xla"):
+    """Graph -> callable(x, *params)."""
+    return Interpreter(g, backend)

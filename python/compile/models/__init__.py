@@ -1,0 +1,23 @@
+"""Model zoo: mini, op-faithful versions of the paper's four models.
+
+Each builder returns a single-instance :class:`graphir.Graph`. Scale
+(depth/width) is reduced so the CPU PJRT backend stays tractable; op
+*kinds* and topology — the things NETFUSE's Algorithm 1 actually exercises
+— match the originals (see DESIGN.md §4).
+"""
+
+from .resnet import resnet_mini
+from .resnext import resnext_mini
+from .bert import bert_mini
+from .xlnet import xlnet_mini
+
+BUILDERS = {
+    "resnet": resnet_mini,
+    "resnext": resnext_mini,
+    "bert": bert_mini,
+    "xlnet": xlnet_mini,
+}
+
+
+def build(name: str, **kw):
+    return BUILDERS[name](**kw)

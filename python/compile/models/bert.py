@@ -1,0 +1,31 @@
+"""BERT-mini: transformer encoder over pre-computed token embeddings.
+
+The paper feeds synthetic embeddings of length 128 to BERT; we do the same
+at reduced width. Layer = multi-head self-attention + residual + layernorm
++ FFN (dense-gelu-dense) + residual + layernorm. The classifier head is
+task-specific and left unmerged (paper §6: merge the backbone only).
+"""
+
+from ..graphir import GraphBuilder, Graph
+
+
+def encoder_layer(b: GraphBuilder, x: str, hidden: int, heads: int,
+                  ffn_mult: int = 4) -> str:
+    a = b.attention(x, hidden, heads)
+    x = b.residual(x, a)
+    x = b.layernorm(x, hidden)
+    f = b.dense(x, hidden, hidden * ffn_mult)
+    f = b.gelu(f)
+    f = b.dense(f, hidden * ffn_mult, hidden)
+    x = b.residual(x, f)
+    x = b.layernorm(x, hidden)
+    return x
+
+
+def bert_mini(layers=2, hidden=32, heads=4, seq=16, classes=8) -> Graph:
+    b = GraphBuilder("bert", (seq, hidden))
+    x = "input"
+    for _ in range(layers):
+        x = encoder_layer(b, x, hidden, heads)
+    x = b.dense(x, hidden, classes, mergeable=False)
+    return b.build(x)

@@ -1,0 +1,40 @@
+"""ResNet-mini: conv stem + basic residual blocks + FC head.
+
+Same layer vocabulary as ResNet-50 (conv2d / batchnorm / relu / residual
+add / global average pool / dense head); reduced depth and width, 32x32
+inputs. The final dense head models the paper's task-specific classifier:
+it is marked ``mergeable=False`` so NETFUSE leaves it per-instance (§6).
+"""
+
+from ..graphir import GraphBuilder, Graph
+
+
+def _basic_block(b: GraphBuilder, x: str, cin: int, cout: int,
+                 stride: int) -> str:
+    y = b.conv2d(x, cin, cout, k=3, stride=stride)
+    y = b.batchnorm(y, cout)
+    y = b.relu(y)
+    y = b.conv2d(y, cout, cout, k=3, stride=1)
+    y = b.batchnorm(y, cout)
+    if stride != 1 or cin != cout:
+        x = b.conv2d(x, cin, cout, k=1, stride=stride, padding=0)
+        x = b.batchnorm(x, cout)
+    y = b.residual(y, x)
+    return b.relu(y)
+
+
+def resnet_mini(widths=(8, 16, 32), blocks=2, image=16, classes=10) -> Graph:
+    b = GraphBuilder("resnet", (3, image, image))
+    x = b.conv2d("input", 3, widths[0], k=3, stride=1)
+    x = b.batchnorm(x, widths[0])
+    x = b.relu(x)
+    cin = widths[0]
+    for si, cout in enumerate(widths):
+        for bi in range(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            x = _basic_block(b, x, cin, cout, stride)
+            cin = cout
+    x = b.global_avgpool(x)
+    x = b.flatten(x)
+    x = b.dense(x, cin, classes, mergeable=False)
+    return b.build(x)

@@ -1,0 +1,44 @@
+"""ResNeXt-mini: bottleneck blocks with grouped 3x3 convolutions.
+
+Exercises the paper's "operations with input-weight local computations"
+case (§3.1): merging M instances of a grouped convolution with G groups
+yields one grouped convolution with M*G groups.
+"""
+
+from ..graphir import GraphBuilder, Graph
+
+
+def _bottleneck(b: GraphBuilder, x: str, cin: int, cmid: int, cout: int,
+                stride: int, cardinality: int) -> str:
+    y = b.conv2d(x, cin, cmid, k=1, stride=1, padding=0)
+    y = b.batchnorm(y, cmid)
+    y = b.relu(y)
+    # the ResNeXt signature op: grouped 3x3
+    y = b.conv2d(y, cmid, cmid, k=3, stride=stride, groups=cardinality)
+    y = b.batchnorm(y, cmid)
+    y = b.relu(y)
+    y = b.conv2d(y, cmid, cout, k=1, stride=1, padding=0)
+    y = b.batchnorm(y, cout)
+    if stride != 1 or cin != cout:
+        x = b.conv2d(x, cin, cout, k=1, stride=stride, padding=0)
+        x = b.batchnorm(x, cout)
+    y = b.residual(y, x)
+    return b.relu(y)
+
+
+def resnext_mini(widths=(16, 32), blocks=2, cardinality=4, image=16,
+                 classes=10) -> Graph:
+    b = GraphBuilder("resnext", (3, image, image))
+    x = b.conv2d("input", 3, widths[0], k=3, stride=1)
+    x = b.batchnorm(x, widths[0])
+    x = b.relu(x)
+    cin = widths[0]
+    for si, cout in enumerate(widths):
+        for bi in range(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            x = _bottleneck(b, x, cin, cout, cout, stride, cardinality)
+            cin = cout
+    x = b.global_avgpool(x)
+    x = b.flatten(x)
+    x = b.dense(x, cin, classes, mergeable=False)
+    return b.build(x)

@@ -1,0 +1,31 @@
+"""XLNet-mini: Transformer-XL style encoder.
+
+Strictly more compute per layer than BERT-mini: the relative-position
+attention adds a position projection (wr) and the content/position bias
+terms (u, v), mirroring the paper's observation that XLNet's extra
+computation changes the concurrent baseline's behaviour (§5.2).
+"""
+
+from ..graphir import GraphBuilder, Graph
+
+
+def xl_layer(b: GraphBuilder, x: str, hidden: int, heads: int,
+             ffn_mult: int = 4) -> str:
+    a = b.xl_attention(x, hidden, heads)
+    x = b.residual(x, a)
+    x = b.layernorm(x, hidden)
+    f = b.dense(x, hidden, hidden * ffn_mult)
+    f = b.gelu(f)
+    f = b.dense(f, hidden * ffn_mult, hidden)
+    x = b.residual(x, f)
+    x = b.layernorm(x, hidden)
+    return x
+
+
+def xlnet_mini(layers=2, hidden=32, heads=4, seq=16, classes=8) -> Graph:
+    b = GraphBuilder("xlnet", (seq, hidden))
+    x = "input"
+    for _ in range(layers):
+        x = xl_layer(b, x, hidden, heads)
+    x = b.dense(x, hidden, classes, mergeable=False)
+    return b.build(x)

@@ -1,0 +1,255 @@
+"""NETFUSE Algorithm 1: merging M same-architecture DNNs into one graph.
+
+Faithful implementation of the paper's Algorithm 1 (§3.2): a BFS traversal
+over the common subgraph that
+
+  1. replaces every op with its *input-weight local* counterpart
+     (matmul -> batch matmul, conv -> grouped conv with M x G groups,
+     layer norm -> group norm, batch norm -> wider batch norm,
+     non-trainable ops -> themselves),
+  2. assigns each merged op its merge dimension d_i in
+     {Batch, Channel, DontCare} (DontCare inherits the most frequent
+     parent dimension — "follow the majority if there is a dissensus"),
+  3. inserts reshape-and-transpose fix-up ops ("refmt") on every edge
+     whose endpoint dimensions disagree, and
+  4. leaves ``mergeable=False`` nodes (task-specific heads, §6) as M
+     per-instance ops bracketed by slice/stack.
+
+Layout conventions of the merged graph (see DESIGN.md):
+  * Channel packing: instances concatenated on the channel axis —
+    NCHW axis 1 for CNN tensors, the last axis for transformer tensors.
+    CNN graph input is channel-packed: [bs, M*C, H, W].
+  * Batch packing: instances stacked on a new leading axis —
+    [M, bs, ...]. Transformer graph input is batch-packed.
+
+The same algorithm is re-implemented in Rust (``rust/src/fuse``) as the
+serving-side planner; integration tests assert both produce isomorphic
+merged graphs from identical JSON inputs.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+
+from .graphir import (BATCH, CHANNEL, DONTCARE, MERGE_DIM, Graph, Node)
+
+
+class MergeError(ValueError):
+    pass
+
+
+def _input_dim(g: Graph) -> str:
+    """Packing of the merged graph input: CNNs concat on channel, sequence
+    models stack on batch (their first trainable ops demand it)."""
+    return CHANNEL if len(g.input_shape) == 3 else BATCH
+
+
+def merge_node(n: Node, m: int) -> tuple[Node, str]:
+    """Merge(op_i, {w_ij}) from Algorithm 1: one op's merged counterpart
+    plus its required concat dimension."""
+    k, a, w = n.kind, dict(n.attrs), dict(n.weights)
+    if k == "conv2d":
+        # conv -> grouped conv: M x G groups (paper §3.1, Appendix A)
+        a["cin"] *= m
+        a["cout"] *= m
+        a["groups"] *= m
+        w["w"] = (a["cout"], n.attrs["cin"] // n.attrs["groups"],
+                  a["k"], a["k"])
+        w["b"] = (a["cout"],)
+        return Node(n.id, "conv2d", list(n.inputs), a, w), CHANNEL
+    if k == "dense":
+        # matmul -> batch matmul: weights stacked on a new leading axis
+        a["merged_m"] = m
+        w = {"w": (m, a["fin"], a["fout"]), "b": (m, a["fout"])}
+        return Node(n.id, "dense", list(n.inputs), a, w), BATCH
+    if k == "layernorm":
+        # layer norm -> group norm with M groups
+        dim = a.pop("dim")
+        ga = {"c": dim * m, "groups": m}
+        w = {"gamma": (dim * m,), "beta": (dim * m,)}
+        return Node(n.id, "groupnorm", list(n.inputs), ga, w), CHANNEL
+    if k == "groupnorm":
+        a["c"] *= m
+        a["groups"] *= m
+        w = {"gamma": (a["c"],), "beta": (a["c"],)}
+        return Node(n.id, "groupnorm", list(n.inputs), a, w), CHANNEL
+    if k == "batchnorm":
+        # per-channel computation: concat weights, no type change
+        a["c"] *= m
+        w = {name: (a["c"],) for name in w}
+        return Node(n.id, "batchnorm", list(n.inputs), a, w), CHANNEL
+    if k in ("attention", "xl_attention"):
+        # composition of matmuls -> composition of batch matmuls
+        a["merged_m"] = m
+        w = {name: (m, *shape) for name, shape in w.items()}
+        return Node(n.id, k, list(n.inputs), a, w), BATCH
+    if k in MERGE_DIM and k not in ("refmt",):
+        # non-trainable: merged seamlessly, no weights (paper §3.1)
+        return Node(n.id, k, list(n.inputs), a, {}), DONTCARE
+    raise MergeError(f"cannot merge op kind {k!r}")
+
+
+def _refmt(counter: list[int], src: str, dst: str, parent: str) -> Node:
+    counter[0] += 1
+    return Node(
+        id=f"refmt_{counter[0]}",
+        kind="refmt",
+        inputs=[parent],
+        attrs={"src": src.lower(), "dst": dst.lower()},
+    )
+
+
+def merge(g: Graph, m: int) -> Graph:
+    """Algorithm 1. Returns the merged graph for M instances of ``g``."""
+    if m < 1:
+        raise MergeError("m must be >= 1")
+    g.validate()
+    if g.merged_m != 1:
+        raise MergeError("graph is already merged")
+
+    in_dim = _input_dim(g)
+    merged: list[Node] = []
+    # merge dimension assigned to each produced node id ("input" included)
+    dim_of: dict[str, str] = {"input": in_dim}
+    # maps original node id -> id of the node carrying its merged output
+    out_id: dict[str, str] = {"input": "input"}
+    refmt_counter = [0]
+    # cache: (parent_out_id, dst_dim) -> refmt node id, so diamonds (e.g.
+    # residual forks) share a single fix-up op instead of duplicating it
+    refmt_cache: dict[tuple[str, str], str] = {}
+
+    visited: set[str] = set()
+    indeg = {n.id: 0 for n in g.nodes}
+    for n in g.nodes:
+        for s in n.inputs:
+            if s != "input":
+                indeg[n.id] += 1
+    q = deque(n for n in g.nodes if indeg[n.id] == 0)
+
+    def connect(parent: str, want: str) -> str:
+        """Return an id producing ``parent``'s value in packing ``want``,
+        inserting a reshape-and-transpose op if packings disagree."""
+        have = dim_of[out_id[parent]]
+        if want == DONTCARE or have == want:
+            return out_id[parent]
+        key = (out_id[parent], want)
+        if key not in refmt_cache:
+            r = _refmt(refmt_counter, have, want, out_id[parent])
+            merged.append(r)
+            dim_of[r.id] = want
+            refmt_cache[key] = r.id
+        return refmt_cache[key]
+
+    while q:
+        op = q.popleft()
+        if op.id in visited:
+            continue
+        visited.add(op.id)
+
+        parent_dims = [dim_of[out_id[s]] for s in op.inputs]
+
+        if not op.mergeable:
+            # §6: task-specific layer kept per-instance. The merged graph
+            # slices instance i's activations, applies instance i's
+            # original op, and stacks the M results on a leading axis.
+            if op.kind != "dense":
+                raise MergeError(
+                    f"unmergeable op {op.id!r} of kind {op.kind!r}: only "
+                    "dense heads are supported per-instance")
+            src = connect(op.inputs[0], BATCH)
+            parts = []
+            for i in range(m):
+                sl = Node(f"{op.id}__slice{i}", "slice_m", [src],
+                          {"index": i})
+                merged.append(sl)
+                dim_of[sl.id] = BATCH
+                di = Node(f"{op.id}__m{i}", "dense", [sl.id],
+                          {**op.attrs, "merged_m": 1},
+                          dict(op.weights), mergeable=False)
+                merged.append(di)
+                dim_of[di.id] = BATCH
+                parts.append(di.id)
+            st = Node(f"{op.id}__stack", "stack_m", parts, {})
+            merged.append(st)
+            dim_of[st.id] = BATCH
+            out_id[op.id] = st.id
+        else:
+            mi, di = merge_node(op, m)
+            if di == DONTCARE:
+                # lines 23-27: follow the majority of the parents
+                # (ties resolve to Batch, deterministically — the Rust
+                # planner in rust/src/fuse uses the same rule)
+                n_b = parent_dims.count(BATCH)
+                n_c = parent_dims.count(CHANNEL)
+                if n_b == 0 and n_c == 0:
+                    di = in_dim
+                else:
+                    di = CHANNEL if n_c > n_b else BATCH
+            # lines 29-36: rewire through fix-up ops where dims differ
+            mi.inputs = [connect(s, di) for s in op.inputs]
+            merged.append(mi)
+            dim_of[mi.id] = di
+            out_id[op.id] = mi.id
+
+        for child in g.consumers(op.id):
+            indeg[child.id] -= 1
+            if indeg[child.id] == 0:
+                q.append(child)
+
+    if len(visited) != len(g.nodes):
+        raise MergeError("graph has a cycle or unreachable nodes")
+
+    out = Graph(
+        name=f"{g.name}_x{m}",
+        input_shape=g.input_shape,
+        nodes=merged,
+        output=out_id[g.output],
+        merged_m=m,
+        layout="channel" if in_dim == CHANNEL else "batch",
+    )
+    out.validate()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Weight merging
+# ---------------------------------------------------------------------------
+
+def merge_weights(g: Graph, merged: Graph, banks: list[dict]):
+    """Build the merged graph's weight arrays from M per-instance banks.
+
+    ``banks[i]`` maps ``"{node}.{weight}"`` to instance i's array.
+    Returns the same mapping for the merged graph. Concat on axis 0 for
+    Channel-merged ops (grouped conv / norms), stack on a new leading axis
+    for Batch-merged ops (batch matmul / attention); per-instance heads
+    take their own instance's array unchanged.
+    """
+    import numpy as np
+
+    m = merged.merged_m
+    if len(banks) != m:
+        raise MergeError(f"expected {m} weight banks, got {len(banks)}")
+    out = {}
+    for node in merged.nodes:
+        if not node.weights:
+            continue
+        if node.id.rpartition("__m")[2].isdigit() and "__m" in node.id:
+            # per-instance head: {orig}__m{i}
+            orig, _, idx = node.id.rpartition("__m")
+            bank = banks[int(idx)]
+            for wname in node.weights:
+                out[f"{node.id}.{wname}"] = bank[f"{orig}.{wname}"]
+            continue
+        for wname, shape in node.weights.items():
+            # merged layernorm became groupnorm but weight names match
+            parts = [banks[i][f"{node.id}.{wname}"] for i in range(m)]
+            if len(shape) > len(parts[0].shape):
+                arr = np.stack(parts, axis=0)
+            else:
+                arr = np.concatenate(parts, axis=0) if m > 1 else parts[0]
+            if tuple(arr.shape) != tuple(shape):
+                raise MergeError(
+                    f"merged weight {node.id}.{wname}: got {arr.shape}, "
+                    f"expected {tuple(shape)}")
+            out[f"{node.id}.{wname}"] = arr
+    return out

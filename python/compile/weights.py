@@ -1,0 +1,97 @@
+"""Per-instance weight banks + the ``.nft`` tensor container format.
+
+Each model instance gets its own deterministic, *distinct* random weights
+(the paper's fine-tuned instances differ only in values; NETFUSE never
+inspects values, only shapes — DESIGN.md §4). The ``.nft`` container is
+the interchange format with the Rust coordinator's weight store
+(``rust/src/tensor/io.rs`` implements the same layout):
+
+    magic  b"NFT1"
+    u32    tensor count (little endian)
+    per tensor:
+        u16  name length, then name bytes (utf-8)
+        u8   dtype (0 = f32)
+        u8   ndim
+        u32  dims[ndim]
+        f32  data[prod(dims)]  (little endian)
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from .graphir import Graph
+
+MAGIC = b"NFT1"
+
+
+def init_bank(g: Graph, seed: int) -> dict:
+    """Weights for one model instance: ``{"node.weight": ndarray}``."""
+    rng = np.random.default_rng(seed)
+    bank = {}
+    for n in g.nodes:
+        for wname, shape in n.weights.items():
+            key = f"{n.id}.{wname}"
+            if wname in ("gamma",):
+                arr = rng.uniform(0.7, 1.3, size=shape)
+            elif wname in ("beta", "b", "mean", "u", "v"):
+                arr = rng.normal(0.0, 0.05, size=shape)
+            elif wname == "var":
+                arr = rng.uniform(0.5, 1.5, size=shape)
+            else:
+                fan_in = int(np.prod(shape[:-1])) or 1
+                arr = rng.normal(0.0, 1.0 / np.sqrt(fan_in), size=shape)
+            bank[key] = arr.astype(np.float32)
+    return bank
+
+
+def init_banks(g: Graph, m: int, base_seed: int = 7) -> list[dict]:
+    """M distinct instances (distinct seeds => distinct fine-tunings)."""
+    return [init_bank(g, base_seed + 1000 * i) for i in range(m)]
+
+
+# ---------------------------------------------------------------------------
+# .nft io
+# ---------------------------------------------------------------------------
+
+def write_nft(path: str, tensors: dict) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", 0, arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def read_nft(path: str) -> dict:
+    with open(path, "rb") as f:
+        data = f.read()
+    if data[:4] != MAGIC:
+        raise ValueError(f"{path}: bad magic {data[:4]!r}")
+    off = 4
+    (count,) = struct.unpack_from("<I", data, off)
+    off += 4
+    out = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off:off + nlen].decode()
+        off += nlen
+        dtype, ndim = struct.unpack_from("<BB", data, off)
+        off += 2
+        if dtype != 0:
+            raise ValueError(f"{path}: unsupported dtype {dtype}")
+        dims = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        n = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(data, dtype="<f4", count=n, offset=off)
+        off += 4 * n
+        out[name] = arr.reshape(dims).copy()
+    return out

@@ -1,0 +1,92 @@
+"""AOT pipeline invariants. Full-manifest checks run only when
+``artifacts/`` has been built (``make artifacts``); the lowering check
+always runs on a tiny model."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, models, netfuse, weights
+from compile.graphir import Graph
+from compile.model import Interpreter, input_shape
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+HAVE_ARTIFACTS = os.path.exists(os.path.join(ART, "manifest.json"))
+
+
+def test_lower_graph_produces_hlo_text():
+    g = models.build("bert", layers=1, hidden=8, heads=2, seq=4, classes=2)
+    hlo, interp, ishape, oshape = aot.lower_graph(g, 1, "xla")
+    assert "HloModule" in hlo
+    assert ishape == (1, 4, 8)
+    assert oshape[-1] == 2
+    assert len(interp.order) > 0
+
+
+def test_lower_merged_graph():
+    g = models.build("bert", layers=1, hidden=8, heads=2, seq=4, classes=2)
+    mg = netfuse.merge(g, 2)
+    hlo, interp, ishape, oshape = aot.lower_graph(mg, 1, "xla")
+    assert ishape == (2, 1, 4, 8)
+    assert oshape[0] == 2
+
+
+def test_act_bytes_positive_and_scales():
+    g = models.build("resnet")
+    a1 = aot.act_bytes(g, 1)
+    a4 = aot.act_bytes(g, 4)
+    assert 0 < a1 < a4
+
+
+def test_weight_bytes_matches_bank():
+    g = models.build("resnext")
+    bank = weights.init_bank(g, 0)
+    total = sum(v.nbytes for v in bank.values())
+    assert aot.weight_bytes(g) == total
+
+
+def test_source_digest_stable():
+    assert aot.source_digest() == aot.source_digest()
+
+
+@pytest.mark.skipif(not HAVE_ARTIFACTS, reason="artifacts/ not built")
+def test_manifest_structure():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert set(man["models"]) == {"resnet", "resnext", "bert", "xlnet"}
+    names = {a["name"] for a in man["artifacts"]}
+    assert len(names) == len(man["artifacts"]), "duplicate artifact names"
+    for a in man["artifacts"]:
+        assert os.path.exists(os.path.join(ART, a["hlo"])), a["hlo"]
+        # param order in the manifest matches the interpreter's
+        g = Graph.from_json(a["graph"])
+        interp = Interpreter(g, "xla")
+        assert [p["key"] for p in a["params"]] == interp.order, a["name"]
+        assert tuple(a["input"]["shape"]) == input_shape(g, a["bs"])
+
+
+@pytest.mark.skipif(not HAVE_ARTIFACTS, reason="artifacts/ not built")
+def test_weight_banks_complete():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for name, entry in man["models"].items():
+        bank = weights.read_nft(os.path.join(ART, entry["weights"]))
+        g = Graph.from_json(entry["graph"])
+        want_per_instance = {f"{n.id}.{w}" for n in g.nodes for w in n.weights}
+        for i in range(entry["instances"]):
+            keys = {k.split("/", 1)[1] for k in bank if k.startswith(f"m{i}/")}
+            assert keys == want_per_instance, f"{name} instance {i}"
+
+
+@pytest.mark.skipif(not HAVE_ARTIFACTS, reason="artifacts/ not built")
+def test_golden_vectors_satisfy_invariant():
+    for name in ["resnet", "resnext", "bert", "xlnet"]:
+        g = weights.read_nft(os.path.join(ART, "golden", f"{name}.nft"))
+        for i in range(2):
+            np.testing.assert_allclose(
+                g["y_fused"][i], g[f"y{i}"], rtol=1e-4, atol=1e-5)

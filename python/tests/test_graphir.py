@@ -1,0 +1,81 @@
+"""Graph IR: JSON round-trip, validation, builder invariants."""
+
+import json
+
+import pytest
+
+from compile import models
+from compile.graphir import Graph, GraphBuilder, Node, MERGE_DIM, TRAINABLE
+
+
+@pytest.mark.parametrize("name", ["resnet", "resnext", "bert", "xlnet"])
+def test_json_roundtrip(name):
+    g = models.build(name)
+    g2 = Graph.loads(g.dumps())
+    assert g2.to_json() == g.to_json()
+
+
+def test_every_kind_has_merge_dim():
+    for k in TRAINABLE:
+        assert k in MERGE_DIM
+
+
+def test_validate_rejects_duplicate_ids():
+    n = Node("a", "relu", ["input"])
+    g = Graph("g", (4,), [n, Node("a", "relu", ["input"])], "a")
+    with pytest.raises(ValueError):
+        g.validate()
+
+
+def test_validate_rejects_forward_reference():
+    g = Graph("g", (4,), [Node("a", "relu", ["b"]),
+                          Node("b", "relu", ["input"])], "b")
+    with pytest.raises(ValueError):
+        g.validate()
+
+
+def test_validate_rejects_unknown_kind():
+    g = Graph("g", (4,), [Node("a", "warp_drive", ["input"])], "a")
+    with pytest.raises(ValueError):
+        g.validate()
+
+
+def test_validate_rejects_missing_weights():
+    g = Graph("g", (4,), [Node("a", "dense", ["input"], {"fin": 4,
+                                                         "fout": 4})], "a")
+    with pytest.raises(ValueError):
+        g.validate()
+
+
+def test_validate_rejects_weights_on_nontrainable():
+    g = Graph("g", (4,), [Node("a", "relu", ["input"],
+                               weights={"w": (4,)})], "a")
+    with pytest.raises(ValueError):
+        g.validate()
+
+
+def test_validate_rejects_bad_output():
+    g = Graph("g", (4,), [Node("a", "relu", ["input"])], "zzz")
+    with pytest.raises(ValueError):
+        g.validate()
+
+
+def test_builder_produces_fresh_ids():
+    b = GraphBuilder("g", (4,))
+    a = b.dense("input", 4, 4)
+    c = b.dense(a, 4, 4)
+    assert a != c
+
+
+def test_model_zoo_shapes():
+    g = models.build("resnet")
+    assert len(g.input_shape) == 3
+    g = models.build("bert", layers=3)
+    assert sum(1 for n in g.nodes if n.kind == "attention") == 3
+
+
+def test_unmergeable_heads_flagged():
+    for name in ["resnet", "resnext", "bert", "xlnet"]:
+        g = models.build(name)
+        heads = [n for n in g.nodes if not n.mergeable]
+        assert len(heads) == 1 and heads[0].kind == "dense"

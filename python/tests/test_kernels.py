@@ -1,0 +1,167 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/strides/groups; assert_allclose against ref.py.
+This is the core numeric signal for the whole stack: the AOT'd HLO the
+Rust runtime executes contains exactly these kernels.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import batch_matmul, grouped_conv, group_norm
+from compile.kernels import ref
+
+SET = dict(max_examples=25, deadline=None)
+
+
+def rnd(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# batch matmul
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(b=st.integers(1, 6), n=st.integers(1, 9), k=st.integers(1, 17),
+       f=st.sampled_from([1, 2, 3, 5, 8, 16, 48, 128, 256]),
+       seed=st.integers(0, 2**31))
+def test_batch_matmul_matches_ref(b, n, k, f, seed):
+    rng = np.random.default_rng(seed)
+    x, w, bias = rnd(rng, b, n, k), rnd(rng, b, k, f), rnd(rng, b, f)
+    got = np.asarray(batch_matmul(x, w, bias))
+    want = np.asarray(ref.batch_matmul_ref(x, w, bias))
+    assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_batch_matmul_is_per_pair_local():
+    """The input-weight locality property itself: pair i's output depends
+    only on pair i's input and weights (paper §3)."""
+    rng = np.random.default_rng(0)
+    x, w, b = rnd(rng, 3, 4, 5), rnd(rng, 3, 5, 6), rnd(rng, 3, 6)
+    base = np.asarray(batch_matmul(x, w, b))
+    x2 = x.copy()
+    x2[1] += 100.0
+    pert = np.asarray(batch_matmul(x2, w, b))
+    assert_allclose(pert[0], base[0], rtol=1e-6)
+    assert_allclose(pert[2], base[2], rtol=1e-6)
+    assert np.abs(pert[1] - base[1]).max() > 1.0
+
+
+def test_batch_matmul_f_tiling_exact():
+    # F not a power of two exercises the tile-selection fallback
+    rng = np.random.default_rng(1)
+    x, w, b = rnd(rng, 2, 3, 7), rnd(rng, 2, 7, 12), rnd(rng, 2, 12)
+    assert_allclose(np.asarray(batch_matmul(x, w, b)),
+                    np.asarray(ref.batch_matmul_ref(x, w, b)),
+                    rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# grouped conv
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(n=st.integers(1, 3), g=st.sampled_from([1, 2, 4, 8]),
+       cg=st.integers(1, 6), co=st.integers(1, 6),
+       k=st.sampled_from([1, 3]), stride=st.sampled_from([1, 2]),
+       hw=st.integers(4, 10), seed=st.integers(0, 2**31))
+def test_grouped_conv_matches_ref(n, g, cg, co, k, stride, hw, seed):
+    rng = np.random.default_rng(seed)
+    pad = k // 2
+    x = rnd(rng, n, g * cg, hw, hw)
+    w = rnd(rng, g * co, cg, k, k)
+    b = rnd(rng, g * co)
+    got = np.asarray(grouped_conv(x, w, b, stride=stride, padding=pad,
+                                  groups=g))
+    want = np.asarray(ref.grouped_conv_ref(x, w, b, stride=stride,
+                                           padding=pad, groups=g))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_conv_group_isolation():
+    """Appendix A property: perturbing group 0's input never changes
+    group 1's output channels."""
+    rng = np.random.default_rng(2)
+    g, cg, co = 2, 3, 4
+    x = rnd(rng, 2, g * cg, 8, 8)
+    w = rnd(rng, g * co, cg, 3, 3)
+    b = rnd(rng, g * co)
+    base = np.asarray(grouped_conv(x, w, b, stride=1, padding=1, groups=g))
+    x2 = x.copy()
+    x2[:, :cg] += 50.0
+    pert = np.asarray(grouped_conv(x2, w, b, stride=1, padding=1, groups=g))
+    assert_allclose(pert[:, co:], base[:, co:], rtol=1e-5)
+    assert np.abs(pert[:, :co] - base[:, :co]).max() > 1.0
+
+
+def test_grouped_conv_equals_m_convs():
+    """Appendix A, Eq. 6: GroupConv(concat x, concat w, M) == M convs."""
+    rng = np.random.default_rng(3)
+    m, c, co = 3, 4, 5
+    xs = [rnd(rng, 2, c, 6, 6) for _ in range(m)]
+    ws = [rnd(rng, co, c, 3, 3) for _ in range(m)]
+    bs = [rnd(rng, co) for _ in range(m)]
+    xcat = np.concatenate(xs, axis=1)
+    wcat = np.concatenate(ws, axis=0)
+    bcat = np.concatenate(bs, axis=0)
+    fused = np.asarray(grouped_conv(xcat, wcat, bcat, stride=1, padding=1,
+                                    groups=m))
+    for i in range(m):
+        want = np.asarray(ref.grouped_conv_ref(xs[i], ws[i], bs[i],
+                                               stride=1, padding=1))
+        assert_allclose(fused[:, i * co:(i + 1) * co], want,
+                        rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_conv_1x1_stride1():
+    rng = np.random.default_rng(4)
+    x, w, b = rnd(rng, 1, 8, 5, 5), rnd(rng, 6, 4, 1, 1), rnd(rng, 6)
+    got = np.asarray(grouped_conv(x, w, b, stride=1, padding=0, groups=2))
+    want = np.asarray(ref.grouped_conv_ref(x, w, b, stride=1, padding=0,
+                                           groups=2))
+    assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# group norm
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(n=st.integers(1, 16), g=st.sampled_from([1, 2, 4, 8]),
+       cg=st.integers(1, 32), seed=st.integers(0, 2**31))
+def test_group_norm_matches_ref(n, g, cg, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, n, g * cg)
+    gamma, beta = rnd(rng, g * cg), rnd(rng, g * cg)
+    got = np.asarray(group_norm(x, gamma, beta, groups=g))
+    want = np.asarray(ref.group_norm_ref(x, gamma, beta, groups=g))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_group_norm_equals_m_layernorms():
+    """Paper §3.1: group norm with M groups == M merged layer norms."""
+    rng = np.random.default_rng(5)
+    m, h, n = 4, 8, 6
+    xs = [rnd(rng, n, h) for _ in range(m)]
+    gs = [rnd(rng, h) for _ in range(m)]
+    bs = [rnd(rng, h) for _ in range(m)]
+    xcat = np.concatenate(xs, axis=1)
+    fused = np.asarray(group_norm(
+        xcat, np.concatenate(gs), np.concatenate(bs), groups=m))
+    for i in range(m):
+        want = np.asarray(ref.group_norm_ref(xs[i], gs[i], bs[i], groups=1))
+        assert_allclose(fused[:, i * h:(i + 1) * h], want,
+                        rtol=1e-4, atol=1e-4)
+
+
+def test_group_norm_output_stats():
+    rng = np.random.default_rng(6)
+    x = rnd(rng, 4, 32) * 3 + 5
+    y = np.asarray(group_norm(x, np.ones(32, np.float32),
+                              np.zeros(32, np.float32), groups=2))
+    yg = y.reshape(4, 2, 16)
+    assert_allclose(yg.mean(axis=-1), 0.0, atol=1e-4)
+    assert_allclose(yg.std(axis=-1), 1.0, atol=1e-2)

@@ -1,0 +1,123 @@
+"""Interpreter-level behaviour: packing round-trips, refmt semantics,
+input shapes, and error handling."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import models, netfuse, weights
+from compile.graphir import Graph, GraphBuilder, Node
+from compile.model import (Interpreter, input_shape, pack_inputs,
+                           unpack_outputs, param_order)
+
+
+def test_pack_unpack_batch_roundtrip():
+    xs = [np.full((2, 3), float(i), np.float32) for i in range(4)]
+    packed = pack_inputs(xs, "batch")
+    assert packed.shape == (4, 2, 3)
+    outs = unpack_outputs(np.asarray(packed), 4)
+    for i, o in enumerate(outs):
+        np.testing.assert_array_equal(o, xs[i])
+
+
+def test_pack_channel_concatenates_nchw():
+    xs = [np.full((2, 3, 4, 4), float(i), np.float32) for i in range(2)]
+    packed = pack_inputs(xs, "channel")
+    assert packed.shape == (2, 6, 4, 4)
+    np.testing.assert_array_equal(np.asarray(packed)[:, :3], xs[0])
+    np.testing.assert_array_equal(np.asarray(packed)[:, 3:], xs[1])
+
+
+def test_pack_rejects_bad_layout():
+    with pytest.raises(ValueError):
+        pack_inputs([np.zeros((1, 2), np.float32)], "diagonal")
+
+
+def test_input_shape_variants():
+    g = models.build("resnet")
+    assert input_shape(g, 2) == (2, 3, 16, 16)
+    mg = netfuse.merge(g, 4)
+    assert input_shape(mg, 2) == (2, 12, 16, 16)
+    b = models.build("bert")
+    mb = netfuse.merge(b, 4)
+    assert input_shape(mb, 2) == (4, 2, 16, 32)
+
+
+def test_refmt_roundtrip_is_identity():
+    """channel->batch then batch->channel is the identity (the pair the
+    elision pass may cancel)."""
+    g = models.build("bert")
+    mg = netfuse.merge(g, 3)
+    interp = Interpreter(mg, "xla")
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(2, 5, 3 * 7)).astype(np.float32))
+    to_b = Node("r1", "refmt", ["input"], {"src": "channel", "dst": "batch"})
+    to_c = Node("r2", "refmt", ["input"], {"src": "batch", "dst": "channel"})
+    xb = interp._op_refmt(to_b, x)
+    assert xb.shape == (3, 2, 5, 7)
+    xc = interp._op_refmt(to_c, xb)
+    np.testing.assert_array_equal(np.asarray(xc), np.asarray(x))
+
+
+def test_refmt_rank4_nchw():
+    g = models.build("resnet")
+    mg = netfuse.merge(g, 2)
+    interp = Interpreter(mg, "xla")
+    x = jnp.asarray(np.arange(2 * 6 * 2 * 2, dtype=np.float32)
+                    .reshape(2, 6, 2, 2))
+    n = Node("r", "refmt", ["input"], {"src": "channel", "dst": "batch"})
+    y = interp._op_refmt(n, x)
+    assert y.shape == (2, 2, 3, 2, 2)
+    np.testing.assert_array_equal(np.asarray(y[0]), np.asarray(x[:, :3]))
+    np.testing.assert_array_equal(np.asarray(y[1]), np.asarray(x[:, 3:]))
+
+
+def test_interpreter_rejects_wrong_param_count():
+    g = models.build("bert")
+    interp = Interpreter(g, "xla")
+    x = jnp.zeros((1, *g.input_shape), jnp.float32)
+    with pytest.raises(ValueError):
+        interp(x)
+
+
+def test_interpreter_rejects_bad_backend():
+    with pytest.raises(ValueError):
+        Interpreter(models.build("bert"), "tpu")
+
+
+def test_param_order_is_topo_then_sorted():
+    b = GraphBuilder("t", (4,))
+    d = b.dense("input", 4, 4)
+    l = b.layernorm(d, 4)
+    g = b.build(l)
+    order = param_order(g)
+    assert order[0].endswith(".b") and order[1].endswith(".w")
+    assert order[2].endswith(".beta") and order[3].endswith(".gamma")
+
+
+def test_unknown_kind_raises():
+    g = Graph("g", (4,), [Node("a", "relu", ["input"])], "a")
+    g.nodes[0].kind = "mystery"
+    interp = Interpreter.__new__(Interpreter)
+    interp.g = g
+    interp.backend = "xla"
+    with pytest.raises(ValueError):
+        interp._eval(g.nodes[0], [jnp.zeros((1, 4))], [])
+
+
+def test_backbone_only_merge_heads_stay_separate():
+    """§6: the task-specific heads are per-instance in the merged graph
+    and use each instance's own weights."""
+    g = models.build("resnet")
+    m = 3
+    mg = netfuse.merge(g, m)
+    head = next(n for n in g.nodes if not n.mergeable)
+    slices = [n for n in mg.nodes if n.id.startswith(f"{head.id}__slice")]
+    heads = [n for n in mg.nodes if n.id.startswith(f"{head.id}__m")]
+    stacks = [n for n in mg.nodes if n.id == f"{head.id}__stack"]
+    assert len(slices) == m and len(heads) == m and len(stacks) == 1
+    banks = weights.init_banks(g, m)
+    mw = netfuse.merge_weights(g, mg, banks)
+    for i in range(m):
+        np.testing.assert_array_equal(
+            mw[f"{head.id}__m{i}.w"], banks[i][f"{head.id}.w"])

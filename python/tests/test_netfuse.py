@@ -1,0 +1,199 @@
+"""Algorithm 1 correctness: structure of merged graphs + end-to-end
+numerical equivalence (merged output == per-instance outputs) for every
+model in the zoo — the paper's central claim ("NETFUSE does not alter the
+computation results in any way", §5)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import models, netfuse, weights
+from compile.graphir import BATCH, CHANNEL, Graph, GraphBuilder
+from compile.model import (Interpreter, input_shape, pack_inputs,
+                           unpack_outputs)
+
+MODELS = ["resnet", "resnext", "bert", "xlnet"]
+
+
+def run_graph(g, bank_list_or_bank, x):
+    interp = Interpreter(g, "xla")
+    bank = bank_list_or_bank
+    params = [jnp.asarray(bank[k]) for k in interp.order]
+    return np.asarray(interp(jnp.asarray(x), *params))
+
+
+# ---------------------------------------------------------------------------
+# structural properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", MODELS)
+@pytest.mark.parametrize("m", [1, 2, 4])
+def test_merge_is_valid_graph(name, m):
+    g = models.build(name)
+    mg = netfuse.merge(g, m)
+    mg.validate()
+    assert mg.merged_m == m
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_merge_replaces_ops_with_counterparts(name):
+    g = models.build(name)
+    mg = netfuse.merge(g, 4)
+    kinds = {n.kind for n in mg.nodes}
+    assert "layernorm" not in kinds          # LN -> GN always
+    for n in g.nodes:
+        if n.kind == "conv2d":
+            mn = mg.node(n.id)
+            # groups multiply: M x G (paper §3.1)
+            assert mn.attrs["groups"] == 4 * n.attrs["groups"]
+            assert mn.attrs["cout"] == 4 * n.attrs["cout"]
+        if n.kind == "layernorm":
+            mn = mg.node(n.id)
+            assert mn.kind == "groupnorm" and mn.attrs["groups"] == 4
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_merge_preserves_topology_modulo_fixups(name):
+    """Every original node id survives; only refmt/slice/stack are added."""
+    g = models.build(name)
+    mg = netfuse.merge(g, 3)
+    orig = {n.id for n in g.nodes}
+    added = {n.id for n in mg.nodes} - orig
+    for nid in added:
+        assert (nid.startswith("refmt_") or "__slice" in nid
+                or "__m" in nid or nid.endswith("__stack")), nid
+    # mergeable originals survive under their own id
+    for n in g.nodes:
+        if n.mergeable:
+            assert any(x.id == n.id for x in mg.nodes)
+
+
+def test_refmt_inserted_on_dim_conflict():
+    """Paper Figure 4: bmm (Batch) feeding group norm (Channel) needs a
+    reshape between them."""
+    b = GraphBuilder("ffnn", (8,))
+    x = b.dense("input", 8, 8)
+    x = b.layernorm(x, 8)
+    g = b.build(x)
+    mg = netfuse.merge(g, 2)
+    kinds = [n.kind for n in mg.nodes]
+    assert "refmt" in kinds
+    # the refmt sits between the dense and the groupnorm
+    gn = next(n for n in mg.nodes if n.kind == "groupnorm")
+    ref = mg.node(gn.inputs[0])
+    assert ref.kind == "refmt"
+    assert ref.attrs == {"src": "batch", "dst": "channel"}
+
+
+def test_no_refmt_when_dims_agree():
+    """conv -> bn -> relu chain is all-Channel: zero fix-ups."""
+    b = GraphBuilder("cnn", (3, 8, 8))
+    x = b.conv2d("input", 3, 4, k=3)
+    x = b.batchnorm(x, 4)
+    x = b.relu(x)
+    g = b.build(x)
+    mg = netfuse.merge(g, 4)
+    assert all(n.kind != "refmt" for n in mg.nodes)
+
+
+def test_refmt_shared_across_diamond():
+    """A fork consuming the same conversion gets one refmt, not two."""
+    b = GraphBuilder("fork", (8,))
+    x = b.dense("input", 8, 8)
+    l1 = b.layernorm(x, 8)
+    l2 = b.layernorm(x, 8)
+    # recombine in channel domain
+    y = b.residual(l1, l2)
+    g = b.build(y)
+    mg = netfuse.merge(g, 2)
+    refmts = [n for n in mg.nodes if n.kind == "refmt"]
+    assert len(refmts) == 1
+
+
+def test_merge_m1_identity_semantics():
+    g = models.build("bert")
+    mg = netfuse.merge(g, 1)
+    bank = weights.init_bank(g, 3)
+    mw = netfuse.merge_weights(g, mg, [bank])
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(2, *g.input_shape)).astype(np.float32)
+    y1 = run_graph(g, bank, x)
+    ym = run_graph(mg, mw, pack_inputs([x], "batch"))
+    np.testing.assert_allclose(ym[0], y1, rtol=1e-5, atol=1e-6)
+
+
+def test_merge_rejects_double_merge():
+    g = models.build("bert")
+    mg = netfuse.merge(g, 2)
+    with pytest.raises(netfuse.MergeError):
+        netfuse.merge(mg, 2)
+
+
+def test_merge_rejects_bad_m():
+    with pytest.raises(netfuse.MergeError):
+        netfuse.merge(models.build("bert"), 0)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end numerical equivalence (the paper's core claim)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", MODELS)
+@pytest.mark.parametrize("m,bs", [(2, 1), (4, 2)])
+def test_fused_equals_individuals(name, m, bs):
+    g = models.build(name)
+    mg = netfuse.merge(g, m)
+    banks = weights.init_banks(g, m)
+    mw = netfuse.merge_weights(g, mg, banks)
+    rng = np.random.default_rng(99)
+    xs = [rng.normal(size=(bs, *g.input_shape)).astype(np.float32)
+          for _ in range(m)]
+    singles = [run_graph(g, banks[i], xs[i]) for i in range(m)]
+    ym = run_graph(mg, mw, pack_inputs(xs, mg.layout))
+    outs = unpack_outputs(ym, m)
+    for i in range(m):
+        np.testing.assert_allclose(outs[i], singles[i],
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["resnet", "bert"])
+def test_fused_equals_individuals_pallas(name):
+    """Same equivalence through the Pallas kernel path (L1)."""
+    m, bs = 2, 1
+    g = models.build(name)
+    mg = netfuse.merge(g, m)
+    banks = weights.init_banks(g, m)
+    mw = netfuse.merge_weights(g, mg, banks)
+    rng = np.random.default_rng(7)
+    xs = [rng.normal(size=(bs, *g.input_shape)).astype(np.float32)
+          for _ in range(m)]
+    single = Interpreter(g, "pallas")
+    merged = Interpreter(mg, "pallas")
+    singles = [np.asarray(single(jnp.asarray(xs[i]),
+                                 *[jnp.asarray(banks[i][k])
+                                   for k in single.order]))
+               for i in range(m)]
+    ym = np.asarray(merged(pack_inputs(xs, mg.layout),
+                           *[jnp.asarray(mw[k]) for k in merged.order]))
+    for i, got in enumerate(unpack_outputs(ym, m)):
+        np.testing.assert_allclose(got, singles[i], rtol=1e-4, atol=1e-4)
+
+
+def test_weight_merge_shapes_checked():
+    g = models.build("bert")
+    mg = netfuse.merge(g, 2)
+    banks = weights.init_banks(g, 2)
+    banks[1] = {k: v[..., :1] for k, v in banks[1].items()}  # corrupt
+    with pytest.raises(Exception):
+        netfuse.merge_weights(g, mg, banks)
+
+
+def test_distinct_weights_give_distinct_outputs():
+    """Sanity: the M instances really are different models."""
+    g = models.build("resnet")
+    banks = weights.init_banks(g, 2)
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(1, *g.input_shape)).astype(np.float32)
+    y0 = run_graph(g, banks[0], x)
+    y1 = run_graph(g, banks[1], x)
+    assert np.abs(y0 - y1).max() > 1e-3

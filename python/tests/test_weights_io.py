@@ -1,0 +1,62 @@
+"""Weight banks + .nft container round-trip (shared format with rust)."""
+
+import numpy as np
+import pytest
+
+from compile import models, weights
+
+
+def test_nft_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a": rng.normal(size=(3, 4)).astype(np.float32),
+        "b/nested.name": rng.normal(size=(2, 3, 4, 5)).astype(np.float32),
+        "scalar": np.float32(3.25).reshape(()),
+        "vec": rng.normal(size=(7,)).astype(np.float32),
+    }
+    p = tmp_path / "t.nft"
+    weights.write_nft(str(p), tensors)
+    back = weights.read_nft(str(p))
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+def test_nft_rejects_bad_magic(tmp_path):
+    p = tmp_path / "bad.nft"
+    p.write_bytes(b"XXXX\x00\x00\x00\x00")
+    with pytest.raises(ValueError):
+        weights.read_nft(str(p))
+
+
+def test_banks_are_deterministic():
+    g = models.build("bert")
+    a = weights.init_bank(g, 7)
+    b = weights.init_bank(g, 7)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_banks_differ_across_instances():
+    g = models.build("bert")
+    banks = weights.init_banks(g, 2)
+    diffs = [np.abs(banks[0][k] - banks[1][k]).max() for k in banks[0]]
+    assert max(diffs) > 0.01
+
+
+def test_bank_covers_all_weights():
+    g = models.build("resnext")
+    bank = weights.init_bank(g, 0)
+    want = {f"{n.id}.{w}" for n in g.nodes for w in n.weights}
+    assert set(bank) == want
+    for n in g.nodes:
+        for wname, shape in n.weights.items():
+            assert bank[f"{n.id}.{wname}"].shape == tuple(shape)
+
+
+def test_var_is_positive():
+    g = models.build("resnet")
+    bank = weights.init_bank(g, 0)
+    for k, v in bank.items():
+        if k.endswith(".var"):
+            assert (v > 0).all()

@@ -1,0 +1,131 @@
+//! Memory accounting — drives Figures 7 and 10.
+//!
+//! The paper decomposes peak GPU memory into the *inference workspace*
+//! (weights + intermediate activations) and the *base memory* the
+//! framework reserves per process (~500 MB for PyTorch on GPU). The
+//! Concurrent baseline OOMs not because of workspace but because M
+//! processes × base memory exhausts the card (§5.3). This module
+//! reproduces that decomposition for any strategy.
+
+use super::strategy::StrategyKind;
+
+/// Framework base memory per process (the paper's PyTorch constant).
+pub const BASE_PER_PROCESS: u64 = 500 * 1024 * 1024;
+
+/// Per-process cuDNN workspace + caching-allocator slack. Charged to the
+/// *workspace* portion for every live process: this is what pushes the
+/// Concurrent baseline over the 16 GB V100 at 16 models (§5.3) even
+/// though weights alone would fit.
+pub const SLACK_PER_PROCESS: u64 = 448 * 1024 * 1024;
+
+/// Per-configuration memory inputs (from the manifest for measured mode,
+/// or from `devmodel::fullscale` for paper-scale mode).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelFootprint {
+    /// one instance's parameters
+    pub weights_bytes: u64,
+    /// one instance's activation workspace at the given batch size
+    pub act_bytes: u64,
+    /// merged (M-instance) parameters — == m * weights_bytes
+    pub fused_weights_bytes: u64,
+    /// merged activation workspace
+    pub fused_act_bytes: u64,
+}
+
+/// Peak memory estimate for one configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryEstimate {
+    /// weights + activations (the hatched bar portion)
+    pub workspace: u64,
+    /// framework base (the solid bar portion)
+    pub base: u64,
+    pub total: u64,
+    /// processes the strategy spawns
+    pub processes: usize,
+}
+
+impl MemoryEstimate {
+    pub fn fits(&self, capacity: u64) -> bool {
+        self.total <= capacity
+    }
+}
+
+/// Estimate peak memory for running M instances under `strategy`
+/// (paper §5.3):
+///
+/// - Sequential: one process; all M weight sets stay resident (the
+///   paper's baseline keeps every model loaded), one activation set.
+/// - Concurrent: M processes, each with its own weights + activations
+///   and its own framework base.
+/// - Hybrid(A): A processes; all weights resident, A live activation
+///   sets.
+/// - NetFuse: one process holding the merged weights + merged
+///   activations.
+pub fn estimate(
+    strategy: StrategyKind,
+    m: usize,
+    fp: &ModelFootprint,
+) -> MemoryEstimate {
+    let procs = strategy.processes(m);
+    let base = BASE_PER_PROCESS * procs as u64;
+    let workspace = match strategy {
+        StrategyKind::Sequential => fp.weights_bytes * m as u64 + fp.act_bytes,
+        StrategyKind::Concurrent => (fp.weights_bytes + fp.act_bytes) * m as u64,
+        StrategyKind::Hybrid { .. } => {
+            fp.weights_bytes * m as u64 + fp.act_bytes * procs as u64
+        }
+        StrategyKind::NetFuse => fp.fused_weights_bytes + fp.fused_act_bytes,
+    } + SLACK_PER_PROCESS * procs as u64;
+    MemoryEstimate { workspace, base, total: workspace + base, processes: procs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FP: ModelFootprint = ModelFootprint {
+        weights_bytes: 100 << 20,       // 100 MB
+        act_bytes: 30 << 20,            // 30 MB
+        fused_weights_bytes: 16 * (100 << 20),
+        fused_act_bytes: 16 * (30 << 20),
+    };
+
+    #[test]
+    fn concurrent_base_dominates() {
+        // the paper's §5.3 observation: 16 processes ~ 8 GB of base alone
+        let e = estimate(StrategyKind::Concurrent, 16, &FP);
+        assert_eq!(e.base, 16 * BASE_PER_PROCESS);
+        assert!(e.base > e.workspace / 2);
+        assert!(!e.fits(10 << 30)); // 10 GB card: OOM
+    }
+
+    #[test]
+    fn sequential_is_smallest_workspace() {
+        let seq = estimate(StrategyKind::Sequential, 16, &FP);
+        let conc = estimate(StrategyKind::Concurrent, 16, &FP);
+        let fused = estimate(StrategyKind::NetFuse, 16, &FP);
+        assert!(seq.workspace < conc.workspace);
+        assert!(seq.workspace <= fused.workspace);
+        assert!(seq.total < conc.total);
+    }
+
+    #[test]
+    fn netfuse_close_to_sequential_plus_acts() {
+        // NETFUSE holds M x activations but only 1 process of base:
+        // "a small additional amount of GPU memory" (abstract)
+        let seq = estimate(StrategyKind::Sequential, 8, &FP);
+        let nf = estimate(StrategyKind::NetFuse, 8, &FP);
+        assert!(nf.total < seq.total * 2);
+        assert!(nf.base == BASE_PER_PROCESS);
+    }
+
+    #[test]
+    fn hybrid_interpolates() {
+        let h4 = estimate(StrategyKind::Hybrid { procs: 4 }, 32, &FP);
+        let seq = estimate(StrategyKind::Sequential, 32, &FP);
+        let conc = estimate(StrategyKind::Concurrent, 32, &FP);
+        assert!(h4.total > seq.total);
+        assert!(h4.total < conc.total);
+        assert_eq!(h4.processes, 4);
+    }
+}

@@ -1,0 +1,91 @@
+//! Serving metrics: per-strategy latency/throughput collection and the
+//! table-formatted reports the benches print.
+
+use std::time::Instant;
+
+use crate::util::stats::{fmt_secs, Latencies};
+
+use super::strategy::StrategyKind;
+
+/// Rolling metrics for one (strategy, configuration) run.
+#[derive(Debug)]
+pub struct Metrics {
+    pub strategy: StrategyKind,
+    pub model: String,
+    pub m: usize,
+    pub bs: usize,
+    /// end-to-end request latency (arrival -> response)
+    pub request_latency: Latencies,
+    /// wall time per fleet round (the paper's "inference time")
+    pub round_latency: Latencies,
+    started: Instant,
+    pub completed_requests: u64,
+}
+
+impl Metrics {
+    pub fn new(strategy: StrategyKind, model: &str, m: usize, bs: usize) -> Metrics {
+        Metrics {
+            strategy,
+            model: model.to_string(),
+            m,
+            bs,
+            request_latency: Latencies::new(),
+            round_latency: Latencies::new(),
+            started: Instant::now(),
+            completed_requests: 0,
+        }
+    }
+
+    pub fn record_round(&mut self, seconds: f64) {
+        self.round_latency.record(seconds);
+    }
+
+    pub fn record_request(&mut self, latency: f64) {
+        self.request_latency.record(latency);
+        self.completed_requests += 1;
+    }
+
+    /// Requests per second since construction.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs > 0.0 {
+            self.completed_requests as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report_line(&self) -> String {
+        let r = &self.round_latency;
+        format!(
+            "{:<10} {:<8} m={:<3} bs={:<2} rounds={:<5} round: {:>10} ± {:>9} \
+             p50={:>10} p99={:>10}",
+            self.strategy.to_string(),
+            self.model,
+            self.m,
+            self.bs,
+            r.count(),
+            fmt_secs(r.summary().mean()),
+            fmt_secs(r.summary().std()),
+            fmt_secs(r.p50()),
+            fmt_secs(r.p99()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = Metrics::new(StrategyKind::NetFuse, "bert", 4, 1);
+        m.record_round(0.010);
+        m.record_round(0.012);
+        m.record_request(0.011);
+        assert_eq!(m.round_latency.count(), 2);
+        assert_eq!(m.completed_requests, 1);
+        let line = m.report_line();
+        assert!(line.contains("netfuse") && line.contains("bert"));
+    }
+}

@@ -1,0 +1,22 @@
+//! The serving coordinator — Layer 3.
+//!
+//! Owns the multi-model fleet: per-instance weight banks, the merged
+//! NETFUSE executable, the paper's three baselines, request routing,
+//! batching, memory accounting and metrics (paper §5.1 "Baselines"):
+//!
+//! - `Sequential` — round-robin, one model at a time.
+//! - `Concurrent` — one worker per model, no synchronization.
+//! - `Hybrid`     — A workers x B models each (§5.3).
+//! - `NetFuse`    — one merged executable for all M models.
+
+pub mod memory;
+pub mod metrics;
+pub mod request;
+pub mod service;
+pub mod strategy;
+pub mod server;
+pub mod workload;
+
+pub use request::{Request, Response};
+pub use service::Fleet;
+pub use strategy::StrategyKind;

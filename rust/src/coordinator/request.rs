@@ -1,0 +1,33 @@
+//! Inference request/response types.
+
+use std::time::Instant;
+
+use crate::tensor::Tensor;
+
+/// A single inference request targeting one model instance.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// which of the M fine-tuned instances this request is for
+    pub model_idx: usize,
+    /// [bs, ...input_shape]
+    pub input: Tensor,
+    /// arrival time (set by the workload generator / ingress)
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, model_idx: usize, input: Tensor) -> Request {
+        Request { id, model_idx, input, arrived: Instant::now() }
+    }
+}
+
+/// The corresponding completion.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub model_idx: usize,
+    pub output: Tensor,
+    /// end-to-end seconds (arrival -> completion)
+    pub latency: f64,
+}

@@ -1,0 +1,176 @@
+//! The serving loop: ingress -> per-model queues -> batcher -> strategy
+//! -> responses. Used by `examples/serve_multimodel.rs` (the end-to-end
+//! driver) and by the integration tests.
+//!
+//! Routing and batching mirror a production multi-model router
+//! (vLLM-router-style): each fine-tuned instance has its own FIFO; the
+//! batcher assembles one *round* — up to one request per instance — and
+//! hands it to the configured strategy. Instances with an empty queue at
+//! dispatch time are padded with zeros (NETFUSE executes a fixed merged
+//! program; padded slots are computed and discarded, which is exactly
+//! what the paper's fixed merged graph implies). Bounded queues provide
+//! backpressure.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+use super::metrics::Metrics;
+use super::request::{Request, Response};
+use super::service::Fleet;
+use super::strategy::StrategyKind;
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub strategy: StrategyKind,
+    /// per-model queue capacity; arrivals beyond this are rejected
+    /// (backpressure signal to the client)
+    pub queue_cap: usize,
+    /// dispatch a partial (padded) round after this long
+    pub max_wait: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            strategy: StrategyKind::NetFuse,
+            queue_cap: 64,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Outcome of offering a request to the router.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Admit {
+    Queued,
+    /// queue full — caller should retry later (backpressure)
+    Rejected,
+}
+
+/// Single-tenant-fleet server: router + batcher + strategy executor.
+pub struct Server<'f> {
+    fleet: &'f Fleet,
+    cfg: ServerConfig,
+    queues: Vec<VecDeque<Request>>,
+    /// zero tensor used to pad absent slots in a partial round
+    pad: Tensor,
+    oldest_wait_start: Option<Instant>,
+    pub metrics: Metrics,
+}
+
+impl<'f> Server<'f> {
+    pub fn new(fleet: &'f Fleet, cfg: ServerConfig) -> Server<'f> {
+        let pad = Tensor::zeros(&fleet.request_shape());
+        let metrics = Metrics::new(cfg.strategy, &fleet.model, fleet.m, fleet.bs);
+        Server {
+            fleet,
+            cfg,
+            queues: (0..fleet.m).map(|_| VecDeque::new()).collect(),
+            pad,
+            oldest_wait_start: None,
+            metrics,
+        }
+    }
+
+    /// Route one request to its model queue.
+    pub fn offer(&mut self, req: Request) -> Admit {
+        let q = &mut self.queues[req.model_idx];
+        if q.len() >= self.cfg.queue_cap {
+            return Admit::Rejected;
+        }
+        q.push_back(req);
+        if self.oldest_wait_start.is_none() {
+            self.oldest_wait_start = Some(Instant::now());
+        }
+        Admit::Queued
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// True when a round should dispatch: either every model has work, or
+    /// the oldest queued request has waited past `max_wait`.
+    pub fn round_ready(&self) -> bool {
+        if self.pending() == 0 {
+            return false;
+        }
+        if self.queues.iter().all(|q| !q.is_empty()) {
+            return true;
+        }
+        match self.oldest_wait_start {
+            Some(t) => t.elapsed() >= self.cfg.max_wait,
+            None => false,
+        }
+    }
+
+    /// Assemble a (possibly padded) round, execute it, emit responses.
+    pub fn dispatch(&mut self) -> Result<Vec<Response>> {
+        let mut slot: Vec<Option<Request>> = (0..self.fleet.m).map(|_| None).collect();
+        for (i, q) in self.queues.iter_mut().enumerate() {
+            slot[i] = q.pop_front();
+        }
+        self.oldest_wait_start = if self.pending() > 0 {
+            Some(Instant::now())
+        } else {
+            None
+        };
+
+        let inputs: Vec<&Tensor> = slot
+            .iter()
+            .map(|s| s.as_ref().map(|r| &r.input).unwrap_or(&self.pad))
+            .collect();
+        let t0 = Instant::now();
+        let outs = self.fleet.run_round(self.cfg.strategy, &inputs)?;
+        self.metrics.record_round(t0.elapsed().as_secs_f64());
+
+        let mut responses = Vec::new();
+        for (i, (req, out)) in slot.into_iter().zip(outs).enumerate() {
+            if let Some(req) = req {
+                let latency = req.arrived.elapsed().as_secs_f64();
+                self.metrics.record_request(latency);
+                responses.push(Response {
+                    id: req.id,
+                    model_idx: i,
+                    output: out,
+                    latency,
+                });
+            }
+        }
+        Ok(responses)
+    }
+
+    /// Closed-loop driver: feed `rounds` full rounds from `make_round`
+    /// and dispatch each. Returns total responses.
+    pub fn run_rounds<F>(&mut self, rounds: usize, mut make_round: F) -> Result<usize>
+    where
+        F: FnMut() -> Vec<Request>,
+    {
+        let mut total = 0;
+        for _ in 0..rounds {
+            for req in make_round() {
+                match self.offer(req) {
+                    Admit::Queued => {}
+                    Admit::Rejected => {
+                        // drain before re-offering (simple backpressure)
+                        while self.round_ready() {
+                            total += self.dispatch()?.len();
+                        }
+                    }
+                }
+            }
+            while self.round_ready() {
+                total += self.dispatch()?.len();
+            }
+        }
+        // drain any padded leftovers
+        while self.pending() > 0 {
+            total += self.dispatch()?.len();
+        }
+        Ok(total)
+    }
+}

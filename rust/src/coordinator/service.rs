@@ -1,0 +1,231 @@
+//! `Fleet`: M fine-tuned instances of one model family, runnable under
+//! any of the four strategies. This is the heart of the reproduction —
+//! the same weight banks flow through the single-model executables
+//! (baselines) and through the merged executable (NETFUSE), and a round
+//! of M requests produces identical outputs either way.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::fuse::{self, weights::Bank};
+use crate::graph::Graph;
+use crate::runtime::{Bound, Manifest, Runtime};
+use crate::tensor::{io::read_nft, Tensor};
+
+use super::strategy::StrategyKind;
+
+/// A fleet of M instances of one model family at a fixed batch size.
+pub struct Fleet {
+    pub model: String,
+    pub m: usize,
+    pub bs: usize,
+    /// merged-input packing: "channel" (CNN) | "batch" (sequence)
+    pub layout: String,
+    /// single-model graph (planning/memory estimation)
+    pub graph: Graph,
+    /// M bindings of the single-model module (one per weight bank)
+    singles: Vec<Bound>,
+    /// the NETFUSE executable with Rust-stacked merged weights
+    fused: Bound,
+    /// manifest memory numbers for the memory model
+    pub single_weights_bytes: u64,
+    pub single_act_bytes: u64,
+    pub fused_weights_bytes: u64,
+    pub fused_act_bytes: u64,
+}
+
+impl Fleet {
+    /// Load a fleet from artifacts: compile the single + merged modules,
+    /// read the per-instance banks, stack the merged weights (Rust-side
+    /// Algorithm 1 + weight merge).
+    pub fn load(rt: &Runtime, model: &str, m: usize, bs: usize) -> Result<Fleet> {
+        Self::load_with(rt, model, m, bs, "")
+    }
+
+    /// `suffix` selects artifact variants (e.g. "_pallas" for the
+    /// Pallas-kernel lowering the quickstart exercises).
+    pub fn load_with(
+        rt: &Runtime,
+        model: &str,
+        m: usize,
+        bs: usize,
+        suffix: &str,
+    ) -> Result<Fleet> {
+        let entry = rt.manifest.model(model)?.clone();
+        if m > entry.instances {
+            bail!(
+                "{model}: fleet wants {m} instances, bank has {}",
+                entry.instances
+            );
+        }
+        let banks = load_banks(rt, model, m)?;
+
+        // single-model executables: ONE compile, M weight bindings
+        let single_name = format!("{}{}", Manifest::single_name(model, bs), suffix);
+        let single_mod = rt.compile(&single_name)?;
+        let mut singles = Vec::with_capacity(m);
+        for bank in &banks {
+            let params = fuse::weights::params_in_order(&entry.graph, bank)?;
+            singles.push(single_mod.bind(&params)?);
+        }
+
+        // merged executable: Rust-side merge plan + stacked weights
+        let merged_graph = fuse::merge(&entry.graph, m)?;
+        let merged_bank = fuse::weights::merge_weights(&merged_graph, &banks)?;
+        let fused_name = format!("{}{}", Manifest::fused_name(model, m, bs), suffix);
+        let fused_art = rt.manifest.artifact(&fused_name)?;
+        // cross-check the plan against the artifact the Python side lowered
+        if merged_graph.param_order() != fused_art.params {
+            bail!("{fused_name}: Rust merge plan disagrees with artifact");
+        }
+        let params = fuse::weights::params_in_order(&merged_graph, &merged_bank)?;
+        let fused = rt.load(&fused_name, &params)?;
+
+        let single_art = rt.manifest.artifact(&single_name)?;
+        Ok(Fleet {
+            model: model.to_string(),
+            m,
+            bs,
+            layout: fused.art().layout.clone(),
+            graph: entry.graph,
+            single_weights_bytes: single_art.weights_bytes,
+            single_act_bytes: single_art.act_bytes,
+            fused_weights_bytes: fused.art().weights_bytes,
+            fused_act_bytes: fused.art().act_bytes,
+            singles,
+            fused,
+        })
+    }
+
+    /// Pack M per-instance inputs into the merged input tensor
+    /// (paper §3.1: concat on channel for conv nets, stack on batch for
+    /// matmul nets).
+    pub fn pack(&self, xs: &[&Tensor]) -> Result<Tensor> {
+        if xs.len() != self.m {
+            bail!("pack wants {} inputs, got {}", self.m, xs.len());
+        }
+        match self.layout.as_str() {
+            "channel" => Tensor::concat(xs, 1),
+            "batch" => Tensor::stack(xs),
+            other => bail!("bad fleet layout {other:?}"),
+        }
+    }
+
+    /// Split the merged output back into per-instance outputs. Merged
+    /// outputs are always batch-packed `[M, bs, ...]` (the per-instance
+    /// heads are re-stacked by `stack_m`).
+    pub fn unpack(&self, y: &Tensor) -> Result<Vec<Tensor>> {
+        (0..self.m).map(|i| y.index0(i)).collect()
+    }
+
+    /// Run one round (one request per instance) under `strategy`.
+    /// Returns per-instance outputs, index-aligned with `xs`.
+    pub fn run_round(
+        &self,
+        strategy: StrategyKind,
+        xs: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        if xs.len() != self.m {
+            bail!("round wants {} inputs, got {}", self.m, xs.len());
+        }
+        match strategy {
+            StrategyKind::Sequential => {
+                let mut out = Vec::with_capacity(self.m);
+                for (i, x) in xs.iter().enumerate() {
+                    out.push(self.singles[i].run(x)?);
+                }
+                Ok(out)
+            }
+            StrategyKind::Concurrent => self.run_chunked(xs, self.m),
+            StrategyKind::Hybrid { procs } => self.run_chunked(xs, procs.min(self.m)),
+            StrategyKind::NetFuse => {
+                let y = self.fused.run(&self.pack(xs)?)?;
+                self.unpack(&y)
+            }
+        }
+    }
+
+    /// `procs` unsynchronized workers, each draining a contiguous chunk
+    /// of models sequentially. procs == M is the Concurrent baseline.
+    fn run_chunked(&self, xs: &[&Tensor], procs: usize) -> Result<Vec<Tensor>> {
+        let chunk = self.m.div_ceil(procs);
+        let mut out: Vec<Option<Tensor>> = (0..self.m).map(|_| None).collect();
+        let results: Vec<Result<Vec<(usize, Tensor)>>> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for p in 0..procs {
+                let lo = p * chunk;
+                let hi = ((p + 1) * chunk).min(self.m);
+                if lo >= hi {
+                    continue;
+                }
+                let singles = &self.singles;
+                handles.push(scope.spawn(move || {
+                    let mut part = Vec::with_capacity(hi - lo);
+                    for i in lo..hi {
+                        part.push((i, singles[i].run(xs[i])?));
+                    }
+                    Ok(part)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in results {
+            for (i, t) in r? {
+                out[i] = Some(t);
+            }
+        }
+        out.into_iter()
+            .enumerate()
+            .map(|(i, t)| t.with_context(|| format!("model {i} produced no output")))
+            .collect()
+    }
+
+    /// Access a single instance's executable (serving loop fast path for
+    /// strategies that dispatch per request).
+    pub fn single(&self, i: usize) -> &Bound {
+        &self.singles[i]
+    }
+
+    pub fn fused(&self) -> &Bound {
+        &self.fused
+    }
+
+    /// Per-request input shape `[bs, ...]`.
+    pub fn request_shape(&self) -> Vec<usize> {
+        let mut s = vec![self.bs];
+        s.extend_from_slice(&self.graph.input_shape);
+        s
+    }
+}
+
+/// Read `weights/<model>.nft` and split into per-instance banks
+/// (keys are `m{i}/node.weight`).
+pub fn load_banks(rt: &Runtime, model: &str, m: usize) -> Result<Vec<Bank>> {
+    let entry = rt.manifest.model(model)?;
+    let all = read_nft(&rt.artifact_dir().join(&entry.weights))?;
+    split_banks(&all, m)
+}
+
+/// Split a flat `m{i}/key` map into per-instance banks.
+pub fn split_banks(all: &BTreeMap<String, Tensor>, m: usize) -> Result<Vec<Bank>> {
+    let mut banks = vec![Bank::new(); m];
+    for (k, v) in all {
+        let (prefix, rest) = k
+            .split_once('/')
+            .with_context(|| format!("bad bank key {k:?}"))?;
+        let idx: usize = prefix
+            .strip_prefix('m')
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("bad bank key {k:?}"))?;
+        if idx < m {
+            banks[idx].insert(rest.to_string(), v.clone());
+        }
+    }
+    for (i, b) in banks.iter().enumerate() {
+        if b.is_empty() {
+            bail!("weight bank has no tensors for instance {i}");
+        }
+    }
+    Ok(banks)
+}

@@ -1,0 +1,108 @@
+//! The four execution strategies (paper §5.1).
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// How the fleet executes one round of M per-model requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyKind {
+    /// Round-robin, one model at a time — the paper's `Sequential`.
+    Sequential,
+    /// One unsynchronized worker per model — the paper's `Concurrent`
+    /// (process-per-model; threads here, with per-process base memory
+    /// charged by the memory model).
+    Concurrent,
+    /// `procs` workers, each running M/procs models sequentially — the
+    /// paper's `Hybrid` "(Ap, Bm)" configurations (§5.3).
+    Hybrid { procs: usize },
+    /// One merged executable for all M models — NETFUSE.
+    NetFuse,
+}
+
+impl StrategyKind {
+    /// Parse CLI spellings: `sequential`, `concurrent`, `hybrid:4`,
+    /// `netfuse`.
+    pub fn parse(s: &str) -> Result<StrategyKind> {
+        let s = s.trim().to_ascii_lowercase();
+        Ok(match s.as_str() {
+            "sequential" | "seq" => StrategyKind::Sequential,
+            "concurrent" | "conc" => StrategyKind::Concurrent,
+            "netfuse" | "fused" => StrategyKind::NetFuse,
+            _ => {
+                if let Some(p) = s.strip_prefix("hybrid:") {
+                    let procs: usize = p
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad hybrid procs {p:?}"))?;
+                    if procs == 0 {
+                        bail!("hybrid needs >= 1 proc");
+                    }
+                    StrategyKind::Hybrid { procs }
+                } else {
+                    bail!(
+                        "unknown strategy {s:?} (want sequential | concurrent \
+                         | hybrid:<procs> | netfuse)"
+                    );
+                }
+            }
+        })
+    }
+
+    /// Number of "processes" the memory model charges base memory for.
+    pub fn processes(&self, m: usize) -> usize {
+        match self {
+            StrategyKind::Sequential | StrategyKind::NetFuse => 1,
+            StrategyKind::Concurrent => m,
+            StrategyKind::Hybrid { procs } => (*procs).min(m),
+        }
+    }
+}
+
+impl fmt::Display for StrategyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StrategyKind::Sequential => write!(f, "sequential"),
+            StrategyKind::Concurrent => write!(f, "concurrent"),
+            StrategyKind::Hybrid { procs } => write!(f, "hybrid:{procs}"),
+            StrategyKind::NetFuse => write!(f, "netfuse"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all() {
+        assert_eq!(StrategyKind::parse("seq").unwrap(), StrategyKind::Sequential);
+        assert_eq!(
+            StrategyKind::parse("hybrid:4").unwrap(),
+            StrategyKind::Hybrid { procs: 4 }
+        );
+        assert_eq!(StrategyKind::parse("NetFuse").unwrap(), StrategyKind::NetFuse);
+        assert!(StrategyKind::parse("hybrid:0").is_err());
+        assert!(StrategyKind::parse("warp").is_err());
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        for s in [
+            StrategyKind::Sequential,
+            StrategyKind::Concurrent,
+            StrategyKind::Hybrid { procs: 8 },
+            StrategyKind::NetFuse,
+        ] {
+            assert_eq!(StrategyKind::parse(&s.to_string()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn process_counts() {
+        assert_eq!(StrategyKind::Sequential.processes(32), 1);
+        assert_eq!(StrategyKind::Concurrent.processes(32), 32);
+        assert_eq!(StrategyKind::Hybrid { procs: 4 }.processes(32), 4);
+        assert_eq!(StrategyKind::Hybrid { procs: 64 }.processes(32), 32);
+        assert_eq!(StrategyKind::NetFuse.processes(32), 1);
+    }
+}

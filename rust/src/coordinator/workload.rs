@@ -1,0 +1,109 @@
+//! Synthetic workload generation: per-model request streams.
+//!
+//! The paper serves "different input streams" per fine-tuned instance
+//! (§2.1). We model each instance's stream as Poisson arrivals with a
+//! configurable per-model rate; payloads are seeded standard-normal
+//! tensors shaped `[bs, ...input_shape]`.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::request::Request;
+
+/// Open-loop Poisson workload across M model streams.
+pub struct Workload {
+    m: usize,
+    shape: Vec<usize>,
+    /// per-model arrival rate (requests/sec)
+    rate: f64,
+    rng: Rng,
+    next_id: u64,
+    /// virtual clock per stream (seconds from start)
+    next_arrival: Vec<f64>,
+}
+
+impl Workload {
+    pub fn new(m: usize, request_shape: &[usize], rate: f64, seed: u64) -> Workload {
+        let mut rng = Rng::new(seed);
+        let next_arrival = (0..m).map(|_| rng.exp(rate)).collect();
+        Workload {
+            m,
+            shape: request_shape.to_vec(),
+            rate,
+            rng,
+            next_id: 0,
+            next_arrival,
+        }
+    }
+
+    /// The next (arrival_time, request) in global time order.
+    pub fn next(&mut self) -> (f64, Request) {
+        // earliest stream
+        let (idx, _) = self
+            .next_arrival
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let at = self.next_arrival[idx];
+        self.next_arrival[idx] += self.rng.exp(self.rate);
+        let input = Tensor::randn(&self.shape, &mut self.rng);
+        let id = self.next_id;
+        self.next_id += 1;
+        (at, Request::new(id, idx, input))
+    }
+
+    /// One full round: exactly one request per model (closed-loop benches).
+    pub fn round(&mut self) -> Vec<Request> {
+        (0..self.m)
+            .map(|i| {
+                let input = Tensor::randn(&self.shape, &mut self.rng);
+                let id = self.next_id;
+                self.next_id += 1;
+                Request::new(id, i, input)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_ordered_and_cover_models() {
+        let mut w = Workload::new(4, &[1, 3], 100.0, 7);
+        let mut last = 0.0;
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            let (at, req) = w.next();
+            assert!(at >= last, "arrivals must be non-decreasing");
+            last = at;
+            seen[req.model_idx] = true;
+            assert_eq!(req.input.shape(), &[1, 3]);
+        }
+        assert!(seen.iter().all(|s| *s));
+    }
+
+    #[test]
+    fn round_is_one_per_model() {
+        let mut w = Workload::new(3, &[1, 2], 10.0, 1);
+        let r = w.round();
+        assert_eq!(r.len(), 3);
+        let idxs: Vec<_> = r.iter().map(|q| q.model_idx).collect();
+        assert_eq!(idxs, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Workload::new(2, &[1], 5.0, 42);
+        let mut b = Workload::new(2, &[1], 5.0, 42);
+        for _ in 0..20 {
+            let (ta, ra) = a.next();
+            let (tb, rb) = b.next();
+            assert_eq!(ta, tb);
+            assert_eq!(ra.model_idx, rb.model_idx);
+            assert_eq!(ra.input, rb.input);
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Strategy simulation on a GPU profile: predicts the paper's inference
+//! times per (model, M, bs, strategy) — the engine behind Figures 5, 6,
+//! 8 and 9.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::memory::{self, MemoryEstimate};
+use crate::coordinator::strategy::StrategyKind;
+
+use super::{fullscale, GpuProfile, OpCost};
+
+/// Predicted inference time (seconds) for one round of M models.
+pub fn predict(
+    p: &GpuProfile,
+    model: &str,
+    m: usize,
+    bs: usize,
+    strategy: StrategyKind,
+) -> Result<f64> {
+    let Some(ops) = fullscale::model_ops(model, bs) else {
+        bail!("unknown model {model:?}");
+    };
+    Ok(match strategy {
+        StrategyKind::Sequential => {
+            // M full passes, launches and compute both serialized
+            let one: f64 = ops
+                .iter()
+                .map(|o| p.launch_s + o.compute_s(p))
+                .sum();
+            one * m as f64
+        }
+        StrategyKind::Concurrent => concurrent_time(p, &ops, m),
+        StrategyKind::Hybrid { procs } => {
+            // A concurrent workers, each a sequential chain of B models.
+            let procs = procs.min(m);
+            let per_worker = m.div_ceil(procs);
+            // each worker behaves like `Concurrent` with `procs` streams,
+            // repeated `per_worker` times
+            concurrent_time(p, &ops, procs) * per_worker as f64
+        }
+        StrategyKind::NetFuse => {
+            // one launch per op, M x wider kernels
+            ops.iter()
+                .map(|o| p.launch_s + o.merged(m).compute_s(p))
+                .sum()
+        }
+    })
+}
+
+/// M unsynchronized processes sharing the device (no MPS): compute
+/// serializes at the device, launches overlap across processes, but each
+/// kernel boundary pays a context-switch cost — with enough processes
+/// and enough kernels this overtakes the launch savings, which is why
+/// the paper sees Concurrent *lose* to Sequential on XLNet (§5.2).
+fn concurrent_time(p: &GpuProfile, ops: &[OpCost], m: usize) -> f64 {
+    if m == 1 {
+        // one process: identical to Sequential with M=1
+        return ops.iter().map(|o| p.launch_s + o.compute_s(p)).sum();
+    }
+    // GPU compute serializes across processes, but (i) low-occupancy
+    // kernels co-schedule across up to `overlap_cap` contexts, (ii) CPU
+    // launch streams overlap (only one stream's worth stays exposed),
+    // while (iii) every kernel pays the time-slicing quantum + context
+    // switch, and penalty-flagged ops (Transformer-XL) pay extra.
+    let compute: f64 = ops.iter().map(|o| o.sliced_s(p, m)).sum::<f64>() * m as f64;
+    let launches: f64 = ops.len() as f64 * p.launch_s;
+    let switches = ops.len() as f64 * m as f64 * p.switch_s;
+    compute + launches + switches
+}
+
+/// Memory estimate at full scale (Figures 7 / 10).
+pub fn predict_memory(
+    model: &str,
+    m: usize,
+    bs: usize,
+    strategy: StrategyKind,
+) -> MemoryEstimate {
+    let fp = fullscale::footprint(model, bs, m);
+    memory::estimate(strategy, m, &fp)
+}
+
+/// Convenience: the NETFUSE speedup over the best baseline *that fits
+/// device memory* — in the paper the Concurrent baseline OOMs at 16-32
+/// models (Figure 7), so the reported speedups there are vs Sequential.
+pub fn speedup_vs_best_baseline(
+    p: &GpuProfile,
+    model: &str,
+    m: usize,
+    bs: usize,
+) -> Result<f64> {
+    let nf = predict(p, model, m, bs, StrategyKind::NetFuse)?;
+    let seq = predict(p, model, m, bs, StrategyKind::Sequential)?;
+    let mut best = seq;
+    if predict_memory(model, m, bs, StrategyKind::Concurrent).fits(p.capacity) {
+        best = best.min(predict(p, model, m, bs, StrategyKind::Concurrent)?);
+    }
+    Ok(best / nf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devmodel::{TITAN_XP, V100};
+
+    #[test]
+    fn sequential_linear_in_m() {
+        let t8 = predict(&V100, "resnet", 8, 1, StrategyKind::Sequential).unwrap();
+        let t16 = predict(&V100, "resnet", 16, 1, StrategyKind::Sequential).unwrap();
+        assert!((t16 / t8 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn netfuse_wins_at_bs1_m32() {
+        // paper §5.2: up to 2.6x / 3.4x / 2.7x / 3.6x on V100
+        for model in ["resnet", "resnext", "bert", "xlnet"] {
+            let s = speedup_vs_best_baseline(&V100, model, 32, 1).unwrap();
+            assert!(s > 1.5, "{model}: speedup {s:.2} too small");
+            assert!(s < 8.0, "{model}: speedup {s:.2} implausibly large");
+        }
+    }
+
+    #[test]
+    fn gap_narrows_with_batch_size() {
+        // paper Figure 6: merging helps less as bs grows
+        let s1 = speedup_vs_best_baseline(&V100, "bert", 16, 1).unwrap();
+        let s8 = speedup_vs_best_baseline(&V100, "bert", 16, 8).unwrap();
+        assert!(s8 < s1, "bs=8 speedup {s8:.2} !< bs=1 speedup {s1:.2}");
+    }
+
+    #[test]
+    fn titan_xp_gains_smaller_than_v100() {
+        // paper Appendix B: fewer SMs => smaller relative gains
+        let v = speedup_vs_best_baseline(&V100, "resnext", 32, 1).unwrap();
+        let x = speedup_vs_best_baseline(&TITAN_XP, "resnext", 32, 1).unwrap();
+        assert!(x < v, "TITANXp {x:.2} !< V100 {v:.2}");
+    }
+
+    #[test]
+    fn concurrent_slowest_for_xlnet() {
+        // paper §5.2: XLNet's extra kernels make Concurrent the worst
+        let seq = predict(&V100, "xlnet", 32, 1, StrategyKind::Sequential).unwrap();
+        let conc = predict(&V100, "xlnet", 32, 1, StrategyKind::Concurrent).unwrap();
+        assert!(conc > seq, "concurrent {conc:.4} !> sequential {seq:.4}");
+    }
+
+    #[test]
+    fn concurrent_beats_sequential_for_resnet() {
+        let seq = predict(&V100, "resnet", 16, 1, StrategyKind::Sequential).unwrap();
+        let conc = predict(&V100, "resnet", 16, 1, StrategyKind::Concurrent).unwrap();
+        assert!(conc < seq, "concurrent {conc:.4} !< sequential {seq:.4}");
+    }
+
+    #[test]
+    fn hybrid_between_extremes() {
+        let seq = predict(&V100, "resnext", 32, 1, StrategyKind::Sequential).unwrap();
+        let h4 = predict(&V100, "resnext", 32, 1, StrategyKind::Hybrid { procs: 4 }).unwrap();
+        let nf = predict(&V100, "resnext", 32, 1, StrategyKind::NetFuse).unwrap();
+        assert!(h4 < seq);
+        assert!(nf < h4);
+    }
+
+    #[test]
+    fn concurrent_oom_at_16_models_v100() {
+        // paper Figure 7: concurrent runs out of the 16 GB V100
+        let e = predict_memory("resnet", 16, 1, StrategyKind::Concurrent);
+        assert!(!e.fits(V100.capacity), "expected OOM, got {} bytes", e.total);
+        let s = predict_memory("resnet", 16, 1, StrategyKind::Sequential);
+        assert!(s.fits(V100.capacity));
+    }
+
+    #[test]
+    fn netfuse_memory_small_extra() {
+        let seq = predict_memory("bert", 8, 1, StrategyKind::Sequential);
+        let nf = predict_memory("bert", 8, 1, StrategyKind::NetFuse);
+        assert!(nf.total < seq.total * 2);
+        assert!(nf.fits(V100.capacity));
+    }
+}

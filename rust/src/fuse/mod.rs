@@ -1,0 +1,475 @@
+//! NETFUSE Algorithm 1 — the serving-side merge planner.
+//!
+//! Re-implements `python/compile/netfuse.py` over the shared graph IR:
+//! given a single-instance graph and M, produce the merged graph (op
+//! counterparts, merge-dimension propagation, refmt fix-up insertion,
+//! per-instance head expansion). The Python implementation drives the
+//! AOT lowering; this one drives the coordinator (weight-bank stacking,
+//! memory estimation, artifact validation) and is cross-checked against
+//! Python output in `tests/fuse_vs_python.rs`.
+
+pub mod weights;
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::graph::{merge_dim, Attr, Graph, MergeDim, Node};
+
+/// Packing of the merged graph input: CNNs concat on channel, sequence
+/// models stack on batch.
+pub fn input_dim(g: &Graph) -> MergeDim {
+    if g.input_shape.len() == 3 {
+        MergeDim::Channel
+    } else {
+        MergeDim::Batch
+    }
+}
+
+/// Merge one op into its input-weight-local counterpart (paper §3.1).
+/// Returns the merged node and its required concat dimension.
+pub fn merge_node(n: &Node, m: usize) -> Result<(Node, MergeDim)> {
+    let mut out = n.clone();
+    let mi = m as i64;
+    match n.kind.as_str() {
+        "conv2d" => {
+            // conv -> grouped conv with M x G groups (Appendix A)
+            let cin = n.attr_i64("cin")?;
+            let cout = n.attr_i64("cout")?;
+            let groups = n.attr_i64("groups")?;
+            let k = n.attr_i64("k")? as usize;
+            out.attrs.insert("cin".into(), Attr::Int(cin * mi));
+            out.attrs.insert("cout".into(), Attr::Int(cout * mi));
+            out.attrs.insert("groups".into(), Attr::Int(groups * mi));
+            out.weights.insert(
+                "w".into(),
+                vec![(cout * mi) as usize, (cin / groups) as usize, k, k],
+            );
+            out.weights.insert("b".into(), vec![(cout * mi) as usize]);
+            Ok((out, MergeDim::Channel))
+        }
+        "dense" => {
+            // matmul -> batch matmul, weights stacked on new leading axis
+            let fin = n.attr_usize("fin")?;
+            let fout = n.attr_usize("fout")?;
+            out.attrs.insert("merged_m".into(), Attr::Int(mi));
+            out.weights.insert("w".into(), vec![m, fin, fout]);
+            out.weights.insert("b".into(), vec![m, fout]);
+            Ok((out, MergeDim::Batch))
+        }
+        "layernorm" => {
+            // layer norm -> group norm with M groups
+            let dim = n.attr_usize("dim")?;
+            out.kind = "groupnorm".into();
+            out.attrs.clear();
+            out.attrs.insert("c".into(), Attr::Int((dim * m) as i64));
+            out.attrs.insert("groups".into(), Attr::Int(mi));
+            out.weights = BTreeMap::from([
+                ("gamma".to_string(), vec![dim * m]),
+                ("beta".to_string(), vec![dim * m]),
+            ]);
+            Ok((out, MergeDim::Channel))
+        }
+        "groupnorm" => {
+            let c = n.attr_usize("c")?;
+            let groups = n.attr_i64("groups")?;
+            out.attrs.insert("c".into(), Attr::Int((c * m) as i64));
+            out.attrs.insert("groups".into(), Attr::Int(groups * mi));
+            out.weights = BTreeMap::from([
+                ("gamma".to_string(), vec![c * m]),
+                ("beta".to_string(), vec![c * m]),
+            ]);
+            Ok((out, MergeDim::Channel))
+        }
+        "batchnorm" => {
+            // per-channel math: concat weights, same op type
+            let c = n.attr_usize("c")?;
+            out.attrs.insert("c".into(), Attr::Int((c * m) as i64));
+            for shape in out.weights.values_mut() {
+                *shape = vec![c * m];
+            }
+            Ok((out, MergeDim::Channel))
+        }
+        "attention" | "xl_attention" => {
+            // composition of matmuls -> composition of batch matmuls
+            out.attrs.insert("merged_m".into(), Attr::Int(mi));
+            for shape in out.weights.values_mut() {
+                let mut s = vec![m];
+                s.extend_from_slice(shape);
+                *shape = s;
+            }
+            Ok((out, MergeDim::Batch))
+        }
+        k => match merge_dim(k) {
+            // non-trainable ops merge seamlessly (paper §3.1)
+            Some(MergeDim::DontCare) => Ok((out, MergeDim::DontCare)),
+            _ => bail!("cannot merge op kind {k:?}"),
+        },
+    }
+}
+
+/// Algorithm 1: BFS merge of M instances of `g` into one graph.
+pub fn merge(g: &Graph, m: usize) -> Result<Graph> {
+    if m < 1 {
+        bail!("m must be >= 1");
+    }
+    g.validate()?;
+    if g.merged_m != 1 {
+        bail!("graph is already merged");
+    }
+
+    let in_dim = input_dim(g);
+    let mut merged: Vec<Node> = Vec::with_capacity(g.nodes.len() + 8);
+    let mut dim_of: HashMap<String, MergeDim> = HashMap::new();
+    dim_of.insert("input".into(), in_dim);
+    // original node id -> id of the node carrying its merged output
+    let mut out_id: HashMap<String, String> = HashMap::new();
+    out_id.insert("input".into(), "input".into());
+    // (parent output id, wanted dim) -> refmt id, shared across diamonds
+    let mut refmt_cache: HashMap<(String, MergeDim), String> = HashMap::new();
+    let mut refmt_count = 0usize;
+
+    let mut indeg: HashMap<&str, usize> = HashMap::new();
+    for n in &g.nodes {
+        indeg.insert(
+            &n.id,
+            n.inputs.iter().filter(|s| s.as_str() != "input").count(),
+        );
+    }
+    let mut q: VecDeque<&Node> = g
+        .nodes
+        .iter()
+        .filter(|n| indeg[n.id.as_str()] == 0)
+        .collect();
+    let mut visited: HashSet<&str> = HashSet::new();
+
+    // helper: route `parent`'s merged output into packing `want`
+    macro_rules! connect {
+        ($merged:ident, $dim_of:ident, $refmt_cache:ident, $refmt_count:ident,
+         $out_id:ident, $parent:expr, $want:expr) => {{
+            let pid = $out_id[$parent].clone();
+            let have = $dim_of[&pid];
+            if $want == MergeDim::DontCare || have == $want {
+                pid
+            } else {
+                let key = (pid.clone(), $want);
+                if !$refmt_cache.contains_key(&key) {
+                    $refmt_count += 1;
+                    let rid = format!("refmt_{}", $refmt_count);
+                    let mut attrs = BTreeMap::new();
+                    attrs.insert(
+                        "src".to_string(),
+                        Attr::Str(dim_name(have).to_string()),
+                    );
+                    attrs.insert(
+                        "dst".to_string(),
+                        Attr::Str(dim_name($want).to_string()),
+                    );
+                    $merged.push(Node {
+                        id: rid.clone(),
+                        kind: "refmt".into(),
+                        inputs: vec![pid.clone()],
+                        attrs,
+                        weights: BTreeMap::new(),
+                        mergeable: true,
+                    });
+                    $dim_of.insert(rid.clone(), $want);
+                    $refmt_cache.insert(key.clone(), rid);
+                }
+                $refmt_cache[&key].clone()
+            }
+        }};
+    }
+
+    while let Some(op) = q.pop_front() {
+        if !visited.insert(&op.id) {
+            continue;
+        }
+
+        if !op.mergeable {
+            // §6: task-specific head kept per-instance
+            if op.kind != "dense" {
+                bail!(
+                    "unmergeable op {:?} of kind {:?}: only dense heads \
+                     are supported per-instance",
+                    op.id, op.kind
+                );
+            }
+            let src = connect!(merged, dim_of, refmt_cache, refmt_count,
+                               out_id, &op.inputs[0], MergeDim::Batch);
+            let mut parts = Vec::with_capacity(m);
+            for i in 0..m {
+                let sid = format!("{}__slice{}", op.id, i);
+                merged.push(Node {
+                    id: sid.clone(),
+                    kind: "slice_m".into(),
+                    inputs: vec![src.clone()],
+                    attrs: BTreeMap::from([
+                        ("index".to_string(), Attr::Int(i as i64)),
+                    ]),
+                    weights: BTreeMap::new(),
+                    mergeable: true,
+                });
+                dim_of.insert(sid.clone(), MergeDim::Batch);
+                let did = format!("{}__m{}", op.id, i);
+                let mut attrs = op.attrs.clone();
+                attrs.insert("merged_m".into(), Attr::Int(1));
+                merged.push(Node {
+                    id: did.clone(),
+                    kind: "dense".into(),
+                    inputs: vec![sid],
+                    attrs,
+                    weights: op.weights.clone(),
+                    mergeable: false,
+                });
+                dim_of.insert(did.clone(), MergeDim::Batch);
+                parts.push(did);
+            }
+            let stid = format!("{}__stack", op.id);
+            merged.push(Node {
+                id: stid.clone(),
+                kind: "stack_m".into(),
+                inputs: parts,
+                attrs: BTreeMap::new(),
+                weights: BTreeMap::new(),
+                mergeable: true,
+            });
+            dim_of.insert(stid.clone(), MergeDim::Batch);
+            out_id.insert(op.id.clone(), stid);
+        } else {
+            let (mut mi, mut di) = merge_node(op, m)?;
+            if di == MergeDim::DontCare {
+                // follow the majority of the parents (Algorithm 1 l.23-27)
+                let mut batch = 0usize;
+                let mut channel = 0usize;
+                for s in &op.inputs {
+                    match dim_of[&out_id[s]] {
+                        MergeDim::Batch => batch += 1,
+                        MergeDim::Channel => channel += 1,
+                        MergeDim::DontCare => {}
+                    }
+                }
+                di = if batch == 0 && channel == 0 {
+                    in_dim
+                } else if channel > batch {
+                    MergeDim::Channel
+                } else {
+                    MergeDim::Batch
+                };
+            }
+            mi.inputs = op
+                .inputs
+                .iter()
+                .map(|s| connect!(merged, dim_of, refmt_cache, refmt_count,
+                                  out_id, s, di))
+                .collect();
+            dim_of.insert(mi.id.clone(), di);
+            out_id.insert(op.id.clone(), mi.id.clone());
+            merged.push(mi);
+        }
+
+        for child in g.consumers(&op.id) {
+            let e = indeg.get_mut(child.id.as_str()).unwrap();
+            *e -= 1;
+            if *e == 0 {
+                q.push_back(child);
+            }
+        }
+    }
+
+    if visited.len() != g.nodes.len() {
+        bail!("graph has a cycle or unreachable nodes");
+    }
+
+    let out = Graph {
+        name: format!("{}_x{}", g.name, m),
+        input_shape: g.input_shape.clone(),
+        output: out_id[&g.output].clone(),
+        nodes: merged,
+        merged_m: m,
+        layout: match in_dim {
+            MergeDim::Channel => "channel".into(),
+            _ => "batch".into(),
+        },
+    };
+    out.validate()?;
+    Ok(out)
+}
+
+fn dim_name(d: MergeDim) -> &'static str {
+    match d {
+        MergeDim::Batch => "batch",
+        MergeDim::Channel => "channel",
+        MergeDim::DontCare => "dontcare",
+    }
+}
+
+/// Graph-level optimization pass: cancel adjacent inverse refmts
+/// (`batch->channel` directly feeding `channel->batch`, and vice versa).
+/// The Python merge inserts fix-ups edge-by-edge exactly as Algorithm 1
+/// dictates; this pass removes the provably-redundant pairs. Ablated in
+/// `benches/ablation_refmt.rs`.
+pub fn elide_refmt_pairs(g: &Graph) -> Graph {
+    let mut alias: HashMap<String, String> = HashMap::new();
+    let by_id: HashMap<&str, &Node> =
+        g.nodes.iter().map(|n| (n.id.as_str(), n)).collect();
+    for n in &g.nodes {
+        if n.kind != "refmt" {
+            continue;
+        }
+        if let Some(parent) = by_id.get(n.inputs[0].as_str()) {
+            if parent.kind == "refmt" {
+                let (src, dst) = (
+                    n.attrs["src"].as_str().unwrap(),
+                    n.attrs["dst"].as_str().unwrap(),
+                );
+                let (psrc, pdst) = (
+                    parent.attrs["src"].as_str().unwrap(),
+                    parent.attrs["dst"].as_str().unwrap(),
+                );
+                if src == pdst && dst == psrc {
+                    // n(parent(x)) == x
+                    alias.insert(n.id.clone(), parent.inputs[0].clone());
+                }
+            }
+        }
+    }
+    if alias.is_empty() {
+        return g.clone();
+    }
+    let resolve = |id: &String| -> String {
+        let mut cur = id.clone();
+        while let Some(next) = alias.get(&cur) {
+            cur = next.clone();
+        }
+        cur
+    };
+    let mut nodes: Vec<Node> = Vec::new();
+    for n in &g.nodes {
+        if alias.contains_key(&n.id) {
+            continue;
+        }
+        let mut n2 = n.clone();
+        n2.inputs = n.inputs.iter().map(&resolve).collect();
+        nodes.push(n2);
+    }
+    // drop now-unconsumed refmts (dead code) except the output
+    let used: HashSet<String> = nodes
+        .iter()
+        .flat_map(|n| n.inputs.iter().cloned())
+        .chain(std::iter::once(resolve(&g.output)))
+        .collect();
+    let nodes: Vec<Node> = nodes
+        .into_iter()
+        .filter(|n| n.kind != "refmt" || used.contains(&n.id))
+        .collect();
+    Graph {
+        name: g.name.clone(),
+        input_shape: g.input_shape.clone(),
+        output: resolve(&g.output),
+        nodes,
+        merged_m: g.merged_m,
+        layout: g.layout.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ffnn() -> Graph {
+        Graph::parse(
+            r#"{
+              "name": "ffnn", "input_shape": [8], "output": "ln",
+              "nodes": [
+                {"id": "d", "kind": "dense", "inputs": ["input"],
+                 "attrs": {"fin": 8, "fout": 8},
+                 "weights": {"w": [8, 8], "b": [8]}},
+                {"id": "ln", "kind": "layernorm", "inputs": ["d"],
+                 "attrs": {"dim": 8},
+                 "weights": {"gamma": [8], "beta": [8]}}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn figure4_ffnn_merge() {
+        // paper Figure 4: bmm (Batch) -> refmt -> group norm (Channel)
+        let mg = merge(&ffnn(), 2).unwrap();
+        let kinds: Vec<&str> = mg.nodes.iter().map(|n| n.kind.as_str()).collect();
+        assert_eq!(kinds, vec!["dense", "refmt", "groupnorm"]);
+        let gn = mg.node("ln").unwrap();
+        assert_eq!(gn.attr_i64("groups").unwrap(), 2);
+        let r = mg.node(&gn.inputs[0]).unwrap();
+        assert_eq!(r.attrs["src"].as_str(), Some("batch"));
+        assert_eq!(r.attrs["dst"].as_str(), Some("channel"));
+    }
+
+    #[test]
+    fn conv_groups_multiply() {
+        let g = Graph::parse(
+            r#"{
+              "name": "c", "input_shape": [4, 8, 8], "output": "cv",
+              "nodes": [
+                {"id": "cv", "kind": "conv2d", "inputs": ["input"],
+                 "attrs": {"cin": 4, "cout": 6, "k": 3, "stride": 1,
+                           "padding": 1, "groups": 2},
+                 "weights": {"w": [6, 2, 3, 3], "b": [6]}}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let mg = merge(&g, 4).unwrap();
+        let cv = mg.node("cv").unwrap();
+        assert_eq!(cv.attr_i64("groups").unwrap(), 8); // M x G
+        assert_eq!(cv.attr_i64("cout").unwrap(), 24);
+        assert_eq!(cv.weights["w"], vec![24, 2, 3, 3]);
+    }
+
+    #[test]
+    fn rejects_double_merge_and_bad_m() {
+        let g = ffnn();
+        let mg = merge(&g, 2).unwrap();
+        assert!(merge(&mg, 2).is_err());
+        assert!(merge(&g, 0).is_err());
+    }
+
+    #[test]
+    fn elide_cancels_inverse_pair() {
+        // dense -> LN -> dense: merge inserts b->c then c->b
+        let g = Graph::parse(
+            r#"{
+              "name": "f2", "input_shape": [8], "output": "d2",
+              "nodes": [
+                {"id": "d1", "kind": "dense", "inputs": ["input"],
+                 "attrs": {"fin": 8, "fout": 8},
+                 "weights": {"w": [8, 8], "b": [8]}},
+                {"id": "ln", "kind": "layernorm", "inputs": ["d1"],
+                 "attrs": {"dim": 8},
+                 "weights": {"gamma": [8], "beta": [8]}},
+                {"id": "d2", "kind": "dense", "inputs": ["ln"],
+                 "attrs": {"fin": 8, "fout": 8},
+                 "weights": {"w": [8, 8], "b": [8]}}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let mg = merge(&g, 2).unwrap();
+        let n_refmt = mg.nodes.iter().filter(|n| n.kind == "refmt").count();
+        assert_eq!(n_refmt, 2);
+        let opt = elide_refmt_pairs(&mg);
+        opt.validate().unwrap();
+        // an inverse pair cannot be fully removed here (ln still needs its
+        // channel view), but no *chain* of two refmts should survive
+        for n in &opt.nodes {
+            if n.kind == "refmt" {
+                let p = opt.node(&n.inputs[0]);
+                if let Ok(p) = p {
+                    assert_ne!(p.kind, "refmt", "refmt chain survived");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Merged-weight construction: stack M per-instance weight banks into the
+//! merged graph's parameter tensors (the Rust mirror of
+//! `netfuse.merge_weights`).
+//!
+//! Per-op rules (paper §3.1):
+//! - Channel-merged ops (grouped conv, norms): concat on axis 0.
+//! - Batch-merged ops (batch matmul, attention): stack on a new leading
+//!   axis.
+//! - Per-instance heads (`{orig}__m{i}`): instance i's tensor unchanged.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::Graph;
+use crate::tensor::Tensor;
+
+/// One model instance's weights: `"node.weight" -> tensor`.
+pub type Bank = BTreeMap<String, Tensor>;
+
+/// Build the merged graph's parameters from M per-instance banks.
+pub fn merge_weights(merged: &Graph, banks: &[Bank]) -> Result<Bank> {
+    let m = merged.merged_m;
+    if banks.len() != m {
+        bail!("expected {} weight banks, got {}", m, banks.len());
+    }
+    let mut out = Bank::new();
+    for node in &merged.nodes {
+        if node.weights.is_empty() {
+            continue;
+        }
+        // per-instance head: "{orig}__m{i}"
+        if let Some((orig, idx)) = split_head_id(&node.id) {
+            let bank = banks
+                .get(idx)
+                .with_context(|| format!("head {} wants bank {}", node.id, idx))?;
+            for wname in node.weights.keys() {
+                let t = bank
+                    .get(&format!("{orig}.{wname}"))
+                    .with_context(|| format!("missing weight {orig}.{wname}"))?;
+                out.insert(format!("{}.{}", node.id, wname), t.clone());
+            }
+            continue;
+        }
+        for (wname, want_shape) in &node.weights {
+            let key = format!("{}.{}", node.id, wname);
+            let parts: Vec<&Tensor> = banks
+                .iter()
+                .map(|b| {
+                    b.get(&key)
+                        .with_context(|| format!("missing weight {key}"))
+                })
+                .collect::<Result<_>>()?;
+            let single_rank = parts[0].rank();
+            let t = if want_shape.len() > single_rank {
+                Tensor::stack(&parts)? // Batch-merged: new leading axis
+            } else {
+                Tensor::concat(&parts, 0)? // Channel-merged: concat axis 0
+            };
+            if t.shape() != want_shape.as_slice() {
+                bail!(
+                    "merged weight {key}: got {:?}, expected {:?}",
+                    t.shape(), want_shape
+                );
+            }
+            out.insert(key, t);
+        }
+    }
+    Ok(out)
+}
+
+/// `"{orig}__m{i}" -> (orig, i)` for per-instance head nodes.
+fn split_head_id(id: &str) -> Option<(&str, usize)> {
+    let pos = id.rfind("__m")?;
+    let idx: usize = id[pos + 3..].parse().ok()?;
+    Some((&id[..pos], idx))
+}
+
+/// Parameter tensors in the executable's positional order.
+pub fn params_in_order(g: &Graph, bank: &Bank) -> Result<Vec<Tensor>> {
+    g.param_order()
+        .iter()
+        .map(|key| {
+            bank.get(key)
+                .cloned()
+                .with_context(|| format!("missing param {key}"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fuse::merge;
+
+    fn ffnn() -> Graph {
+        Graph::parse(
+            r#"{
+              "name": "ffnn", "input_shape": [4], "output": "ln",
+              "nodes": [
+                {"id": "d", "kind": "dense", "inputs": ["input"],
+                 "attrs": {"fin": 4, "fout": 4},
+                 "weights": {"w": [4, 4], "b": [4]}},
+                {"id": "ln", "kind": "layernorm", "inputs": ["d"],
+                 "attrs": {"dim": 4},
+                 "weights": {"gamma": [4], "beta": [4]}}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    fn bank(fill: f32) -> Bank {
+        let mut b = Bank::new();
+        b.insert("d.w".into(), Tensor::new(vec![4, 4], vec![fill; 16]).unwrap());
+        b.insert("d.b".into(), Tensor::new(vec![4], vec![fill; 4]).unwrap());
+        b.insert("ln.gamma".into(), Tensor::new(vec![4], vec![fill; 4]).unwrap());
+        b.insert("ln.beta".into(), Tensor::new(vec![4], vec![fill; 4]).unwrap());
+        b
+    }
+
+    #[test]
+    fn stacks_and_concats() {
+        let g = ffnn();
+        let mg = merge(&g, 2).unwrap();
+        let merged = merge_weights(&mg, &[bank(1.0), bank(2.0)]).unwrap();
+        // dense stacked on new axis
+        assert_eq!(merged["d.w"].shape(), &[2, 4, 4]);
+        assert_eq!(merged["d.w"].data()[0], 1.0);
+        assert_eq!(merged["d.w"].data()[16], 2.0);
+        // layernorm -> groupnorm concat
+        assert_eq!(merged["ln.gamma"].shape(), &[8]);
+        assert_eq!(merged["ln.gamma"].data()[4], 2.0);
+    }
+
+    #[test]
+    fn wrong_bank_count_rejected() {
+        let g = ffnn();
+        let mg = merge(&g, 2).unwrap();
+        assert!(merge_weights(&mg, &[bank(1.0)]).is_err());
+    }
+
+    #[test]
+    fn missing_weight_rejected() {
+        let g = ffnn();
+        let mg = merge(&g, 2).unwrap();
+        let mut b2 = bank(2.0);
+        b2.remove("ln.beta");
+        assert!(merge_weights(&mg, &[bank(1.0), b2]).is_err());
+    }
+
+    #[test]
+    fn head_id_parsing() {
+        assert_eq!(split_head_id("dense_3__m12"), Some(("dense_3", 12)));
+        assert_eq!(split_head_id("dense_3"), None);
+        assert_eq!(split_head_id("x__mzz"), None);
+    }
+
+    #[test]
+    fn params_in_order_matches_param_order() {
+        let g = ffnn();
+        let ps = params_in_order(&g, &bank(1.0)).unwrap();
+        assert_eq!(ps.len(), 4); // d.b, d.w, ln.beta, ln.gamma
+        assert_eq!(ps[0].shape(), &[4]); // d.b first (sorted)
+    }
+}

@@ -1,0 +1,349 @@
+//! Graph IR — the Rust mirror of `python/compile/graphir.py`.
+//!
+//! Both sides round-trip the same JSON; integration tests feed the
+//! Python-emitted manifest graphs through this parser and through the
+//! Rust merge planner (`crate::fuse`) and compare against the Python
+//! merge output.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Merge dimension classification (paper §3, Algorithm 1 lines 12-16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MergeDim {
+    Batch,
+    Channel,
+    DontCare,
+}
+
+/// Attribute value: ints dominate, a couple of ops use strings.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Attr {
+    Int(i64),
+    Str(String),
+    Bool(bool),
+}
+
+impl Attr {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Attr::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Attr::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// One operation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub id: String,
+    pub kind: String,
+    pub inputs: Vec<String>,
+    pub attrs: BTreeMap<String, Attr>,
+    /// ordered weight name -> shape
+    pub weights: BTreeMap<String, Vec<usize>>,
+    pub mergeable: bool,
+}
+
+impl Node {
+    pub fn attr_i64(&self, key: &str) -> Result<i64> {
+        self.attrs
+            .get(key)
+            .and_then(|a| a.as_i64())
+            .with_context(|| format!("node {}: missing int attr {key:?}", self.id))
+    }
+
+    pub fn attr_usize(&self, key: &str) -> Result<usize> {
+        Ok(self.attr_i64(key)? as usize)
+    }
+
+    /// Total parameter bytes of this node (f32).
+    pub fn weight_bytes(&self) -> u64 {
+        4 * self
+            .weights
+            .values()
+            .map(|s| s.iter().product::<usize>() as u64)
+            .sum::<u64>()
+    }
+}
+
+/// The merge dimension an op kind demands, or None for unknown kinds.
+pub fn merge_dim(kind: &str) -> Option<MergeDim> {
+    use MergeDim::*;
+    Some(match kind {
+        "dense" | "attention" | "xl_attention" => Batch,
+        "conv2d" | "layernorm" | "batchnorm" | "groupnorm" => Channel,
+        "relu" | "gelu" | "add" | "maxpool2d" | "global_avgpool"
+        | "flatten" | "refmt" | "slice_m" | "stack_m" => DontCare,
+        _ => return None,
+    })
+}
+
+/// Whether a kind carries weights.
+pub fn is_trainable(kind: &str) -> bool {
+    matches!(
+        kind,
+        "conv2d" | "dense" | "layernorm" | "batchnorm" | "groupnorm"
+            | "attention" | "xl_attention"
+    )
+}
+
+/// A DNN as a topologically ordered op list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    pub name: String,
+    /// Input shape *excluding* batch: CNN (C, H, W); sequence (S, H).
+    pub input_shape: Vec<usize>,
+    pub nodes: Vec<Node>,
+    pub output: String,
+    pub merged_m: usize,
+    /// "single" | "channel" | "batch"
+    pub layout: String,
+}
+
+impl Graph {
+    pub fn node(&self, id: &str) -> Result<&Node> {
+        self.nodes
+            .iter()
+            .find(|n| n.id == id)
+            .with_context(|| format!("no node {id:?} in graph {:?}", self.name))
+    }
+
+    pub fn consumers(&self, id: &str) -> Vec<&Node> {
+        self.nodes
+            .iter()
+            .filter(|n| n.inputs.iter().any(|s| s == id))
+            .collect()
+    }
+
+    /// Structural validation — same rules as `graphir.Graph.validate`.
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes.is_empty() {
+            bail!("empty graph");
+        }
+        let mut seen = std::collections::HashSet::new();
+        for n in &self.nodes {
+            if n.id == "input" || !seen.insert(n.id.as_str()) {
+                bail!("duplicate/reserved node id {:?}", n.id);
+            }
+            if merge_dim(&n.kind).is_none() {
+                bail!("unknown op kind {:?}", n.kind);
+            }
+            for src in &n.inputs {
+                if src != "input" && !seen.contains(src.as_str()) {
+                    bail!(
+                        "node {:?} uses {:?} before definition (not topo-ordered)",
+                        n.id, src
+                    );
+                }
+            }
+            if is_trainable(&n.kind) && n.weights.is_empty() {
+                bail!("trainable node {:?} has no weights", n.id);
+            }
+            if !is_trainable(&n.kind) && !n.weights.is_empty() {
+                bail!("non-trainable node {:?} has weights", n.id);
+            }
+        }
+        if !seen.contains(self.output.as_str()) {
+            bail!("output {:?} is not a node", self.output);
+        }
+        Ok(())
+    }
+
+    /// Total parameter bytes (one instance).
+    pub fn weight_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.weight_bytes()).sum()
+    }
+
+    /// Deterministic parameter order shared with the Python lowering:
+    /// topo node order, then sorted weight names within a node.
+    pub fn param_order(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for n in &self.nodes {
+            for w in n.weights.keys() {
+                out.push(format!("{}.{}", n.id, w));
+            }
+        }
+        out
+    }
+
+    // ---------------------------------------------------------------- JSON
+
+    pub fn from_json(v: &Json) -> Result<Graph> {
+        let name = v.get("name").as_str().context("graph.name")?.to_string();
+        let input_shape = usize_vec(v.get("input_shape")).context("graph.input_shape")?;
+        let output = v.get("output").as_str().context("graph.output")?.to_string();
+        let merged_m = v.get("merged_m").as_usize().unwrap_or(1);
+        let layout = v
+            .get("layout")
+            .as_str()
+            .unwrap_or("single")
+            .to_string();
+        let mut nodes = Vec::new();
+        for nv in v.get("nodes").as_arr().context("graph.nodes")? {
+            nodes.push(node_from_json(nv)?);
+        }
+        let g = Graph { name, input_shape, nodes, output, merged_m, layout };
+        g.validate()?;
+        Ok(g)
+    }
+
+    pub fn parse(text: &str) -> Result<Graph> {
+        Graph::from_json(&Json::parse(text)?)
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            (
+                "input_shape",
+                json::arr(self.input_shape.iter().map(|d| json::num(*d as f64))),
+            ),
+            (
+                "nodes",
+                json::arr(self.nodes.iter().map(node_to_json)),
+            ),
+            ("output", json::s(&self.output)),
+            ("merged_m", json::num(self.merged_m as f64)),
+            ("layout", json::s(&self.layout)),
+        ])
+    }
+}
+
+fn usize_vec(v: &Json) -> Result<Vec<usize>> {
+    v.as_arr()
+        .context("expected array")?
+        .iter()
+        .map(|x| x.as_usize().context("expected unsigned int"))
+        .collect()
+}
+
+fn node_from_json(v: &Json) -> Result<Node> {
+    let id = v.get("id").as_str().context("node.id")?.to_string();
+    let kind = v.get("kind").as_str().context("node.kind")?.to_string();
+    let inputs = v
+        .get("inputs")
+        .as_arr()
+        .context("node.inputs")?
+        .iter()
+        .map(|x| x.as_str().map(str::to_string).context("input id"))
+        .collect::<Result<Vec<_>>>()?;
+    let mut attrs = BTreeMap::new();
+    if let Some(o) = v.get("attrs").as_obj() {
+        for (k, av) in o {
+            let a = match av {
+                Json::Num(n) => Attr::Int(*n as i64),
+                Json::Str(s) => Attr::Str(s.clone()),
+                Json::Bool(b) => Attr::Bool(*b),
+                other => bail!("node {id}: bad attr {k:?}: {other:?}"),
+            };
+            attrs.insert(k.clone(), a);
+        }
+    }
+    let mut weights = BTreeMap::new();
+    if let Some(o) = v.get("weights").as_obj() {
+        for (k, wv) in o {
+            weights.insert(k.clone(), usize_vec(wv)?);
+        }
+    }
+    let mergeable = v.get("mergeable").as_bool().unwrap_or(true);
+    Ok(Node { id, kind, inputs, attrs, weights, mergeable })
+}
+
+fn node_to_json(n: &Node) -> Json {
+    let attrs = Json::Obj(
+        n.attrs
+            .iter()
+            .map(|(k, a)| {
+                let v = match a {
+                    Attr::Int(i) => json::num(*i as f64),
+                    Attr::Str(s) => json::s(s),
+                    Attr::Bool(b) => Json::Bool(*b),
+                };
+                (k.clone(), v)
+            })
+            .collect(),
+    );
+    let weights = Json::Obj(
+        n.weights
+            .iter()
+            .map(|(k, shape)| {
+                (
+                    k.clone(),
+                    json::arr(shape.iter().map(|d| json::num(*d as f64))),
+                )
+            })
+            .collect(),
+    );
+    json::obj(vec![
+        ("id", json::s(&n.id)),
+        ("kind", json::s(&n.kind)),
+        ("inputs", json::arr(n.inputs.iter().map(|s| json::s(s)))),
+        ("attrs", attrs),
+        ("weights", weights),
+        ("mergeable", Json::Bool(n.mergeable)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        Graph::parse(
+            r#"{
+              "name": "t", "input_shape": [4], "output": "d",
+              "nodes": [
+                {"id": "d", "kind": "dense", "inputs": ["input"],
+                 "attrs": {"fin": 4, "fout": 2},
+                 "weights": {"w": [4, 2], "b": [2]}, "mergeable": true}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_roundtrips() {
+        let g = tiny();
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(g.node("d").unwrap().attr_usize("fin").unwrap(), 4);
+        let g2 = Graph::parse(&g.to_json().dump()).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn param_order_sorted_within_node() {
+        let g = tiny();
+        assert_eq!(g.param_order(), vec!["d.b", "d.w"]);
+    }
+
+    #[test]
+    fn validate_catches_unknown_kind() {
+        let mut g = tiny();
+        g.nodes[0].kind = "warp".into();
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_forward_ref() {
+        let mut g = tiny();
+        g.nodes[0].inputs = vec!["later".into()];
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn weight_bytes_counts() {
+        let g = tiny();
+        assert_eq!(g.weight_bytes(), 4 * (8 + 2));
+    }
+}

@@ -1,0 +1,44 @@
+//! # netfuse
+//!
+//! Rust + JAX + Pallas reproduction of **"Accelerating Multi-Model
+//! Inference by Merging DNNs of Different Weights"** (Jeong et al., 2020).
+//!
+//! NETFUSE merges M DNN instances that share an architecture but carry
+//! different weights and serve different inputs into one large model, by
+//! replacing each op with a counterpart that admits *input-weight local
+//! computations* (matmul → batch matmul, conv → grouped conv, layer norm
+//! → group norm). The merged network is numerically equivalent to running
+//! the M networks separately, but executes as a single program.
+//!
+//! This crate is Layer 3 of the stack (see `DESIGN.md`): the serving
+//! coordinator. It loads HLO modules AOT-compiled by the Python side
+//! (`python/compile/aot.py`), owns per-instance weight banks, and serves
+//! multi-model inference under four execution strategies — the paper's
+//! `Sequential`, `Concurrent`, `Hybrid` baselines and `NetFuse` itself.
+//!
+//! Module map:
+//! - [`util`] — substrates: JSON, RNG, CLI, stats, property testing, bench
+//!   harness (the offline crate set only contains the `xla` closure).
+//! - [`tensor`] — dense tensor library + `.nft` container IO.
+//! - [`graph`] — the graph IR shared with Python (JSON round-trip).
+//! - [`fuse`] — Algorithm 1 as the serving-side merge planner.
+//! - [`runtime`] — PJRT client wrapper: load / compile / execute HLO.
+//! - [`coordinator`] — router, batcher, strategies, memory accounting,
+//!   metrics, workload generation, serving loop.
+//! - [`devmodel`] — analytical V100 / TITAN Xp device model (reproduces
+//!   the paper's GPU-shaped figures; we have no GPU).
+//! - [`rewriter`] — miniature TASO-like greedy graph rewriter (the §2.2
+//!   baseline that cannot find cross-model merges).
+
+pub mod util;
+pub mod tensor;
+pub mod graph;
+pub mod fuse;
+pub mod runtime;
+pub mod coordinator;
+pub mod devmodel;
+pub mod figures;
+pub mod rewriter;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,256 @@
+//! `netfuse` — the serving coordinator CLI.
+//!
+//! ```text
+//! netfuse inspect                       list artifacts + models
+//! netfuse merge-plan  --model M --m N   run Algorithm 1, print the plan
+//! netfuse serve       --model M --m N --strategy S --rounds R
+//! netfuse bench-figure <fig2|fig5|fig6|fig7|fig8|fig9|fig10|merge-overhead>
+//! ```
+//!
+//! All subcommands are offline-complete: Python never runs here; the
+//! artifact directory produced by `make artifacts` is the only input.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use netfuse::coordinator::server::{Server, ServerConfig};
+use netfuse::coordinator::workload::Workload;
+use netfuse::coordinator::{Fleet, StrategyKind};
+use netfuse::devmodel;
+use netfuse::figures::{self, FigOpts};
+use netfuse::fuse;
+use netfuse::runtime::Runtime;
+use netfuse::util::cli::Args;
+use netfuse::util::stats::fmt_bytes;
+
+const USAGE: &str = "\
+netfuse — multi-model inference by merging DNNs of different weights
+
+USAGE:
+  netfuse <COMMAND> [OPTIONS]
+
+COMMANDS:
+  inspect                         list artifacts and model families
+  merge-plan                      run Algorithm 1 and print the merged graph
+  serve                           run the serving loop and report metrics
+  bench-figure <id>               regenerate a paper figure (fig2, fig5,
+                                  fig6, fig7, fig8, fig9, fig10,
+                                  merge-overhead, all)
+
+OPTIONS:
+  --artifacts <dir>   artifact directory        [default: ./artifacts]
+  --model <name>      resnet|resnext|bert|xlnet [default: bert]
+  --models <a,b,..>   model list for figures    [default: all four]
+  --m <n>             number of model instances [default: 4]
+  --bs <n>            request batch size        [default: 1]
+  --strategy <s>      sequential|concurrent|hybrid:<p>|netfuse
+  --rounds <n>        serving rounds            [default: 50]
+  --rate <r>          per-model arrivals/sec    [default: 200]
+  --m-sweep <a,b,..>  instance counts for figures
+  --samples <n>       measurement samples       [default: 10]
+  --device <d>        v100|titanxp              [default: v100]
+  --sim-only          skip CPU measurements (device model only)
+  --quick             small sweeps (CI-speed)
+";
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(
+        &argv,
+        &[
+            "artifacts", "model", "models", "m", "bs", "strategy", "rounds",
+            "rate", "m-sweep", "samples", "device",
+        ],
+        &["sim-only", "quick", "help"],
+    )
+    .map_err(|e| anyhow::anyhow!("{e}\n\n{USAGE}"))?;
+
+    if args.has("help") || args.positional().is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let cmd = args.positional()[0].as_str();
+
+    match cmd {
+        "inspect" => inspect(&artifacts),
+        "merge-plan" => merge_plan(&artifacts, &args),
+        "serve" => serve(&artifacts, &args),
+        "bench-figure" => bench_figure(&artifacts, &args),
+        other => anyhow::bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn inspect(artifacts: &PathBuf) -> anyhow::Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    println!("platform: {}", rt.platform());
+    println!("\nmodels:");
+    for (name, entry) in &rt.manifest.models {
+        println!(
+            "  {:<10} {} nodes, {} instances, weights {} ({})",
+            name,
+            entry.graph.nodes.len(),
+            entry.instances,
+            entry.weights,
+            fmt_bytes(entry.graph.weight_bytes()),
+        );
+    }
+    println!("\nartifacts:");
+    for a in &rt.manifest.artifacts {
+        println!(
+            "  {:<28} m={:<3} bs={} backend={:<7} in={:?} out={:?}",
+            a.name, a.m, a.bs, a.backend, a.input_shape, a.output_shape
+        );
+    }
+    Ok(())
+}
+
+fn merge_plan(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    let model = args.get_or("model", "bert");
+    let m = args.get_usize("m", 4).map_err(|e| anyhow::anyhow!(e))?;
+    let g = &rt.manifest.model(model)?.graph;
+    let merged = fuse::merge(g, m)?;
+    println!(
+        "# Algorithm 1: {} x{} -> {} ({} nodes -> {} nodes)",
+        model,
+        m,
+        merged.name,
+        g.nodes.len(),
+        merged.nodes.len()
+    );
+    for n in &merged.nodes {
+        let w: Vec<String> = n
+            .weights
+            .iter()
+            .map(|(k, s)| format!("{k}:{s:?}"))
+            .collect();
+        println!(
+            "  {:<24} {:<12} <- {:<30} {}",
+            n.id,
+            n.kind,
+            n.inputs.join(", "),
+            w.join(" ")
+        );
+    }
+    println!("# output: {}  layout: {}", merged.output, merged.layout);
+    Ok(())
+}
+
+fn serve(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    let model = args.get_or("model", "bert");
+    let m = args.get_usize("m", 4).map_err(|e| anyhow::anyhow!(e))?;
+    let bs = args.get_usize("bs", 1).map_err(|e| anyhow::anyhow!(e))?;
+    let rounds = args.get_usize("rounds", 50).map_err(|e| anyhow::anyhow!(e))?;
+    let rate = args.get_f64("rate", 200.0).map_err(|e| anyhow::anyhow!(e))?;
+    let strategy = StrategyKind::parse(args.get_or("strategy", "netfuse"))?;
+
+    println!("loading fleet: {model} x{m} bs={bs} ({})", rt.platform());
+    let fleet = Fleet::load(&rt, model, m, bs)?;
+    let mut server = Server::new(&fleet, ServerConfig { strategy, ..Default::default() });
+    let mut workload = Workload::new(m, &fleet.request_shape(), rate, 0xBEEF);
+
+    let served = server.run_rounds(rounds, || workload.round())?;
+    println!("served {served} requests over {rounds} rounds");
+    println!("{}", server.metrics.report_line());
+    println!(
+        "throughput: {:.1} req/s   p50 {:.2}ms   p99 {:.2}ms",
+        server.metrics.throughput(),
+        server.metrics.request_latency.p50() * 1e3,
+        server.metrics.request_latency.p99() * 1e3,
+    );
+    Ok(())
+}
+
+fn bench_figure(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional()
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let mut opts = if args.has("quick") {
+        FigOpts::quick()
+    } else {
+        FigOpts::default()
+    };
+    opts.models = args.get_list("models", &figures::MODELS);
+    if let Some(sweep) = args.get("m-sweep") {
+        opts.m_sweep = sweep
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("--m-sweep: {e}"))?;
+    }
+    opts.samples = args
+        .get_usize("samples", opts.samples)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    opts.measured = !args.has("sim-only");
+    if let Some(d) = args.get("device") {
+        opts.device = devmodel::profile(d)
+            .ok_or_else(|| anyhow::anyhow!("unknown device {d:?} (v100|titanxp)"))?;
+    }
+
+    let rt = if opts.measured || matches!(id, "merge-overhead" | "all") {
+        Some(Runtime::open(artifacts)?)
+    } else {
+        None
+    };
+    let rt_ref = rt.as_ref();
+
+    let run = |name: &str| -> anyhow::Result<String> {
+        match name {
+            "fig2" => figures::fig2(),
+            "fig5" => figures::fig5(rt_ref, &opts),
+            "fig6" => figures::fig6(rt_ref, &opts),
+            "fig7" => {
+                let mut s = figures::fig7(&opts)?;
+                if let Some(rt) = rt_ref {
+                    s.push('\n');
+                    s.push_str(&figures::fig7_measured(rt, &opts)?);
+                }
+                Ok(s)
+            }
+            "fig8" => figures::fig8(rt_ref, &opts),
+            "fig9" => {
+                let mut o = opts.clone();
+                o.device = devmodel::TITAN_XP;
+                o.measured = false; // CPU numbers identical to fig5's
+                figures::fig5(None, &o)
+            }
+            "fig10" => {
+                let mut o = opts.clone();
+                o.device = devmodel::TITAN_XP;
+                figures::fig7(&o)
+            }
+            "merge-overhead" => figures::merge_overhead(
+                rt_ref.expect("merge-overhead needs artifacts"),
+                &opts,
+            ),
+            other => anyhow::bail!("unknown figure {other:?}"),
+        }
+    };
+
+    if id == "all" {
+        for name in [
+            "fig2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
+            "merge-overhead",
+        ] {
+            println!("{}", run(name)?);
+        }
+    } else {
+        println!("{}", run(id)?);
+    }
+    Ok(())
+}

@@ -1,0 +1,382 @@
+//! Miniature TASO-like greedy graph-rewriting baseline (paper §2.2).
+//!
+//! The paper argues that existing graph-rewriting frameworks cannot
+//! discover NETFUSE's cross-model merge: (i) greedy cost-based search
+//! prefers single-model substitutions because the cross-model rewrite is
+//! "hidden behind overheads" (the reshape/concat fix-ups look like pure
+//! cost before the grouped kernel pays off), and (ii) the search space
+//! explodes with the number of disjoint models.
+//!
+//! This module reproduces that argument with a small substitution-rule
+//! engine over the shared graph IR: a rule set of classic single-model
+//! rewrites plus an *optional* cross-model grouped-conv rule, and a
+//! greedy best-first search with a device-model cost function. Bench
+//! `fig2_rewriter` shows greedy search with the default (single-model)
+//! rules never merges across models, while NETFUSE's targeted Algorithm 1
+//! does — and that rewrite search time grows steeply with model count.
+
+use std::collections::BTreeMap;
+
+use crate::devmodel::{self, GpuProfile};
+use crate::graph::{Attr, Graph, Node};
+
+/// A rewrite rule: recognizes a local pattern, returns the rewritten
+/// graph when it applies (first match).
+pub struct Rule {
+    pub name: &'static str,
+    /// true for rewrites that reach across models (disabled in the
+    /// default TASO-like rule set — that is the point of Figure 2)
+    pub cross_model: bool,
+    pub apply: fn(&Graph) -> Option<Graph>,
+}
+
+/// Classic single-model rules (conv+bn fold, conv+relu fuse, dead refmt).
+pub fn default_rules() -> Vec<Rule> {
+    vec![
+        Rule { name: "fold-bn-into-conv", cross_model: false, apply: fold_bn },
+        Rule { name: "fuse-conv-relu", cross_model: false, apply: fuse_conv_relu },
+        Rule { name: "drop-noop-refmt", cross_model: false, apply: drop_noop_refmt },
+    ]
+}
+
+/// The rule NETFUSE encodes directly and greedy search misses: merge two
+/// same-shape convs with different inputs/weights into a grouped conv.
+pub fn cross_model_rule() -> Rule {
+    Rule {
+        name: "merge-parallel-convs-grouped",
+        cross_model: true,
+        apply: merge_parallel_convs,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// cost model: sum of per-op device-model costs (greedy's objective)
+// ---------------------------------------------------------------------------
+
+/// Rough per-node cost for the greedy objective. Includes the launch
+/// overhead so fusing ops pays off, and charges refmt/concat fix-ups —
+/// which is exactly why a *greedy* search rejects the cross-model merge:
+/// the intermediate state (concat + reshape inserted, grouped conv not
+/// yet applied everywhere) costs more than the original graph.
+pub fn node_cost(p: &GpuProfile, g: &Graph, n: &Node, bs: usize) -> f64 {
+    let b = bs as f64;
+    let cost = match n.kind.as_str() {
+        "conv2d" => {
+            let cin = n.attr_i64("cin").unwrap_or(1) as f64;
+            let cout = n.attr_i64("cout").unwrap_or(1) as f64;
+            let k = n.attr_i64("k").unwrap_or(1) as f64;
+            let groups = n.attr_i64("groups").unwrap_or(1) as f64;
+            let hw = g.input_shape.get(1).copied().unwrap_or(16) as f64;
+            devmodel::op(
+                2.0 * b * cout * (cin / groups) * k * k * hw * hw,
+                4.0 * b * (cin + cout) * hw * hw,
+                b * cout * hw * hw,
+            )
+        }
+        "dense" => {
+            let fin = n.attr_i64("fin").unwrap_or(1) as f64;
+            let fout = n.attr_i64("fout").unwrap_or(1) as f64;
+            devmodel::op(
+                2.0 * b * fin * fout,
+                4.0 * (b * fin + fin * fout + b * fout),
+                b * fout,
+            )
+        }
+        _ => {
+            // elementwise-ish: bandwidth bound on the input tensor
+            let elems = b * g.input_shape.iter().product::<usize>() as f64;
+            devmodel::op(elems, 8.0 * elems, elems)
+        }
+    };
+    p.launch_s + cost.compute_s(p)
+}
+
+pub fn graph_cost(p: &GpuProfile, g: &Graph, bs: usize) -> f64 {
+    g.nodes.iter().map(|n| node_cost(p, g, n, bs)).sum()
+}
+
+// ---------------------------------------------------------------------------
+// greedy search
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct SearchResult {
+    pub graph: Graph,
+    pub initial_cost: f64,
+    pub final_cost: f64,
+    pub applied: Vec<&'static str>,
+    pub states_explored: usize,
+}
+
+/// Greedy best-first: repeatedly apply the single rule application that
+/// lowers cost the most; stop when nothing improves. This is the
+/// TASO-like baseline (TASO adds backtracking within a window, but its
+/// published failure mode on multi-model graphs is the same: the merge
+/// is not reachable through cost-decreasing steps).
+pub fn greedy_optimize(
+    p: &GpuProfile,
+    g: &Graph,
+    rules: &[Rule],
+    bs: usize,
+) -> SearchResult {
+    let mut cur = g.clone();
+    let initial_cost = graph_cost(p, &cur, bs);
+    let mut cost = initial_cost;
+    let mut applied = Vec::new();
+    let mut states = 1usize;
+    loop {
+        let mut best: Option<(f64, Graph, &'static str)> = None;
+        for rule in rules {
+            if let Some(cand) = (rule.apply)(&cur) {
+                states += 1;
+                let c = graph_cost(p, &cand, bs);
+                if c < cost && best.as_ref().map(|(bc, _, _)| c < *bc).unwrap_or(true)
+                {
+                    best = Some((c, cand, rule.name));
+                }
+            }
+        }
+        match best {
+            Some((c, g2, name)) => {
+                cost = c;
+                cur = g2;
+                applied.push(name);
+            }
+            None => break,
+        }
+    }
+    SearchResult {
+        graph: cur,
+        initial_cost,
+        final_cost: cost,
+        applied,
+        states_explored: states,
+    }
+}
+
+/// Exhaustive-ish state count for `n_models` disjoint copies — the §2.2
+/// scalability argument (TASO: 30 h for 4 models, OOM at 8). Each model
+/// contributes an independent set of applicable rewrite sites, so the
+/// joint space multiplies.
+pub fn search_space_size(per_model_sites: usize, n_models: usize) -> f64 {
+    // 2^(sites * models): each site toggled independently
+    2f64.powi((per_model_sites * n_models) as i32)
+}
+
+// ---------------------------------------------------------------------------
+// rule implementations
+// ---------------------------------------------------------------------------
+
+/// conv followed by batchnorm -> conv (BN folded into weights).
+fn fold_bn(g: &Graph) -> Option<Graph> {
+    for (i, n) in g.nodes.iter().enumerate() {
+        if n.kind != "batchnorm" {
+            continue;
+        }
+        let src = &n.inputs[0];
+        let Some(parent) = g.nodes.iter().find(|x| &x.id == src) else {
+            continue;
+        };
+        if parent.kind != "conv2d" || g.consumers(src).len() != 1 {
+            continue;
+        }
+        // rewrite: bn node disappears; conv absorbs it (weights unchanged
+        // structurally — folding is a value-level transform)
+        let mut nodes = g.nodes.clone();
+        nodes.remove(i);
+        let bn_id = n.id.clone();
+        let conv_id = parent.id.clone();
+        for x in &mut nodes {
+            for inp in &mut x.inputs {
+                if *inp == bn_id {
+                    *inp = conv_id.clone();
+                }
+            }
+        }
+        let mut g2 = g.clone();
+        g2.nodes = nodes;
+        if g2.output == bn_id {
+            g2.output = conv_id;
+        }
+        return Some(g2);
+    }
+    None
+}
+
+/// conv followed by relu -> conv with fused activation attr.
+fn fuse_conv_relu(g: &Graph) -> Option<Graph> {
+    for (i, n) in g.nodes.iter().enumerate() {
+        if n.kind != "relu" {
+            continue;
+        }
+        let src = &n.inputs[0];
+        let Some(parent_idx) = g.nodes.iter().position(|x| &x.id == src) else {
+            continue;
+        };
+        if g.nodes[parent_idx].kind != "conv2d"
+            || g.consumers(src).len() != 1
+            || g.nodes[parent_idx].attrs.contains_key("fused_relu")
+        {
+            continue;
+        }
+        let mut g2 = g.clone();
+        g2.nodes[parent_idx]
+            .attrs
+            .insert("fused_relu".into(), Attr::Bool(true));
+        let relu_id = n.id.clone();
+        let conv_id = g2.nodes[parent_idx].id.clone();
+        g2.nodes.remove(i);
+        for x in &mut g2.nodes {
+            for inp in &mut x.inputs {
+                if *inp == relu_id {
+                    *inp = conv_id.clone();
+                }
+            }
+        }
+        if g2.output == relu_id {
+            g2.output = conv_id;
+        }
+        return Some(g2);
+    }
+    None
+}
+
+/// refmt with src == dst is a no-op.
+fn drop_noop_refmt(g: &Graph) -> Option<Graph> {
+    for (i, n) in g.nodes.iter().enumerate() {
+        if n.kind == "refmt"
+            && n.attrs.get("src").and_then(|a| a.as_str())
+                == n.attrs.get("dst").and_then(|a| a.as_str())
+        {
+            let mut g2 = g.clone();
+            let rid = n.id.clone();
+            let src = n.inputs[0].clone();
+            g2.nodes.remove(i);
+            for x in &mut g2.nodes {
+                for inp in &mut x.inputs {
+                    if *inp == rid {
+                        *inp = src.clone();
+                    }
+                }
+            }
+            if g2.output == rid {
+                g2.output = src;
+            }
+            return Some(g2);
+        }
+    }
+    None
+}
+
+/// Two conv2d nodes with identical attrs but different inputs/weights
+/// -> one grouped conv over channel-concatenated inputs (Figure 2b).
+fn merge_parallel_convs(g: &Graph) -> Option<Graph> {
+    let convs: Vec<&Node> = g
+        .nodes
+        .iter()
+        .filter(|n| n.kind == "conv2d" && !n.attrs.contains_key("merged_pair"))
+        .collect();
+    for (ai, a) in convs.iter().enumerate() {
+        for b in convs.iter().skip(ai + 1) {
+            if a.inputs == b.inputs || a.attrs != b.attrs {
+                continue;
+            }
+            // build: concat(a.in, b.in) -> grouped conv -> split outputs.
+            // Consumers of a and b get the split halves via slice markers.
+            let mut g2 = g.clone();
+            let cin = a.attr_i64("cin").ok()? as usize;
+            let cout = a.attr_i64("cout").ok()? as usize;
+            let groups = a.attr_i64("groups").ok()? as usize;
+            let k = a.attr_i64("k").ok()? as usize;
+            let merged_id = format!("{}__grouped__{}", a.id, b.id);
+            let mut attrs = a.attrs.clone();
+            attrs.insert("cin".into(), Attr::Int(2 * cin as i64));
+            attrs.insert("cout".into(), Attr::Int(2 * cout as i64));
+            attrs.insert("groups".into(), Attr::Int(2 * groups as i64));
+            attrs.insert("merged_pair".into(), Attr::Bool(true));
+            let mut weights = BTreeMap::new();
+            weights.insert("w".into(), vec![2 * cout, cin / groups, k, k]);
+            weights.insert("b".into(), vec![2 * cout]);
+            // concat node (the overhead that scares greedy away)
+            let concat_id = format!("{merged_id}__concat");
+            g2.nodes.push(Node {
+                id: concat_id.clone(),
+                kind: "refmt".into(),
+                inputs: vec![a.inputs[0].clone(), b.inputs[0].clone()],
+                attrs: BTreeMap::from([
+                    ("src".to_string(), Attr::Str("pair".into())),
+                    ("dst".to_string(), Attr::Str("channel".into())),
+                ]),
+                weights: BTreeMap::new(),
+                mergeable: true,
+            });
+            g2.nodes.push(Node {
+                id: merged_id.clone(),
+                kind: "conv2d".into(),
+                inputs: vec![concat_id],
+                attrs,
+                weights,
+                mergeable: true,
+            });
+            // rewire consumers through slice markers
+            for (half, orig) in [(0usize, a.id.clone()), (1, b.id.clone())] {
+                let sid = format!("{merged_id}__half{half}");
+                g2.nodes.push(Node {
+                    id: sid.clone(),
+                    kind: "slice_m".into(),
+                    inputs: vec![merged_id.clone()],
+                    attrs: BTreeMap::from([
+                        ("index".to_string(), Attr::Int(half as i64)),
+                    ]),
+                    weights: BTreeMap::new(),
+                    mergeable: true,
+                });
+                for x in &mut g2.nodes {
+                    if x.id == sid {
+                        continue;
+                    }
+                    for inp in &mut x.inputs {
+                        if *inp == orig {
+                            *inp = sid.clone();
+                        }
+                    }
+                }
+                if g2.output == orig {
+                    g2.output = sid.clone();
+                }
+            }
+            // remove the originals
+            g2.nodes.retain(|n| n.id != a.id && n.id != b.id);
+            // keep topological order: move appended nodes before consumers
+            g2 = retopo(&g2)?;
+            return Some(g2);
+        }
+    }
+    None
+}
+
+/// Re-topo-sort a graph whose node list order may be stale.
+fn retopo(g: &Graph) -> Option<Graph> {
+    let mut placed: std::collections::HashSet<String> =
+        std::collections::HashSet::from(["input".to_string()]);
+    let mut nodes = Vec::with_capacity(g.nodes.len());
+    let mut remaining: Vec<Node> = g.nodes.clone();
+    while !remaining.is_empty() {
+        let before = remaining.len();
+        remaining.retain(|n| {
+            if n.inputs.iter().all(|i| placed.contains(i)) {
+                placed.insert(n.id.clone());
+                nodes.push(n.clone());
+                false
+            } else {
+                true
+            }
+        });
+        if remaining.len() == before {
+            return None; // cycle
+        }
+    }
+    let mut g2 = g.clone();
+    g2.nodes = nodes;
+    Some(g2)
+}

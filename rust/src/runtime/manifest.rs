@@ -1,0 +1,188 @@
+//! `artifacts/manifest.json` loader — the contract with `aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::graph::Graph;
+use crate::util::json::Json;
+
+/// One AOT-compiled executable's metadata.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    /// model family: resnet | resnext | bert | xlnet
+    pub model: String,
+    /// number of merged instances (1 = single-model executable)
+    pub m: usize,
+    pub bs: usize,
+    /// kernel backend the HLO was lowered with: "xla" | "pallas"
+    pub backend: String,
+    /// HLO text file, relative to the artifact dir
+    pub hlo: String,
+    /// "single" | "channel" | "batch"
+    pub layout: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    /// positional parameter keys ("node.weight"), excluding the input
+    pub params: Vec<String>,
+    pub weights_bytes: u64,
+    pub act_bytes: u64,
+}
+
+/// One model family's source-of-truth.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub graph: Graph,
+    pub instances: usize,
+    /// weight bank file, relative to the artifact dir
+    pub weights: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let mut artifacts = Vec::new();
+        for a in v.get("artifacts").as_arr().context("manifest.artifacts")? {
+            artifacts.push(Artifact {
+                name: a.get("name").as_str().context("artifact.name")?.into(),
+                model: a.get("model").as_str().context("artifact.model")?.into(),
+                m: a.get("m").as_usize().context("artifact.m")?,
+                bs: a.get("bs").as_usize().context("artifact.bs")?,
+                backend: a.get("backend").as_str().unwrap_or("xla").into(),
+                hlo: a.get("hlo").as_str().context("artifact.hlo")?.into(),
+                layout: a.get("layout").as_str().unwrap_or("single").into(),
+                input_shape: usizes(a.get("input").get("shape"))?,
+                output_shape: usizes(a.get("output").get("shape"))?,
+                params: a
+                    .get("params")
+                    .as_arr()
+                    .context("artifact.params")?
+                    .iter()
+                    .map(|p| {
+                        p.get("key")
+                            .as_str()
+                            .map(str::to_string)
+                            .context("param.key")
+                    })
+                    .collect::<Result<_>>()?,
+                weights_bytes: a.get("mem").get("weights_bytes").as_usize().unwrap_or(0)
+                    as u64,
+                act_bytes: a.get("mem").get("act_bytes").as_usize().unwrap_or(0) as u64,
+            });
+        }
+        let mut models = BTreeMap::new();
+        if let Some(o) = v.get("models").as_obj() {
+            for (name, mv) in o {
+                models.insert(
+                    name.clone(),
+                    ModelEntry {
+                        graph: Graph::from_json(mv.get("graph"))
+                            .with_context(|| format!("model {name}: graph"))?,
+                        instances: mv.get("instances").as_usize().unwrap_or(1),
+                        weights: mv
+                            .get("weights")
+                            .as_str()
+                            .context("model.weights")?
+                            .into(),
+                    },
+                );
+            }
+        }
+        Ok(Manifest { artifacts, models })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("no artifact {name:?} in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .with_context(|| format!("no model {name:?} in manifest"))
+    }
+
+    /// Artifact-name conventions shared with aot.py.
+    pub fn single_name(model: &str, bs: usize) -> String {
+        format!("{model}_single_bs{bs}")
+    }
+
+    pub fn fused_name(model: &str, m: usize, bs: usize) -> String {
+        format!("{model}_fused_m{m}_bs{bs}")
+    }
+}
+
+fn usizes(v: &Json) -> Result<Vec<usize>> {
+    v.as_arr()
+        .context("expected shape array")?
+        .iter()
+        .map(|x| x.as_usize().context("shape dim"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "m_single_bs1", "model": "m", "m": 1, "bs": 1,
+         "backend": "xla", "hlo": "m.hlo.txt", "layout": "single",
+         "input": {"shape": [1, 4], "dtype": "f32"},
+         "output": {"shape": [1, 2], "dtype": "f32"},
+         "params": [{"key": "d.b"}, {"key": "d.w"}],
+         "mem": {"weights_bytes": 40, "act_bytes": 8},
+         "graph": {}}
+      ],
+      "models": {
+        "m": {
+          "instances": 2,
+          "weights": "weights/m.nft",
+          "graph": {"name": "m", "input_shape": [4], "output": "d",
+            "nodes": [{"id": "d", "kind": "dense", "inputs": ["input"],
+              "attrs": {"fin": 4, "fout": 2},
+              "weights": {"w": [4, 2], "b": [2]}}]}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.artifact("m_single_bs1").unwrap();
+        assert_eq!(a.params, vec!["d.b", "d.w"]);
+        assert_eq!(a.input_shape, vec![1, 4]);
+        assert_eq!(m.model("m").unwrap().instances, 2);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn name_conventions() {
+        assert_eq!(Manifest::single_name("bert", 2), "bert_single_bs2");
+        assert_eq!(Manifest::fused_name("bert", 8, 1), "bert_fused_m8_bs1");
+    }
+}

@@ -1,0 +1,166 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile once, execute many.
+//!
+//! The interchange format is HLO **text** (not serialized protos): jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see `/opt/xla-example/README.md`).
+//!
+//! Python never appears here — `artifacts/` is produced once by
+//! `make artifacts`, and this module is everything the request path needs.
+//!
+//! Layering:
+//! - [`Runtime`] — PJRT CPU client + compiled-module cache.
+//! - [`Module`]  — one compiled executable (compile once per artifact).
+//! - [`Bound`]   — a module bound to device-resident parameter buffers.
+//!   `Sequential` binds M weight banks to ONE module (the paper's
+//!   baseline keeps every model's weights resident); `NetFuse` binds the
+//!   stacked merged bank to the merged module.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+pub use manifest::{Artifact, Manifest, ModelEntry};
+
+/// Tensor -> host literal.
+pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|d| *d as i64).collect();
+    Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+}
+
+/// Device literal -> tensor (f32 arrays only).
+pub fn from_literal(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    let data = l.to_vec::<f32>()?;
+    Tensor::new(dims, data)
+}
+
+/// One compiled artifact (shared, immutable after compile).
+pub struct Module {
+    pub art: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// PJRT CPU executions are internally synchronized; the wrapper types are
+// plain pointers. Concurrency across threads mirrors the paper's
+// process-per-model Concurrent baseline.
+unsafe impl Send for Module {}
+unsafe impl Sync for Module {}
+
+impl Module {
+    /// Upload a parameter set; returns a runnable binding.
+    pub fn bind(self: &Arc<Self>, params: &[Tensor]) -> Result<Bound> {
+        if params.len() != self.art.params.len() {
+            bail!(
+                "{}: got {} params, manifest wants {}",
+                self.art.name, params.len(), self.art.params.len()
+            );
+        }
+        let client = self.exe.client();
+        let mut bufs = Vec::with_capacity(params.len());
+        for p in params {
+            bufs.push(client.buffer_from_host_buffer(p.data(), p.shape(), None)?);
+        }
+        Ok(Bound { module: self.clone(), params: bufs })
+    }
+}
+
+/// A compiled module + device-resident weights: the runnable unit.
+pub struct Bound {
+    module: Arc<Module>,
+    params: Vec<xla::PjRtBuffer>,
+}
+
+unsafe impl Send for Bound {}
+unsafe impl Sync for Bound {}
+
+impl Bound {
+    pub fn art(&self) -> &Artifact {
+        &self.module.art
+    }
+
+    /// Execute with the bound weights; `x` is the only per-call upload.
+    pub fn run(&self, x: &Tensor) -> Result<Tensor> {
+        let art = &self.module.art;
+        if x.shape() != art.input_shape.as_slice() {
+            bail!(
+                "{}: input shape {:?}, expected {:?}",
+                art.name, x.shape(), art.input_shape
+            );
+        }
+        let client = self.module.exe.client();
+        let xb = client.buffer_from_host_buffer(x.data(), x.shape(), None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.params.len());
+        args.push(&xb);
+        args.extend(self.params.iter());
+        let res = self.module.exe.execute_b(&args)?;
+        // aot.py lowers with return_tuple=True -> 1-tuple output
+        let lit = res[0][0].to_literal_sync()?.to_tuple1()?;
+        from_literal(&lit)
+    }
+}
+
+/// Runtime: a PJRT client + compiled-module cache over an artifact dir.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Module>>>,
+}
+
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Open the artifact directory (the output of `make artifacts`).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an artifact (cached by name — each artifact is compiled at
+    /// most once per Runtime, amortized like the paper's offline merge).
+    pub fn compile(&self, name: &str) -> Result<Arc<Module>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(m) = cache.get(name) {
+                return Ok(m.clone());
+            }
+        }
+        let art = self.manifest.artifact(name)?.clone();
+        let hlo_path = self.dir.join(&art.hlo);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let m = Arc::new(Module { art, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), m.clone());
+        Ok(m)
+    }
+
+    /// Convenience: compile + bind in one step.
+    pub fn load(&self, name: &str, params: &[Tensor]) -> Result<Bound> {
+        self.compile(name)?.bind(params)
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+}

@@ -1,0 +1,147 @@
+//! `.nft` tensor container IO — byte-compatible with
+//! `python/compile/weights.py` (see that module for the layout spec).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Tensor;
+
+const MAGIC: &[u8; 4] = b"NFT1";
+
+/// Read an entire `.nft` container into name -> tensor.
+pub fn read_nft(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    parse_nft(&buf).with_context(|| format!("parse {}", path.display()))
+}
+
+pub fn parse_nft(buf: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    if buf.len() < 8 || &buf[..4] != MAGIC {
+        bail!("bad magic (not an NFT1 container)");
+    }
+    let mut off = 4usize;
+    let count = read_u32(buf, &mut off)? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = read_u16(buf, &mut off)? as usize;
+        let name = std::str::from_utf8(slice(buf, &mut off, nlen)?)
+            .context("tensor name not utf-8")?
+            .to_string();
+        let dtype = read_u8(buf, &mut off)?;
+        if dtype != 0 {
+            bail!("tensor {name}: unsupported dtype {dtype}");
+        }
+        let ndim = read_u8(buf, &mut off)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(buf, &mut off)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let raw = slice(buf, &mut off, 4 * n)?;
+        let mut data = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        out.insert(name, Tensor::new(shape, data)?);
+    }
+    if off != buf.len() {
+        bail!("trailing bytes after {count} tensors");
+    }
+    Ok(out)
+}
+
+/// Write tensors to a `.nft` container (ordering = map order).
+pub fn write_nft(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        if nb.len() > u16::MAX as usize {
+            bail!("tensor name too long");
+        }
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&[0u8, t.rank() as u8])?;
+        for d in t.shape() {
+            f.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        let mut raw = Vec::with_capacity(4 * t.len());
+        for v in t.data() {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&raw)?;
+    }
+    Ok(())
+}
+
+fn slice<'a>(buf: &'a [u8], off: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if *off + n > buf.len() {
+        bail!("truncated container at byte {}", off);
+    }
+    let s = &buf[*off..*off + n];
+    *off += n;
+    Ok(s)
+}
+
+fn read_u8(buf: &[u8], off: &mut usize) -> Result<u8> {
+    Ok(slice(buf, off, 1)?[0])
+}
+
+fn read_u16(buf: &[u8], off: &mut usize) -> Result<u16> {
+    let s = slice(buf, off, 2)?;
+    Ok(u16::from_le_bytes([s[0], s[1]]))
+}
+
+fn read_u32(buf: &[u8], off: &mut usize) -> Result<u32> {
+    let s = slice(buf, off, 4)?;
+    Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("netfuse_nft_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.nft");
+        let mut m = BTreeMap::new();
+        m.insert(
+            "a/b.w".to_string(),
+            Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap(),
+        );
+        m.insert("scalar".to_string(), Tensor::scalar(7.5));
+        write_nft(&path, &m).unwrap();
+        let back = read_nft(&path).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_nft(b"XXXX\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), Tensor::zeros(&[4]));
+        let dir = std::env::temp_dir().join("netfuse_nft_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.nft");
+        write_nft(&path, &m).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(parse_nft(&bytes[..bytes.len() - 3]).is_err());
+        // and trailing garbage
+        let mut extended = bytes.clone();
+        extended.push(0);
+        assert!(parse_nft(&extended).is_err());
+    }
+}

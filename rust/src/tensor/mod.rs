@@ -1,0 +1,314 @@
+//! Dense tensor library: the coordinator's host-side data plane.
+//!
+//! Holds request payloads, weight banks and megabatch buffers; implements
+//! the concat/stack/slice operations the NETFUSE batcher and weight
+//! merger need (paper §3.1: inputs concat on batch or channel, weights
+//! concat or stack per op kind). f32-only — everything the AOT pipeline
+//! emits is f32.
+
+pub mod io;
+
+use anyhow::{bail, Result};
+
+/// A dense, row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Deterministic standard-normal tensor (synthetic request payloads).
+    pub fn randn(shape: &[usize], rng: &mut crate::util::rng::Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal() as f32).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+    pub fn size_bytes(&self) -> u64 {
+        4 * self.data.len() as u64
+    }
+
+    /// Reshape without copying (element count must match).
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Row-major strides (exposed for layout-aware consumers/tests).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Concatenate along `axis`. All other dims must agree.
+    pub fn concat(parts: &[&Tensor], axis: usize) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("concat of zero tensors");
+        }
+        let rank = parts[0].rank();
+        if axis >= rank {
+            bail!("concat axis {} out of range for rank {}", axis, rank);
+        }
+        let mut out_shape = parts[0].shape.clone();
+        let mut axis_total = 0;
+        for p in parts {
+            if p.rank() != rank {
+                bail!("concat rank mismatch: {:?} vs {:?}", parts[0].shape, p.shape);
+            }
+            for d in 0..rank {
+                if d != axis && p.shape[d] != parts[0].shape[d] {
+                    bail!(
+                        "concat dim {} mismatch: {:?} vs {:?}",
+                        d, parts[0].shape, p.shape
+                    );
+                }
+            }
+            axis_total += p.shape[axis];
+        }
+        out_shape[axis] = axis_total;
+
+        // copy per outer-block: outer = prod(dims < axis)
+        let outer: usize = parts[0].shape[..axis].iter().product();
+        let mut data = Vec::with_capacity(out_shape.iter().product());
+        for o in 0..outer {
+            for p in parts {
+                let inner: usize = p.shape[axis..].iter().product();
+                let off = o * inner;
+                data.extend_from_slice(&p.data[off..off + inner]);
+            }
+        }
+        Tensor::new(out_shape, data)
+    }
+
+    /// Stack along a new leading axis.
+    pub fn stack(parts: &[&Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("stack of zero tensors");
+        }
+        for p in parts {
+            if p.shape != parts[0].shape {
+                bail!("stack shape mismatch: {:?} vs {:?}", parts[0].shape, p.shape);
+            }
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(&parts[0].shape);
+        let mut data = Vec::with_capacity(parts.len() * parts[0].len());
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        Tensor::new(shape, data)
+    }
+
+    /// Split into `n` equal chunks along `axis` (inverse of concat).
+    pub fn split(&self, n: usize, axis: usize) -> Result<Vec<Tensor>> {
+        if axis >= self.rank() {
+            bail!("split axis {} out of range", axis);
+        }
+        if n == 0 || self.shape[axis] % n != 0 {
+            bail!("cannot split dim {} into {} parts", self.shape[axis], n);
+        }
+        let chunk = self.shape[axis] / n;
+        let outer: usize = self.shape[..axis].iter().product();
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let mut out_shape = self.shape.clone();
+        out_shape[axis] = chunk;
+        let mut outs = vec![Vec::with_capacity(outer * chunk * inner); n];
+        for o in 0..outer {
+            for (i, out) in outs.iter_mut().enumerate() {
+                let off = (o * self.shape[axis] + i * chunk) * inner;
+                out.extend_from_slice(&self.data[off..off + chunk * inner]);
+            }
+        }
+        outs.into_iter()
+            .map(|d| Tensor::new(out_shape.clone(), d))
+            .collect()
+    }
+
+    /// Index the leading axis (view copy): `[M, ...] -> [...]`.
+    pub fn index0(&self, i: usize) -> Result<Tensor> {
+        if self.rank() == 0 || i >= self.shape[0] {
+            bail!("index0 {} out of range for {:?}", i, self.shape);
+        }
+        let inner: usize = self.shape[1..].iter().product();
+        Tensor::new(
+            self.shape[1..].to_vec(),
+            self.data[i * inner..(i + 1) * inner].to_vec(),
+        )
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f64> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max))
+    }
+
+    /// Relative-tolerance comparison mirroring numpy.allclose.
+    pub fn allclose(&self, other: &Tensor, rtol: f64, atol: f64) -> bool {
+        self.shape == other.shape
+            && self.data.iter().zip(&other.data).all(|(a, b)| {
+                let (a, b) = (*a as f64, *b as f64);
+                (a - b).abs() <= atol + rtol * b.abs()
+            })
+    }
+
+    /// Transpose the first axis with the second for rank >= 2 tensors
+    /// (the batcher's channel<->batch repack helper).
+    pub fn swap01(&self) -> Result<Tensor> {
+        if self.rank() < 2 {
+            bail!("swap01 needs rank >= 2, got {:?}", self.shape);
+        }
+        let (a, b) = (self.shape[0], self.shape[1]);
+        let inner: usize = self.shape[2..].iter().product();
+        let mut data = vec![0.0f32; self.data.len()];
+        for i in 0..a {
+            for j in 0..b {
+                let src = (i * b + j) * inner;
+                let dst = (j * a + i) * inner;
+                data[dst..dst + inner].copy_from_slice(&self.data[src..src + inner]);
+            }
+        }
+        let mut shape = self.shape.clone();
+        shape.swap(0, 1);
+        Tensor::new(shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], data: &[f32]) -> Tensor {
+        Tensor::new(shape.to_vec(), data.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn new_checks_len() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn concat_axis0() {
+        let a = t(&[2, 2], &[1., 2., 3., 4.]);
+        let b = t(&[1, 2], &[5., 6.]);
+        let c = Tensor::concat(&[&a, &b], 0).unwrap();
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.data(), &[1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn concat_axis1_interleaves() {
+        let a = t(&[2, 1], &[1., 2.]);
+        let b = t(&[2, 2], &[10., 11., 20., 21.]);
+        let c = Tensor::concat(&[&a, &b], 1).unwrap();
+        assert_eq!(c.shape(), &[2, 3]);
+        assert_eq!(c.data(), &[1., 10., 11., 2., 20., 21.]);
+    }
+
+    #[test]
+    fn concat_rejects_mismatch() {
+        let a = t(&[2, 2], &[0.; 4]);
+        let b = t(&[3, 3], &[0.; 9]);
+        assert!(Tensor::concat(&[&a, &b], 0).is_err());
+        assert!(Tensor::concat(&[&a], 5).is_err());
+        assert!(Tensor::concat(&[], 0).is_err());
+    }
+
+    #[test]
+    fn split_inverts_concat() {
+        let a = t(&[1, 2, 2], &[1., 2., 3., 4.]);
+        let b = t(&[1, 2, 2], &[5., 6., 7., 8.]);
+        let c = Tensor::concat(&[&a, &b], 1).unwrap(); // channel-ish axis
+        let parts = c.split(2, 1).unwrap();
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn stack_and_index0() {
+        let a = t(&[2], &[1., 2.]);
+        let b = t(&[2], &[3., 4.]);
+        let s = Tensor::stack(&[&a, &b]).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.index0(1).unwrap(), b);
+        assert!(s.index0(2).is_err());
+    }
+
+    #[test]
+    fn swap01_roundtrip() {
+        let a = t(&[2, 3, 2], &(0..12).map(|x| x as f32).collect::<Vec<_>>());
+        let b = a.swap01().unwrap();
+        assert_eq!(b.shape(), &[3, 2, 2]);
+        assert_eq!(b.swap01().unwrap(), a);
+        // spot value: a[1,2,:] == b[2,1,:]
+        assert_eq!(&b.data()[(2 * 2 + 1) * 2..(2 * 2 + 1) * 2 + 2], &[10., 11.]);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = t(&[2], &[1.0, 2.0]);
+        let b = t(&[2], &[1.0 + 1e-7, 2.0 - 1e-7]);
+        assert!(a.allclose(&b, 1e-5, 1e-6));
+        let c = t(&[2], &[1.1, 2.0]);
+        assert!(!a.allclose(&c, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn reshape_checks() {
+        let a = t(&[2, 3], &[0.; 6]);
+        assert!(a.clone().reshape(&[3, 2]).is_ok());
+        assert!(a.reshape(&[4, 2]).is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! Criterion-style measurement harness (criterion is not available
+//! offline). Bench targets are `harness = false` binaries that call
+//! [`Bench::run`]; results print as aligned tables and can be captured by
+//! the figure generators.
+
+use std::time::Instant;
+
+use super::stats::{fmt_secs, Summary};
+
+/// Measurement configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Warm-up wall time budget (seconds).
+    pub warmup_s: f64,
+    /// Number of recorded samples.
+    pub samples: usize,
+    /// Per-sample minimum wall time; iterations scale to reach it.
+    pub min_sample_s: f64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { warmup_s: 0.3, samples: 20, min_sample_s: 0.01 }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Mean seconds per iteration.
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} ± {:>9}  (min {:>10}, {} samples x {} iters)",
+            self.name,
+            fmt_secs(self.mean),
+            fmt_secs(self.std),
+            fmt_secs(self.min),
+            self.samples,
+            self.iters_per_sample,
+        )
+    }
+}
+
+/// Bench runner. Keeps all measurements for a final summary table.
+#[derive(Default)]
+pub struct Bench {
+    pub config: Config,
+    pub results: Vec<Measurement>,
+    quiet: bool,
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Bench::default()
+    }
+
+    /// Quick preset used by `cargo test`-adjacent smoke benches.
+    pub fn quick() -> Self {
+        Bench {
+            config: Config { warmup_s: 0.05, samples: 5, min_sample_s: 0.002 },
+            ..Default::default()
+        }
+    }
+
+    pub fn quiet(mut self) -> Self {
+        self.quiet = true;
+        self
+    }
+
+    /// Measure `f`, auto-scaling iterations so each sample runs at least
+    /// `min_sample_s`. Returns mean seconds per iteration.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> Measurement {
+        // warm-up + iteration calibration
+        let start = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while start.elapsed().as_secs_f64() < self.config.warmup_s {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = start.elapsed().as_secs_f64() / calib_iters.max(1) as f64;
+        let iters = ((self.config.min_sample_s / per_iter).ceil() as u64).max(1);
+
+        let mut s = Summary::new();
+        for _ in 0..self.config.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            s.add(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            mean: s.mean(),
+            std: s.std(),
+            min: s.min(),
+            max: s.max(),
+            iters_per_sample: iters,
+            samples: self.config.samples,
+        };
+        if !self.quiet {
+            println!("{}", m.report());
+        }
+        self.results.push(m.clone());
+        m
+    }
+
+    /// Retrieve a previous measurement by name.
+    pub fn get(&self, name: &str) -> Option<&Measurement> {
+        self.results.iter().find(|m| m.name == name)
+    }
+}
+
+/// One-shot timing of a closure (used for merge-overhead style
+/// measurements where a single run is the quantity of interest).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::quick().quiet();
+        let m = b.run("noop-ish", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(m.mean > 0.0 && m.mean < 0.01);
+        assert!(b.get("noop-ish").is_some());
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

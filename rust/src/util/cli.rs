@@ -1,0 +1,139 @@
+//! Tiny declarative CLI parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args;
+//! generates usage text; unknown flags are hard errors.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` against the set of known option names (without the
+    /// leading `--`). `bools` take no value.
+    pub fn parse(
+        argv: &[String],
+        known: &[&str],
+        bools: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if bools.contains(&key.as_str()) {
+                    out.flags.insert(key, "true".into());
+                } else if known.contains(&key.as_str()) {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} needs a value"))?
+                            .clone(),
+                    };
+                    out.flags.insert(key, v);
+                } else {
+                    return Err(format!("unknown option --{key}"));
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected number, got {v:?}")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Comma-separated list helper: `--models resnet,bert`.
+    pub fn get_list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            &argv(&["serve", "--m", "8", "--fast", "--name=x"]),
+            &["m", "name"],
+            &["fast"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(), &["serve"]);
+        assert_eq!(a.get_usize("m", 1).unwrap(), 8);
+        assert!(a.has("fast"));
+        assert_eq!(a.get("name"), Some("x"));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(Args::parse(&argv(&["--nope"]), &[], &[]).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv(&["--m"]), &["m"], &[]).is_err());
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = Args::parse(&argv(&["--m", "xyz"]), &["m"], &[]).unwrap();
+        assert!(a.get_usize("m", 1).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&argv(&["--models", "a, b,c"]), &["models"], &[]).unwrap();
+        assert_eq!(a.get_list("models", &[]), vec!["a", "b", "c"]);
+        assert_eq!(a.get_list("other", &["d"]), vec!["d"]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Substrates: JSON, RNG, CLI parsing, statistics, property testing and a
+//! criterion-style bench harness.
+//!
+//! The offline registry only carries the `xla` crate's dependency closure
+//! (DESIGN.md §7), so `serde_json`, `rand`, `clap`, `criterion` and
+//! `proptest` are re-implemented here at the scale this system needs.
+
+pub mod json;
+pub mod rng;
+pub mod cli;
+pub mod stats;
+pub mod prop;
+pub mod bench;

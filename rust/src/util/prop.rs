@@ -1,0 +1,94 @@
+//! Mini property-based-testing framework (proptest is not available
+//! offline). Generators are plain closures over [`Rng`]; failures are
+//! shrunk by retrying with smaller size parameters.
+//!
+//! Used by `rust/tests/` for the fuse/tensor/json invariants.
+
+use super::rng::Rng;
+
+/// Run `prop` against `cases` random inputs produced by `gen` at growing
+/// sizes. On failure, retry smaller sizes to report a minimal-ish case.
+pub fn check<T: std::fmt::Debug, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(0xC0FFEE ^ hash(name));
+    for case in 0..cases {
+        // size ramps up with the case index, like proptest
+        let size = 1 + case * 16 / cases.max(1);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // shrink: try progressively smaller sizes with fresh values
+            let mut minimal: Option<(T, String)> = None;
+            for s in (1..size).rev() {
+                for _ in 0..20 {
+                    let cand = gen(&mut rng, s);
+                    if let Err(m) = prop(&cand) {
+                        minimal = Some((cand, m));
+                    }
+                }
+            }
+            match minimal {
+                Some((m, mm)) => panic!(
+                    "property {name:?} failed (case {case}):\n  \
+                     original: {input:?}\n  error: {msg}\n  \
+                     shrunk: {m:?}\n  error: {mm}"
+                ),
+                None => panic!(
+                    "property {name:?} failed (case {case}):\n  \
+                     input: {input:?}\n  error: {msg}"
+                ),
+            }
+        }
+    }
+}
+
+/// Assertion helper for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+fn hash(s: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        check("reverse-involutive", 50, |r, size| {
+            (0..size).map(|_| r.below(100)).collect::<Vec<_>>()
+        }, |v| {
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if w == *v { Ok(()) } else { Err("not involutive".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted-is-identity")]
+    fn failing_property_panics() {
+        check("sorted-is-identity", 100, |r, size| {
+            (0..size + 2).map(|_| r.below(100)).collect::<Vec<_>>()
+        }, |v| {
+            let mut w = v.clone();
+            w.sort();
+            if w == *v { Ok(()) } else { Err("differs".into()) }
+        });
+    }
+}

@@ -1,0 +1,156 @@
+//! Streaming statistics + latency recorder (percentiles, histograms).
+
+/// Welford online mean/variance plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Latency recorder keeping raw samples (bounded) for exact percentiles.
+#[derive(Debug, Clone, Default)]
+pub struct Latencies {
+    samples: Vec<f64>,
+    summary: Summary,
+}
+
+impl Latencies {
+    pub fn new() -> Self {
+        Latencies { samples: Vec::new(), summary: Summary::new() }
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.samples.push(seconds);
+        self.summary.add(seconds);
+    }
+
+    pub fn summary(&self) -> &Summary {
+        &self.summary
+    }
+
+    /// Exact percentile by nearest-rank (q in [0,1]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len());
+        v[rank - 1]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+}
+
+/// Pretty time formatting for reports.
+pub fn fmt_secs(s: f64) -> String {
+    if s.is_nan() {
+        "n/a".into()
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Pretty byte formatting for memory reports.
+pub fn fmt_bytes(b: u64) -> String {
+    const G: f64 = 1024.0 * 1024.0 * 1024.0;
+    const M: f64 = 1024.0 * 1024.0;
+    let f = b as f64;
+    if f >= G {
+        format!("{:.2}GB", f / G)
+    } else if f >= M {
+        format!("{:.1}MB", f / M)
+    } else {
+        format!("{:.1}KB", f / 1024.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-9);
+        assert!((s.var() - 32.0 / 7.0).abs() < 1e-9);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut l = Latencies::new();
+        for i in 1..=100 {
+            l.record(i as f64);
+        }
+        assert_eq!(l.p50(), 50.0);
+        assert_eq!(l.p99(), 99.0);
+        assert_eq!(l.percentile(1.0), 100.0);
+    }
+
+    #[test]
+    fn empty_latencies_nan() {
+        assert!(Latencies::new().p50().is_nan());
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_secs(0.00005), "50.0µs");
+        assert_eq!(fmt_secs(0.0123), "12.30ms");
+        assert_eq!(fmt_bytes(1536), "1.5KB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024 * 1024), "3.00GB");
+    }
+}

@@ -1,0 +1,223 @@
+//! Coordinator integration tests over real artifacts: strategy
+//! equivalence, the serving loop (routing, padding, backpressure) and
+//! failure handling.
+
+use std::path::Path;
+
+use netfuse::coordinator::server::{Admit, Server, ServerConfig};
+use netfuse::coordinator::workload::Workload;
+use netfuse::coordinator::{Fleet, Request, StrategyKind};
+use netfuse::runtime::Runtime;
+use netfuse::tensor::Tensor;
+use netfuse::util::rng::Rng;
+
+fn artifacts_dir() -> &'static Path {
+    Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+fn skip() -> bool {
+    if artifacts_dir().join("manifest.json").exists() {
+        false
+    } else {
+        eprintln!("skipping: artifacts/ not built");
+        true
+    }
+}
+
+#[test]
+fn all_strategies_agree_on_outputs() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    for model in ["resnet", "bert"] {
+        let fleet = Fleet::load(&rt, model, 4, 1).unwrap();
+        let mut rng = Rng::new(3);
+        let xs: Vec<Tensor> = (0..4)
+            .map(|_| Tensor::randn(&fleet.request_shape(), &mut rng))
+            .collect();
+        let refs: Vec<&Tensor> = xs.iter().collect();
+        let want = fleet.run_round(StrategyKind::Sequential, &refs).unwrap();
+        for s in [
+            StrategyKind::Concurrent,
+            StrategyKind::Hybrid { procs: 2 },
+            StrategyKind::NetFuse,
+        ] {
+            let got = fleet.run_round(s, &refs).unwrap();
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert!(
+                    a.allclose(b, 1e-3, 1e-4),
+                    "{model}/{s}: instance {i} diverges (max {:?})",
+                    a.max_abs_diff(b)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_outputs_differ_across_instances() {
+    if skip() {
+        return;
+    }
+    // different weights => the same input must produce different outputs
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let fleet = Fleet::load(&rt, "bert", 2, 1).unwrap();
+    let mut rng = Rng::new(4);
+    let x = Tensor::randn(&fleet.request_shape(), &mut rng);
+    let outs = fleet
+        .run_round(StrategyKind::NetFuse, &[&x, &x])
+        .unwrap();
+    let diff = outs[0].max_abs_diff(&outs[1]).unwrap();
+    assert!(diff > 1e-3, "instances look identical (diff {diff})");
+}
+
+#[test]
+fn server_serves_full_rounds() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let fleet = Fleet::load(&rt, "bert", 4, 1).unwrap();
+    let mut server = Server::new(
+        &fleet,
+        ServerConfig { strategy: StrategyKind::NetFuse, ..Default::default() },
+    );
+    let mut wl = Workload::new(4, &fleet.request_shape(), 100.0, 11);
+    let served = server.run_rounds(10, || wl.round()).unwrap();
+    assert_eq!(served, 40);
+    assert_eq!(server.metrics.completed_requests, 40);
+    assert!(server.metrics.round_latency.count() >= 10);
+    assert!(server.metrics.request_latency.p99() > 0.0);
+}
+
+#[test]
+fn server_pads_partial_rounds() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let fleet = Fleet::load(&rt, "bert", 4, 1).unwrap();
+    let mut server = Server::new(
+        &fleet,
+        ServerConfig {
+            strategy: StrategyKind::NetFuse,
+            max_wait: std::time::Duration::from_millis(0),
+            ..Default::default()
+        },
+    );
+    // only models 1 and 3 have work
+    let mut rng = Rng::new(5);
+    for idx in [1usize, 3] {
+        let x = Tensor::randn(&fleet.request_shape(), &mut rng);
+        assert_eq!(server.offer(Request::new(idx as u64, idx, x)), Admit::Queued);
+    }
+    assert!(server.round_ready());
+    let responses = server.dispatch().unwrap();
+    // padded slots produce no responses
+    assert_eq!(responses.len(), 2);
+    let mut idxs: Vec<usize> = responses.iter().map(|r| r.model_idx).collect();
+    idxs.sort();
+    assert_eq!(idxs, vec![1, 3]);
+    assert_eq!(server.pending(), 0);
+}
+
+#[test]
+fn server_applies_backpressure() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let fleet = Fleet::load(&rt, "bert", 2, 1).unwrap();
+    let mut server = Server::new(
+        &fleet,
+        ServerConfig {
+            strategy: StrategyKind::Sequential,
+            queue_cap: 2,
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(6);
+    let mk = |rng: &mut Rng, id: u64| {
+        Request::new(id, 0, Tensor::randn(&fleet.request_shape(), rng))
+    };
+    assert_eq!(server.offer(mk(&mut rng, 0)), Admit::Queued);
+    assert_eq!(server.offer(mk(&mut rng, 1)), Admit::Queued);
+    assert_eq!(server.offer(mk(&mut rng, 2)), Admit::Rejected);
+}
+
+#[test]
+fn fleet_rejects_too_many_instances() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    assert!(Fleet::load(&rt, "bert", 1000, 1).is_err());
+}
+
+#[test]
+fn fleet_rejects_wrong_round_size() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let fleet = Fleet::load(&rt, "bert", 2, 1).unwrap();
+    let mut rng = Rng::new(7);
+    let x = Tensor::randn(&fleet.request_shape(), &mut rng);
+    assert!(fleet.run_round(StrategyKind::NetFuse, &[&x]).is_err());
+}
+
+#[test]
+fn bound_rejects_wrong_input_shape() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let fleet = Fleet::load(&rt, "bert", 2, 1).unwrap();
+    let bad = Tensor::zeros(&[1, 2, 3]);
+    assert!(fleet.single(0).run(&bad).is_err());
+}
+
+#[test]
+fn hybrid_procs_variants_all_work() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let fleet = Fleet::load(&rt, "resnet", 4, 1).unwrap();
+    let mut rng = Rng::new(8);
+    let xs: Vec<Tensor> = (0..4)
+        .map(|_| Tensor::randn(&fleet.request_shape(), &mut rng))
+        .collect();
+    let refs: Vec<&Tensor> = xs.iter().collect();
+    let want = fleet.run_round(StrategyKind::Sequential, &refs).unwrap();
+    for procs in [1usize, 2, 3, 4, 9] {
+        let got = fleet
+            .run_round(StrategyKind::Hybrid { procs }, &refs)
+            .unwrap();
+        for (a, b) in want.iter().zip(&got) {
+            assert!(a.allclose(b, 1e-3, 1e-4), "hybrid:{procs} diverges");
+        }
+    }
+}
+
+#[test]
+fn pallas_and_xla_backends_agree() {
+    if skip() {
+        return;
+    }
+    // the same fleet through the Pallas-kernel HLO and the plain-XLA HLO
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let a = Fleet::load(&rt, "bert", 4, 1).unwrap();
+    let b = Fleet::load_with(&rt, "bert", 4, 1, "_pallas").unwrap();
+    let mut rng = Rng::new(9);
+    let xs: Vec<Tensor> = (0..4)
+        .map(|_| Tensor::randn(&a.request_shape(), &mut rng))
+        .collect();
+    let refs: Vec<&Tensor> = xs.iter().collect();
+    let ya = a.run_round(StrategyKind::NetFuse, &refs).unwrap();
+    let yb = b.run_round(StrategyKind::NetFuse, &refs).unwrap();
+    for (u, v) in ya.iter().zip(&yb) {
+        assert!(u.allclose(v, 1e-3, 1e-3), "backends disagree");
+    }
+}

@@ -1,0 +1,314 @@
+//! Property-based tests (via `util::prop`, the offline proptest stand-in)
+//! for the coordinator-side invariants: Algorithm 1 merge properties over
+//! randomly generated graphs, tensor algebra round-trips, and JSON
+//! round-trip fuzzing.
+
+use std::collections::BTreeMap;
+
+use netfuse::fuse;
+use netfuse::graph::{Attr, Graph, MergeDim, Node};
+use netfuse::tensor::Tensor;
+use netfuse::util::json::Json;
+use netfuse::util::prop::check;
+use netfuse::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// random graph generator: a layered mix of the mergeable op vocabulary
+// ---------------------------------------------------------------------------
+
+fn gen_seq_graph(rng: &mut Rng, size: usize) -> Graph {
+    // sequence-model graphs: dense / layernorm / gelu / add chains
+    let hidden = 4 * (1 + rng.usize_below(4));
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut prev = "input".to_string();
+    let mut fork: Option<String> = None;
+    let n_ops = 1 + size.min(12);
+    for i in 0..n_ops {
+        let id = format!("n{i}");
+        let choice = rng.usize_below(5);
+        let node = match choice {
+            0 => Node {
+                id: id.clone(),
+                kind: "dense".into(),
+                inputs: vec![prev.clone()],
+                attrs: BTreeMap::from([
+                    ("fin".to_string(), Attr::Int(hidden as i64)),
+                    ("fout".to_string(), Attr::Int(hidden as i64)),
+                ]),
+                weights: BTreeMap::from([
+                    ("w".to_string(), vec![hidden, hidden]),
+                    ("b".to_string(), vec![hidden]),
+                ]),
+                mergeable: true,
+            },
+            1 => Node {
+                id: id.clone(),
+                kind: "layernorm".into(),
+                inputs: vec![prev.clone()],
+                attrs: BTreeMap::from([("dim".to_string(), Attr::Int(hidden as i64))]),
+                weights: BTreeMap::from([
+                    ("gamma".to_string(), vec![hidden]),
+                    ("beta".to_string(), vec![hidden]),
+                ]),
+                mergeable: true,
+            },
+            2 => Node {
+                id: id.clone(),
+                kind: "gelu".into(),
+                inputs: vec![prev.clone()],
+                attrs: BTreeMap::new(),
+                weights: BTreeMap::new(),
+                mergeable: true,
+            },
+            3 if fork.is_some() => Node {
+                id: id.clone(),
+                kind: "add".into(),
+                inputs: vec![prev.clone(), fork.clone().unwrap()],
+                attrs: BTreeMap::new(),
+                weights: BTreeMap::new(),
+                mergeable: true,
+            },
+            _ => Node {
+                id: id.clone(),
+                kind: "relu".into(),
+                inputs: vec![prev.clone()],
+                attrs: BTreeMap::new(),
+                weights: BTreeMap::new(),
+                mergeable: true,
+            },
+        };
+        if rng.below(3) == 0 {
+            fork = Some(prev.clone());
+        }
+        nodes.push(node);
+        prev = id;
+    }
+    let g = Graph {
+        name: "gen".into(),
+        input_shape: vec![hidden],
+        nodes,
+        output: prev,
+        merged_m: 1,
+        layout: "single".into(),
+    };
+    g.validate().expect("generator must produce valid graphs");
+    g
+}
+
+#[test]
+fn prop_merge_preserves_mergeable_node_ids() {
+    check("merge-preserves-ids", 60, gen_seq_graph, |g| {
+        let m = 1 + (g.nodes.len() % 4);
+        let merged = fuse::merge(g, m).map_err(|e| e.to_string())?;
+        for n in &g.nodes {
+            if merged.node(&n.id).is_err() {
+                return Err(format!("node {} lost in merge", n.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merge_only_adds_fixups() {
+    check("merge-only-adds-fixups", 60, gen_seq_graph, |g| {
+        let merged = fuse::merge(g, 3).map_err(|e| e.to_string())?;
+        let orig: std::collections::HashSet<&str> =
+            g.nodes.iter().map(|n| n.id.as_str()).collect();
+        for n in &merged.nodes {
+            if !orig.contains(n.id.as_str()) && n.kind != "refmt" {
+                return Err(format!("unexpected new node {} ({})", n.id, n.kind));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merge_is_valid_and_layernorm_free() {
+    check("merge-valid-no-ln", 60, gen_seq_graph, |g| {
+        let merged = fuse::merge(g, 4).map_err(|e| e.to_string())?;
+        merged.validate().map_err(|e| e.to_string())?;
+        if merged.nodes.iter().any(|n| n.kind == "layernorm") {
+            return Err("layernorm survived the merge".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_refmt_endpoints_consistent() {
+    check("refmt-endpoints", 60, gen_seq_graph, |g| {
+        let merged = fuse::merge(g, 2).map_err(|e| e.to_string())?;
+        for n in &merged.nodes {
+            if n.kind == "refmt" {
+                let src = n.attrs["src"].as_str().unwrap_or("");
+                let dst = n.attrs["dst"].as_str().unwrap_or("");
+                if src == dst {
+                    return Err(format!("no-op refmt {}", n.id));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merged_weight_shapes_scale_with_m() {
+    check("weights-scale", 40, gen_seq_graph, |g| {
+        for m in [2usize, 5] {
+            let merged = fuse::merge(g, m).map_err(|e| e.to_string())?;
+            for n in &g.nodes {
+                let mn = merged.node(&n.id).unwrap();
+                for (wname, shape) in &n.weights {
+                    let got: usize = mn.weights[wname].iter().product();
+                    let want: usize = shape.iter().product::<usize>() * m;
+                    if got != want {
+                        return Err(format!(
+                            "{}.{}: {} elements, want {}",
+                            n.id, wname, got, want
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_input_dim_rule() {
+    check("input-dim", 20, gen_seq_graph, |g| {
+        // sequence graphs pack on Batch; CNN graphs (rank-3 input) on Channel
+        if fuse::input_dim(g) != MergeDim::Batch {
+            return Err("sequence graph should pack on batch".into());
+        }
+        let mut cnn = g.clone();
+        cnn.input_shape = vec![3, 8, 8];
+        if fuse::input_dim(&cnn) != MergeDim::Channel {
+            return Err("CNN graph should pack on channel".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// tensor properties
+// ---------------------------------------------------------------------------
+
+fn gen_tensor_parts(rng: &mut Rng, size: usize) -> (Vec<Tensor>, usize) {
+    let rank = 2 + rng.usize_below(3);
+    let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.usize_below(4)).collect();
+    let n = 1 + size.min(6);
+    let parts = (0..n).map(|_| Tensor::randn(&shape, rng)).collect();
+    let axis = rng.usize_below(rank);
+    (parts, axis)
+}
+
+#[test]
+fn prop_concat_split_roundtrip() {
+    check("concat-split", 80, gen_tensor_parts, |(parts, axis)| {
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        let cat = Tensor::concat(&refs, *axis).map_err(|e| e.to_string())?;
+        let back = cat.split(parts.len(), *axis).map_err(|e| e.to_string())?;
+        for (a, b) in parts.iter().zip(&back) {
+            if a != b {
+                return Err("split(concat(x)) != x".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stack_index_roundtrip() {
+    check("stack-index", 80, gen_tensor_parts, |(parts, _)| {
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        let st = Tensor::stack(&refs).map_err(|e| e.to_string())?;
+        for (i, p) in parts.iter().enumerate() {
+            if &st.index0(i).map_err(|e| e.to_string())? != p {
+                return Err(format!("stack[{i}] != part"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_swap01_involutive() {
+    check("swap01", 60, gen_tensor_parts, |(parts, _)| {
+        let t = &parts[0];
+        if t.rank() < 2 {
+            return Ok(());
+        }
+        let tt = t
+            .swap01()
+            .and_then(|x| x.swap01())
+            .map_err(|e| e.to_string())?;
+        if &tt != t {
+            return Err("swap01 not involutive".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// json round-trip fuzz
+// ---------------------------------------------------------------------------
+
+fn gen_json(rng: &mut Rng, size: usize) -> Json {
+    fn value(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool()),
+            2 => Json::Num((rng.below(2_000_001) as f64 - 1e6) / 8.0),
+            3 => {
+                let n = rng.usize_below(8);
+                let s: String = (0..n)
+                    .map(|_| {
+                        let c = rng.below(128) as u8;
+                        if c.is_ascii_graphic() || c == b' ' {
+                            c as char
+                        } else {
+                            '\\'
+                        }
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.usize_below(4)).map(|_| value(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.usize_below(4))
+                    .map(|i| (format!("k{i}"), value(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let _ = size;
+    value(rng, 0)
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check("json-roundtrip", 200, gen_json, |v| {
+        let text = v.dump();
+        let back = Json::parse(&text).map_err(|e| format!("{e} in {text:?}"))?;
+        if &back != v {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_garbage() {
+    check("json-no-panic", 300, |rng: &mut Rng, size| {
+        let n = size * 4;
+        (0..n)
+            .map(|_| rng.below(128) as u8 as char)
+            .collect::<String>()
+    }, |s| {
+        let _ = Json::parse(s); // must return, never panic
+        Ok(())
+    });
+}
