@@ -1,0 +1,216 @@
+//! Bench: the zero-copy round pipeline (host data plane).
+//!
+//! Compares the seed's copying round path — fresh `slot`/`inputs`
+//! vectors, `Tensor::concat`/`stack` megabatch materialization, and
+//! `index0` per-instance output copies — against the arena path:
+//! `RoundArena::pack_with` into a reusable megabatch, borrowed
+//! `TensorView` unpacking, and reusable dispatch scratch. Also measures
+//! per-round `std::thread::scope` spawning (the seed's Concurrent
+//! dispatch) against the persistent `WorkerPool`.
+//!
+//! Asserts, with a counting global allocator, that the steady-state
+//! arena round performs **zero** heap allocations, and that the arena
+//! round beats the legacy round by >= 2x at m=16 on mini-model-shaped
+//! payloads. Results are written to `BENCH_round_pipeline.json`.
+//!
+//! Runs fully offline: the host data plane needs no artifacts and no
+//! PJRT backend.
+
+use std::collections::BTreeMap;
+
+use netfuse::coordinator::arena::{Layout, RoundArena};
+use netfuse::coordinator::pool::WorkerPool;
+use netfuse::tensor::Tensor;
+use netfuse::util::bench::counting_alloc::{self, CountingAlloc};
+use netfuse::util::bench::{Bench, Config};
+use netfuse::util::json::Json;
+use netfuse::util::rng::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+const M: usize = 16;
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// One layout scenario: legacy round vs arena round over identical
+/// payloads. Returns (legacy_s, arena_s, allocs_per_round).
+fn bench_layout(
+    b: &mut Bench,
+    layout: Layout,
+    request_shape: &[usize],
+    rng: &mut Rng,
+) -> anyhow::Result<(f64, f64, u64)> {
+    let name = match layout {
+        Layout::Channel => "channel",
+        Layout::Batch => "batch",
+    };
+    let xs: Vec<Tensor> = (0..M).map(|_| Tensor::randn(request_shape, rng)).collect();
+    let pad = Tensor::zeros(request_shape);
+    // merged OUTPUT stand-in: always batch-packed [M, bs, ...]; identity
+    // output shape keeps pack and unpack traffic comparable
+    let mut out_shape = vec![M];
+    out_shape.extend_from_slice(request_shape);
+    let y = Tensor::randn(&out_shape, rng);
+
+    // --- legacy path: the seed's dispatch, reconstructed ---------------
+    let legacy = b.run(&format!("round/{name}/legacy m={M}"), || {
+        // fresh per-round scratch, exactly like the seed's dispatch
+        let slot: Vec<Option<&Tensor>> = (0..M).map(|i| Some(&xs[i])).collect();
+        let inputs: Vec<&Tensor> = slot
+            .iter()
+            .map(|s| s.unwrap_or(&pad))
+            .collect();
+        // copying pack: concat/stack materializes a fresh megabatch
+        let merged = match layout {
+            Layout::Channel => Tensor::concat(&inputs, 1).unwrap(),
+            Layout::Batch => Tensor::stack(&inputs).unwrap(),
+        };
+        std::hint::black_box(merged.data());
+        // copying unpack: one owned tensor per instance
+        let outs: Vec<Tensor> = (0..M).map(|i| y.index0(i).unwrap()).collect();
+        std::hint::black_box(&outs);
+    });
+
+    // --- arena path: reusable megabatch + views + reused scratch -------
+    let mut arena = RoundArena::new(layout, M, request_shape)?;
+    let mut slots: Vec<Option<&Tensor>> = Vec::with_capacity(M);
+    let mut views = Vec::with_capacity(M);
+    let mut arena_round = || {
+        slots.clear();
+        for x in &xs {
+            slots.push(Some(x));
+        }
+        let get = |i: usize| slots[i];
+        arena.pack_with(&get).unwrap();
+        std::hint::black_box(arena.merged_data());
+        views.clear();
+        for i in 0..M {
+            views.push(y.view0(i).unwrap());
+        }
+        for v in &views {
+            std::hint::black_box(v.data());
+        }
+    };
+    let arena_m = b.run(&format!("round/{name}/arena  m={M}"), &mut arena_round);
+
+    // --- steady-state allocation count ---------------------------------
+    arena_round(); // ensure scratch capacity is warm
+    let rounds = 256u64;
+    let before = counting_alloc::allocations();
+    for _ in 0..rounds {
+        arena_round();
+    }
+    let allocs = counting_alloc::allocations() - before;
+    let per_round = allocs / rounds;
+    println!(
+        "round/{name}: {} allocations across {} steady-state rounds",
+        allocs, rounds
+    );
+    println!(
+        "round/{name}: legacy {:.3e}s  arena {:.3e}s  speedup {:.2}x\n",
+        legacy.mean,
+        arena_m.mean,
+        legacy.mean / arena_m.mean
+    );
+    Ok((legacy.mean, arena_m.mean, per_round))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new();
+    b.config = Config { warmup_s: 0.2, samples: 15, min_sample_s: 0.005 };
+    let mut rng = Rng::new(0xA12E);
+
+    println!("# round_pipeline: zero-copy data plane vs seed path (m={M})\n");
+
+    // mini-model-shaped payloads: CNN fleet packs on channel, sequence
+    // fleet packs on batch
+    let (ch_legacy, ch_arena, ch_allocs) =
+        bench_layout(&mut b, Layout::Channel, &[1, 3, 16, 16], &mut rng)?;
+    let (ba_legacy, ba_arena, ba_allocs) =
+        bench_layout(&mut b, Layout::Batch, &[1, 64], &mut rng)?;
+
+    // --- strategy dispatch: per-round spawn vs persistent pool ---------
+    let xs: Vec<Tensor> = (0..M).map(|_| Tensor::randn(&[1, 3, 16, 16], &mut rng)).collect();
+    let spawn = b.run("dispatch/thread-scope spawn per round", || {
+        let results: Vec<f32> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..M)
+                .map(|i| {
+                    let x = &xs[i];
+                    scope.spawn(move || x.data().iter().sum::<f32>())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        std::hint::black_box(&results);
+    });
+    let pool = WorkerPool::new(M);
+    let pooled = b.run("dispatch/persistent worker pool", || {
+        let results = pool
+            .run_chunked(M, M, |i| Ok(std::hint::black_box(xs[i].data().iter().sum::<f32>())))
+            .unwrap();
+        std::hint::black_box(&results);
+    });
+    println!(
+        "\ndispatch: spawn {:.3e}s  pool {:.3e}s  speedup {:.2}x",
+        spawn.mean,
+        pooled.mean,
+        spawn.mean / pooled.mean
+    );
+
+    // --- BENCH_round_pipeline.json report ------------------------------
+    let mut layouts = BTreeMap::new();
+    for (name, legacy, arena, allocs) in [
+        ("channel", ch_legacy, ch_arena, ch_allocs),
+        ("batch", ba_legacy, ba_arena, ba_allocs),
+    ] {
+        let mut o = BTreeMap::new();
+        o.insert("legacy_s".to_string(), num(legacy));
+        o.insert("arena_s".to_string(), num(arena));
+        o.insert("legacy_rounds_per_sec".to_string(), num(1.0 / legacy));
+        o.insert("arena_rounds_per_sec".to_string(), num(1.0 / arena));
+        o.insert("speedup".to_string(), num(legacy / arena));
+        o.insert(
+            "steady_state_allocs_per_round".to_string(),
+            num(allocs as f64),
+        );
+        layouts.insert(name.to_string(), Json::Obj(o));
+    }
+    let mut dispatch = BTreeMap::new();
+    dispatch.insert("thread_scope_s".to_string(), num(spawn.mean));
+    dispatch.insert("worker_pool_s".to_string(), num(pooled.mean));
+    dispatch.insert("speedup".to_string(), num(spawn.mean / pooled.mean));
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("round_pipeline".to_string()));
+    root.insert("m".to_string(), num(M as f64));
+    root.insert("layouts".to_string(), Json::Obj(layouts));
+    root.insert("dispatch".to_string(), Json::Obj(dispatch));
+
+    let path = "BENCH_round_pipeline.json";
+    std::fs::write(path, Json::Obj(root).dump())?;
+    println!("report written to {path}");
+
+    // acceptance gates, checked AFTER the report is on disk so a noisy
+    // run still leaves its numbers behind for inspection
+    let mut failures = Vec::new();
+    for (name, legacy, arena, allocs) in [
+        ("channel", ch_legacy, ch_arena, ch_allocs),
+        ("batch", ba_legacy, ba_arena, ba_allocs),
+    ] {
+        if allocs != 0 {
+            failures.push(format!(
+                "{name}: steady-state arena round allocated ({allocs} allocs/round, want 0)"
+            ));
+        }
+        let speedup = legacy / arena;
+        if speedup < 2.0 {
+            failures.push(format!(
+                "{name}: arena speedup {speedup:.2}x over the legacy pack path (want >= 2x)"
+            ));
+        }
+    }
+    assert!(failures.is_empty(), "round_pipeline gates failed:\n  {}", failures.join("\n  "));
+    Ok(())
+}

@@ -1,0 +1,221 @@
+//! `RoundArena`: the reusable megabatch staging buffer of the round
+//! pipeline.
+//!
+//! The paper's merged program amortizes per-model overhead on the
+//! device; the arena does the same for the host side of every round.
+//! All round-lifetime storage — the merged input tensor and the zero pad
+//! block — is allocated once (at `Fleet::load`) and reused forever:
+//! [`RoundArena::pack_with`] writes each instance's payload directly
+//! into its channel/batch window of the megabatch, so the steady-state
+//! request path performs exactly one host copy (queue slot → megabatch)
+//! and zero heap allocations. `benches/round_pipeline.rs` asserts the
+//! zero-allocation property with a counting allocator.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// How M per-instance inputs pack into the merged input (paper §3.1):
+/// conv nets concatenate on the channel axis, matmul/sequence nets stack
+/// on a new leading batch axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    Channel,
+    Batch,
+}
+
+impl Layout {
+    /// Parse the manifest spelling (`"channel"` | `"batch"`).
+    pub fn parse(s: &str) -> Result<Layout> {
+        match s {
+            "channel" => Ok(Layout::Channel),
+            "batch" => Ok(Layout::Batch),
+            other => bail!("bad fleet layout {other:?} (want channel | batch)"),
+        }
+    }
+}
+
+/// Preallocated round-lifetime buffers for one fleet configuration.
+pub struct RoundArena {
+    layout: Layout,
+    m: usize,
+    /// per-request block shape `[bs, ...]`
+    request_shape: Vec<usize>,
+    /// the megabatch: merged input tensor, written in place every round
+    merged: Tensor,
+    /// zero block substituted for absent slots in a padded round
+    pad: Vec<f32>,
+    /// number of outer blocks (`bs` for channel packing, 1 for batch)
+    outer: usize,
+    /// contiguous run per (outer block, instance)
+    inner: usize,
+}
+
+impl RoundArena {
+    /// Allocate every buffer the round pipeline needs for `m` instances
+    /// with per-request shape `request_shape` (`[bs, ...]`).
+    pub fn new(layout: Layout, m: usize, request_shape: &[usize]) -> Result<RoundArena> {
+        if m == 0 {
+            bail!("arena needs at least one instance");
+        }
+        let request_len: usize = request_shape.iter().product();
+        let (merged_shape, outer, inner) = match layout {
+            Layout::Channel => {
+                // concat on axis 1: [bs, C, ...] x M -> [bs, M*C, ...]
+                if request_shape.len() < 2 {
+                    bail!(
+                        "channel layout needs request rank >= 2, got {:?}",
+                        request_shape
+                    );
+                }
+                let mut s = request_shape.to_vec();
+                s[1] *= m;
+                let outer = request_shape[0];
+                let inner: usize = request_shape[1..].iter().product();
+                (s, outer, inner)
+            }
+            Layout::Batch => {
+                // stack on a new leading axis: [bs, ...] x M -> [M, bs, ...]
+                let mut s = Vec::with_capacity(request_shape.len() + 1);
+                s.push(m);
+                s.extend_from_slice(request_shape);
+                (s, 1, request_len)
+            }
+        };
+        Ok(RoundArena {
+            layout,
+            m,
+            request_shape: request_shape.to_vec(),
+            merged: Tensor::zeros(&merged_shape),
+            pad: vec![0.0; request_len],
+            outer,
+            inner,
+        })
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+    pub fn m(&self) -> usize {
+        self.m
+    }
+    pub fn request_shape(&self) -> &[usize] {
+        &self.request_shape
+    }
+    /// The megabatch in its current state (valid after `pack_with`).
+    pub fn merged(&self) -> &Tensor {
+        &self.merged
+    }
+    pub fn merged_shape(&self) -> &[usize] {
+        self.merged.shape()
+    }
+    /// Raw staging slice for `Bound::run_raw` (no Tensor round-trip).
+    pub fn merged_data(&self) -> &[f32] {
+        self.merged.data()
+    }
+
+    /// Pack one round. `get(i)` returns instance `i`'s payload, or `None`
+    /// for an absent slot, which is filled from the arena's pad block
+    /// (the merged program is fixed-shape; padded slots are computed and
+    /// discarded, exactly as the paper's merged graph implies).
+    ///
+    /// Steady-state cost: one `copy_from_slice` per (outer block,
+    /// instance) window — no allocation, no intermediate concat/stack.
+    pub fn pack_with<'a>(
+        &mut self,
+        get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
+    ) -> Result<()> {
+        let (m, outer, inner) = (self.m, self.outer, self.inner);
+        for i in 0..m {
+            let src: &[f32] = match get(i) {
+                Some(x) => {
+                    if x.shape() != self.request_shape.as_slice() {
+                        bail!(
+                            "instance {i}: payload shape {:?}, fleet packs {:?}",
+                            x.shape(),
+                            self.request_shape
+                        );
+                    }
+                    x.data()
+                }
+                None => &self.pad,
+            };
+            let dst = self.merged.data_mut();
+            for o in 0..outer {
+                let at = (o * m + i) * inner;
+                dst[at..at + inner].copy_from_slice(&src[o * inner..(o + 1) * inner]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Pack a full round given one payload per instance (bench/test
+    /// convenience around [`RoundArena::pack_with`]).
+    pub fn pack_full(&mut self, xs: &[&Tensor]) -> Result<()> {
+        if xs.len() != self.m {
+            bail!("pack wants {} inputs, got {}", self.m, xs.len());
+        }
+        self.pack_with(&|i| Some(xs[i]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn channel_pack_matches_concat() {
+        let mut rng = Rng::new(1);
+        let shape = [2usize, 3, 4, 4];
+        let xs: Vec<Tensor> = (0..5).map(|_| Tensor::randn(&shape, &mut rng)).collect();
+        let refs: Vec<&Tensor> = xs.iter().collect();
+        let want = Tensor::concat(&refs, 1).unwrap();
+
+        let mut arena = RoundArena::new(Layout::Channel, 5, &shape).unwrap();
+        arena.pack_full(&refs).unwrap();
+        assert_eq!(arena.merged_shape(), want.shape());
+        assert_eq!(arena.merged_data(), want.data());
+    }
+
+    #[test]
+    fn batch_pack_matches_stack() {
+        let mut rng = Rng::new(2);
+        let shape = [1usize, 8];
+        let xs: Vec<Tensor> = (0..3).map(|_| Tensor::randn(&shape, &mut rng)).collect();
+        let refs: Vec<&Tensor> = xs.iter().collect();
+        let want = Tensor::stack(&refs).unwrap();
+
+        let mut arena = RoundArena::new(Layout::Batch, 3, &shape).unwrap();
+        arena.pack_full(&refs).unwrap();
+        assert_eq!(arena.merged_shape(), want.shape());
+        assert_eq!(arena.merged_data(), want.data());
+    }
+
+    #[test]
+    fn absent_slots_pad_with_zeros_and_overwrite_stale_data() {
+        let mut rng = Rng::new(3);
+        let shape = [1usize, 4];
+        let a = Tensor::randn(&shape, &mut rng);
+        let b = Tensor::randn(&shape, &mut rng);
+        let mut arena = RoundArena::new(Layout::Batch, 2, &shape).unwrap();
+        // round 1: both slots live
+        arena.pack_with(&|i| Some(if i == 0 { &a } else { &b })).unwrap();
+        // round 2: slot 1 absent — its window must be zeroed, not stale
+        arena.pack_with(&|i| if i == 0 { Some(&a) } else { None }).unwrap();
+        assert_eq!(&arena.merged_data()[..4], a.data());
+        assert_eq!(&arena.merged_data()[4..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let mut arena = RoundArena::new(Layout::Batch, 2, &[1, 4]).unwrap();
+        let wrong = Tensor::zeros(&[1, 5]);
+        assert!(arena.pack_with(&|_| Some(&wrong)).is_err());
+        assert!(arena.pack_full(&[&wrong]).is_err()); // wrong count
+        assert!(RoundArena::new(Layout::Channel, 2, &[4]).is_err());
+        assert!(RoundArena::new(Layout::Batch, 0, &[1, 4]).is_err());
+        assert!(Layout::parse("diagonal").is_err());
+        assert_eq!(Layout::parse("channel").unwrap(), Layout::Channel);
+    }
+}

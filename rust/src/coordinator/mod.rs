@@ -8,15 +8,24 @@
 //! - `Concurrent` — one worker per model, no synchronization.
 //! - `Hybrid`     — A workers x B models each (§5.3).
 //! - `NetFuse`    — one merged executable for all M models.
+//!
+//! The round data plane is zero-copy in steady state: [`arena`] owns the
+//! reusable megabatch + pad buffers, [`pool`] owns the persistent
+//! strategy workers, and `service::Fleet` wires both into the four
+//! strategies.
 
+pub mod arena;
 pub mod memory;
 pub mod metrics;
+pub mod pool;
 pub mod request;
 pub mod service;
 pub mod strategy;
 pub mod server;
 pub mod workload;
 
+pub use arena::{Layout, RoundArena};
+pub use pool::WorkerPool;
 pub use request::{Request, Response};
 pub use service::Fleet;
 pub use strategy::StrategyKind;

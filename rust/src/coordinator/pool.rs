@@ -1,0 +1,326 @@
+//! Persistent worker pool for the `Concurrent` / `Hybrid` strategies.
+//!
+//! The seed spawned fresh OS threads inside every round
+//! (`std::thread::scope` in `run_chunked`), so those baselines measured
+//! thread-creation cost as much as strategy cost. The pool spawns its
+//! workers once per `Fleet` and feeds them jobs over a shared queue; a
+//! round is a [`WorkerPool::scope`] call that blocks until every job of
+//! the round has completed, which is what makes handing *borrowed* jobs
+//! to long-lived threads sound (same contract as `std::thread::scope`,
+//! without the per-round spawn/join).
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    /// (pending jobs, shutdown flag)
+    queue: Mutex<(VecDeque<Job>, bool)>,
+    ready: Condvar,
+}
+
+/// Count-down latch: one round's completion barrier.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { remaining: Mutex::new(n), done: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        while *g > 0 {
+            g = self.done.wait(g).unwrap();
+        }
+    }
+}
+
+/// Decrements its latch when dropped — including during unwinding, so a
+/// panicking job can never leave [`WorkerPool::scope`] blocked.
+struct LatchGuard(Arc<Latch>);
+
+impl Drop for LatchGuard {
+    fn drop(&mut self) {
+        self.0.count_down();
+    }
+}
+
+/// A set of long-lived worker threads fed over a channel-style queue.
+/// Created once (per `Fleet`), reused for every round; grows on demand
+/// via [`WorkerPool::ensure_workers`] so a fleet only ever pays for as
+/// many threads as its strategies actually request.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.0.pop_front() {
+                    break j;
+                }
+                if q.1 {
+                    return;
+                }
+                q = shared.ready.wait(q).unwrap();
+            }
+        };
+        // A panicking job must not kill the worker: the panic is caught
+        // here as a backstop (run_chunked converts panics to per-slot
+        // errors before they get this far; the job's latch guard fires
+        // during unwinding either way).
+        let _ = catch_unwind(AssertUnwindSafe(job));
+    }
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(p: &(dyn Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        *s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads (at least one).
+    pub fn new(workers: usize) -> WorkerPool {
+        let pool = WorkerPool {
+            shared: Arc::new(Shared {
+                queue: Mutex::new((VecDeque::new(), false)),
+                ready: Condvar::new(),
+            }),
+            handles: Mutex::new(Vec::new()),
+        };
+        pool.ensure_workers(workers);
+        pool
+    }
+
+    /// Grow the pool to at least `n` workers (never shrinks). Lets a
+    /// fleet size the pool to the parallelism a strategy actually asks
+    /// for — `Hybrid {procs: 2}` costs 2 threads, not M — while a later
+    /// `Concurrent` round can still widen it.
+    pub fn ensure_workers(&self, n: usize) {
+        let mut handles = self.handles.lock().unwrap();
+        while handles.len() < n.max(1) {
+            let shared = self.shared.clone();
+            handles.push(std::thread::spawn(move || worker_loop(shared)));
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.lock().unwrap().len()
+    }
+
+    /// Run a batch of borrowed jobs to completion on the pool.
+    ///
+    /// Blocks until every job has finished (or unwound). That barrier is
+    /// the soundness argument for the lifetime erasure below: no job —
+    /// queued, running, or panicking — can outlive this call, so the
+    /// `'scope` borrows its closures capture remain valid for as long as
+    /// any worker can touch them.
+    pub fn scope<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        let latch = Arc::new(Latch::new(jobs.len()));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for job in jobs {
+                // SAFETY: `job` only needs to live for 'scope; the latch
+                // wait below keeps this stack frame alive until every
+                // wrapper (and therefore every erased `job`) has been
+                // dropped, on the normal and the panic path alike.
+                let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'scope>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(job)
+                };
+                let guard = LatchGuard(latch.clone());
+                q.0.push_back(Box::new(move || {
+                    let _guard = guard;
+                    job();
+                }));
+            }
+            self.shared.ready.notify_all();
+        }
+        latch.wait();
+    }
+
+    /// Partition `0..n` into `procs` contiguous chunks, run `work(i)` for
+    /// every index on the pool, and return the results index-aligned.
+    /// A chunk stops at its first error (matching the sequential
+    /// semantics of one worker draining its models in order); the first
+    /// failure in index order is reported.
+    pub fn run_chunked<T, F>(&self, n: usize, procs: usize, work: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> Result<T> + Sync,
+    {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let procs = procs.max(1).min(n);
+        let chunk = n.div_ceil(procs);
+        let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(procs);
+        for p in 0..procs {
+            let lo = p * chunk;
+            let hi = ((p + 1) * chunk).min(n);
+            if lo >= hi {
+                continue;
+            }
+            let slots = &slots;
+            let work = &work;
+            jobs.push(Box::new(move || {
+                for i in lo..hi {
+                    // convert a panicking work item into that slot's
+                    // error so the real fault message reaches the
+                    // caller instead of a generic missing-result error
+                    let r = catch_unwind(AssertUnwindSafe(|| work(i))).unwrap_or_else(
+                        |p| Err(anyhow!("worker job {i} panicked: {}", panic_message(&*p))),
+                    );
+                    let failed = r.is_err();
+                    *slots[i].lock().unwrap() = Some(r);
+                    if failed {
+                        break;
+                    }
+                }
+            }));
+        }
+        self.scope(jobs);
+        let mut out = Vec::with_capacity(n);
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot.into_inner().unwrap() {
+                Some(Ok(t)) => out.push(t),
+                Some(Err(e)) => return Err(e),
+                None => bail!("worker produced no output for item {i}"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.1 = true;
+            self.shared.ready.notify_all();
+        }
+        for h in self.handles.get_mut().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_are_index_aligned() {
+        let pool = WorkerPool::new(4);
+        for procs in [1usize, 2, 3, 4, 9] {
+            let got = pool.run_chunked(10, procs, |i| Ok(i * i)).unwrap();
+            assert_eq!(got, (0..10).map(|i| i * i).collect::<Vec<_>>(), "procs={procs}");
+        }
+    }
+
+    #[test]
+    fn scope_sees_borrowed_state() {
+        let pool = WorkerPool::new(3);
+        let hits = AtomicUsize::new(0);
+        // many rounds over the same pool: no thread churn, borrows local
+        // to each round
+        for round in 0..50 {
+            let local = round; // borrowed by every job this round
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+                .map(|_| {
+                    let hits = &hits;
+                    let local = &local;
+                    Box::new(move || {
+                        hits.fetch_add(*local, Ordering::Relaxed);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scope(jobs);
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 8 * (0..50).sum::<usize>());
+    }
+
+    #[test]
+    fn chunk_errors_propagate() {
+        let pool = WorkerPool::new(2);
+        let err = pool
+            .run_chunked(6, 2, |i| {
+                if i == 4 {
+                    Err(anyhow::anyhow!("boom at {i}"))
+                } else {
+                    Ok(i)
+                }
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("boom at 4"));
+    }
+
+    #[test]
+    fn panicking_job_does_not_hang_or_kill_the_pool() {
+        let pool = WorkerPool::new(2);
+        let r = pool.run_chunked(3, 3, |i| {
+            if i == 1 {
+                panic!("job panic");
+            }
+            Ok(i)
+        });
+        // the panicked item surfaces as that slot's error with the real
+        // panic message, not a hang and not a generic missing result
+        let msg = r.unwrap_err().to_string();
+        assert!(msg.contains("panicked") && msg.contains("job panic"), "got: {msg}");
+        // and the pool still works afterwards
+        let ok = pool.run_chunked(4, 2, |i| Ok(i + 1)).unwrap();
+        assert_eq!(ok, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn ensure_workers_grows_but_never_shrinks() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.workers(), 2);
+        pool.ensure_workers(5);
+        assert_eq!(pool.workers(), 5);
+        pool.ensure_workers(1);
+        assert_eq!(pool.workers(), 5);
+        // the widened pool still runs rounds correctly
+        let got = pool.run_chunked(12, 5, |i| Ok(i)).unwrap();
+        assert_eq!(got, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_round_is_a_noop() {
+        let pool = WorkerPool::new(1);
+        pool.scope(Vec::new());
+        assert_eq!(pool.run_chunked::<usize, _>(0, 3, |_| Ok(0)).unwrap(), Vec::<usize>::new());
+        assert_eq!(pool.workers(), 1);
+    }
+}

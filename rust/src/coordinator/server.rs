@@ -6,15 +6,23 @@
 //! (vLLM-router-style): each fine-tuned instance has its own FIFO; the
 //! batcher assembles one *round* — up to one request per instance — and
 //! hands it to the configured strategy. Instances with an empty queue at
-//! dispatch time are padded with zeros (NETFUSE executes a fixed merged
-//! program; padded slots are computed and discarded, which is exactly
-//! what the paper's fixed merged graph implies). Bounded queues provide
-//! backpressure.
+//! dispatch time are padded from the fleet arena's zero block (NETFUSE
+//! executes a fixed merged program; padded slots are computed and
+//! discarded, which is exactly what the paper's fixed merged graph
+//! implies). Bounded queues provide backpressure.
+//!
+//! Dispatch scratch (`slots`, `outs`, and the response buffer used by
+//! [`Server::run_rounds`]) lives on the server and is cleared, not
+//! reallocated, each round. On the NETFUSE strategy the host-side
+//! pack/unpack path is then allocation-free in steady state (the bench
+//! gates this); response payloads always allocate (they leave the
+//! server), and Concurrent/Hybrid rounds additionally allocate their
+//! per-round job scaffolding inside `WorkerPool::run_chunked`.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
 
@@ -27,7 +35,9 @@ use super::strategy::StrategyKind;
 pub struct ServerConfig {
     pub strategy: StrategyKind,
     /// per-model queue capacity; arrivals beyond this are rejected
-    /// (backpressure signal to the client)
+    /// (backpressure signal to the client). Clamped to >= 1 by
+    /// `Server::new` — a capacity of zero would make every request
+    /// inadmissible.
     pub queue_cap: usize,
     /// dispatch a partial (padded) round after this long
     pub max_wait: Duration,
@@ -49,6 +59,10 @@ pub enum Admit {
     Queued,
     /// queue full — caller should retry later (backpressure)
     Rejected,
+    /// payload shape does not match the fleet — never admissible.
+    /// Validated at ingress so a malformed request can fail alone
+    /// instead of poisoning whole rounds at dispatch time.
+    Invalid,
 }
 
 /// Single-tenant-fleet server: router + batcher + strategy executor.
@@ -56,21 +70,24 @@ pub struct Server<'f> {
     fleet: &'f Fleet,
     cfg: ServerConfig,
     queues: Vec<VecDeque<Request>>,
-    /// zero tensor used to pad absent slots in a partial round
-    pad: Tensor,
+    /// per-round slot scratch (one popped request per instance), reused
+    slots: Vec<Option<Request>>,
+    /// per-round output scratch, reused
+    outs: Vec<Option<Tensor>>,
     oldest_wait_start: Option<Instant>,
     pub metrics: Metrics,
 }
 
 impl<'f> Server<'f> {
     pub fn new(fleet: &'f Fleet, cfg: ServerConfig) -> Server<'f> {
-        let pad = Tensor::zeros(&fleet.request_shape());
+        let cfg = ServerConfig { queue_cap: cfg.queue_cap.max(1), ..cfg };
         let metrics = Metrics::new(cfg.strategy, &fleet.model, fleet.m, fleet.bs);
         Server {
             fleet,
             cfg,
             queues: (0..fleet.m).map(|_| VecDeque::new()).collect(),
-            pad,
+            slots: Vec::with_capacity(fleet.m),
+            outs: Vec::with_capacity(fleet.m),
             oldest_wait_start: None,
             metrics,
         }
@@ -78,6 +95,17 @@ impl<'f> Server<'f> {
 
     /// Route one request to its model queue.
     pub fn offer(&mut self, req: Request) -> Admit {
+        // ingress validation (allocation-free): a malformed request —
+        // out-of-range routing index or wrong-shaped payload — is
+        // rejected here, per request, rather than failing (and being
+        // requeued with) an entire round at dispatch
+        let shape = req.input.shape();
+        if req.model_idx >= self.fleet.m
+            || shape.first() != Some(&self.fleet.bs)
+            || shape[1..] != self.fleet.graph.input_shape[..]
+        {
+            return Admit::Invalid;
+        }
         let q = &mut self.queues[req.model_idx];
         if q.len() >= self.cfg.queue_cap {
             return Admit::Rejected;
@@ -110,9 +138,18 @@ impl<'f> Server<'f> {
 
     /// Assemble a (possibly padded) round, execute it, emit responses.
     pub fn dispatch(&mut self) -> Result<Vec<Response>> {
-        let mut slot: Vec<Option<Request>> = (0..self.fleet.m).map(|_| None).collect();
-        for (i, q) in self.queues.iter_mut().enumerate() {
-            slot[i] = q.pop_front();
+        let mut responses = Vec::new();
+        self.dispatch_into(&mut responses)?;
+        Ok(responses)
+    }
+
+    /// Like [`Server::dispatch`], but appends into a caller-owned buffer
+    /// (the allocation-free steady-state entry point). Returns the number
+    /// of responses appended.
+    pub fn dispatch_into(&mut self, responses: &mut Vec<Response>) -> Result<usize> {
+        self.slots.clear();
+        for q in self.queues.iter_mut() {
+            self.slots.push(q.pop_front());
         }
         self.oldest_wait_start = if self.pending() > 0 {
             Some(Instant::now())
@@ -120,28 +157,62 @@ impl<'f> Server<'f> {
             None
         };
 
-        let inputs: Vec<&Tensor> = slot
-            .iter()
-            .map(|s| s.as_ref().map(|r| &r.input).unwrap_or(&self.pad))
-            .collect();
+        let slots = &self.slots;
+        let get = |i: usize| slots[i].as_ref().map(|r| &r.input);
         let t0 = Instant::now();
-        let outs = self.fleet.run_round(self.cfg.strategy, &inputs)?;
+        let round = self
+            .fleet
+            .run_round_slots(self.cfg.strategy, &get, &mut self.outs);
+        if let Err(e) = round {
+            // a failed round must not destroy its requests: put them
+            // back at the head of their queues. Payload shapes were
+            // validated at ingress (`offer`), so an error here is
+            // fleet/runtime-level, not attributable to one request —
+            // the caller decides whether to retry or tear down.
+            self.requeue_slots();
+            self.oldest_wait_start = Some(t0);
+            return Err(e);
+        }
+        // verify every occupied slot has an output BEFORE consuming any,
+        // so a violated strategy invariant requeues the whole round
+        // instead of dropping the requests taken so far
+        if let Some(i) = (0..self.slots.len())
+            .find(|&i| self.slots[i].is_some() && self.outs[i].is_none())
+        {
+            self.requeue_slots();
+            self.oldest_wait_start = Some(t0);
+            bail!("model {i} produced no output for an occupied slot");
+        }
         self.metrics.record_round(t0.elapsed().as_secs_f64());
 
-        let mut responses = Vec::new();
-        for (i, (req, out)) in slot.into_iter().zip(outs).enumerate() {
-            if let Some(req) = req {
+        let mut n = 0;
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if let Some(req) = slot.take() {
+                let output = self.outs[i]
+                    .take()
+                    .expect("verified above: occupied slots have outputs");
                 let latency = req.arrived.elapsed().as_secs_f64();
                 self.metrics.record_request(latency);
                 responses.push(Response {
                     id: req.id,
                     model_idx: i,
-                    output: out,
+                    output,
                     latency,
                 });
+                n += 1;
             }
         }
-        Ok(responses)
+        Ok(n)
+    }
+
+    /// Return every request popped into the round scratch to the head
+    /// of its queue (failed-round recovery).
+    fn requeue_slots(&mut self) {
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if let Some(req) = slot.take() {
+                self.queues[i].push_front(req);
+            }
+        }
     }
 
     /// Closed-loop driver: feed `rounds` full rounds from `make_round`
@@ -151,25 +222,37 @@ impl<'f> Server<'f> {
         F: FnMut() -> Vec<Request>,
     {
         let mut total = 0;
+        let mut buf = Vec::with_capacity(self.fleet.m);
         for _ in 0..rounds {
             for req in make_round() {
+                // backpressure: a full target queue forces (padded)
+                // rounds out until a slot frees, so the closed loop
+                // never drops an offered request (queue_cap >= 1 is a
+                // Server::new invariant, so this always terminates into
+                // an admissible state)
+                while self.queues[req.model_idx].len() >= self.cfg.queue_cap {
+                    total += self.dispatch_into(&mut buf)?;
+                    buf.clear();
+                }
                 match self.offer(req) {
                     Admit::Queued => {}
+                    Admit::Invalid => {
+                        bail!("run_rounds: request payload shape does not match the fleet")
+                    }
                     Admit::Rejected => {
-                        // drain before re-offering (simple backpressure)
-                        while self.round_ready() {
-                            total += self.dispatch()?.len();
-                        }
+                        bail!("run_rounds: queue still full after drain (invariant violated)")
                     }
                 }
             }
             while self.round_ready() {
-                total += self.dispatch()?.len();
+                total += self.dispatch_into(&mut buf)?;
+                buf.clear();
             }
         }
         // drain any padded leftovers
         while self.pending() > 0 {
-            total += self.dispatch()?.len();
+            total += self.dispatch_into(&mut buf)?;
+            buf.clear();
         }
         Ok(total)
     }

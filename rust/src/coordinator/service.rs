@@ -3,16 +3,31 @@
 //! the same weight banks flow through the single-model executables
 //! (baselines) and through the merged executable (NETFUSE), and a round
 //! of M requests produces identical outputs either way.
+//!
+//! Round data plane (zero-copy pipeline):
+//! - a [`RoundArena`] allocated once at [`Fleet::load`] holds the merged
+//!   megabatch and the pad block; [`Fleet::pack_into`] writes request
+//!   payloads straight into their windows (no concat/stack allocation);
+//! - the megabatch is handed to PJRT via `Bound::run_raw` without an
+//!   intermediate `Tensor`;
+//! - [`Fleet::unpack`] returns borrowed [`TensorView`]s into the merged
+//!   output; only occupied slots are promoted to owned tensors;
+//! - `Concurrent`/`Hybrid` rounds run on a persistent [`WorkerPool`]
+//!   spawned once per fleet (lazily, on the first round that needs
+//!   it), not on per-round OS threads.
 
 use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
 
 use anyhow::{bail, Context, Result};
 
 use crate::fuse::{self, weights::Bank};
 use crate::graph::Graph;
 use crate::runtime::{Bound, Manifest, Runtime};
-use crate::tensor::{io::read_nft, Tensor};
+use crate::tensor::{io::read_nft, Tensor, TensorView};
 
+use super::arena::{Layout, RoundArena};
+use super::pool::WorkerPool;
 use super::strategy::StrategyKind;
 
 /// A fleet of M instances of one model family at a fixed batch size.
@@ -22,12 +37,20 @@ pub struct Fleet {
     pub bs: usize,
     /// merged-input packing: "channel" (CNN) | "batch" (sequence)
     pub layout: String,
+    /// parsed form of `layout` (validated once at load)
+    packing: Layout,
     /// single-model graph (planning/memory estimation)
     pub graph: Graph,
     /// M bindings of the single-model module (one per weight bank)
     singles: Vec<Bound>,
     /// the NETFUSE executable with Rust-stacked merged weights
     fused: Bound,
+    /// round-lifetime staging buffers, reused every round
+    arena: Mutex<RoundArena>,
+    /// persistent strategy workers, spawned once on the first
+    /// Concurrent/Hybrid round (Sequential/NetFuse fleets never pay
+    /// the M thread spawns)
+    pool: OnceLock<WorkerPool>,
     /// manifest memory numbers for the memory model
     pub single_weights_bytes: u64,
     pub single_act_bytes: u64,
@@ -82,12 +105,28 @@ impl Fleet {
         let params = fuse::weights::params_in_order(&merged_graph, &merged_bank)?;
         let fused = rt.load(&fused_name, &params)?;
 
+        let layout = fused.art().layout.clone();
+        let packing = Layout::parse(&layout)?;
+        let mut request_shape = vec![bs];
+        request_shape.extend_from_slice(&entry.graph.input_shape);
+        let arena = RoundArena::new(packing, m, &request_shape)?;
+        // the arena's derived megabatch shape must agree with what the
+        // AOT side lowered, or packing would feed the wrong windows
+        if arena.merged_shape() != fused.art().input_shape.as_slice() {
+            bail!(
+                "{fused_name}: arena packs {:?}, artifact expects {:?}",
+                arena.merged_shape(),
+                fused.art().input_shape
+            );
+        }
+
         let single_art = rt.manifest.artifact(&single_name)?;
         Ok(Fleet {
             model: model.to_string(),
             m,
             bs,
-            layout: fused.art().layout.clone(),
+            layout,
+            packing,
             graph: entry.graph,
             single_weights_bytes: single_art.weights_bytes,
             single_act_bytes: single_art.act_bytes,
@@ -95,28 +134,45 @@ impl Fleet {
             fused_act_bytes: fused.art().act_bytes,
             singles,
             fused,
+            arena: Mutex::new(arena),
+            pool: OnceLock::new(),
         })
     }
 
-    /// Pack M per-instance inputs into the merged input tensor
+    /// Pack one round of slot payloads into `arena`'s megabatch
     /// (paper §3.1: concat on channel for conv nets, stack on batch for
-    /// matmul nets).
-    pub fn pack(&self, xs: &[&Tensor]) -> Result<Tensor> {
-        if xs.len() != self.m {
-            bail!("pack wants {} inputs, got {}", self.m, xs.len());
+    /// matmul nets; absent slots take the arena's zero pad block).
+    pub fn pack_into<'a>(
+        &self,
+        arena: &mut RoundArena,
+        get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
+    ) -> Result<()> {
+        // allocation-free validation: this runs on the round hot path
+        let rs = arena.request_shape();
+        if arena.layout() != self.packing
+            || arena.m() != self.m
+            || rs.first() != Some(&self.bs)
+            || rs[1..] != self.graph.input_shape[..]
+        {
+            bail!(
+                "arena packs {:?} {}x{:?}, fleet serves {:?} {}x{:?}",
+                arena.layout(),
+                arena.m(),
+                arena.request_shape(),
+                self.packing,
+                self.m,
+                self.request_shape()
+            );
         }
-        match self.layout.as_str() {
-            "channel" => Tensor::concat(xs, 1),
-            "batch" => Tensor::stack(xs),
-            other => bail!("bad fleet layout {other:?}"),
-        }
+        arena.pack_with(get)
     }
 
-    /// Split the merged output back into per-instance outputs. Merged
-    /// outputs are always batch-packed `[M, bs, ...]` (the per-instance
-    /// heads are re-stacked by `stack_m`).
-    pub fn unpack(&self, y: &Tensor) -> Result<Vec<Tensor>> {
-        (0..self.m).map(|i| y.index0(i)).collect()
+    /// Split the merged output into per-instance **borrowed views**
+    /// (zero-copy). Merged outputs are always batch-packed `[M, bs, ...]`
+    /// (the per-instance heads are re-stacked by `stack_m`), so each view
+    /// is a contiguous window. Promote with `to_owned` where needed.
+    pub fn unpack<'y>(&self, y: &'y Tensor) -> Result<Vec<TensorView<'y>>> {
+        (0..self.m).map(|i| y.view0(i)).collect()
     }
 
     /// Run one round (one request per instance) under `strategy`.
@@ -129,56 +185,85 @@ impl Fleet {
         if xs.len() != self.m {
             bail!("round wants {} inputs, got {}", self.m, xs.len());
         }
+        let mut outs = Vec::with_capacity(self.m);
+        self.run_round_slots(strategy, &|i| Some(xs[i]), &mut outs)?;
+        outs.into_iter()
+            .enumerate()
+            .map(|(i, t)| t.with_context(|| format!("model {i} produced no output")))
+            .collect()
+    }
+
+    /// Slot-level round executor — the server's hot path. `get(i)` is
+    /// instance `i`'s payload (`None` = empty queue slot). Results are
+    /// appended to `outs` index-aligned (`None` for absent slots, which
+    /// single-model strategies skip entirely and NETFUSE pads). `outs` is
+    /// caller-owned scratch so the steady state reuses its capacity.
+    pub fn run_round_slots<'a>(
+        &self,
+        strategy: StrategyKind,
+        get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
+        outs: &mut Vec<Option<Tensor>>,
+    ) -> Result<()> {
+        outs.clear();
         match strategy {
             StrategyKind::Sequential => {
-                let mut out = Vec::with_capacity(self.m);
-                for (i, x) in xs.iter().enumerate() {
-                    out.push(self.singles[i].run(x)?);
+                for i in 0..self.m {
+                    outs.push(match get(i) {
+                        Some(x) => Some(self.singles[i].run(x)?),
+                        None => None,
+                    });
                 }
-                Ok(out)
+                Ok(())
             }
-            StrategyKind::Concurrent => self.run_chunked(xs, self.m),
-            StrategyKind::Hybrid { procs } => self.run_chunked(xs, procs.min(self.m)),
+            StrategyKind::Concurrent => self.run_chunked(get, self.m, outs),
+            StrategyKind::Hybrid { procs } => {
+                self.run_chunked(get, procs.min(self.m), outs)
+            }
             StrategyKind::NetFuse => {
-                let y = self.fused.run(&self.pack(xs)?)?;
-                self.unpack(&y)
+                let y = {
+                    let mut arena = self.arena.lock().unwrap();
+                    self.pack_into(&mut arena, get)?;
+                    // stage straight off the arena buffer: the megabatch
+                    // upload is the round's only remaining host copy.
+                    // Execution stays under the lock: PJRT host-buffer
+                    // semantics may defer the H2D copy, so the megabatch
+                    // must not be repacked until the round completes —
+                    // cross-thread round overlap needs double-buffered
+                    // arenas (see ROADMAP).
+                    let staged =
+                        self.fused.stage(arena.merged_shape(), arena.merged_data())?;
+                    self.fused.run_staged(&staged)?
+                };
+                for i in 0..self.m {
+                    outs.push(match get(i) {
+                        Some(_) => Some(y.view0(i)?.to_owned()),
+                        None => None,
+                    });
+                }
+                Ok(())
             }
         }
     }
 
     /// `procs` unsynchronized workers, each draining a contiguous chunk
-    /// of models sequentially. procs == M is the Concurrent baseline.
-    fn run_chunked(&self, xs: &[&Tensor], procs: usize) -> Result<Vec<Tensor>> {
-        let chunk = self.m.div_ceil(procs);
-        let mut out: Vec<Option<Tensor>> = (0..self.m).map(|_| None).collect();
-        let results: Vec<Result<Vec<(usize, Tensor)>>> = std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for p in 0..procs {
-                let lo = p * chunk;
-                let hi = ((p + 1) * chunk).min(self.m);
-                if lo >= hi {
-                    continue;
-                }
-                let singles = &self.singles;
-                handles.push(scope.spawn(move || {
-                    let mut part = Vec::with_capacity(hi - lo);
-                    for i in lo..hi {
-                        part.push((i, singles[i].run(xs[i])?));
-                    }
-                    Ok(part)
-                }));
-            }
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        for r in results {
-            for (i, t) in r? {
-                out[i] = Some(t);
-            }
-        }
-        out.into_iter()
-            .enumerate()
-            .map(|(i, t)| t.with_context(|| format!("model {i} produced no output")))
-            .collect()
+    /// of models sequentially on the persistent pool. procs == M is the
+    /// Concurrent baseline.
+    fn run_chunked<'a>(
+        &self,
+        get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
+        procs: usize,
+        outs: &mut Vec<Option<Tensor>>,
+    ) -> Result<()> {
+        // size the pool to what this strategy actually uses; a later
+        // wider strategy (e.g. Concurrent after Hybrid) grows it
+        let pool = self.pool.get_or_init(|| WorkerPool::new(procs));
+        pool.ensure_workers(procs);
+        let results = pool.run_chunked(self.m, procs, |i| match get(i) {
+            Some(x) => self.singles[i].run(x).map(Some),
+            None => Ok(None),
+        })?;
+        outs.extend(results);
+        Ok(())
     }
 
     /// Access a single instance's executable (serving loop fast path for
@@ -200,27 +285,56 @@ impl Fleet {
 }
 
 /// Read `weights/<model>.nft` and split into per-instance banks
-/// (keys are `m{i}/node.weight`).
+/// (keys are `m{i}/node.weight`), keeping the first `m`. The weight
+/// file itself is the source of truth for how many instances it
+/// carries; the manifest's `instances` field only gates fleet
+/// admission (checked in `Fleet::load`).
 pub fn load_banks(rt: &Runtime, model: &str, m: usize) -> Result<Vec<Bank>> {
     let entry = rt.manifest.model(model)?;
     let all = read_nft(&rt.artifact_dir().join(&entry.weights))?;
-    split_banks(&all, m)
+    let mut count = 0usize;
+    for k in all.keys() {
+        count = count.max(bank_key_index(k)?.0 + 1);
+    }
+    let mut banks = split_banks(all, count)?;
+    if m > banks.len() {
+        bail!(
+            "{model}: wanted {m} instance banks, weight file has {}",
+            banks.len()
+        );
+    }
+    banks.truncate(m);
+    Ok(banks)
 }
 
-/// Split a flat `m{i}/key` map into per-instance banks.
-pub fn split_banks(all: &BTreeMap<String, Tensor>, m: usize) -> Result<Vec<Bank>> {
+/// `"m{i}/node.weight" -> (i, "node.weight")`.
+fn bank_key_index(k: &str) -> Result<(usize, &str)> {
+    let (prefix, rest) = k
+        .split_once('/')
+        .with_context(|| format!("bad bank key {k:?}"))?;
+    let idx: usize = prefix
+        .strip_prefix('m')
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad bank key {k:?}"))?;
+    Ok((idx, rest))
+}
+
+/// Split a flat `m{i}/key` map into exactly `m` per-instance banks.
+/// Takes the map by value and **moves** each tensor into its bank — the
+/// fleet-load path reads multi-gigabyte weight files, and the seed's
+/// per-tensor clone doubled that traffic. A key addressing an instance
+/// `>= m` fails loudly (the seed silently dropped such tensors);
+/// callers that want "first m of a larger file" split by the file's own
+/// instance count and truncate, as `load_banks` does.
+pub fn split_banks(all: BTreeMap<String, Tensor>, m: usize) -> Result<Vec<Bank>> {
     let mut banks = vec![Bank::new(); m];
     for (k, v) in all {
-        let (prefix, rest) = k
-            .split_once('/')
-            .with_context(|| format!("bad bank key {k:?}"))?;
-        let idx: usize = prefix
-            .strip_prefix('m')
-            .and_then(|s| s.parse().ok())
-            .with_context(|| format!("bad bank key {k:?}"))?;
-        if idx < m {
-            banks[idx].insert(rest.to_string(), v.clone());
+        let (idx, rest) = bank_key_index(&k)?;
+        if idx >= m {
+            bail!("bank key {k:?} addresses instance {idx}, but only {m} banks were requested");
         }
+        let rest = rest.to_string();
+        banks[idx].insert(rest, v);
     }
     for (i, b) in banks.iter().enumerate() {
         if b.is_empty() {
@@ -228,4 +342,49 @@ pub fn split_banks(all: &BTreeMap<String, Tensor>, m: usize) -> Result<Vec<Bank>
         }
     }
     Ok(banks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(m: usize) -> BTreeMap<String, Tensor> {
+        let mut all = BTreeMap::new();
+        for i in 0..m {
+            all.insert(format!("m{i}/d.w"), Tensor::zeros(&[2, 2]));
+            all.insert(format!("m{i}/d.b"), Tensor::scalar(i as f32));
+        }
+        all
+    }
+
+    #[test]
+    fn split_banks_moves_tensors_per_instance() {
+        let banks = split_banks(flat(3), 3).unwrap();
+        assert_eq!(banks.len(), 3);
+        for (i, b) in banks.iter().enumerate() {
+            assert_eq!(b.len(), 2);
+            assert_eq!(b["d.b"].data(), &[i as f32]);
+        }
+    }
+
+    #[test]
+    fn split_banks_rejects_out_of_range_instances() {
+        // the seed silently dropped m{i} keys with idx >= m; now loud
+        let err = split_banks(flat(3), 2).unwrap_err();
+        assert!(err.to_string().contains("instance 2"));
+    }
+
+    #[test]
+    fn split_banks_rejects_malformed_keys_and_gaps() {
+        let mut all = flat(1);
+        all.insert("nodelimiter".into(), Tensor::scalar(0.0));
+        assert!(split_banks(all, 1).is_err());
+
+        let mut all = flat(1);
+        all.insert("q7/x".into(), Tensor::scalar(0.0));
+        assert!(split_banks(all, 1).is_err());
+
+        // declared m=2 but no m1/* keys at all -> empty bank
+        assert!(split_banks(flat(1), 2).is_err());
+    }
 }

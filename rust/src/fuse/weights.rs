@@ -76,13 +76,14 @@ fn split_head_id(id: &str) -> Option<(&str, usize)> {
     Some((&id[..pos], idx))
 }
 
-/// Parameter tensors in the executable's positional order.
-pub fn params_in_order(g: &Graph, bank: &Bank) -> Result<Vec<Tensor>> {
+/// Parameter tensors in the executable's positional order, **borrowed**
+/// from the bank — binding a module uploads straight from these
+/// references, so the load path no longer clones every weight tensor.
+pub fn params_in_order<'b>(g: &Graph, bank: &'b Bank) -> Result<Vec<&'b Tensor>> {
     g.param_order()
         .iter()
         .map(|key| {
             bank.get(key)
-                .cloned()
                 .with_context(|| format!("missing param {key}"))
         })
         .collect()
@@ -159,8 +160,11 @@ mod tests {
     #[test]
     fn params_in_order_matches_param_order() {
         let g = ffnn();
-        let ps = params_in_order(&g, &bank(1.0)).unwrap();
+        let b = bank(1.0);
+        let ps = params_in_order(&g, &b).unwrap();
         assert_eq!(ps.len(), 4); // d.b, d.w, ln.beta, ln.gamma
         assert_eq!(ps[0].shape(), &[4]); // d.b first (sorted)
+        // borrowed, not cloned: the refs alias the bank's storage
+        assert_eq!(ps[0].data().as_ptr(), b["d.b"].data().as_ptr());
     }
 }

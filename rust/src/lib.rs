@@ -18,13 +18,28 @@
 //!
 //! Module map:
 //! - [`util`] — substrates: JSON, RNG, CLI, stats, property testing, bench
-//!   harness (the offline crate set only contains the `xla` closure).
-//! - [`tensor`] — dense tensor library + `.nft` container IO.
+//!   harness + counting allocator (no external crates offline; the error
+//!   API is the vendored `anyhow` shim under `vendor/`).
+//! - [`tensor`] — dense tensor library + `.nft` container IO. `Tensor` is
+//!   the owned type; `TensorView` is the zero-copy borrowed window the
+//!   round pipeline trades in (`view0` replaces copying `index0`/`split`
+//!   on the unpack path).
 //! - [`graph`] — the graph IR shared with Python (JSON round-trip).
 //! - [`fuse`] — Algorithm 1 as the serving-side merge planner.
 //! - [`runtime`] — PJRT client wrapper: load / compile / execute HLO.
+//!   `Bound::run_raw` executes straight from a staging slice; the
+//!   default build uses the offline stub backend (`xla` feature gates
+//!   the real bindings).
 //! - [`coordinator`] — router, batcher, strategies, memory accounting,
-//!   metrics, workload generation, serving loop.
+//!   metrics, workload generation, serving loop. The round data plane:
+//!   `coordinator::arena::RoundArena` owns the reusable megabatch + pad
+//!   block (packing is one in-place copy per round, zero allocations);
+//!   `coordinator::pool::WorkerPool` owns the persistent
+//!   Concurrent/Hybrid workers (created lazily per `Fleet`, sized to
+//!   the parallelism actually requested, fed borrowed round-scoped
+//!   jobs); `Fleet::unpack` hands out `TensorView`s into
+//!   the merged output, promoted to owned tensors only for occupied
+//!   response slots.
 //! - [`devmodel`] — analytical V100 / TITAN Xp device model (reproduces
 //!   the paper's GPU-shaped figures; we have no GPU).
 //! - [`rewriter`] — miniature TASO-like greedy graph rewriter (the §2.2

@@ -14,8 +14,17 @@
 //!   `Sequential` binds M weight banks to ONE module (the paper's
 //!   baseline keeps every model's weights resident); `NetFuse` binds the
 //!   stacked merged bank to the merged module.
+//!
+//! Backend selection: the default build compiles against the offline
+//! stub in [`backend`] (the image has no `xla` crate); enabling the
+//! `xla` cargo feature switches these paths to the real PJRT bindings.
 
 pub mod manifest;
+
+#[cfg(not(feature = "xla"))]
+pub mod backend;
+#[cfg(not(feature = "xla"))]
+use self::backend as xla;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -53,8 +62,10 @@ unsafe impl Send for Module {}
 unsafe impl Sync for Module {}
 
 impl Module {
-    /// Upload a parameter set; returns a runnable binding.
-    pub fn bind(self: &Arc<Self>, params: &[Tensor]) -> Result<Bound> {
+    /// Upload a parameter set; returns a runnable binding. Parameters are
+    /// borrowed — `params_in_order` hands out bank references, so binding
+    /// no longer clones every weight tensor on the way in.
+    pub fn bind(self: &Arc<Self>, params: &[&Tensor]) -> Result<Bound> {
         if params.len() != self.art.params.len() {
             bail!(
                 "{}: got {} params, manifest wants {}",
@@ -79,6 +90,16 @@ pub struct Bound {
 unsafe impl Send for Bound {}
 unsafe impl Sync for Bound {}
 
+/// A device-resident input buffer produced by [`Bound::stage`]. The
+/// lifetime ties it to the host staging slice, so the compiler enforces
+/// that the host memory outlives any pending (possibly deferred) upload.
+pub struct StagedInput<'a> {
+    buf: xla::PjRtBuffer,
+    _host: std::marker::PhantomData<&'a [f32]>,
+}
+
+unsafe impl Send for StagedInput<'_> {}
+
 impl Bound {
     pub fn art(&self) -> &Artifact {
         &self.module.art
@@ -86,17 +107,52 @@ impl Bound {
 
     /// Execute with the bound weights; `x` is the only per-call upload.
     pub fn run(&self, x: &Tensor) -> Result<Tensor> {
+        self.run_raw(x.shape(), x.data())
+    }
+
+    /// Execute straight from a raw staging buffer — the zero-copy fast
+    /// path: the coordinator's `RoundArena` megabatch is uploaded to the
+    /// device as-is, with no intermediate `Tensor` materialization
+    /// between pack and PJRT.
+    pub fn run_raw(&self, shape: &[usize], data: &[f32]) -> Result<Tensor> {
+        let staged = self.stage(shape, data)?;
+        self.run_staged(&staged)
+    }
+
+    /// Upload a staging buffer to the device without executing.
+    ///
+    /// The returned handle borrows `data`: PJRT host-buffer semantics
+    /// may defer the host→device copy, so the staging memory must stay
+    /// live and unmodified until the staged input has been executed
+    /// ([`Bound::run_staged`]) — the borrow makes the compiler enforce
+    /// liveness, and the NETFUSE path additionally keeps the arena
+    /// locked across both calls so the buffer cannot be *repacked*
+    /// either. (xla-rs's CPU path copies synchronously — this is
+    /// defense-in-depth for other PJRT backends.) The split exists so a
+    /// future double-buffered arena can overlap rounds safely.
+    pub fn stage<'a>(&self, shape: &[usize], data: &'a [f32]) -> Result<StagedInput<'a>> {
         let art = &self.module.art;
-        if x.shape() != art.input_shape.as_slice() {
+        if shape != art.input_shape.as_slice() {
             bail!(
                 "{}: input shape {:?}, expected {:?}",
-                art.name, x.shape(), art.input_shape
+                art.name, shape, art.input_shape
             );
         }
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("{}: staging buffer has {} elems, shape wants {}", art.name, data.len(), n);
+        }
         let client = self.module.exe.client();
-        let xb = client.buffer_from_host_buffer(x.data(), x.shape(), None)?;
+        Ok(StagedInput {
+            buf: client.buffer_from_host_buffer(data, shape, None)?,
+            _host: std::marker::PhantomData,
+        })
+    }
+
+    /// Execute with a previously staged input (see [`Bound::stage`]).
+    pub fn run_staged(&self, staged: &StagedInput<'_>) -> Result<Tensor> {
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.params.len());
-        args.push(&xb);
+        args.push(&staged.buf);
         args.extend(self.params.iter());
         let res = self.module.exe.execute_b(&args)?;
         // aot.py lowers with return_tuple=True -> 1-tuple output
@@ -156,7 +212,7 @@ impl Runtime {
     }
 
     /// Convenience: compile + bind in one step.
-    pub fn load(&self, name: &str, params: &[Tensor]) -> Result<Bound> {
+    pub fn load(&self, name: &str, params: &[&Tensor]) -> Result<Bound> {
         self.compile(name)?.bind(params)
     }
 

@@ -17,6 +17,85 @@ pub struct Tensor {
     data: Vec<f32>,
 }
 
+/// A borrowed, zero-copy window into a [`Tensor`] (shape + contiguous
+/// data slice). This is the steady-state currency of the round pipeline:
+/// `Fleet::unpack` hands out one view per instance into the merged
+/// output instead of materializing M copies; callers promote to an owned
+/// tensor with [`TensorView::to_owned`] only where a response actually
+/// leaves the server.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    shape: &'a [usize],
+    data: &'a [f32],
+}
+
+impl<'a> TensorView<'a> {
+    /// View over externally managed storage (shape must match the slice).
+    pub fn new(shape: &'a [usize], data: &'a [f32]) -> Result<TensorView<'a>> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("view shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(TensorView { shape, data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        self.shape
+    }
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// Promote to an owned tensor (the only copying step on the unpack
+    /// path, paid per occupied slot rather than per round).
+    pub fn to_owned(&self) -> Tensor {
+        Tensor { shape: self.shape.to_vec(), data: self.data.to_vec() }
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &TensorView<'_>) -> Result<f64> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max))
+    }
+
+    /// Relative-tolerance comparison mirroring numpy.allclose.
+    pub fn allclose(&self, other: &TensorView<'_>, rtol: f64, atol: f64) -> bool {
+        self.shape == other.shape
+            && self.data.iter().zip(other.data).all(|(a, b)| {
+                let (a, b) = (*a as f64, *b as f64);
+                (a - b).abs() <= atol + rtol * b.abs()
+            })
+    }
+}
+
+impl PartialEq for TensorView<'_> {
+    fn eq(&self, other: &TensorView<'_>) -> bool {
+        self.shape == other.shape && self.data == other.data
+    }
+}
+
+impl PartialEq<Tensor> for TensorView<'_> {
+    fn eq(&self, other: &Tensor) -> bool {
+        self.shape == other.shape.as_slice() && self.data == other.data.as_slice()
+    }
+}
+
 impl Tensor {
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
         let n: usize = shape.iter().product();
@@ -113,12 +192,17 @@ impl Tensor {
         }
         out_shape[axis] = axis_total;
 
-        // copy per outer-block: outer = prod(dims < axis)
+        // copy per outer-block: outer = prod(dims < axis); the per-part
+        // inner run lengths are invariant across outer blocks, so compute
+        // them once instead of re-reducing the shape every iteration
         let outer: usize = parts[0].shape[..axis].iter().product();
+        let inners: Vec<usize> = parts
+            .iter()
+            .map(|p| p.shape[axis..].iter().product())
+            .collect();
         let mut data = Vec::with_capacity(out_shape.iter().product());
         for o in 0..outer {
-            for p in parts {
-                let inner: usize = p.shape[axis..].iter().product();
+            for (p, &inner) in parts.iter().zip(&inners) {
                 let off = o * inner;
                 data.extend_from_slice(&p.data[off..off + inner]);
             }
@@ -170,38 +254,41 @@ impl Tensor {
             .collect()
     }
 
-    /// Index the leading axis (view copy): `[M, ...] -> [...]`.
-    pub fn index0(&self, i: usize) -> Result<Tensor> {
+    /// Whole-tensor borrowed view.
+    pub fn view(&self) -> TensorView<'_> {
+        TensorView { shape: &self.shape, data: &self.data }
+    }
+
+    /// Zero-copy index of the leading axis: `[M, ...] -> view of [...]`.
+    /// This is the unpack fast path — the merged output is always
+    /// batch-packed `[M, bs, ...]`, so every per-instance output is a
+    /// contiguous window.
+    pub fn view0(&self, i: usize) -> Result<TensorView<'_>> {
         if self.rank() == 0 || i >= self.shape[0] {
-            bail!("index0 {} out of range for {:?}", i, self.shape);
+            bail!("view0 {} out of range for {:?}", i, self.shape);
         }
         let inner: usize = self.shape[1..].iter().product();
-        Tensor::new(
-            self.shape[1..].to_vec(),
-            self.data[i * inner..(i + 1) * inner].to_vec(),
-        )
+        Ok(TensorView {
+            shape: &self.shape[1..],
+            data: &self.data[i * inner..(i + 1) * inner],
+        })
+    }
+
+    /// Index the leading axis, materialized: `[M, ...] -> [...]`.
+    /// Delegates to [`Tensor::view0`]; prefer the view when the copy is
+    /// not needed.
+    pub fn index0(&self, i: usize) -> Result<Tensor> {
+        Ok(self.view0(i)?.to_owned())
     }
 
     /// Max |a - b| over all elements.
     pub fn max_abs_diff(&self, other: &Tensor) -> Result<f64> {
-        if self.shape != other.shape {
-            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
-        }
-        Ok(self
-            .data
-            .iter()
-            .zip(&other.data)
-            .map(|(a, b)| (a - b).abs() as f64)
-            .fold(0.0, f64::max))
+        self.view().max_abs_diff(&other.view())
     }
 
     /// Relative-tolerance comparison mirroring numpy.allclose.
     pub fn allclose(&self, other: &Tensor, rtol: f64, atol: f64) -> bool {
-        self.shape == other.shape
-            && self.data.iter().zip(&other.data).all(|(a, b)| {
-                let (a, b) = (*a as f64, *b as f64);
-                (a - b).abs() <= atol + rtol * b.abs()
-            })
+        self.view().allclose(&other.view(), rtol, atol)
     }
 
     /// Transpose the first axis with the second for rank >= 2 tensors
@@ -294,6 +381,32 @@ mod tests {
         assert_eq!(b.swap01().unwrap(), a);
         // spot value: a[1,2,:] == b[2,1,:]
         assert_eq!(&b.data()[(2 * 2 + 1) * 2..(2 * 2 + 1) * 2 + 2], &[10., 11.]);
+    }
+
+    #[test]
+    fn view0_is_zero_copy_window() {
+        let a = t(&[2], &[1., 2.]);
+        let b = t(&[2], &[3., 4.]);
+        let s = Tensor::stack(&[&a, &b]).unwrap();
+        let v = s.view0(1).unwrap();
+        assert_eq!(v.shape(), &[2]);
+        assert_eq!(v.data(), &[3., 4.]);
+        // the view's slice aliases the stacked buffer (no copy)
+        assert_eq!(v.data().as_ptr(), s.data()[2..].as_ptr());
+        assert_eq!(v.to_owned(), b);
+        assert!(v == b);
+        assert!(s.view0(2).is_err());
+    }
+
+    #[test]
+    fn views_compare_like_tensors() {
+        let a = t(&[2, 2], &[1., 2., 3., 4.]);
+        let b = t(&[2, 2], &[1. + 1e-7, 2., 3., 4.]);
+        assert!(a.view().allclose(&b.view(), 1e-5, 1e-6));
+        assert!(a.view().max_abs_diff(&b.view()).unwrap() < 1e-6);
+        let c = t(&[4], &[1., 2., 3., 4.]);
+        assert!(a.view().max_abs_diff(&c.view()).is_err());
+        assert!(TensorView::new(&[3], &[0.0; 2]).is_err());
     }
 
     #[test]

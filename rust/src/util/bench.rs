@@ -7,6 +7,60 @@ use std::time::Instant;
 
 use super::stats::{fmt_secs, Summary};
 
+/// Allocation-counting global allocator for the zero-allocation
+/// assertions in `benches/round_pipeline.rs`.
+///
+/// A bench binary installs it with
+/// `#[global_allocator] static A: CountingAlloc = CountingAlloc;` and
+/// brackets the measured region with [`counting_alloc::allocations`]
+/// reads; the steady-state round pipeline must show a zero delta.
+pub mod counting_alloc {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static ALLOCS: AtomicU64 = AtomicU64::new(0);
+    static BYTES: AtomicU64 = AtomicU64::new(0);
+
+    /// Forwards to the system allocator, counting every allocation
+    /// (including growth via `realloc`).
+    pub struct CountingAlloc;
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            System.alloc(layout)
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            System.alloc_zeroed(layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+            System.realloc(ptr, layout, new_size)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+    }
+
+    /// Total allocation events since process start (monotonic; diff two
+    /// reads to measure a region).
+    pub fn allocations() -> u64 {
+        ALLOCS.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes requested since process start.
+    pub fn bytes_allocated() -> u64 {
+        BYTES.load(Ordering::Relaxed)
+    }
+}
+
 /// Measurement configuration.
 #[derive(Debug, Clone)]
 pub struct Config {

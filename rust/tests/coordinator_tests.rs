@@ -56,6 +56,32 @@ fn all_strategies_agree_on_outputs() {
 }
 
 #[test]
+fn unpack_views_alias_the_merged_output() {
+    if skip() {
+        return;
+    }
+    // the zero-copy unpack path: views into the merged output are
+    // element-identical to the owned per-instance outputs and alias the
+    // merged buffer instead of copying it
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let fleet = Fleet::load(&rt, "bert", 2, 1).unwrap();
+    let mut rng = Rng::new(21);
+    let xs: Vec<Tensor> = (0..2)
+        .map(|_| Tensor::randn(&fleet.request_shape(), &mut rng))
+        .collect();
+    let refs: Vec<&Tensor> = xs.iter().collect();
+    let outs = fleet.run_round(StrategyKind::NetFuse, &refs).unwrap();
+    let y = Tensor::stack(&outs.iter().collect::<Vec<_>>()).unwrap();
+    let views = fleet.unpack(&y).unwrap();
+    assert_eq!(views.len(), 2);
+    for (i, v) in views.iter().enumerate() {
+        assert!(v.allclose(&outs[i].view(), 0.0, 0.0), "view {i} differs");
+        // borrowed, not copied
+        assert_eq!(v.data().as_ptr(), y.view0(i).unwrap().data().as_ptr());
+    }
+}
+
+#[test]
 fn fused_outputs_differ_across_instances() {
     if skip() {
         return;
@@ -144,6 +170,23 @@ fn server_applies_backpressure() {
     assert_eq!(server.offer(mk(&mut rng, 0)), Admit::Queued);
     assert_eq!(server.offer(mk(&mut rng, 1)), Admit::Queued);
     assert_eq!(server.offer(mk(&mut rng, 2)), Admit::Rejected);
+}
+
+#[test]
+fn server_rejects_malformed_payloads_at_ingress() {
+    if skip() {
+        return;
+    }
+    // wrong-shaped payloads fail alone at offer() instead of poisoning
+    // a whole round at dispatch time
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let fleet = Fleet::load(&rt, "bert", 2, 1).unwrap();
+    let mut server = Server::new(&fleet, ServerConfig::default());
+    let bad = Request::new(0, 0, Tensor::zeros(&[1, 2, 3]));
+    assert_eq!(server.offer(bad), Admit::Invalid);
+    let bad_idx = Request::new(1, 7, Tensor::zeros(&fleet.request_shape()));
+    assert_eq!(server.offer(bad_idx), Admit::Invalid);
+    assert_eq!(server.pending(), 0);
 }
 
 #[test]

@@ -1,10 +1,14 @@
 //! Property-based tests (via `util::prop`, the offline proptest stand-in)
 //! for the coordinator-side invariants: Algorithm 1 merge properties over
-//! randomly generated graphs, tensor algebra round-trips, and JSON
-//! round-trip fuzzing.
+//! randomly generated graphs, tensor algebra round-trips, the zero-copy
+//! round pipeline (arena packing vs the concat/stack reference, view
+//! unpacking vs index0/split), the worker pool, and JSON round-trip
+//! fuzzing.
 
 use std::collections::BTreeMap;
 
+use netfuse::coordinator::arena::{Layout, RoundArena};
+use netfuse::coordinator::pool::WorkerPool;
 use netfuse::fuse;
 use netfuse::graph::{Attr, Graph, MergeDim, Node};
 use netfuse::tensor::Tensor;
@@ -250,6 +254,132 @@ fn prop_swap01_involutive() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// zero-copy round pipeline: arena pack vs concat/stack, views vs index0
+// ---------------------------------------------------------------------------
+
+/// A random round: layout, request shape, payloads, and an occupancy
+/// mask (None = padded slot).
+#[derive(Debug)]
+struct RoundCase {
+    layout: Layout,
+    shape: Vec<usize>,
+    xs: Vec<Tensor>,
+    occupied: Vec<bool>,
+}
+
+fn gen_round(rng: &mut Rng, size: usize) -> RoundCase {
+    let layout = if rng.bool() { Layout::Channel } else { Layout::Batch };
+    let shape: Vec<usize> = match layout {
+        // [bs, C, spatial...]: channel packing needs rank >= 2
+        Layout::Channel => {
+            let rank = 2 + rng.usize_below(3);
+            (0..rank).map(|_| 1 + rng.usize_below(4)).collect()
+        }
+        Layout::Batch => {
+            let rank = 1 + rng.usize_below(3);
+            (0..rank).map(|_| 1 + rng.usize_below(5)).collect()
+        }
+    };
+    let m = 1 + size.min(7);
+    let xs = (0..m).map(|_| Tensor::randn(&shape, rng)).collect();
+    let occupied = (0..m).map(|_| rng.below(4) > 0).collect();
+    RoundCase { layout, shape, xs, occupied }
+}
+
+#[test]
+fn prop_pack_with_matches_concat_stack_reference() {
+    check("arena-pack-reference", 120, gen_round, |c| {
+        let m = c.xs.len();
+        let pad = Tensor::zeros(&c.shape);
+        // reference: the seed's copying pack over pad-substituted slots
+        let slots: Vec<&Tensor> = (0..m)
+            .map(|i| if c.occupied[i] { &c.xs[i] } else { &pad })
+            .collect();
+        let want = match c.layout {
+            Layout::Channel => Tensor::concat(&slots, 1),
+            Layout::Batch => Tensor::stack(&slots),
+        }
+        .map_err(|e| e.to_string())?;
+
+        let mut arena =
+            RoundArena::new(c.layout, m, &c.shape).map_err(|e| e.to_string())?;
+        // dirty the buffer first: pack_with must fully overwrite
+        arena.pack_with(&|i| Some(&c.xs[i])).map_err(|e| e.to_string())?;
+        arena
+            .pack_with(&|i| if c.occupied[i] { Some(&c.xs[i]) } else { None })
+            .map_err(|e| e.to_string())?;
+
+        if arena.merged_shape() != want.shape() {
+            return Err(format!(
+                "merged shape {:?} != reference {:?}",
+                arena.merged_shape(),
+                want.shape()
+            ));
+        }
+        if arena.merged_data() != want.data() {
+            return Err("megabatch bytes differ from concat/stack reference".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_view0_matches_index0_and_split() {
+    check("view-unpack-reference", 120, gen_round, |c| {
+        // merged outputs are always batch-packed [M, ...]
+        let refs: Vec<&Tensor> = c.xs.iter().collect();
+        let y = Tensor::stack(&refs).map_err(|e| e.to_string())?;
+        let split = y.split(c.xs.len(), 0).map_err(|e| e.to_string())?;
+        for (i, part) in c.xs.iter().enumerate() {
+            let v = y.view0(i).map_err(|e| e.to_string())?;
+            if v != *part {
+                return Err(format!("view0({i}) differs from packed part"));
+            }
+            if v.to_owned() != y.index0(i).map_err(|e| e.to_string())? {
+                return Err(format!("view0({i}).to_owned() != index0({i})"));
+            }
+            if v.to_owned() != split[i] {
+                return Err(format!("view0({i}) != split[{i}]"));
+            }
+            if !v.allclose(&part.view(), 0.0, 0.0) {
+                return Err(format!("view0({i}) allclose self failed"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// worker pool: index alignment under arbitrary procs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_worker_pool_results_index_aligned() {
+    let pool = WorkerPool::new(4);
+    check(
+        "pool-index-aligned",
+        60,
+        |rng: &mut Rng, size| {
+            let n = 1 + rng.usize_below(4 * (1 + size));
+            let procs = 1 + rng.usize_below(2 * n + 2);
+            let items: Vec<u64> = (0..n as u64).map(|i| i ^ rng.below(1 << 20)).collect();
+            (items, procs)
+        },
+        |(items, procs)| {
+            let got = pool
+                .run_chunked(items.len(), *procs, |i| Ok(items[i].wrapping_mul(2654435761)))
+                .map_err(|e| e.to_string())?;
+            let want: Vec<u64> =
+                items.iter().map(|v| v.wrapping_mul(2654435761)).collect();
+            if got != want {
+                return Err(format!("procs={procs}: results out of order"));
+            }
+            Ok(())
+        },
+    );
 }
 
 // ---------------------------------------------------------------------------
