@@ -1,0 +1,346 @@
+//! Bench: cross-round overlap (double-buffered `ArenaPair`) and
+//! multi-fleet serving on one shared `WorkerPool`.
+//!
+//! Part 1 — overlap. PR 1's NETFUSE path held ONE arena lock across
+//! pack + stage + execute, so two rounds could never overlap even from
+//! different threads. The `ArenaPair` reserves one half per round; the
+//! other half stays free, so thread B packs + stages round N+1 while
+//! round N is still executing. Device execution is modeled as a
+//! fixed-latency blocking call that reads the staged host buffer at
+//! execute time (the deferred-H2D contract of PJRT host buffers), which
+//! is exactly the span the host is *not* allowed to repack — and the
+//! span double-buffering reclaims. Gate: 2-thread round throughput with
+//! the pair >= 1.5x the single-buffer lock-spanning baseline.
+//!
+//! Part 2 — multi-fleet. Serves two fleets through `MultiServer` twice:
+//! once with a dedicated `WorkerPool` per fleet (the PR 1 cost model),
+//! once with ONE shared pool. Gate: the shared pool spawns fewer
+//! workers than the per-fleet pools combined while serving the same
+//! traffic.
+//!
+//! Runs fully offline (no artifacts, no PJRT): the fleets are mock
+//! `RoundExecutor`s. Results go to `BENCH_multi_fleet.json`.
+//! `--smoke` runs one abbreviated iteration with no perf gates so CI
+//! exercises the overlap path on every push.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use netfuse::coordinator::arena::{ArenaPair, Layout, RoundArena};
+use netfuse::coordinator::multi::MultiServer;
+use netfuse::coordinator::pool::WorkerPool;
+use netfuse::coordinator::server::{Admit, ServerConfig};
+use netfuse::coordinator::service::RoundExecutor;
+use netfuse::coordinator::{Request, StrategyKind};
+use netfuse::tensor::Tensor;
+use netfuse::util::json::Json;
+use netfuse::util::rng::Rng;
+
+const M: usize = 16;
+const REQUEST_SHAPE: [usize; 4] = [1, 3, 16, 16];
+/// modeled device execution latency per merged round
+const DEVICE_LATENCY: Duration = Duration::from_micros(500);
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+// ---------------------------------------------------------------------------
+// part 1: single-buffer lock-spanning rounds vs double-buffered ArenaPair
+// ---------------------------------------------------------------------------
+
+/// Stand-in for `Bound::stage`/`run_staged` against a device whose
+/// executions proceed concurrently (PJRT executables are internally
+/// synchronized; concurrent submissions overlap). `stage` borrows the
+/// host megabatch — the deferred-H2D contract — and `run` reads it at
+/// execute time, then blocks for the device latency.
+struct FakeDevice {
+    latency: Duration,
+    checksum: AtomicU64,
+}
+
+struct FakeStaged<'a> {
+    data: &'a [f32],
+}
+
+impl FakeDevice {
+    fn new(latency: Duration) -> FakeDevice {
+        FakeDevice { latency, checksum: AtomicU64::new(0) }
+    }
+
+    fn stage<'a>(&self, data: &'a [f32]) -> FakeStaged<'a> {
+        FakeStaged { data }
+    }
+
+    fn run(&self, staged: &FakeStaged<'_>) {
+        // deferred H2D: the host buffer is only consumed here, which is
+        // why the packed half must stay reserved until run completes
+        let sum: f32 = staged.data.iter().sum();
+        self.checksum.fetch_add(sum.to_bits() as u64, Ordering::Relaxed);
+        std::thread::sleep(self.latency);
+    }
+}
+
+/// The staging buffers under test: PR 1's one lock-spanning arena, or
+/// the double-buffered pair.
+enum Buffers {
+    Single(Mutex<RoundArena>),
+    Pair(ArenaPair),
+}
+
+/// `threads` workers each driving `rounds` NETFUSE-shaped rounds.
+/// Returns rounds/sec.
+fn overlap_throughput(
+    threads: usize,
+    rounds: usize,
+    double_buffered: bool,
+    xs: &[Tensor],
+) -> Result<f64> {
+    let device = FakeDevice::new(DEVICE_LATENCY);
+    let buffers = if double_buffered {
+        Buffers::Pair(ArenaPair::new(Layout::Channel, M, &REQUEST_SHAPE)?)
+    } else {
+        Buffers::Single(Mutex::new(RoundArena::new(Layout::Channel, M, &REQUEST_SHAPE)?))
+    };
+    // one round: pack + stage + execute on whichever arena is handed in
+    let round = |arena: &mut RoundArena| {
+        arena.pack_with(&|i| Some(&xs[i])).unwrap();
+        let staged = device.stage(arena.merged_data());
+        device.run(&staged);
+    };
+
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                for _ in 0..rounds {
+                    match &buffers {
+                        // reserve ONE half for pack + stage + execute;
+                        // the other half is free for the peer thread
+                        Buffers::Pair(pair) => round(&mut pair.acquire()),
+                        // PR 1: the one arena lock spans the round
+                        Buffers::Single(single) => round(&mut single.lock().unwrap()),
+                    }
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    Ok((threads * rounds) as f64 / elapsed)
+}
+
+// ---------------------------------------------------------------------------
+// part 2: MultiServer over mock fleets — dedicated pools vs one shared pool
+// ---------------------------------------------------------------------------
+
+/// Mock fleet: echoes payloads, burns a little CPU per model on its
+/// worker pool (Concurrent dispatch), like a single-model executable.
+struct BenchFleet {
+    name: String,
+    m: usize,
+    input_shape: Vec<usize>,
+    pool: Arc<WorkerPool>,
+}
+
+impl RoundExecutor for BenchFleet {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn m(&self) -> usize {
+        self.m
+    }
+    fn bs(&self) -> usize {
+        1
+    }
+    fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+    fn run_round_slots<'a>(
+        &self,
+        strategy: StrategyKind,
+        get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
+        outs: &mut Vec<Option<Tensor>>,
+    ) -> Result<()> {
+        strategy.validate()?;
+        outs.clear();
+        let procs = match strategy {
+            StrategyKind::Concurrent => self.m,
+            StrategyKind::Hybrid { procs } => procs.min(self.m),
+            _ => 1,
+        };
+        self.pool.ensure_workers(procs);
+        let results = self.pool.run_chunked(self.m, procs, |i| {
+            Ok(get(i).map(|x| {
+                // model "compute": a checksum sweep over the payload
+                let mut acc = 0.0f32;
+                for _ in 0..8 {
+                    acc += x.data().iter().sum::<f32>();
+                }
+                std::hint::black_box(acc);
+                x.clone()
+            }))
+        })?;
+        outs.extend(results);
+        Ok(())
+    }
+}
+
+/// Serve `rounds` full rounds to two fleets through a MultiServer.
+/// Returns (requests served, requests/sec, total workers spawned).
+fn multi_fleet_throughput(
+    fleet_a: &BenchFleet,
+    fleet_b: &BenchFleet,
+    rounds: usize,
+    rng: &mut Rng,
+) -> Result<(u64, f64, usize)> {
+    let mut multi = MultiServer::new();
+    let a = multi.add_lane(
+        fleet_a,
+        ServerConfig { strategy: StrategyKind::Concurrent, ..Default::default() },
+    );
+    let b = multi.add_lane(
+        fleet_b,
+        ServerConfig { strategy: StrategyKind::Hybrid { procs: 2 }, ..Default::default() },
+    );
+    let shape = [1usize, 4];
+    let mut buf = Vec::new();
+    let mut id = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for (lane, m) in [(a, fleet_a.m), (b, fleet_b.m)] {
+            for model in 0..m {
+                let req = Request::new(id, model, Tensor::randn(&shape, rng));
+                id += 1;
+                anyhow::ensure!(
+                    multi.offer(lane, req)? == Admit::Queued,
+                    "bench queue overflow"
+                );
+            }
+        }
+        while multi.dispatch_next(&mut buf)?.is_some() {}
+        buf.clear();
+    }
+    multi.drain(&mut buf)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    let served = multi.lane(a).metrics.completed_requests
+        + multi.lane(b).metrics.completed_requests;
+    let workers = fleet_a.pool.workers()
+        + if Arc::ptr_eq(&fleet_a.pool, &fleet_b.pool) { 0 } else { fleet_b.pool.workers() };
+    Ok((served, served as f64 / elapsed.max(1e-9), workers))
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut rng = Rng::new(0xF1EE7);
+    let xs: Vec<Tensor> = (0..M).map(|_| Tensor::randn(&REQUEST_SHAPE, &mut rng)).collect();
+
+    println!(
+        "# multi_fleet: cross-round overlap + shared-pool tenancy (m={M}{})\n",
+        if smoke { ", SMOKE" } else { "" }
+    );
+
+    // --- part 1: overlap ------------------------------------------------
+    let rounds = if smoke { 2 } else { 200 };
+    // warm-up pass so thread spawn / allocator noise stays out of the
+    // measured runs
+    overlap_throughput(2, 2, true, &xs)?;
+    overlap_throughput(2, 2, false, &xs)?;
+    let single_rps = overlap_throughput(2, rounds, false, &xs)?;
+    let double_rps = overlap_throughput(2, rounds, true, &xs)?;
+    let speedup = double_rps / single_rps;
+    println!(
+        "overlap: single-buffer {single_rps:.0} rounds/s  double-buffer \
+         {double_rps:.0} rounds/s  speedup {speedup:.2}x"
+    );
+
+    // --- part 2: multi-fleet serving ------------------------------------
+    let serve_rounds = if smoke { 2 } else { 50 };
+    // dedicated pools: the PR 1 cost model, one pool per fleet
+    let ded_a = BenchFleet {
+        name: "fleet-a".into(),
+        m: 8,
+        input_shape: vec![4],
+        pool: WorkerPool::shared(1),
+    };
+    let ded_b = BenchFleet {
+        name: "fleet-b".into(),
+        m: 6,
+        input_shape: vec![4],
+        pool: WorkerPool::shared(1),
+    };
+    let (ded_served, ded_rps, ded_workers) =
+        multi_fleet_throughput(&ded_a, &ded_b, serve_rounds, &mut rng)?;
+
+    // shared pool: ONE thread set for both fleets
+    let pool = WorkerPool::shared(1);
+    let sh_a = BenchFleet {
+        name: "fleet-a".into(),
+        m: 8,
+        input_shape: vec![4],
+        pool: pool.clone(),
+    };
+    let sh_b = BenchFleet {
+        name: "fleet-b".into(),
+        m: 6,
+        input_shape: vec![4],
+        pool: pool.clone(),
+    };
+    let (sh_served, sh_rps, sh_workers) =
+        multi_fleet_throughput(&sh_a, &sh_b, serve_rounds, &mut rng)?;
+
+    println!(
+        "multi-fleet: dedicated pools {ded_workers} workers ({ded_rps:.0} req/s)  \
+         shared pool {sh_workers} workers ({sh_rps:.0} req/s)"
+    );
+
+    // --- BENCH_multi_fleet.json -----------------------------------------
+    let mut overlap = BTreeMap::new();
+    overlap.insert("threads".to_string(), num(2.0));
+    overlap.insert("rounds_per_thread".to_string(), num(rounds as f64));
+    overlap.insert(
+        "device_latency_s".to_string(),
+        num(DEVICE_LATENCY.as_secs_f64()),
+    );
+    overlap.insert("single_buffer_rounds_per_sec".to_string(), num(single_rps));
+    overlap.insert("double_buffer_rounds_per_sec".to_string(), num(double_rps));
+    overlap.insert("speedup".to_string(), num(speedup));
+
+    let mut mf = BTreeMap::new();
+    mf.insert("fleets".to_string(), num(2.0));
+    mf.insert("rounds".to_string(), num(serve_rounds as f64));
+    mf.insert("dedicated_pool_workers".to_string(), num(ded_workers as f64));
+    mf.insert("shared_pool_workers".to_string(), num(sh_workers as f64));
+    mf.insert("dedicated_req_per_sec".to_string(), num(ded_rps));
+    mf.insert("shared_req_per_sec".to_string(), num(sh_rps));
+    mf.insert("requests_served".to_string(), num(sh_served as f64));
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("multi_fleet".to_string()));
+    root.insert("smoke".to_string(), Json::Bool(smoke));
+    root.insert("overlap".to_string(), Json::Obj(overlap));
+    root.insert("multi_fleet".to_string(), Json::Obj(mf));
+
+    let path = "BENCH_multi_fleet.json";
+    std::fs::write(path, Json::Obj(root).dump())?;
+    println!("report written to {path}");
+
+    // correctness gates run in every mode; perf gates only in full runs
+    // (written AFTER the report so a noisy run leaves its numbers)
+    assert_eq!(ded_served, sh_served, "both configurations must serve all requests");
+    assert!(
+        sh_workers < ded_workers,
+        "shared pool must spawn fewer workers ({sh_workers}) than per-fleet pools ({ded_workers})"
+    );
+    if !smoke {
+        assert!(
+            speedup >= 1.5,
+            "double-buffered rounds must be >= 1.5x the lock-spanning baseline \
+             (got {speedup:.2}x)"
+        );
+    }
+    Ok(())
+}

@@ -11,7 +11,10 @@
 //! Asserts, with a counting global allocator, that the steady-state
 //! arena round performs **zero** heap allocations, and that the arena
 //! round beats the legacy round by >= 2x at m=16 on mini-model-shaped
-//! payloads. Results are written to `BENCH_round_pipeline.json`.
+//! payloads. Also measures a half-padded steady state and asserts the
+//! occupancy tracker never re-copies the zero pad block into windows
+//! that stayed absent. Results are written to
+//! `BENCH_round_pipeline.json`.
 //!
 //! Runs fully offline: the host data plane needs no artifacts and no
 //! PJRT backend.
@@ -36,13 +39,13 @@ fn num(v: f64) -> Json {
 }
 
 /// One layout scenario: legacy round vs arena round over identical
-/// payloads. Returns (legacy_s, arena_s, allocs_per_round).
+/// payloads. Returns (legacy_s, arena_s, padded_s, allocs_per_round).
 fn bench_layout(
     b: &mut Bench,
     layout: Layout,
     request_shape: &[usize],
     rng: &mut Rng,
-) -> anyhow::Result<(f64, f64, u64)> {
+) -> anyhow::Result<(f64, f64, f64, u64)> {
     let name = match layout {
         Layout::Channel => "channel",
         Layout::Batch => "batch",
@@ -105,17 +108,40 @@ fn bench_layout(
     }
     let allocs = counting_alloc::allocations() - before;
     let per_round = allocs / rounds;
+
+    // --- padded steady state: absent slots skip the pad copy -----------
+    // half the fleet is idle every round; after the first round their
+    // windows are zero and stay zero, so pack_with skips the
+    // memset-equivalent entirely (the occupancy-tracking optimization)
+    let mut padded_arena = RoundArena::new(layout, M, request_shape)?;
+    let mut padded_round = |arena: &mut RoundArena| {
+        let get = |i: usize| if i % 2 == 0 { Some(&xs[i]) } else { None };
+        arena.pack_with(&get).unwrap();
+        std::hint::black_box(arena.merged_data());
+    };
+    padded_round(&mut padded_arena); // warm: absent windows zeroed once
+    let writes_before = padded_arena.pad_writes();
+    let padded = b.run(&format!("round/{name}/arena-padded m={M}"), || {
+        padded_round(&mut padded_arena)
+    });
+    assert_eq!(
+        padded_arena.pad_writes(),
+        writes_before,
+        "steady-state padded rounds must not re-copy the zero pad block"
+    );
+
     println!(
         "round/{name}: {} allocations across {} steady-state rounds",
         allocs, rounds
     );
     println!(
-        "round/{name}: legacy {:.3e}s  arena {:.3e}s  speedup {:.2}x\n",
+        "round/{name}: legacy {:.3e}s  arena {:.3e}s  padded {:.3e}s  speedup {:.2}x\n",
         legacy.mean,
         arena_m.mean,
+        padded.mean,
         legacy.mean / arena_m.mean
     );
-    Ok((legacy.mean, arena_m.mean, per_round))
+    Ok((legacy.mean, arena_m.mean, padded.mean, per_round))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -127,9 +153,9 @@ fn main() -> anyhow::Result<()> {
 
     // mini-model-shaped payloads: CNN fleet packs on channel, sequence
     // fleet packs on batch
-    let (ch_legacy, ch_arena, ch_allocs) =
+    let (ch_legacy, ch_arena, ch_padded, ch_allocs) =
         bench_layout(&mut b, Layout::Channel, &[1, 3, 16, 16], &mut rng)?;
-    let (ba_legacy, ba_arena, ba_allocs) =
+    let (ba_legacy, ba_arena, ba_padded, ba_allocs) =
         bench_layout(&mut b, Layout::Batch, &[1, 64], &mut rng)?;
 
     // --- strategy dispatch: per-round spawn vs persistent pool ---------
@@ -162,13 +188,14 @@ fn main() -> anyhow::Result<()> {
 
     // --- BENCH_round_pipeline.json report ------------------------------
     let mut layouts = BTreeMap::new();
-    for (name, legacy, arena, allocs) in [
-        ("channel", ch_legacy, ch_arena, ch_allocs),
-        ("batch", ba_legacy, ba_arena, ba_allocs),
+    for (name, legacy, arena, padded, allocs) in [
+        ("channel", ch_legacy, ch_arena, ch_padded, ch_allocs),
+        ("batch", ba_legacy, ba_arena, ba_padded, ba_allocs),
     ] {
         let mut o = BTreeMap::new();
         o.insert("legacy_s".to_string(), num(legacy));
         o.insert("arena_s".to_string(), num(arena));
+        o.insert("arena_padded_s".to_string(), num(padded));
         o.insert("legacy_rounds_per_sec".to_string(), num(1.0 / legacy));
         o.insert("arena_rounds_per_sec".to_string(), num(1.0 / arena));
         o.insert("speedup".to_string(), num(legacy / arena));

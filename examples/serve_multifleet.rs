@@ -1,0 +1,85 @@
+//! Multi-tenant serving driver: several fleets on ONE machine, one
+//! shared machine-sized `WorkerPool`, fair round-ready dispatch via
+//! `MultiServer` (the paper's many-fleets-per-GPU setting, §5).
+//!
+//! Loads a bert fleet (NETFUSE strategy — merged executable) and a
+//! resnet fleet (Hybrid strategy — chunked workers on the shared pool)
+//! and serves interleaved traffic through both lanes. This driver
+//! dispatches lanes serially; the double-buffered arena's cross-round
+//! overlap needs concurrent round drivers (see `benches/multi_fleet.rs`
+//! for that measurement).
+//!
+//! ```bash
+//! cargo run --release --example serve_multifleet -- [m] [rounds]
+//! ```
+
+use netfuse::coordinator::multi::MultiServer;
+use netfuse::coordinator::pool::WorkerPool;
+use netfuse::coordinator::server::{Admit, ServerConfig};
+use netfuse::coordinator::workload::Workload;
+use netfuse::coordinator::{Fleet, StrategyKind};
+use netfuse::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let m: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let rounds: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40);
+
+    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
+    // ONE pool for the whole box: every fleet dispatches onto it
+    let pool = WorkerPool::machine_sized();
+    println!(
+        "multi-fleet serving on {}: bert x{m} (netfuse) + resnet x{m} (hybrid), \
+         shared pool of {} workers, {rounds} rounds",
+        rt.platform(),
+        pool.workers()
+    );
+
+    let bert = Fleet::load_with_pool(&rt, "bert", m, 1, "", pool.clone())?;
+    let resnet = Fleet::load_with_pool(&rt, "resnet", m, 1, "", pool.clone())?;
+
+    let mut multi = MultiServer::new();
+    let lane_a = multi.add_lane(
+        &bert,
+        ServerConfig { strategy: StrategyKind::NetFuse, ..Default::default() },
+    );
+    let lane_b = multi.add_lane(
+        &resnet,
+        ServerConfig {
+            strategy: StrategyKind::Hybrid { procs: (m / 2).max(1) },
+            ..Default::default()
+        },
+    );
+
+    let mut wa = Workload::new(m, &bert.request_shape(), 500.0, 42);
+    let mut wb = Workload::new(m, &resnet.request_shape(), 500.0, 43);
+    let mut buf = Vec::new();
+    for _ in 0..rounds {
+        for req in wa.round() {
+            anyhow::ensure!(multi.offer(lane_a, req)? == Admit::Queued, "bert queue full");
+        }
+        for req in wb.round() {
+            anyhow::ensure!(multi.offer(lane_b, req)? == Admit::Queued, "resnet queue full");
+        }
+        // fair round-ready dispatch across lanes
+        while multi.dispatch_next(&mut buf)?.is_some() {}
+        buf.clear();
+    }
+    multi.drain(&mut buf)?;
+
+    for (name, lane) in [("bert", lane_a), ("resnet", lane_b)] {
+        let met = &multi.lane(lane).metrics;
+        println!("{name:<8} {}", met.report_line());
+        println!(
+            "{name:<8} served {} requests at {:.1} req/s (p99 {:.2}ms)",
+            met.completed_requests,
+            met.throughput(),
+            met.request_latency.p99() * 1e3,
+        );
+    }
+    println!(
+        "shared pool workers after serving: {} (one thread set for both fleets)",
+        pool.workers()
+    );
+    Ok(())
+}

@@ -1,5 +1,5 @@
 //! `RoundArena`: the reusable megabatch staging buffer of the round
-//! pipeline.
+//! pipeline, and [`ArenaPair`], its double-buffered form.
 //!
 //! The paper's merged program amortizes per-model overhead on the
 //! device; the arena does the same for the host side of every round.
@@ -10,6 +10,22 @@
 //! request path performs exactly one host copy (queue slot → megabatch)
 //! and zero heap allocations. `benches/round_pipeline.rs` asserts the
 //! zero-allocation property with a counting allocator.
+//!
+//! The arena also tracks per-slot occupancy across rounds: an absent
+//! slot whose window is already zero from a previous padded round skips
+//! the pad copy entirely (the first step of letting padded slots skip
+//! upload bandwidth).
+//!
+//! [`ArenaPair`] holds two independently locked arenas so that one
+//! thread can pack round N+1 while round N's staged megabatch is still
+//! in flight on the device. A round acquires one half and holds it for
+//! pack + stage + execute (PJRT host-buffer semantics may defer the H2D
+//! copy, so the half must stay reserved until execution completes); the
+//! *other* half stays free, which is what makes cross-thread round
+//! overlap possible — `benches/multi_fleet.rs` measures the win.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
 
 use anyhow::{bail, Result};
 
@@ -49,6 +65,15 @@ pub struct RoundArena {
     outer: usize,
     /// contiguous run per (outer block, instance)
     inner: usize,
+    /// whether slot `i`'s window currently holds payload data (vs the
+    /// zero pad). A slot that stays absent across rounds keeps its
+    /// already-zero window, so the pad copy is skipped.
+    occupied: Vec<bool>,
+    /// pad-block copies actually performed (absent slots whose window
+    /// held stale payload data); rounds where the window was already
+    /// zero don't count. Observability for the skip-redundant-pad
+    /// optimization.
+    pad_writes: u64,
 }
 
 impl RoundArena {
@@ -90,6 +115,10 @@ impl RoundArena {
             pad: vec![0.0; request_len],
             outer,
             inner,
+            // the megabatch starts zeroed, so every window is
+            // pad-equivalent until its first payload lands
+            occupied: vec![false; m],
+            pad_writes: 0,
         })
     }
 
@@ -113,6 +142,12 @@ impl RoundArena {
     pub fn merged_data(&self) -> &[f32] {
         self.merged.data()
     }
+    /// Pad-block copies performed so far (absent slots over stale
+    /// payload windows; already-zero windows are skipped and not
+    /// counted).
+    pub fn pad_writes(&self) -> u64 {
+        self.pad_writes
+    }
 
     /// Pack one round. `get(i)` returns instance `i`'s payload, or `None`
     /// for an absent slot, which is filled from the arena's pad block
@@ -121,6 +156,8 @@ impl RoundArena {
     ///
     /// Steady-state cost: one `copy_from_slice` per (outer block,
     /// instance) window — no allocation, no intermediate concat/stack.
+    /// A slot that was already padded in the previous round keeps its
+    /// zero window and skips even that copy.
     pub fn pack_with<'a>(
         &mut self,
         get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
@@ -136,9 +173,19 @@ impl RoundArena {
                             self.request_shape
                         );
                     }
+                    self.occupied[i] = true;
                     x.data()
                 }
-                None => &self.pad,
+                None => {
+                    if !self.occupied[i] {
+                        // window is still zero from the last padded
+                        // round (or from construction): nothing to copy
+                        continue;
+                    }
+                    self.occupied[i] = false;
+                    self.pad_writes += 1;
+                    &self.pad
+                }
             };
             let dst = self.merged.data_mut();
             for o in 0..outer {
@@ -156,6 +203,58 @@ impl RoundArena {
             bail!("pack wants {} inputs, got {}", self.m, xs.len());
         }
         self.pack_with(&|i| Some(xs[i]))
+    }
+}
+
+/// Double-buffered [`RoundArena`]: two identically configured halves,
+/// each behind its own lock.
+///
+/// One NETFUSE round acquires a half and holds it for the whole
+/// pack → stage → execute span (PJRT host-buffer semantics may defer
+/// the H2D copy, so the staged megabatch must not be repacked until the
+/// round completes — the `MutexGuard` *is* that reservation, and
+/// `Bound::stage`'s borrowed [`StagedInput`] ties the staged buffer's
+/// lifetime to the guard). The other half stays free, so a second
+/// thread packs round N+1 while round N is still in flight; with the
+/// single-arena lock of PR 1 the two rounds serialized end to end.
+///
+/// [`StagedInput`]: crate::runtime::StagedInput
+pub struct ArenaPair {
+    halves: [Mutex<RoundArena>; 2],
+    /// round-robin hint so concurrent rounds start on different halves
+    next: AtomicUsize,
+}
+
+impl ArenaPair {
+    /// Allocate both halves for `m` instances with per-request shape
+    /// `request_shape` (`[bs, ...]`).
+    pub fn new(layout: Layout, m: usize, request_shape: &[usize]) -> Result<ArenaPair> {
+        Ok(ArenaPair {
+            halves: [
+                Mutex::new(RoundArena::new(layout, m, request_shape)?),
+                Mutex::new(RoundArena::new(layout, m, request_shape)?),
+            ],
+            next: AtomicUsize::new(0),
+        })
+    }
+
+    /// Acquire a free half for one round, preferring the one least
+    /// recently handed out. Blocks only when *both* halves have rounds
+    /// in flight (i.e. more than two concurrent rounds).
+    pub fn acquire(&self) -> MutexGuard<'_, RoundArena> {
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
+        for k in 0..2 {
+            if let Ok(g) = self.halves[(start + k) % 2].try_lock() {
+                return g;
+            }
+        }
+        self.halves[start % 2].lock().unwrap()
+    }
+
+    /// The merged megabatch shape both halves pack (for load-time
+    /// cross-checks against the AOT artifact).
+    pub fn merged_shape(&self) -> Vec<usize> {
+        self.halves[0].lock().unwrap().merged_shape().to_vec()
     }
 }
 
@@ -205,6 +304,62 @@ mod tests {
         arena.pack_with(&|i| if i == 0 { Some(&a) } else { None }).unwrap();
         assert_eq!(&arena.merged_data()[..4], a.data());
         assert_eq!(&arena.merged_data()[4..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn absent_slots_skip_redundant_pad_copies() {
+        let mut rng = Rng::new(7);
+        let shape = [1usize, 4];
+        let x = Tensor::randn(&shape, &mut rng);
+        let mut arena = RoundArena::new(Layout::Batch, 2, &shape).unwrap();
+
+        // round 1: slot 1 absent, but its window is zero from
+        // construction — no pad copy needed
+        arena.pack_with(&|i| if i == 0 { Some(&x) } else { None }).unwrap();
+        assert_eq!(arena.pad_writes(), 0);
+        assert_eq!(&arena.merged_data()[4..], &[0.0; 4]);
+
+        // round 2: slot 1 occupied; round 3: absent again -> ONE pad copy
+        arena.pack_with(&|_| Some(&x)).unwrap();
+        arena.pack_with(&|i| if i == 0 { Some(&x) } else { None }).unwrap();
+        assert_eq!(arena.pad_writes(), 1);
+        assert_eq!(&arena.merged_data()[4..], &[0.0; 4]);
+
+        // round 4: still absent -> window already zero, copy skipped
+        arena.pack_with(&|i| if i == 0 { Some(&x) } else { None }).unwrap();
+        assert_eq!(arena.pad_writes(), 1);
+        assert_eq!(&arena.merged_data()[..4], x.data());
+        assert_eq!(&arena.merged_data()[4..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn arena_pair_hands_out_independent_halves() {
+        let pair = ArenaPair::new(Layout::Batch, 2, &[1, 4]).unwrap();
+        assert_eq!(pair.merged_shape(), vec![2, 1, 4]);
+
+        let mut rng = Rng::new(8);
+        let a = Tensor::randn(&[1, 4], &mut rng);
+        let b = Tensor::randn(&[1, 4], &mut rng);
+
+        // round N holds one half...
+        let mut first = pair.acquire();
+        first.pack_with(&|_| Some(&a)).unwrap();
+        // ...and round N+1 still packs without blocking (other half)
+        let mut second = pair.acquire();
+        second.pack_with(&|_| Some(&b)).unwrap();
+        assert_ne!(
+            first.merged_data().as_ptr(),
+            second.merged_data().as_ptr(),
+            "concurrent rounds must get distinct buffers"
+        );
+        assert_eq!(&first.merged_data()[..4], a.data());
+        assert_eq!(&second.merged_data()[..4], b.data());
+        drop(first);
+        drop(second);
+
+        // released halves are reacquirable
+        let third = pair.acquire();
+        assert_eq!(third.m(), 2);
     }
 
     #[test]

@@ -10,13 +10,22 @@
 //! - `NetFuse`    — one merged executable for all M models.
 //!
 //! The round data plane is zero-copy in steady state: [`arena`] owns the
-//! reusable megabatch + pad buffers, [`pool`] owns the persistent
-//! strategy workers, and `service::Fleet` wires both into the four
-//! strategies.
+//! reusable megabatch + pad buffers (double-buffered as an
+//! `arena::ArenaPair` so NETFUSE rounds overlap across threads),
+//! [`pool`] owns the persistent strategy workers (shareable across
+//! fleets), and `service::Fleet` wires both into the four strategies.
+//!
+//! Serving front ends: `server::Server` is the single-fleet router +
+//! batcher; [`multi`]'s `MultiServer` hosts several fleets as tenants
+//! of one machine — per-fleet lanes, fair round-ready dispatch, and one
+//! shared `WorkerPool` sized to the box. Both are generic over
+//! `service::RoundExecutor`, the slot-level round contract `Fleet`
+//! implements.
 
 pub mod arena;
 pub mod memory;
 pub mod metrics;
+pub mod multi;
 pub mod pool;
 pub mod request;
 pub mod service;
@@ -24,8 +33,9 @@ pub mod strategy;
 pub mod server;
 pub mod workload;
 
-pub use arena::{Layout, RoundArena};
+pub use arena::{ArenaPair, Layout, RoundArena};
+pub use multi::MultiServer;
 pub use pool::WorkerPool;
 pub use request::{Request, Response};
-pub use service::Fleet;
+pub use service::{Fleet, RoundExecutor};
 pub use strategy::StrategyKind;

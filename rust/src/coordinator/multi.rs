@@ -1,0 +1,139 @@
+//! `MultiServer`: several fleets served as tenants of one machine.
+//!
+//! The paper evaluates many merged fleets per GPU (§5), but PR 1's
+//! serving loop was single-tenant: one [`Server`] per fleet, and —
+//! because every fleet lazily spawned its own [`WorkerPool`] — one
+//! thread set per fleet, so an M1-fleet plus an M2-fleet cost M1+M2
+//! workers on a machine with far fewer cores.
+//!
+//! `MultiServer` fixes both:
+//! - **per-fleet lanes** — each fleet keeps its own router/batcher
+//!   ([`Server`]) with independent queues, strategy, and metrics;
+//! - **round-ready scheduling across fleets** — [`MultiServer::ready_lane`]
+//!   scans lanes for one whose round is due (full, or past its oldest
+//!   request's `max_wait` deadline);
+//! - **fair dispatch** — the scan starts after the last dispatched lane
+//!   (round-robin), so a lane with steady traffic cannot starve one
+//!   with sparse traffic;
+//! - **one shared `WorkerPool`** — load every fleet with
+//!   [`Fleet::load_with_pool`] and a single
+//!   [`WorkerPool::machine_sized`] handle, and all Concurrent/Hybrid
+//!   rounds dispatch onto one thread set sized to the machine instead
+//!   of one pool per fleet.
+//!
+//! Note on round overlap: `MultiServer` itself dispatches lanes one at
+//! a time (`dispatch_next` is `&mut self`), so it does NOT overlap
+//! NETFUSE rounds. The fleet's [`ArenaPair`] enables overlap for
+//! *concurrent* callers of `Fleet::run_round_slots` — e.g. one driver
+//! thread per lane, or the async ingress the ROADMAP lists —
+//! `benches/multi_fleet.rs` measures that win directly.
+//!
+//! Like [`Server`], the type is generic over [`RoundExecutor`] so the
+//! scheduling logic is testable without artifacts.
+//!
+//! [`Fleet::load_with_pool`]: super::service::Fleet::load_with_pool
+//! [`WorkerPool::machine_sized`]: super::pool::WorkerPool::machine_sized
+//! [`ArenaPair`]: super::arena::ArenaPair
+
+use anyhow::{bail, Result};
+
+use super::request::{Request, Response};
+use super::server::{Admit, Server, ServerConfig};
+use super::service::{Fleet, RoundExecutor};
+
+/// Multi-tenant serving front end: one [`Server`] lane per fleet, fair
+/// round-ready dispatch across lanes.
+pub struct MultiServer<'f, E: RoundExecutor = Fleet> {
+    lanes: Vec<Server<'f, E>>,
+    /// fair-dispatch cursor: the lane AFTER the last one dispatched is
+    /// scanned first
+    cursor: usize,
+}
+
+impl<'f, E: RoundExecutor> Default for MultiServer<'f, E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<'f, E: RoundExecutor> MultiServer<'f, E> {
+    pub fn new() -> MultiServer<'f, E> {
+        MultiServer { lanes: Vec::new(), cursor: 0 }
+    }
+
+    /// Register one fleet as a tenant; returns its lane index (the
+    /// handle used by [`MultiServer::offer`]).
+    pub fn add_lane(&mut self, fleet: &'f E, cfg: ServerConfig) -> usize {
+        self.lanes.push(Server::new(fleet, cfg));
+        self.lanes.len() - 1
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Per-lane router/batcher (queue state, metrics).
+    pub fn lane(&self, lane: usize) -> &Server<'f, E> {
+        &self.lanes[lane]
+    }
+
+    /// Route one request to `lane`'s per-model queues.
+    pub fn offer(&mut self, lane: usize, req: Request) -> Result<Admit> {
+        if lane >= self.lanes.len() {
+            bail!("no lane {lane} (have {})", self.lanes.len());
+        }
+        Ok(self.lanes[lane].offer(req))
+    }
+
+    /// Total queued requests across all lanes.
+    pub fn pending(&self) -> usize {
+        self.lanes.iter().map(|l| l.pending()).sum()
+    }
+
+    /// The next lane whose round is due, scanning fairly from the
+    /// cursor: a lane is due when every model has work or its oldest
+    /// queued request has waited past that lane's `max_wait`.
+    pub fn ready_lane(&self) -> Option<usize> {
+        let n = self.lanes.len();
+        (0..n)
+            .map(|k| (self.cursor + k) % n)
+            .find(|&i| self.lanes[i].round_ready())
+    }
+
+    /// Dispatch the next due lane, appending its responses to
+    /// `responses`. Returns `Some((lane, responses_appended))`, or
+    /// `None` when no lane is due yet. A failed round requeues its
+    /// requests inside the lane (original FIFO order and wait clocks)
+    /// and surfaces the error; the cursor still advances past the lane
+    /// so a persistently failing fleet cannot starve the others.
+    pub fn dispatch_next(
+        &mut self,
+        responses: &mut Vec<Response>,
+    ) -> Result<Option<(usize, usize)>> {
+        let Some(lane) = self.ready_lane() else {
+            return Ok(None);
+        };
+        self.cursor = (lane + 1) % self.lanes.len();
+        let n = self.lanes[lane].dispatch_into(responses)?;
+        Ok(Some((lane, n)))
+    }
+
+    /// Dispatch (padded) rounds until every queue on every lane is
+    /// empty, appending all responses. Returns the number of responses.
+    /// Unlike [`MultiServer::dispatch_next`], this drains lanes whose
+    /// rounds are not yet due — it is the shutdown/flush path.
+    pub fn drain(&mut self, responses: &mut Vec<Response>) -> Result<usize> {
+        let mut total = 0;
+        while self.pending() > 0 {
+            // round-robin over lanes with work so the flush stays fair
+            let n = self.lanes.len();
+            let lane = (0..n)
+                .map(|k| (self.cursor + k) % n)
+                .find(|&i| self.lanes[i].pending() > 0)
+                .expect("pending() > 0 implies some lane has work");
+            self.cursor = (lane + 1) % n;
+            total += self.lanes[lane].dispatch_into(responses)?;
+        }
+        Ok(total)
+    }
+}

@@ -3,11 +3,20 @@
 //! The seed spawned fresh OS threads inside every round
 //! (`std::thread::scope` in `run_chunked`), so those baselines measured
 //! thread-creation cost as much as strategy cost. The pool spawns its
-//! workers once per `Fleet` and feeds them jobs over a shared queue; a
-//! round is a [`WorkerPool::scope`] call that blocks until every job of
-//! the round has completed, which is what makes handing *borrowed* jobs
-//! to long-lived threads sound (same contract as `std::thread::scope`,
+//! workers once and feeds them jobs over a shared queue; a round is a
+//! [`WorkerPool::scope`] call that blocks until every job of the round
+//! has completed, which is what makes handing *borrowed* jobs to
+//! long-lived threads sound (same contract as `std::thread::scope`,
 //! without the per-round spawn/join).
+//!
+//! Ownership is an `Arc` handle so ONE pool can back many fleets: pass
+//! [`WorkerPool::shared`] (or [`WorkerPool::machine_sized`]) to
+//! `Fleet::load_with_pool` for every fleet a `MultiServer` serves, and
+//! the machine pays for one thread set sized to its cores instead of
+//! one per fleet. `run_chunked` is `&self` and each job runs to
+//! completion independently (no job ever re-enters the pool), so
+//! concurrent rounds from different fleets interleave safely on the
+//! same workers.
 
 use std::any::Any;
 use std::collections::VecDeque;
@@ -116,6 +125,28 @@ impl WorkerPool {
         };
         pool.ensure_workers(workers);
         pool
+    }
+
+    /// Spawn `workers` threads behind a shareable handle — the form
+    /// multi-fleet serving wants: clone the `Arc` into each
+    /// `Fleet::load_with_pool` so every fleet dispatches onto the same
+    /// thread set.
+    pub fn shared(workers: usize) -> Arc<WorkerPool> {
+        Arc::new(WorkerPool::new(workers))
+    }
+
+    /// A shared pool initially sized to the machine (one worker per
+    /// available hardware thread) — the right default for a
+    /// `MultiServer` hosting several fleets on one box. Note the size
+    /// is a starting point, not a cap: a `Concurrent` fleet with
+    /// m > cores still grows the pool to m via `ensure_workers`,
+    /// because that strategy's contract is one unsynchronized worker
+    /// per model (the paper's process-per-model baseline). Use
+    /// `Hybrid { procs }` to bound a fleet's parallelism to the
+    /// machine.
+    pub fn machine_sized() -> Arc<WorkerPool> {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        WorkerPool::shared(n)
     }
 
     /// Grow the pool to at least `n` workers (never shrinks). Lets a

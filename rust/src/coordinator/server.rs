@@ -11,6 +11,17 @@
 //! discarded, which is exactly what the paper's fixed merged graph
 //! implies). Bounded queues provide backpressure.
 //!
+//! The `max_wait` batching deadline derives from the **oldest queued
+//! request's `arrived` timestamp**, recomputed from the queue fronts on
+//! every [`Server::round_ready`] check. (An earlier version kept a
+//! single `oldest_wait_start: Instant` that was overwritten with
+//! `Instant::now()` on every dispatch — a request left queued behind a
+//! dispatched one had its wait clock silently restarted each round,
+//! violating the latency SLO under steady traffic.)
+//!
+//! The server is generic over [`RoundExecutor`] (default: [`Fleet`]) so
+//! the batching/requeue logic is testable without artifacts.
+//!
 //! Dispatch scratch (`slots`, `outs`, and the response buffer used by
 //! [`Server::run_rounds`]) lives on the server and is cleared, not
 //! reallocated, each round. On the NETFUSE strategy the host-side
@@ -28,7 +39,7 @@ use crate::tensor::Tensor;
 
 use super::metrics::Metrics;
 use super::request::{Request, Response};
-use super::service::Fleet;
+use super::service::{Fleet, RoundExecutor};
 use super::strategy::StrategyKind;
 
 #[derive(Debug, Clone)]
@@ -66,31 +77,38 @@ pub enum Admit {
 }
 
 /// Single-tenant-fleet server: router + batcher + strategy executor.
-pub struct Server<'f> {
-    fleet: &'f Fleet,
+pub struct Server<'f, E: RoundExecutor = Fleet> {
+    fleet: &'f E,
     cfg: ServerConfig,
     queues: Vec<VecDeque<Request>>,
     /// per-round slot scratch (one popped request per instance), reused
     slots: Vec<Option<Request>>,
     /// per-round output scratch, reused
     outs: Vec<Option<Tensor>>,
-    oldest_wait_start: Option<Instant>,
     pub metrics: Metrics,
 }
 
-impl<'f> Server<'f> {
-    pub fn new(fleet: &'f Fleet, cfg: ServerConfig) -> Server<'f> {
+impl<'f, E: RoundExecutor> Server<'f, E> {
+    pub fn new(fleet: &'f E, cfg: ServerConfig) -> Server<'f, E> {
         let cfg = ServerConfig { queue_cap: cfg.queue_cap.max(1), ..cfg };
-        let metrics = Metrics::new(cfg.strategy, &fleet.model, fleet.m, fleet.bs);
+        let metrics = Metrics::new(cfg.strategy, fleet.name(), fleet.m(), fleet.bs());
         Server {
             fleet,
             cfg,
-            queues: (0..fleet.m).map(|_| VecDeque::new()).collect(),
-            slots: Vec::with_capacity(fleet.m),
-            outs: Vec::with_capacity(fleet.m),
-            oldest_wait_start: None,
+            queues: (0..fleet.m()).map(|_| VecDeque::new()).collect(),
+            slots: Vec::with_capacity(fleet.m()),
+            outs: Vec::with_capacity(fleet.m()),
             metrics,
         }
+    }
+
+    /// The executor this server dispatches onto.
+    pub fn fleet(&self) -> &'f E {
+        self.fleet
+    }
+
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
     }
 
     /// Route one request to its model queue.
@@ -100,9 +118,10 @@ impl<'f> Server<'f> {
         // rejected here, per request, rather than failing (and being
         // requeued with) an entire round at dispatch
         let shape = req.input.shape();
-        if req.model_idx >= self.fleet.m
-            || shape.first() != Some(&self.fleet.bs)
-            || shape[1..] != self.fleet.graph.input_shape[..]
+        let bs = self.fleet.bs();
+        if req.model_idx >= self.fleet.m()
+            || shape.first() != Some(&bs)
+            || shape[1..] != self.fleet.input_shape()[..]
         {
             return Admit::Invalid;
         }
@@ -111,9 +130,6 @@ impl<'f> Server<'f> {
             return Admit::Rejected;
         }
         q.push_back(req);
-        if self.oldest_wait_start.is_none() {
-            self.oldest_wait_start = Some(Instant::now());
-        }
         Admit::Queued
     }
 
@@ -121,16 +137,30 @@ impl<'f> Server<'f> {
         self.queues.iter().map(|q| q.len()).sum()
     }
 
+    /// Arrival time of the oldest queued request, derived from the
+    /// queue fronts (each queue is FIFO, so its front is its oldest;
+    /// failed-round requeues push_front, restoring the original order).
+    /// This is the `max_wait` clock — per request, never reset by a
+    /// dispatch.
+    fn oldest_arrival(&self) -> Option<Instant> {
+        self.queues.iter().filter_map(|q| q.front()).map(|r| r.arrived).min()
+    }
+
     /// True when a round should dispatch: either every model has work, or
-    /// the oldest queued request has waited past `max_wait`.
+    /// the oldest queued request has waited past `max_wait` since it
+    /// ARRIVED (not since the last dispatch — a request left queued
+    /// behind a dispatched one keeps its original deadline).
     pub fn round_ready(&self) -> bool {
+        // nothing queued -> never ready (also keeps a degenerate
+        // m() == 0 executor from making the all-non-empty check
+        // vacuously true and spinning dispatch loops forever)
         if self.pending() == 0 {
             return false;
         }
         if self.queues.iter().all(|q| !q.is_empty()) {
             return true;
         }
-        match self.oldest_wait_start {
+        match self.oldest_arrival() {
             Some(t) => t.elapsed() >= self.cfg.max_wait,
             None => false,
         }
@@ -151,11 +181,10 @@ impl<'f> Server<'f> {
         for q in self.queues.iter_mut() {
             self.slots.push(q.pop_front());
         }
-        self.oldest_wait_start = if self.pending() > 0 {
-            Some(Instant::now())
-        } else {
-            None
-        };
+        // NOTE: no batching-clock bookkeeping here — the `max_wait`
+        // deadline is derived per request from `arrived` in
+        // `round_ready`, so requests left queued (or requeued by a
+        // failed round) keep their original wait clocks.
 
         let slots = &self.slots;
         let get = |i: usize| slots[i].as_ref().map(|r| &r.input);
@@ -170,17 +199,17 @@ impl<'f> Server<'f> {
             // fleet/runtime-level, not attributable to one request —
             // the caller decides whether to retry or tear down.
             self.requeue_slots();
-            self.oldest_wait_start = Some(t0);
             return Err(e);
         }
         // verify every occupied slot has an output BEFORE consuming any,
-        // so a violated strategy invariant requeues the whole round
-        // instead of dropping the requests taken so far
+        // so a violated strategy invariant (a missing or short `outs`,
+        // e.g. from a custom RoundExecutor) requeues the whole round
+        // instead of dropping the requests taken so far — or panicking
+        // on an out-of-bounds index
         if let Some(i) = (0..self.slots.len())
-            .find(|&i| self.slots[i].is_some() && self.outs[i].is_none())
+            .find(|&i| self.slots[i].is_some() && !matches!(self.outs.get(i), Some(Some(_))))
         {
             self.requeue_slots();
-            self.oldest_wait_start = Some(t0);
             bail!("model {i} produced no output for an occupied slot");
         }
         self.metrics.record_round(t0.elapsed().as_secs_f64());
@@ -222,7 +251,7 @@ impl<'f> Server<'f> {
         F: FnMut() -> Vec<Request>,
     {
         let mut total = 0;
-        let mut buf = Vec::with_capacity(self.fleet.m);
+        let mut buf = Vec::with_capacity(self.fleet.m());
         for _ in 0..rounds {
             for req in make_round() {
                 // backpressure: a full target queue forces (padded)

@@ -5,19 +5,28 @@
 //! of M requests produces identical outputs either way.
 //!
 //! Round data plane (zero-copy pipeline):
-//! - a [`RoundArena`] allocated once at [`Fleet::load`] holds the merged
-//!   megabatch and the pad block; [`Fleet::pack_into`] writes request
-//!   payloads straight into their windows (no concat/stack allocation);
-//! - the megabatch is handed to PJRT via `Bound::run_raw` without an
-//!   intermediate `Tensor`;
+//! - an [`ArenaPair`] (double-buffered [`RoundArena`]) allocated once at
+//!   [`Fleet::load`] holds two merged megabatches and pad blocks;
+//!   [`Fleet::pack_into`] writes request payloads straight into their
+//!   windows (no concat/stack allocation). A NETFUSE round reserves one
+//!   half for pack + stage + execute, so a second thread packs round
+//!   N+1 into the other half while round N is still in flight;
+//! - the megabatch is handed to PJRT via `Bound::stage`/`run_staged`
+//!   without an intermediate `Tensor`;
 //! - [`Fleet::unpack`] returns borrowed [`TensorView`]s into the merged
 //!   output; only occupied slots are promoted to owned tensors;
-//! - `Concurrent`/`Hybrid` rounds run on a persistent [`WorkerPool`]
-//!   spawned once per fleet (lazily, on the first round that needs
-//!   it), not on per-round OS threads.
+//! - `Concurrent`/`Hybrid` rounds run on a persistent [`WorkerPool`].
+//!   The pool is a shared `Arc` handle: by default it is spawned lazily
+//!   per fleet on the first round that needs it, but
+//!   [`Fleet::load_with_pool`] accepts one machine-sized pool that any
+//!   number of fleets (a `MultiServer` tenancy) dispatch onto.
+//!
+//! [`RoundExecutor`] abstracts the slot-level round contract the
+//! serving loop needs, so `Server`/`MultiServer` batching logic is
+//! testable without AOT artifacts or a PJRT backend.
 
 use std::collections::BTreeMap;
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{bail, Context, Result};
 
@@ -26,9 +35,32 @@ use crate::graph::Graph;
 use crate::runtime::{Bound, Manifest, Runtime};
 use crate::tensor::{io::read_nft, Tensor, TensorView};
 
-use super::arena::{Layout, RoundArena};
+use super::arena::{ArenaPair, Layout, RoundArena};
 use super::pool::WorkerPool;
 use super::strategy::StrategyKind;
+
+/// The slot-level round contract the serving loop dispatches against:
+/// everything `Server`/`MultiServer` need from a fleet. `Fleet` is the
+/// production implementation; tests substitute artifact-free mocks so
+/// the router/batcher logic runs everywhere (including offline CI).
+pub trait RoundExecutor: Sync {
+    /// Display name (metrics/reporting).
+    fn name(&self) -> &str;
+    /// Number of model instances (one queue slot each per round).
+    fn m(&self) -> usize;
+    /// Per-request batch size (leading payload dimension).
+    fn bs(&self) -> usize;
+    /// Per-request input shape EXCLUDING the leading batch dimension.
+    fn input_shape(&self) -> &[usize];
+    /// Execute one (possibly padded) round; the contract of
+    /// [`Fleet::run_round_slots`].
+    fn run_round_slots<'a>(
+        &self,
+        strategy: StrategyKind,
+        get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
+        outs: &mut Vec<Option<Tensor>>,
+    ) -> Result<()>;
+}
 
 /// A fleet of M instances of one model family at a fixed batch size.
 pub struct Fleet {
@@ -45,12 +77,14 @@ pub struct Fleet {
     singles: Vec<Bound>,
     /// the NETFUSE executable with Rust-stacked merged weights
     fused: Bound,
-    /// round-lifetime staging buffers, reused every round
-    arena: Mutex<RoundArena>,
-    /// persistent strategy workers, spawned once on the first
-    /// Concurrent/Hybrid round (Sequential/NetFuse fleets never pay
-    /// the M thread spawns)
-    pool: OnceLock<WorkerPool>,
+    /// double-buffered round-lifetime staging buffers, reused every
+    /// round; two halves so rounds from different threads overlap
+    arenas: ArenaPair,
+    /// persistent strategy workers. Either a machine-wide pool shared
+    /// across fleets (installed by [`Fleet::load_with_pool`]) or a
+    /// fleet-private one spawned lazily on the first Concurrent/Hybrid
+    /// round (Sequential/NetFuse fleets never pay the M thread spawns).
+    pool: OnceLock<Arc<WorkerPool>>,
     /// manifest memory numbers for the memory model
     pub single_weights_bytes: u64,
     pub single_act_bytes: u64,
@@ -64,6 +98,29 @@ impl Fleet {
     /// Algorithm 1 + weight merge).
     pub fn load(rt: &Runtime, model: &str, m: usize, bs: usize) -> Result<Fleet> {
         Self::load_with(rt, model, m, bs, "")
+    }
+
+    /// Like [`Fleet::load_with`], but dispatches Concurrent/Hybrid
+    /// rounds onto `pool` instead of spawning a fleet-private one —
+    /// the multi-tenant form: every fleet a [`MultiServer`] serves
+    /// shares ONE machine-sized [`WorkerPool`]
+    /// ([`WorkerPool::machine_sized`]).
+    ///
+    /// [`MultiServer`]: super::multi::MultiServer
+    pub fn load_with_pool(
+        rt: &Runtime,
+        model: &str,
+        m: usize,
+        bs: usize,
+        suffix: &str,
+        pool: Arc<WorkerPool>,
+    ) -> Result<Fleet> {
+        let fleet = Self::load_with(rt, model, m, bs, suffix)?;
+        fleet
+            .pool
+            .set(pool)
+            .map_err(|_| anyhow::anyhow!("fleet pool already initialized"))?;
+        Ok(fleet)
     }
 
     /// `suffix` selects artifact variants (e.g. "_pallas" for the
@@ -109,13 +166,13 @@ impl Fleet {
         let packing = Layout::parse(&layout)?;
         let mut request_shape = vec![bs];
         request_shape.extend_from_slice(&entry.graph.input_shape);
-        let arena = RoundArena::new(packing, m, &request_shape)?;
-        // the arena's derived megabatch shape must agree with what the
+        let arenas = ArenaPair::new(packing, m, &request_shape)?;
+        // the arenas' derived megabatch shape must agree with what the
         // AOT side lowered, or packing would feed the wrong windows
-        if arena.merged_shape() != fused.art().input_shape.as_slice() {
+        if arenas.merged_shape() != fused.art().input_shape {
             bail!(
                 "{fused_name}: arena packs {:?}, artifact expects {:?}",
-                arena.merged_shape(),
+                arenas.merged_shape(),
                 fused.art().input_shape
             );
         }
@@ -134,9 +191,15 @@ impl Fleet {
             fused_act_bytes: fused.art().act_bytes,
             singles,
             fused,
-            arena: Mutex::new(arena),
+            arenas,
             pool: OnceLock::new(),
         })
+    }
+
+    /// The worker pool handle this fleet dispatches Concurrent/Hybrid
+    /// rounds onto, if one has been installed or lazily spawned yet.
+    pub fn shared_pool(&self) -> Option<&Arc<WorkerPool>> {
+        self.pool.get()
     }
 
     /// Pack one round of slot payloads into `arena`'s megabatch
@@ -204,6 +267,9 @@ impl Fleet {
         get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
         outs: &mut Vec<Option<Tensor>>,
     ) -> Result<()> {
+        // catch strategies built directly (bypassing StrategyKind::parse)
+        // before any queue slot is consumed
+        strategy.validate()?;
         outs.clear();
         match strategy {
             StrategyKind::Sequential => {
@@ -221,15 +287,17 @@ impl Fleet {
             }
             StrategyKind::NetFuse => {
                 let y = {
-                    let mut arena = self.arena.lock().unwrap();
+                    // reserve ONE arena half for this round: the guard
+                    // spans pack + stage + execute because PJRT
+                    // host-buffer semantics may defer the H2D copy, so
+                    // the staged megabatch must not be repacked until
+                    // the round completes (`StagedInput` borrows the
+                    // half through the guard). The OTHER half stays
+                    // free, so a concurrent round packs and stages
+                    // while this one is still in flight — the
+                    // cross-round overlap PR 1 couldn't do.
+                    let mut arena = self.arenas.acquire();
                     self.pack_into(&mut arena, get)?;
-                    // stage straight off the arena buffer: the megabatch
-                    // upload is the round's only remaining host copy.
-                    // Execution stays under the lock: PJRT host-buffer
-                    // semantics may defer the H2D copy, so the megabatch
-                    // must not be repacked until the round completes —
-                    // cross-thread round overlap needs double-buffered
-                    // arenas (see ROADMAP).
                     let staged =
                         self.fused.stage(arena.merged_shape(), arena.merged_data())?;
                     self.fused.run_staged(&staged)?
@@ -255,8 +323,10 @@ impl Fleet {
         outs: &mut Vec<Option<Tensor>>,
     ) -> Result<()> {
         // size the pool to what this strategy actually uses; a later
-        // wider strategy (e.g. Concurrent after Hybrid) grows it
-        let pool = self.pool.get_or_init(|| WorkerPool::new(procs));
+        // wider strategy (e.g. Concurrent after Hybrid) grows it. A
+        // pool installed by load_with_pool is shared across fleets and
+        // never duplicated here.
+        let pool = self.pool.get_or_init(|| WorkerPool::shared(procs));
         pool.ensure_workers(procs);
         let results = pool.run_chunked(self.m, procs, |i| match get(i) {
             Some(x) => self.singles[i].run(x).map(Some),
@@ -281,6 +351,29 @@ impl Fleet {
         let mut s = vec![self.bs];
         s.extend_from_slice(&self.graph.input_shape);
         s
+    }
+}
+
+impl RoundExecutor for Fleet {
+    fn name(&self) -> &str {
+        &self.model
+    }
+    fn m(&self) -> usize {
+        self.m
+    }
+    fn bs(&self) -> usize {
+        self.bs
+    }
+    fn input_shape(&self) -> &[usize] {
+        &self.graph.input_shape
+    }
+    fn run_round_slots<'a>(
+        &self,
+        strategy: StrategyKind,
+        get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
+        outs: &mut Vec<Option<Tensor>>,
+    ) -> Result<()> {
+        Fleet::run_round_slots(self, strategy, get, outs)
     }
 }
 

@@ -48,6 +48,18 @@ impl StrategyKind {
         })
     }
 
+    /// Reject configurations that only `parse` used to catch:
+    /// `Hybrid { procs: 0 }` can be built directly (bypassing
+    /// [`StrategyKind::parse`]) and would otherwise be silently clamped
+    /// to one worker deep in the dispatch path. Round executors call
+    /// this at their entry so the misconfiguration fails loudly instead.
+    pub fn validate(&self) -> Result<()> {
+        if let StrategyKind::Hybrid { procs: 0 } = self {
+            bail!("hybrid strategy needs >= 1 proc (got procs: 0)");
+        }
+        Ok(())
+    }
+
     /// Number of "processes" the memory model charges base memory for.
     pub fn processes(&self, m: usize) -> usize {
         match self {
@@ -94,6 +106,21 @@ mod tests {
             StrategyKind::NetFuse,
         ] {
             assert_eq!(StrategyKind::parse(&s.to_string()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_directly_built_zero_procs() {
+        // `hybrid:0` is unparseable, but the literal can be constructed
+        let err = StrategyKind::Hybrid { procs: 0 }.validate().unwrap_err();
+        assert!(err.to_string().contains(">= 1 proc"), "got: {err}");
+        for ok in [
+            StrategyKind::Sequential,
+            StrategyKind::Concurrent,
+            StrategyKind::Hybrid { procs: 1 },
+            StrategyKind::NetFuse,
+        ] {
+            ok.validate().unwrap();
         }
     }
 

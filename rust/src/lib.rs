@@ -33,13 +33,24 @@
 //! - [`coordinator`] — router, batcher, strategies, memory accounting,
 //!   metrics, workload generation, serving loop. The round data plane:
 //!   `coordinator::arena::RoundArena` owns the reusable megabatch + pad
-//!   block (packing is one in-place copy per round, zero allocations);
-//!   `coordinator::pool::WorkerPool` owns the persistent
-//!   Concurrent/Hybrid workers (created lazily per `Fleet`, sized to
-//!   the parallelism actually requested, fed borrowed round-scoped
-//!   jobs); `Fleet::unpack` hands out `TensorView`s into
-//!   the merged output, promoted to owned tensors only for occupied
-//!   response slots.
+//!   block (packing is one in-place copy per round, zero allocations,
+//!   and windows already zeroed by a previous padded round skip even
+//!   that); `coordinator::arena::ArenaPair` double-buffers it so one
+//!   thread packs round N+1 while round N's staged megabatch is still
+//!   in flight; `coordinator::pool::WorkerPool` owns the persistent
+//!   Concurrent/Hybrid workers (created lazily per `Fleet`, or ONE
+//!   machine-sized pool shared by many fleets via
+//!   `Fleet::load_with_pool`, fed borrowed round-scoped jobs);
+//!   `Fleet::unpack` hands out `TensorView`s into the merged output,
+//!   promoted to owned tensors only for occupied response slots.
+//!   Serving front ends: `coordinator::server::Server` (single fleet)
+//!   and `coordinator::multi::MultiServer` (several fleets as tenants
+//!   of one machine — per-fleet lanes, fair round-ready dispatch
+//!   across lanes, one shared worker pool). Both are generic over
+//!   `coordinator::RoundExecutor`, so the batching/requeue/scheduling
+//!   logic runs under test without AOT artifacts. The `max_wait`
+//!   batching deadline is derived per request from its arrival time
+//!   (never reset by a dispatch).
 //! - [`devmodel`] — analytical V100 / TITAN Xp device model (reproduces
 //!   the paper's GPU-shaped figures; we have no GPU).
 //! - [`rewriter`] — miniature TASO-like greedy graph rewriter (the §2.2

@@ -120,6 +120,12 @@ impl PjRtClient {
         match self.0 {}
     }
 
+    /// Real-crate contract mirrored here: the host buffer may be read
+    /// LAZILY (the H2D copy can be deferred until execution), so
+    /// callers must keep `data` live and unmodified until the returned
+    /// buffer has been executed. `Bound::stage` encodes that as a
+    /// borrowed `StagedInput<'a>`, and the coordinator's `ArenaPair`
+    /// keeps the packed half locked for the same span.
     pub fn buffer_from_host_buffer<T>(
         &self,
         _data: &[T],

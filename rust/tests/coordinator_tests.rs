@@ -1,10 +1,22 @@
-//! Coordinator integration tests over real artifacts: strategy
-//! equivalence, the serving loop (routing, padding, backpressure) and
-//! failure handling.
+//! Coordinator integration tests: strategy equivalence, the serving
+//! loop (routing, padding, backpressure), failure handling, and
+//! multi-fleet serving.
+//!
+//! Tests over real artifacts skip when `artifacts/` is absent; the
+//! batching/requeue/scheduling tests run everywhere by substituting
+//! [`MockFleet`], an artifact-free `RoundExecutor`.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
+use anyhow::Result;
+
+use netfuse::coordinator::multi::MultiServer;
+use netfuse::coordinator::pool::WorkerPool;
 use netfuse::coordinator::server::{Admit, Server, ServerConfig};
+use netfuse::coordinator::service::RoundExecutor;
 use netfuse::coordinator::workload::Workload;
 use netfuse::coordinator::{Fleet, Request, StrategyKind};
 use netfuse::runtime::Runtime;
@@ -242,6 +254,297 @@ fn hybrid_procs_variants_all_work() {
             assert!(a.allclose(b, 1e-3, 1e-4), "hybrid:{procs} diverges");
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// artifact-free serving-loop tests over a mock RoundExecutor
+// ---------------------------------------------------------------------------
+
+/// Artifact-free executor: echoes each occupied slot's payload back as
+/// its output, dispatching Concurrent/Hybrid chunks on a (possibly
+/// shared) [`WorkerPool`] exactly like `Fleet::run_chunked` does.
+struct MockFleet {
+    name: String,
+    m: usize,
+    input_shape: Vec<usize>,
+    pool: Arc<WorkerPool>,
+    /// fail the next N rounds (failure-path tests)
+    fail_rounds: AtomicUsize,
+}
+
+impl MockFleet {
+    fn new(name: &str, m: usize, pool: Arc<WorkerPool>) -> MockFleet {
+        MockFleet {
+            name: name.to_string(),
+            m,
+            input_shape: vec![4],
+            pool,
+            fail_rounds: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl RoundExecutor for MockFleet {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn m(&self) -> usize {
+        self.m
+    }
+    fn bs(&self) -> usize {
+        1
+    }
+    fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+    fn run_round_slots<'a>(
+        &self,
+        strategy: StrategyKind,
+        get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
+        outs: &mut Vec<Option<Tensor>>,
+    ) -> Result<()> {
+        strategy.validate()?;
+        if self.fail_rounds.load(Ordering::SeqCst) > 0 {
+            self.fail_rounds.fetch_sub(1, Ordering::SeqCst);
+            anyhow::bail!("injected round failure");
+        }
+        outs.clear();
+        let procs = match strategy {
+            StrategyKind::Concurrent => self.m,
+            StrategyKind::Hybrid { procs } => procs.min(self.m),
+            _ => 1,
+        };
+        if procs > 1 {
+            self.pool.ensure_workers(procs);
+            let results = self.pool.run_chunked(self.m, procs, |i| Ok(get(i).cloned()))?;
+            outs.extend(results);
+        } else {
+            for i in 0..self.m {
+                outs.push(get(i).cloned());
+            }
+        }
+        Ok(())
+    }
+}
+
+fn payload() -> Tensor {
+    Tensor::zeros(&[1, 4])
+}
+
+#[test]
+fn batching_clock_tracks_oldest_queued_request() {
+    // REGRESSION (max_wait batching-clock bug): the server used to keep
+    // a single `oldest_wait_start: Instant` that `dispatch_into`
+    // overwrote with `Instant::now()` on every dispatch — a request
+    // left queued behind a dispatched one had its wait clock silently
+    // restarted each round, so under steady traffic its latency could
+    // grow far past `max_wait`. The deadline must derive from the
+    // oldest queued request's own `arrived` timestamp.
+    let fleet = MockFleet::new("mock", 2, WorkerPool::shared(1));
+    let max_wait = Duration::from_millis(40);
+    let mut server = Server::new(
+        &fleet,
+        ServerConfig { strategy: StrategyKind::Sequential, max_wait, ..Default::default() },
+    );
+    // a lone request on model 0 plus steady traffic on model 1 (two
+    // arrivals queued back to back)
+    assert_eq!(server.offer(Request::new(0, 0, payload())), Admit::Queued);
+    assert_eq!(server.offer(Request::new(1, 1, payload())), Admit::Queued);
+    assert_eq!(server.offer(Request::new(2, 1, payload())), Admit::Queued);
+    std::thread::sleep(max_wait + Duration::from_millis(20));
+
+    // full round: pops the model-0 request and the FIRST model-1
+    // request; request 2 stays queued and has already waited > max_wait
+    assert!(server.round_ready());
+    let first = server.dispatch().unwrap();
+    assert_eq!(first.len(), 2);
+
+    // the old logic reset the clock to the dispatch instant here, so
+    // this returned false and request 2 waited another full max_wait
+    assert!(
+        server.round_ready(),
+        "a request queued past max_wait must make the next round due immediately"
+    );
+    let second = server.dispatch().unwrap();
+    assert_eq!(second.len(), 1);
+    assert_eq!(second[0].id, 2);
+    assert!(
+        second[0].latency >= max_wait.as_secs_f64(),
+        "latency accounting must reflect the real wait"
+    );
+}
+
+#[test]
+fn failed_round_requeues_fifo_and_next_dispatch_returns_them() {
+    let fleet = MockFleet::new("mock", 2, WorkerPool::shared(2));
+    let mut server = Server::new(
+        &fleet,
+        ServerConfig { strategy: StrategyKind::Concurrent, ..Default::default() },
+    );
+    for (id, model) in [(1u64, 0usize), (2, 0), (3, 1), (4, 1)] {
+        assert_eq!(server.offer(Request::new(id, model, payload())), Admit::Queued);
+    }
+    fleet.fail_rounds.store(1, Ordering::SeqCst);
+    let err = server.dispatch().unwrap_err();
+    assert!(err.to_string().contains("injected round failure"), "got: {err}");
+    assert_eq!(server.pending(), 4, "failed round must not drop requests");
+
+    // FIFO restored per queue: the next successful dispatch returns the
+    // ORIGINAL fronts (1 and 3), then the tails (2 and 4)
+    let round1 = server.dispatch().unwrap();
+    let mut ids: Vec<u64> = round1.iter().map(|r| r.id).collect();
+    ids.sort();
+    assert_eq!(ids, vec![1, 3], "requeue must restore per-queue FIFO order");
+    let round2 = server.dispatch().unwrap();
+    let mut ids: Vec<u64> = round2.iter().map(|r| r.id).collect();
+    ids.sort();
+    assert_eq!(ids, vec![2, 4]);
+    assert_eq!(server.pending(), 0);
+}
+
+#[test]
+fn hybrid_zero_procs_fails_loudly_and_keeps_requests() {
+    // Hybrid { procs: 0 } can be built directly, bypassing
+    // StrategyKind::parse — it must fail at dispatch with a clear
+    // error instead of being silently clamped, and must not eat the
+    // round's requests
+    let fleet = MockFleet::new("mock", 2, WorkerPool::shared(1));
+    let mut server = Server::new(
+        &fleet,
+        ServerConfig { strategy: StrategyKind::Hybrid { procs: 0 }, ..Default::default() },
+    );
+    assert_eq!(server.offer(Request::new(0, 0, payload())), Admit::Queued);
+    assert_eq!(server.offer(Request::new(1, 1, payload())), Admit::Queued);
+    let err = server.dispatch().unwrap_err();
+    assert!(err.to_string().contains(">= 1 proc"), "got: {err}");
+    assert_eq!(server.pending(), 2, "misconfigured strategy must not drop requests");
+}
+
+#[test]
+fn multi_server_shares_one_worker_pool_across_fleets() {
+    let pool = WorkerPool::shared(1);
+    let wide = MockFleet::new("fleet-wide", 4, pool.clone());
+    let narrow = MockFleet::new("fleet-narrow", 3, pool.clone());
+    let mut multi = MultiServer::new();
+    let a = multi.add_lane(
+        &wide,
+        ServerConfig { strategy: StrategyKind::Concurrent, ..Default::default() },
+    );
+    let b = multi.add_lane(
+        &narrow,
+        ServerConfig { strategy: StrategyKind::Hybrid { procs: 2 }, ..Default::default() },
+    );
+    for i in 0..4 {
+        assert_eq!(multi.offer(a, Request::new(i as u64, i, payload())).unwrap(), Admit::Queued);
+    }
+    for i in 0..3 {
+        assert_eq!(
+            multi.offer(b, Request::new(10 + i as u64, i, payload())).unwrap(),
+            Admit::Queued
+        );
+    }
+    let mut responses = Vec::new();
+    let served = multi.drain(&mut responses).unwrap();
+    assert_eq!(served, 7);
+    assert!(responses.iter().all(|r| r.output.shape() == &[1, 4]));
+    // ONE pool served both fleets: grown to the widest strategy's
+    // parallelism (Concurrent over m=4), NOT the 4 + 2 threads a
+    // pool-per-fleet design would spawn
+    assert_eq!(pool.workers(), 4);
+    assert_eq!(multi.lane(a).metrics.completed_requests, 4);
+    assert_eq!(multi.lane(b).metrics.completed_requests, 3);
+}
+
+#[test]
+fn multi_server_fair_dispatch_alternates_ready_lanes() {
+    let pool = WorkerPool::shared(1);
+    let f1 = MockFleet::new("fleet-a", 2, pool.clone());
+    let f2 = MockFleet::new("fleet-b", 2, pool);
+    let mut multi = MultiServer::new();
+    let a = multi.add_lane(
+        &f1,
+        ServerConfig { strategy: StrategyKind::Sequential, ..Default::default() },
+    );
+    let b = multi.add_lane(
+        &f2,
+        ServerConfig { strategy: StrategyKind::Sequential, ..Default::default() },
+    );
+    // both lanes loaded with 3 full rounds each: both are permanently
+    // "ready", so only fair scheduling decides who goes next
+    let mut id = 0u64;
+    for _ in 0..3 {
+        for model in 0..2 {
+            assert_eq!(multi.offer(a, Request::new(id, model, payload())).unwrap(), Admit::Queued);
+            id += 1;
+            assert_eq!(multi.offer(b, Request::new(id, model, payload())).unwrap(), Admit::Queued);
+            id += 1;
+        }
+    }
+    let mut responses = Vec::new();
+    let mut order = Vec::new();
+    while let Some((lane, n)) = multi.dispatch_next(&mut responses).unwrap() {
+        assert_eq!(n, 2);
+        order.push(lane);
+    }
+    assert_eq!(order, vec![0, 1, 0, 1, 0, 1], "dispatch must alternate ready lanes");
+    assert_eq!(multi.pending(), 0);
+    assert_eq!(responses.len(), 12);
+}
+
+#[test]
+fn multi_server_rejects_unknown_lane_and_bad_payloads() {
+    let fleet = MockFleet::new("mock", 2, WorkerPool::shared(1));
+    let mut multi = MultiServer::new();
+    let lane = multi.add_lane(&fleet, ServerConfig::default());
+    assert!(multi.offer(lane + 1, Request::new(0, 0, payload())).is_err());
+    // per-lane ingress validation still applies
+    assert_eq!(
+        multi.offer(lane, Request::new(0, 0, Tensor::zeros(&[9, 9]))).unwrap(),
+        Admit::Invalid
+    );
+    assert_eq!(multi.pending(), 0);
+}
+
+#[test]
+fn multi_server_serves_two_real_fleets_on_one_shared_pool() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let pool = WorkerPool::shared(2);
+    let bert = Fleet::load_with_pool(&rt, "bert", 2, 1, "", pool.clone()).unwrap();
+    let resnet = Fleet::load_with_pool(&rt, "resnet", 2, 1, "", pool.clone()).unwrap();
+    assert!(
+        Arc::ptr_eq(bert.shared_pool().unwrap(), resnet.shared_pool().unwrap()),
+        "both fleets must hold the SAME pool"
+    );
+
+    let mut multi = MultiServer::new();
+    let a = multi.add_lane(
+        &bert,
+        ServerConfig { strategy: StrategyKind::Concurrent, ..Default::default() },
+    );
+    let b = multi.add_lane(
+        &resnet,
+        ServerConfig { strategy: StrategyKind::Hybrid { procs: 2 }, ..Default::default() },
+    );
+    let mut wa = Workload::new(2, &bert.request_shape(), 100.0, 31);
+    let mut wb = Workload::new(2, &resnet.request_shape(), 100.0, 32);
+    let mut buf = Vec::new();
+    for _ in 0..5 {
+        for req in wa.round() {
+            assert_eq!(multi.offer(a, req).unwrap(), Admit::Queued);
+        }
+        for req in wb.round() {
+            assert_eq!(multi.offer(b, req).unwrap(), Admit::Queued);
+        }
+        while multi.dispatch_next(&mut buf).unwrap().is_some() {}
+    }
+    multi.drain(&mut buf).unwrap();
+    assert_eq!(multi.lane(a).metrics.completed_requests, 10);
+    assert_eq!(multi.lane(b).metrics.completed_requests, 10);
+    // one pool, sized to the widest strategy (2), not one per fleet
+    assert_eq!(pool.workers(), 2);
 }
 
 #[test]

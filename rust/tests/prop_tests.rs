@@ -7,7 +7,7 @@
 
 use std::collections::BTreeMap;
 
-use netfuse::coordinator::arena::{Layout, RoundArena};
+use netfuse::coordinator::arena::{ArenaPair, Layout, RoundArena};
 use netfuse::coordinator::pool::WorkerPool;
 use netfuse::fuse;
 use netfuse::graph::{Attr, Graph, MergeDim, Node};
@@ -321,6 +321,76 @@ fn prop_pack_with_matches_concat_stack_reference() {
         }
         if arena.merged_data() != want.data() {
             return Err("megabatch bytes differ from concat/stack reference".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pad_skip_matches_reference_across_rounds() {
+    // the arena skips re-zeroing windows that stayed absent since the
+    // previous round; over any sequence of occupancy patterns the
+    // megabatch must stay byte-identical to the copying
+    // concat/stack-with-zero-pads reference
+    check("arena-pad-skip", 80, gen_round, |c| {
+        let m = c.xs.len();
+        let pad = Tensor::zeros(&c.shape);
+        let mut arena =
+            RoundArena::new(c.layout, m, &c.shape).map_err(|e| e.to_string())?;
+        for round in 0..4usize {
+            // rotate the occupancy mask so slots transition through
+            // every (occupied, absent) -> (occupied, absent) pair
+            let occ: Vec<bool> = (0..m).map(|i| c.occupied[(i + round) % m]).collect();
+            let slots: Vec<&Tensor> = (0..m)
+                .map(|i| if occ[i] { &c.xs[i] } else { &pad })
+                .collect();
+            let want = match c.layout {
+                Layout::Channel => Tensor::concat(&slots, 1),
+                Layout::Batch => Tensor::stack(&slots),
+            }
+            .map_err(|e| e.to_string())?;
+            arena
+                .pack_with(&|i| if occ[i] { Some(&c.xs[i]) } else { None })
+                .map_err(|e| e.to_string())?;
+            if arena.merged_data() != want.data() {
+                return Err(format!(
+                    "round {round}: pad-skip megabatch diverges from reference"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pack_next_round_never_corrupts_inflight_round() {
+    // the double-buffer soundness property: packing round N+1 (other
+    // thread, other half) while round N's half is still reserved must
+    // leave round N's staged megabatch byte-identical
+    check("arena-pair-overlap", 60, gen_round, |c| {
+        let m = c.xs.len();
+        let pair = ArenaPair::new(c.layout, m, &c.shape).map_err(|e| e.to_string())?;
+
+        // round N: reserve a half, pack it, snapshot the staged bytes
+        let mut inflight = pair.acquire();
+        inflight
+            .pack_with(&|i| if c.occupied[i] { Some(&c.xs[i]) } else { None })
+            .map_err(|e| e.to_string())?;
+        let staged: Vec<f32> = inflight.merged_data().to_vec();
+
+        // round N+1 packs concurrently from another thread while round
+        // N is still "executing" (its half is still locked)
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let mut next = pair.acquire();
+                next.pack_with(&|i| Some(&c.xs[(i + 1) % m])).unwrap();
+            })
+            .join()
+            .unwrap();
+        });
+
+        if inflight.merged_data() != staged.as_slice() {
+            return Err("overlapped pack corrupted the in-flight round".into());
         }
         Ok(())
     });
