@@ -1,0 +1,443 @@
+//! Bench: open-loop ingress + SLO-aware QoS scheduling.
+//!
+//! Four parts, all offline (mock `RoundExecutor` lanes, no artifacts):
+//!
+//! 1. **WDRR ratio** — two permanently backlogged lanes with weights
+//!    {3, 1}: the `QosScheduler` must dispatch rounds in a ~3:1 ratio.
+//!    Deterministic (no timing), so the gate runs in every mode
+//!    including `--smoke` on CI.
+//! 1b. **Never-idle** — a deadline-free `run_dispatch` run where lane
+//!    readiness can only change through the dispatch thread itself:
+//!    `idle_naps_avoided` must be exactly 0, race-free in every mode
+//!    (see `never_idle_run` for why the timed run can't gate this).
+//! 2. **Open-loop serving** — 4 producer threads drive sharded Poisson
+//!    arrivals (75% to the weighted lane) through in-proc transports,
+//!    `serve_conn` readers, the bounded `IngressBridge`, and one
+//!    `run_dispatch` thread owning the `MultiServer`. Gates: every
+//!    arrival gets exactly one outcome frame (response or typed
+//!    reject) and, in full runs only, the weighted lane's p99 stays
+//!    under its 25ms SLO.
+//! 3. **Closed-loop baseline** — the same lanes driven by the old
+//!    offer-then-drain loop, for the rps comparison in the report.
+//!
+//! Results go to `BENCH_ingress_qos.json`. `--smoke` runs an
+//! abbreviated open-loop pass with the timing gates off so CI exercises
+//! the full frame->bridge->QoS->response path on every push.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use netfuse::coordinator::mock::EchoExecutor;
+use netfuse::coordinator::multi::MultiServer;
+use netfuse::coordinator::server::ServerConfig;
+use netfuse::coordinator::{Request, StrategyKind};
+use netfuse::ingress::{
+    run_dispatch, serve_conn, ChanTransport, Envelope, Frame, FrameQueue, IngressBridge,
+    IngressStats, LaneQos, LoadGen, TrafficShape, Transport, TransportRx, TransportTx,
+};
+use netfuse::tensor::Tensor;
+use netfuse::util::json::Json;
+
+/// models per lane
+const M: usize = 2;
+const INPUT_SHAPE: [usize; 2] = [1, 4];
+/// modeled device time per round
+const ROUND_COST: Duration = Duration::from_micros(100);
+/// the weighted (interactive) lane's latency target
+const TIGHT_SLO: Duration = Duration::from_millis(25);
+const LOOSE_SLO: Duration = Duration::from_millis(250);
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn echo(name: &str, round_cost: Duration) -> EchoExecutor {
+    EchoExecutor::new(name, M, &[4], round_cost)
+}
+
+fn lane_config() -> ServerConfig {
+    ServerConfig {
+        strategy: StrategyKind::Sequential,
+        queue_cap: 512,
+        max_wait: Duration::from_millis(3),
+    }
+}
+
+fn payload() -> Tensor {
+    Tensor::zeros(&INPUT_SHAPE)
+}
+
+// ---------------------------------------------------------------------------
+// part 1: WDRR 3:1 ratio (deterministic, gated in every mode)
+// ---------------------------------------------------------------------------
+
+fn wdrr_ratio(rounds: usize) -> Result<f64> {
+    let heavy = echo("heavy", Duration::ZERO);
+    let light = echo("light", Duration::ZERO);
+    let mut multi = MultiServer::new();
+    let cfg = ServerConfig { max_wait: Duration::ZERO, ..lane_config() };
+    multi.add_lane_qos(&heavy, cfg.clone(), LaneQos::new(3, Duration::from_secs(3600)));
+    multi.add_lane_qos(&light, cfg, LaneQos::new(1, Duration::from_secs(3600)));
+
+    let mut id = 0u64;
+    let mut buf = Vec::new();
+    let mut counts = [0usize; 2];
+    for _ in 0..rounds {
+        // keep both lanes backlogged so only the scheduler decides
+        for lane in 0..2 {
+            while multi.lane(lane).pending() < 4 {
+                multi.offer(lane, Request::new(id, 0, payload()))?;
+                id += 1;
+            }
+        }
+        let (lane, _) = multi
+            .dispatch_next(&mut buf)?
+            .expect("backlogged lanes are always dispatchable");
+        buf.clear();
+        counts[lane] += 1;
+    }
+    Ok(counts[0] as f64 / counts[1].max(1) as f64)
+}
+
+/// Deterministic never-idle gate. With `max_wait == 0` and a far-away
+/// SLO, lane readiness is exactly `pending > 0`, which only the
+/// dispatch thread's own admissions and dispatches can change — no
+/// deadline can expire between `dispatch_next` saying "nothing due"
+/// and the pre-nap recheck. So `idle_naps_avoided != 0` here is a real
+/// scheduling bug, never a timing race, and the gate holds in every
+/// mode. (In the timed QoS run the same counter can legitimately tick
+/// when a 3ms/SLO deadline lands in that microsecond window, so there
+/// it is reported, not gated.)
+fn never_idle_run(envelopes: usize) -> Result<IngressStats> {
+    let only = echo("only", Duration::ZERO);
+    let mut multi = MultiServer::new();
+    // queue_cap >= envelopes: the loop drains ALL bridge arrivals before
+    // dispatching, so a scheduler stall must not turn the backlog into
+    // Busy rejects (the gate asserts every envelope gets a response)
+    multi.add_lane_qos(
+        &only,
+        ServerConfig { max_wait: Duration::ZERO, queue_cap: envelopes.max(1), ..lane_config() },
+        LaneQos::new(1, Duration::from_secs(3600)),
+    );
+    let bridge = IngressBridge::new(envelopes.max(1));
+    let reply = FrameQueue::new();
+    let stats = std::thread::scope(|s| {
+        let bridge_ref = &bridge;
+        let reply_ref = &reply;
+        let producer = s.spawn(move || {
+            for i in 0..envelopes {
+                let env = Envelope {
+                    lane: 0,
+                    client_id: i as u64,
+                    req: Request::new(i as u64, i % M, payload()),
+                    reply: reply_ref.clone(),
+                };
+                assert!(bridge_ref.submit(env).is_ok(), "bridge sized for every envelope");
+                if i % 16 == 0 {
+                    // gaps force genuine idle naps between bursts
+                    std::thread::sleep(Duration::from_micros(300));
+                }
+            }
+            bridge_ref.close();
+        });
+        let stats = run_dispatch(&mut multi, &bridge);
+        producer.join().unwrap();
+        stats
+    })?;
+    anyhow::ensure!(
+        reply.len() as u64 == envelopes as u64 && stats.responses == envelopes as u64,
+        "never-idle run must serve every envelope ({} of {envelopes})",
+        stats.responses
+    );
+    Ok(stats)
+}
+
+// ---------------------------------------------------------------------------
+// part 2: open-loop ingress through the full frame/bridge/QoS path
+// ---------------------------------------------------------------------------
+
+struct LaneReport {
+    served: u64,
+    p50: f64,
+    p95: f64,
+    p99: f64,
+    slo_violations: u64,
+    throughput: f64,
+}
+
+struct OpenLoopRun {
+    stats: IngressStats,
+    sent: u64,
+    client_responses: u64,
+    client_rejects: u64,
+    elapsed: f64,
+    lanes: Vec<LaneReport>,
+}
+
+fn open_loop(producers: usize, rate: f64, horizon: Duration, seed: u64) -> Result<OpenLoopRun> {
+    let tight = echo("tight", ROUND_COST);
+    let loose = echo("loose", ROUND_COST);
+    let mut multi = MultiServer::new();
+    multi.add_lane_qos(&tight, lane_config(), LaneQos::new(3, TIGHT_SLO));
+    multi.add_lane_qos(&loose, lane_config(), LaneQos::new(1, LOOSE_SLO));
+    let bridge = IngressBridge::new(1024);
+
+    // 75% of traffic to the weighted lane, uniform across its models
+    let gen = LoadGen::new(TrafficShape::Poisson { rate }, &[(M, 3.0), (M, 1.0)], seed)?;
+    let shards = gen.shards(producers);
+
+    type RunOutcome = (IngressStats, u64, u64, u64);
+    let t0 = Instant::now();
+    let (stats, sent, ok, rejected) = std::thread::scope(|s| -> Result<RunOutcome> {
+        let bridge_ref = &bridge;
+        let multi_ref = &mut multi;
+        let dispatch = s.spawn(move || run_dispatch(multi_ref, bridge_ref));
+
+        let mut conns = Vec::new();
+        let mut receivers = Vec::new();
+        let mut senders = Vec::new();
+        for shard in shards {
+            let (client, server_end) = ChanTransport::pair();
+            // expect, not `?`: an early return here would leave the
+            // dispatch thread parked and deadlock the scope join
+            let conn = serve_conn(bridge.clone(), Box::new(server_end))
+                .expect("in-proc serve_conn cannot fail");
+            conns.push(conn);
+            let (mut tx, mut rx) = (Box::new(client) as Box<dyn Transport>)
+                .split()
+                .expect("in-proc split cannot fail");
+            receivers.push(s.spawn(move || {
+                let (mut ok, mut rejected) = (0u64, 0u64);
+                loop {
+                    match rx.recv() {
+                        Ok(Some(Frame::Response { .. })) => ok += 1,
+                        Ok(Some(Frame::Reject { .. })) => rejected += 1,
+                        Ok(Some(_)) => {}
+                        Ok(None) | Err(_) => return (ok, rejected),
+                    }
+                }
+            }));
+            senders.push(s.spawn(move || {
+                let sent = shard.drive(horizon, |a| {
+                    let _ = tx.send(&Frame::Request {
+                        id: a.id,
+                        lane: a.lane as u32,
+                        model_idx: a.model_idx as u32,
+                        shape: INPUT_SHAPE.to_vec(),
+                        data: vec![0.0; 4],
+                    });
+                });
+                let _ = tx.send(&Frame::Eos);
+                sent
+            }));
+        }
+
+        let mut sent = 0u64;
+        for t in senders {
+            sent += t.join().unwrap();
+        }
+        bridge.close();
+        let stats_res = dispatch.join().unwrap();
+        // unwind the connections BEFORE surfacing a dispatch error, or
+        // the blocked receiver threads would hang the scope join
+        for c in conns {
+            c.shutdown();
+        }
+        let (mut ok, mut rejected) = (0u64, 0u64);
+        for r in receivers {
+            let (o, j) = r.join().unwrap();
+            ok += o;
+            rejected += j;
+        }
+        Ok((stats_res?, sent, ok, rejected))
+    })?;
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let lanes = (0..multi.lanes())
+        .map(|i| {
+            let met = &multi.lane(i).metrics;
+            LaneReport {
+                served: met.completed_requests,
+                p50: met.request_latency.p50(),
+                p95: met.request_latency.p95(),
+                p99: met.request_latency.p99(),
+                slo_violations: met.slo_violations,
+                throughput: met.throughput(),
+            }
+        })
+        .collect();
+    Ok(OpenLoopRun {
+        stats,
+        sent,
+        client_responses: ok,
+        client_rejects: rejected,
+        elapsed,
+        lanes,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// part 3: closed-loop baseline (the old driver shape)
+// ---------------------------------------------------------------------------
+
+fn closed_loop(rounds: usize) -> Result<f64> {
+    let tight = echo("tight", ROUND_COST);
+    let loose = echo("loose", ROUND_COST);
+    let mut multi = MultiServer::new();
+    multi.add_lane_qos(&tight, lane_config(), LaneQos::new(3, TIGHT_SLO));
+    multi.add_lane_qos(&loose, lane_config(), LaneQos::new(1, LOOSE_SLO));
+    let mut id = 0u64;
+    let mut buf = Vec::new();
+    let t0 = Instant::now();
+    let mut served = 0u64;
+    for _ in 0..rounds {
+        for lane in 0..2 {
+            for model in 0..M {
+                multi.offer(lane, Request::new(id, model, payload()))?;
+                id += 1;
+            }
+        }
+        while let Some((_lane, n)) = multi.dispatch_next(&mut buf)? {
+            served += n as u64;
+            buf.clear();
+        }
+    }
+    served += multi.drain(&mut buf)? as u64;
+    Ok(served as f64 / t0.elapsed().as_secs_f64())
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!(
+        "# ingress_qos: open-loop ingress + WDRR/SLO scheduling{}\n",
+        if smoke { " (SMOKE)" } else { "" }
+    );
+
+    // --- part 1: WDRR ratio ---------------------------------------------
+    let ratio_rounds = if smoke { 200 } else { 1000 };
+    let ratio = wdrr_ratio(ratio_rounds)?;
+    println!("wdrr: weights 3:1 dispatched {ratio:.2}:1 over {ratio_rounds} rounds");
+
+    // --- part 1b: deterministic never-idle gate --------------------------
+    let ni_envelopes = if smoke { 200 } else { 2000 };
+    let ni = never_idle_run(ni_envelopes)?;
+    println!(
+        "never-idle: {ni_envelopes} bursty envelopes, {} rounds, \
+         {} naps-while-ready (must be 0)",
+        ni.rounds, ni.idle_naps_avoided
+    );
+
+    // --- part 2: open loop ----------------------------------------------
+    let producers = 4;
+    let (rate, horizon) = if smoke {
+        (400.0, Duration::from_millis(150))
+    } else {
+        (2000.0, Duration::from_secs(2))
+    };
+    let run = open_loop(producers, rate, horizon, 0x1A6E55)?;
+    let outcomes = run.client_responses + run.client_rejects;
+    println!(
+        "open-loop: {} producers at {rate:.0} req/s for {horizon:?}: sent {} -> \
+         {} responses + {} rejects in {:.2}s",
+        producers, run.sent, run.client_responses, run.client_rejects, run.elapsed
+    );
+    for (i, lane) in run.lanes.iter().enumerate() {
+        println!(
+            "  lane {i}: served {:<6} p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms \
+             slo_viol {} ({:.0} req/s)",
+            lane.served,
+            lane.p50 * 1e3,
+            lane.p95 * 1e3,
+            lane.p99 * 1e3,
+            lane.slo_violations,
+            lane.throughput,
+        );
+    }
+
+    // --- part 3: closed-loop baseline -----------------------------------
+    let closed_rounds = if smoke { 20 } else { 500 };
+    let closed_rps = closed_loop(closed_rounds)?;
+    println!("closed-loop baseline: {closed_rps:.0} req/s over {closed_rounds} rounds\n");
+
+    // --- BENCH_ingress_qos.json -----------------------------------------
+    let mut wdrr = BTreeMap::new();
+    wdrr.insert("rounds".to_string(), num(ratio_rounds as f64));
+    wdrr.insert("weights".to_string(), Json::Str("3:1".to_string()));
+    wdrr.insert("dispatch_ratio".to_string(), num(ratio));
+
+    let mut never_idle = BTreeMap::new();
+    never_idle.insert("envelopes".to_string(), num(ni_envelopes as f64));
+    never_idle.insert("rounds".to_string(), num(ni.rounds as f64));
+    never_idle.insert("naps_while_ready".to_string(), num(ni.idle_naps_avoided as f64));
+
+    let mut open = BTreeMap::new();
+    open.insert("producers".to_string(), num(producers as f64));
+    open.insert("offered_rate_rps".to_string(), num(rate));
+    open.insert("horizon_s".to_string(), num(horizon.as_secs_f64()));
+    open.insert("sent".to_string(), num(run.sent as f64));
+    open.insert("responses".to_string(), num(run.client_responses as f64));
+    open.insert("rejects".to_string(), num(run.client_rejects as f64));
+    open.insert("rounds".to_string(), num(run.stats.rounds as f64));
+    open.insert("admitted".to_string(), num(run.stats.admitted as f64));
+    open.insert("lane_busy".to_string(), num(run.stats.lane_busy as f64));
+    open.insert("idle_naps_avoided".to_string(), num(run.stats.idle_naps_avoided as f64));
+    for (i, lane) in run.lanes.iter().enumerate() {
+        let mut l = BTreeMap::new();
+        l.insert("served".to_string(), num(lane.served as f64));
+        l.insert("p50_s".to_string(), num(lane.p50));
+        l.insert("p95_s".to_string(), num(lane.p95));
+        l.insert("p99_s".to_string(), num(lane.p99));
+        l.insert("slo_violations".to_string(), num(lane.slo_violations as f64));
+        l.insert("throughput_rps".to_string(), num(lane.throughput));
+        open.insert(format!("lane{i}"), Json::Obj(l));
+    }
+
+    let mut closed = BTreeMap::new();
+    closed.insert("rounds".to_string(), num(closed_rounds as f64));
+    closed.insert("req_per_sec".to_string(), num(closed_rps));
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("ingress_qos".to_string()));
+    root.insert("smoke".to_string(), Json::Bool(smoke));
+    root.insert("round_cost_s".to_string(), num(ROUND_COST.as_secs_f64()));
+    root.insert("tight_slo_s".to_string(), num(TIGHT_SLO.as_secs_f64()));
+    root.insert("wdrr".to_string(), Json::Obj(wdrr));
+    root.insert("never_idle".to_string(), Json::Obj(never_idle));
+    root.insert("open_loop".to_string(), Json::Obj(open));
+    root.insert("closed_loop".to_string(), Json::Obj(closed));
+
+    let path = "BENCH_ingress_qos.json";
+    std::fs::write(path, Json::Obj(root).dump())?;
+    println!("report written to {path}");
+
+    // correctness gates run in every mode (written AFTER the report so
+    // a failing run still leaves its numbers behind)
+    assert!(
+        (2.5..=3.5).contains(&ratio),
+        "WDRR weights 3:1 must dispatch ~3:1 rounds, got {ratio:.2}:1"
+    );
+    assert_eq!(
+        outcomes, run.sent,
+        "every open-loop arrival needs exactly one outcome frame \
+         ({} responses + {} rejects != {} sent)",
+        run.client_responses, run.client_rejects, run.sent
+    );
+    assert_eq!(
+        ni.idle_naps_avoided, 0,
+        "the dispatch thread was about to nap while a lane was round-ready \
+         (deterministic run — this is a scheduling bug, not a timing race)"
+    );
+    // timing gates only in full runs (CI smoke must not flake on noise)
+    if !smoke {
+        let tight = &run.lanes[0];
+        assert!(
+            tight.p99 <= TIGHT_SLO.as_secs_f64(),
+            "weighted lane p99 {:.1}ms must stay under its {:.0}ms SLO",
+            tight.p99 * 1e3,
+            TIGHT_SLO.as_secs_f64() * 1e3
+        );
+    }
+    Ok(())
+}

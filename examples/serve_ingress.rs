@@ -1,0 +1,164 @@
+//! Open-loop ingress demo: TCP clients -> frames -> `IngressBridge` ->
+//! QoS-scheduled `MultiServer` -> response frames.
+//!
+//! Four producer threads each hold their own TCP connection and replay
+//! one shard of an open-loop Poisson arrival stream (the shards
+//! superpose to the requested rate). Two lanes with different QoS:
+//!
+//! - `interactive` — WDRR weight 3, 25ms SLO, 75% of the traffic;
+//! - `batch`       — WDRR weight 1, 250ms SLO.
+//!
+//! One dispatch thread owns the `MultiServer` and runs
+//! `ingress::run_dispatch`: admission (with arrival re-stamping),
+//! WDRR + SLO-boost lane picks, and response routing back through each
+//! connection's reply queue.
+//!
+//! The lanes are in-process echo executors with a fixed modeled device
+//! time, so the demo runs without AOT artifacts — swap in
+//! `Fleet::load_with_pool` lanes to serve the real thing; every other
+//! line stays identical.
+//!
+//! ```bash
+//! cargo run --release --example serve_ingress -- [horizon_ms] [rate_rps]
+//! ```
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use netfuse::coordinator::mock::EchoExecutor;
+use netfuse::coordinator::multi::MultiServer;
+use netfuse::coordinator::server::ServerConfig;
+use netfuse::coordinator::service::RoundExecutor;
+use netfuse::coordinator::StrategyKind;
+use netfuse::ingress::{
+    run_dispatch, serve_conn, Frame, IngressBridge, LaneQos, LoadGen, TcpTransport, TrafficShape,
+    Transport, TransportRx, TransportTx,
+};
+
+const M: usize = 2;
+const INPUT_SHAPE: [usize; 2] = [1, 4];
+const PRODUCERS: usize = 4;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let horizon_ms: u64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1200.0);
+    let horizon = Duration::from_millis(horizon_ms);
+
+    // in-process echo lanes (EchoExecutor) so the demo runs without AOT
+    // artifacts; swap in `Fleet::load_with_pool` lanes to serve real HLO
+    let interactive = EchoExecutor::new("interactive", M, &[4], Duration::from_micros(200));
+    let batch = EchoExecutor::new("batch", M, &[4], Duration::from_micros(200));
+
+    let mut multi = MultiServer::new();
+    let cfg = ServerConfig {
+        strategy: StrategyKind::Sequential,
+        queue_cap: 256,
+        max_wait: Duration::from_millis(2),
+    };
+    multi.add_lane_qos(&interactive, cfg.clone(), LaneQos::new(3, Duration::from_millis(25)));
+    multi.add_lane_qos(&batch, cfg, LaneQos::new(1, Duration::from_millis(250)));
+    let bridge = IngressBridge::new(1024);
+
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    println!(
+        "serving 2 QoS lanes (interactive w=3 slo=25ms, batch w=1 slo=250ms) \
+         on {addr}; {PRODUCERS} open-loop producers at {rate:.0} req/s for {horizon:?}"
+    );
+
+    // 75% of arrivals to the interactive lane
+    let gen = LoadGen::new(TrafficShape::Poisson { rate }, &[(M, 3.0), (M, 1.0)], 0xD00D)?;
+    let shards = gen.shards(PRODUCERS);
+
+    let (stats, sent, ok, rejected) = std::thread::scope(|s| {
+        // accept exactly one connection per producer, wire each to the
+        // bridge (reader thread parses frames, writer drains replies)
+        let accept = s.spawn(|| {
+            (0..PRODUCERS)
+                .map(|_| {
+                    let (stream, _) = listener.accept().expect("accept");
+                    let t = TcpTransport::from_stream(stream).expect("tcp transport");
+                    serve_conn(bridge.clone(), Box::new(t)).expect("serve_conn")
+                })
+                .collect::<Vec<_>>()
+        });
+
+        // THE dispatch thread: sole owner of the MultiServer
+        let multi_ref = &mut multi;
+        let bridge_ref = &bridge;
+        let dispatch = s.spawn(move || run_dispatch(multi_ref, bridge_ref));
+
+        // producers: one TCP connection each, sender + receiver halves
+        let mut senders = Vec::new();
+        let mut receivers = Vec::new();
+        for shard in shards {
+            let t: Box<dyn Transport> = Box::new(TcpTransport::connect(addr).expect("connect"));
+            let (mut tx, mut rx) = t.split().expect("split");
+            receivers.push(s.spawn(move || {
+                let (mut ok, mut rejected) = (0u64, 0u64);
+                loop {
+                    match rx.recv() {
+                        Ok(Some(Frame::Response { .. })) => ok += 1,
+                        Ok(Some(Frame::Reject { .. })) => rejected += 1,
+                        Ok(Some(_)) => {}
+                        Ok(None) | Err(_) => return (ok, rejected),
+                    }
+                }
+            }));
+            senders.push(s.spawn(move || {
+                let sent = shard.drive(horizon, |a| {
+                    let _ = tx.send(&Frame::Request {
+                        id: a.id,
+                        lane: a.lane as u32,
+                        model_idx: a.model_idx as u32,
+                        shape: INPUT_SHAPE.to_vec(),
+                        data: vec![0.5; 4],
+                    });
+                });
+                let _ = tx.send(&Frame::Eos);
+                sent
+            }));
+        }
+
+        let sent: u64 = senders.into_iter().map(|t| t.join().unwrap()).sum();
+        let conns = accept.join().unwrap();
+        bridge.close();
+        let stats_res = dispatch.join().unwrap();
+        for c in conns {
+            c.shutdown();
+        }
+        let (mut ok, mut rejected) = (0u64, 0u64);
+        for r in receivers {
+            let (o, j) = r.join().unwrap();
+            ok += o;
+            rejected += j;
+        }
+        (stats_res, sent, ok, rejected)
+    });
+    let stats = stats?;
+
+    println!(
+        "\nopen loop done: {sent} sent -> {ok} responses + {rejected} rejects \
+         ({} rounds, {} admitted, {} lane-busy, {} invalid)",
+        stats.rounds, stats.admitted, stats.lane_busy, stats.invalid
+    );
+    for i in 0..multi.lanes() {
+        let met = &multi.lane(i).metrics;
+        let qos = multi.qos(i);
+        println!("{}", met.report_line());
+        println!(
+            "  lane {i} ({}): served {} at {:.0} req/s | p99 {:.2}ms vs slo {:.0}ms \
+             -> {} SLO violations",
+            multi.lane(i).fleet().name(),
+            met.completed_requests,
+            met.throughput(),
+            met.request_latency.p99() * 1e3,
+            qos.slo.as_secs_f64() * 1e3,
+            met.slo_violations,
+        );
+    }
+    Ok(())
+}

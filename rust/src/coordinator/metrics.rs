@@ -27,6 +27,11 @@ pub struct Metrics {
     /// instead of a near-infinite rate.
     first_arrival: Option<Instant>,
     pub completed_requests: u64,
+    /// end-to-end latency target (seconds) this lane was registered
+    /// with (`MultiServer::add_lane_qos`); `None` = no SLO accounting
+    pub slo: Option<f64>,
+    /// completed requests whose end-to-end latency exceeded `slo`
+    pub slo_violations: u64,
 }
 
 impl Metrics {
@@ -40,6 +45,8 @@ impl Metrics {
             round_latency: Latencies::new(),
             first_arrival: None,
             completed_requests: 0,
+            slo: None,
+            slo_violations: 0,
         }
     }
 
@@ -63,6 +70,11 @@ impl Metrics {
         });
         self.request_latency.record(latency);
         self.completed_requests += 1;
+        if let Some(slo) = self.slo {
+            if latency > slo {
+                self.slo_violations += 1;
+            }
+        }
     }
 
     /// Requests per second since the first recorded request ARRIVED
@@ -83,9 +95,10 @@ impl Metrics {
 
     pub fn report_line(&self) -> String {
         let r = &self.round_latency;
+        let q = &self.request_latency;
         format!(
             "{:<10} {:<8} m={:<3} bs={:<2} rounds={:<5} round: {:>10} ± {:>9} \
-             p50={:>10} p99={:>10}",
+             p50={:>10} p99={:>10} | req p50={:>10} p95={:>10} p99={:>10} slo_viol={}",
             self.strategy.to_string(),
             self.model,
             self.m,
@@ -95,6 +108,10 @@ impl Metrics {
             fmt_secs(r.summary().std()),
             fmt_secs(r.p50()),
             fmt_secs(r.p99()),
+            fmt_secs(q.p50()),
+            fmt_secs(q.p95()),
+            fmt_secs(q.p99()),
+            self.slo_violations,
         )
     }
 }
@@ -113,6 +130,33 @@ mod tests {
         assert_eq!(m.completed_requests, 1);
         let line = m.report_line();
         assert!(line.contains("netfuse") && line.contains("bert"));
+    }
+
+    #[test]
+    fn slo_violations_counted_and_reported() {
+        let mut m = Metrics::new(StrategyKind::NetFuse, "bert", 4, 1);
+        m.slo = Some(0.010);
+        m.record_request(0.005);
+        m.record_request(0.011); // violation
+        m.record_request(0.200); // violation
+        assert_eq!(m.slo_violations, 2);
+        assert!(m.report_line().contains("slo_viol=2"));
+
+        // without an SLO, nothing is ever counted
+        let mut free = Metrics::new(StrategyKind::NetFuse, "bert", 4, 1);
+        free.record_request(10.0);
+        assert_eq!(free.slo_violations, 0);
+    }
+
+    #[test]
+    fn report_line_includes_request_percentiles() {
+        let mut m = Metrics::new(StrategyKind::NetFuse, "bert", 2, 1);
+        for i in 1..=100 {
+            m.record_request(i as f64 / 1000.0);
+        }
+        let line = m.report_line();
+        assert!(line.contains("req p50="), "got: {line}");
+        assert!(line.contains("p95="), "got: {line}");
     }
 
     #[test]

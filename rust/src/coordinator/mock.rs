@@ -1,0 +1,74 @@
+//! Artifact-free mock executor — test/bench/example support.
+//!
+//! The serving front ends (`Server`, `MultiServer`, the ingress
+//! dispatch loop) are generic over [`RoundExecutor`] precisely so their
+//! logic runs without AOT artifacts or a PJRT backend. [`EchoExecutor`]
+//! is the shared stand-in: it echoes each occupied slot's payload back
+//! as its output after an optional fixed "device time", which is enough
+//! to exercise batching, padding, QoS scheduling, and queue-wait
+//! behavior. It lives in the library (not under `#[cfg(test)]`) because
+//! benches and examples need it too; it is NOT part of the serving
+//! data plane.
+//!
+//! Failure-injection and worker-pool-dispatching mocks stay local to
+//! the tests that need them (see `rust/tests/coordinator_tests.rs`).
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+use super::service::RoundExecutor;
+use super::strategy::StrategyKind;
+
+/// Echo-the-payload executor with a modeled per-round device latency.
+/// Batch size is fixed at 1 (every serving mock in the repo uses bs=1).
+pub struct EchoExecutor {
+    name: String,
+    m: usize,
+    input_shape: Vec<usize>,
+    round_cost: Duration,
+}
+
+impl EchoExecutor {
+    pub fn new(name: &str, m: usize, input_shape: &[usize], round_cost: Duration) -> EchoExecutor {
+        EchoExecutor {
+            name: name.to_string(),
+            m,
+            input_shape: input_shape.to_vec(),
+            round_cost,
+        }
+    }
+}
+
+impl RoundExecutor for EchoExecutor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn m(&self) -> usize {
+        self.m
+    }
+    fn bs(&self) -> usize {
+        1
+    }
+    fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+    fn run_round_slots<'a>(
+        &self,
+        strategy: StrategyKind,
+        get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
+        outs: &mut Vec<Option<Tensor>>,
+    ) -> Result<()> {
+        strategy.validate()?;
+        if !self.round_cost.is_zero() {
+            std::thread::sleep(self.round_cost);
+        }
+        outs.clear();
+        for i in 0..self.m {
+            outs.push(get(i).cloned());
+        }
+        Ok(())
+    }
+}

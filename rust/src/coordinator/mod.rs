@@ -17,14 +17,18 @@
 //!
 //! Serving front ends: `server::Server` is the single-fleet router +
 //! batcher; [`multi`]'s `MultiServer` hosts several fleets as tenants
-//! of one machine — per-fleet lanes, fair round-ready dispatch, and one
-//! shared `WorkerPool` sized to the box. Both are generic over
-//! `service::RoundExecutor`, the slot-level round contract `Fleet`
-//! implements.
+//! of one machine — per-fleet lanes, QoS-scheduled round dispatch
+//! (weighted deficit round-robin + SLO-deadline boost via
+//! `crate::ingress::qos`), and one shared `WorkerPool` sized to the
+//! box. Both are generic over `service::RoundExecutor`, the slot-level
+//! round contract `Fleet` implements. Open-loop traffic reaches
+//! `MultiServer` through `crate::ingress` (frames -> transports ->
+//! bounded bridge -> the dispatch thread).
 
 pub mod arena;
 pub mod memory;
 pub mod metrics;
+pub mod mock;
 pub mod multi;
 pub mod pool;
 pub mod request;

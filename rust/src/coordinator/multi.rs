@@ -9,12 +9,14 @@
 //! `MultiServer` fixes both:
 //! - **per-fleet lanes** — each fleet keeps its own router/batcher
 //!   ([`Server`]) with independent queues, strategy, and metrics;
-//! - **round-ready scheduling across fleets** — [`MultiServer::ready_lane`]
-//!   scans lanes for one whose round is due (full, or past its oldest
-//!   request's `max_wait` deadline);
-//! - **fair dispatch** — the scan starts after the last dispatched lane
-//!   (round-robin), so a lane with steady traffic cannot starve one
-//!   with sparse traffic;
+//! - **QoS scheduling across fleets** — lane selection is delegated to
+//!   an [`QosScheduler`]: weighted deficit round-robin over round-ready
+//!   lanes plus an SLO-deadline boost (a lane whose oldest queued
+//!   request is within ε of its [`LaneQos::slo`] preempts the WDRR
+//!   order, dispatching a padded round early rather than missing the
+//!   deadline). Lanes registered with [`MultiServer::add_lane`] get
+//!   `LaneQos::default()` — weight 1 and a far-away SLO — which
+//!   degenerates to exactly the old fair round-robin;
 //! - **one shared `WorkerPool`** — load every fleet with
 //!   [`Fleet::load_with_pool`] and a single
 //!   [`WorkerPool::machine_sized`] handle, and all Concurrent/Hybrid
@@ -25,29 +27,34 @@
 //! a time (`dispatch_next` is `&mut self`), so it does NOT overlap
 //! NETFUSE rounds. The fleet's [`ArenaPair`] enables overlap for
 //! *concurrent* callers of `Fleet::run_round_slots` — e.g. one driver
-//! thread per lane, or the async ingress the ROADMAP lists —
-//! `benches/multi_fleet.rs` measures that win directly.
+//! thread per lane — `benches/multi_fleet.rs` measures that win
+//! directly. The async ingress feeding this type from outside the
+//! dispatch thread lives in [`crate::ingress`] (`IngressBridge` +
+//! `run_dispatch`).
 //!
 //! Like [`Server`], the type is generic over [`RoundExecutor`] so the
 //! scheduling logic is testable without artifacts.
 //!
 //! [`Fleet::load_with_pool`]: super::service::Fleet::load_with_pool
+//! [`WorkerPool`]: super::pool::WorkerPool
 //! [`WorkerPool::machine_sized`]: super::pool::WorkerPool::machine_sized
 //! [`ArenaPair`]: super::arena::ArenaPair
 
+use std::time::Duration;
+
 use anyhow::{bail, Result};
+
+use crate::ingress::qos::{LaneQos, LaneSnapshot, QosScheduler};
 
 use super::request::{Request, Response};
 use super::server::{Admit, Server, ServerConfig};
 use super::service::{Fleet, RoundExecutor};
 
-/// Multi-tenant serving front end: one [`Server`] lane per fleet, fair
-/// round-ready dispatch across lanes.
+/// Multi-tenant serving front end: one [`Server`] lane per fleet,
+/// QoS-scheduled (WDRR + SLO boost) round dispatch across lanes.
 pub struct MultiServer<'f, E: RoundExecutor = Fleet> {
     lanes: Vec<Server<'f, E>>,
-    /// fair-dispatch cursor: the lane AFTER the last one dispatched is
-    /// scanned first
-    cursor: usize,
+    sched: QosScheduler,
 }
 
 impl<'f, E: RoundExecutor> Default for MultiServer<'f, E> {
@@ -56,16 +63,40 @@ impl<'f, E: RoundExecutor> Default for MultiServer<'f, E> {
     }
 }
 
+fn snapshot<E: RoundExecutor>(lane: &Server<'_, E>) -> LaneSnapshot {
+    LaneSnapshot {
+        ready: lane.round_ready(),
+        pending: lane.pending(),
+        oldest_wait: lane.oldest_wait(),
+    }
+}
+
 impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     pub fn new() -> MultiServer<'f, E> {
-        MultiServer { lanes: Vec::new(), cursor: 0 }
+        Self::with_boost_margin(QosScheduler::DEFAULT_BOOST_MARGIN)
     }
 
-    /// Register one fleet as a tenant; returns its lane index (the
-    /// handle used by [`MultiServer::offer`]).
+    /// `boost_margin` is the scheduler's ε: how close to its SLO a
+    /// lane's oldest wait may get before the lane preempts WDRR.
+    pub fn with_boost_margin(eps: Duration) -> MultiServer<'f, E> {
+        MultiServer { lanes: Vec::new(), sched: QosScheduler::new(eps) }
+    }
+
+    /// Register one fleet as a tenant with default QoS (weight 1, no
+    /// effective SLO — plain fair round-robin); returns its lane index
+    /// (the handle used by [`MultiServer::offer`]).
     pub fn add_lane(&mut self, fleet: &'f E, cfg: ServerConfig) -> usize {
-        self.lanes.push(Server::new(fleet, cfg));
-        self.lanes.len() - 1
+        self.add_lane_qos(fleet, cfg, LaneQos::default())
+    }
+
+    /// Register one fleet as a tenant with an explicit [`LaneQos`]
+    /// (WDRR weight + SLO). The lane's metrics count violations of
+    /// `qos.slo` from here on.
+    pub fn add_lane_qos(&mut self, fleet: &'f E, cfg: ServerConfig, qos: LaneQos) -> usize {
+        let mut server = Server::new(fleet, cfg);
+        server.metrics.slo = Some(qos.slo.as_secs_f64());
+        self.lanes.push(server);
+        self.sched.add_lane(qos)
     }
 
     pub fn lanes(&self) -> usize {
@@ -75,6 +106,11 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// Per-lane router/batcher (queue state, metrics).
     pub fn lane(&self, lane: usize) -> &Server<'f, E> {
         &self.lanes[lane]
+    }
+
+    /// The scheduling contract `lane` was registered with.
+    pub fn qos(&self, lane: usize) -> LaneQos {
+        self.sched.qos(lane)
     }
 
     /// Route one request to `lane`'s per-model queues.
@@ -90,32 +126,66 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         self.lanes.iter().map(|l| l.pending()).sum()
     }
 
-    /// The next lane whose round is due, scanning fairly from the
-    /// cursor: a lane is due when every model has work or its oldest
-    /// queued request has waited past that lane's `max_wait`.
+    /// The lane the QoS scheduler would dispatch next: an SLO-urgent
+    /// lane first, otherwise the WDRR pick among round-ready lanes.
+    /// `None` when nothing is due. Pure — deficits are only charged by
+    /// an actual [`MultiServer::dispatch_next`].
     pub fn ready_lane(&self) -> Option<usize> {
-        let n = self.lanes.len();
-        (0..n)
-            .map(|k| (self.cursor + k) % n)
-            .find(|&i| self.lanes[i].round_ready())
+        let lanes = &self.lanes;
+        self.sched.select(&|i| snapshot(&lanes[i])).map(|p| p.lane)
     }
 
-    /// Dispatch the next due lane, appending its responses to
-    /// `responses`. Returns `Some((lane, responses_appended))`, or
-    /// `None` when no lane is due yet. A failed round requeues its
-    /// requests inside the lane (original FIFO order and wait clocks)
-    /// and surfaces the error; the cursor still advances past the lane
-    /// so a persistently failing fleet cannot starve the others.
+    /// How long until some lane becomes due (batching deadline or SLO
+    /// boost), `Duration::ZERO` if one already is, `None` when every
+    /// queue is empty. This is the longest an ingress loop may block
+    /// without risking an idle dispatch thread next to a due round.
+    pub fn next_due_in(&self) -> Option<Duration> {
+        if self.ready_lane().is_some() {
+            return Some(Duration::ZERO);
+        }
+        let mut best: Option<Duration> = None;
+        for (i, lane) in self.lanes.iter().enumerate() {
+            let Some(wait) = lane.oldest_wait() else { continue };
+            let qos = self.sched.qos(i);
+            let batch_due = lane.config().max_wait.saturating_sub(wait);
+            let slo_due = qos
+                .slo
+                .saturating_sub(self.sched.boost_margin())
+                .saturating_sub(wait);
+            let due = batch_due.min(slo_due);
+            best = Some(match best {
+                Some(b) => b.min(due),
+                None => due,
+            });
+        }
+        best
+    }
+
+    /// Dispatch the next due lane (QoS pick), appending its responses
+    /// to `responses`. Returns `Some((lane, responses_appended))`, or
+    /// `None` when no lane is due yet. An SLO-urgent pick dispatches
+    /// even if the lane's round is not batching-ready — the round pads.
+    /// A failed round requeues its requests inside the lane (original
+    /// FIFO order and wait clocks) and surfaces the error; the cursor
+    /// and deficit still advance past the lane so a persistently
+    /// failing fleet cannot starve the others.
     pub fn dispatch_next(
         &mut self,
         responses: &mut Vec<Response>,
     ) -> Result<Option<(usize, usize)>> {
-        let Some(lane) = self.ready_lane() else {
-            return Ok(None);
+        let pick = {
+            let lanes = &self.lanes;
+            match self.sched.select(&|i| snapshot(&lanes[i])) {
+                Some(p) => p,
+                None => return Ok(None),
+            }
         };
-        self.cursor = (lane + 1) % self.lanes.len();
-        let n = self.lanes[lane].dispatch_into(responses)?;
-        Ok(Some((lane, n)))
+        {
+            let lanes = &self.lanes;
+            self.sched.commit(&pick, &|i| snapshot(&lanes[i]));
+        }
+        let n = self.lanes[pick.lane].dispatch_into(responses)?;
+        Ok(Some((pick.lane, n)))
     }
 
     /// Dispatch (padded) rounds until every queue on every lane is
@@ -128,10 +198,10 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
             // round-robin over lanes with work so the flush stays fair
             let n = self.lanes.len();
             let lane = (0..n)
-                .map(|k| (self.cursor + k) % n)
+                .map(|k| (self.sched.cursor() + k) % n)
                 .find(|&i| self.lanes[i].pending() > 0)
                 .expect("pending() > 0 implies some lane has work");
-            self.cursor = (lane + 1) % n;
+            self.sched.rotate_after(lane);
             total += self.lanes[lane].dispatch_into(responses)?;
         }
         Ok(total)

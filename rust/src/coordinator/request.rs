@@ -20,6 +20,20 @@ impl Request {
     pub fn new(id: u64, model_idx: usize, input: Tensor) -> Request {
         Request { id, model_idx, input, arrived: Instant::now() }
     }
+
+    /// Re-stamp `arrived` to now — the **admission-boundary** stamp.
+    ///
+    /// `Request` is `Clone` and producers may build (or clone) requests
+    /// long before the server sees them; queue-wait math keyed off a
+    /// producer-side construction time would inflate latencies and
+    /// trip `max_wait`/SLO deadlines that never really elapsed. Ingress
+    /// paths (`ingress::bridge`) call this at admission; `Server::offer`
+    /// additionally clamps stragglers to a server-wide arrival floor so
+    /// admission order IS arrival order.
+    pub fn arrived_now(mut self) -> Request {
+        self.arrived = Instant::now();
+        self
+    }
 }
 
 /// The corresponding completion.

@@ -85,6 +85,10 @@ pub struct Server<'f, E: RoundExecutor = Fleet> {
     slots: Vec<Option<Request>>,
     /// per-round output scratch, reused
     outs: Vec<Option<Tensor>>,
+    /// arrival-stamp floor: starts at server creation and advances with
+    /// every admission, so no `offer` can fake queue-wait history with
+    /// a backdated `arrived` (even into an empty queue)
+    arrival_floor: Instant,
     pub metrics: Metrics,
 }
 
@@ -98,6 +102,7 @@ impl<'f, E: RoundExecutor> Server<'f, E> {
             queues: (0..fleet.m()).map(|_| VecDeque::new()).collect(),
             slots: Vec::with_capacity(fleet.m()),
             outs: Vec::with_capacity(fleet.m()),
+            arrival_floor: Instant::now(),
             metrics,
         }
     }
@@ -117,6 +122,7 @@ impl<'f, E: RoundExecutor> Server<'f, E> {
         // out-of-range routing index or wrong-shaped payload — is
         // rejected here, per request, rather than failing (and being
         // requeued with) an entire round at dispatch
+        let mut req = req;
         let shape = req.input.shape();
         let bs = self.fleet.bs();
         if req.model_idx >= self.fleet.m()
@@ -129,6 +135,18 @@ impl<'f, E: RoundExecutor> Server<'f, E> {
         if q.len() >= self.cfg.queue_cap {
             return Admit::Rejected;
         }
+        // arrival monotonicity: the queue fronts drive the max_wait and
+        // SLO clocks, so a producer that reuses a stale `arrived` stamp
+        // (e.g. cloning one Request for a whole batch) must not fake
+        // queue-wait history. Clamp to the server-wide floor — creation
+        // time, then every prior admission — so admission order IS
+        // arrival order, including into an empty queue. Ingress paths
+        // re-stamp via `Request::arrived_now` before offering, so the
+        // clamp only fires for misbehaving direct callers.
+        if req.arrived < self.arrival_floor {
+            req.arrived = self.arrival_floor;
+        }
+        self.arrival_floor = req.arrived;
         q.push_back(req);
         Admit::Queued
     }
@@ -144,6 +162,13 @@ impl<'f, E: RoundExecutor> Server<'f, E> {
     /// dispatch.
     fn oldest_arrival(&self) -> Option<Instant> {
         self.queues.iter().filter_map(|q| q.front()).map(|r| r.arrived).min()
+    }
+
+    /// How long the oldest queued request has been waiting (the value
+    /// the batching deadline and the QoS scheduler's SLO boost compare
+    /// against). `None` when every queue is empty.
+    pub fn oldest_wait(&self) -> Option<Duration> {
+        self.oldest_arrival().map(|t| t.elapsed())
     }
 
     /// True when a round should dispatch: either every model has work, or

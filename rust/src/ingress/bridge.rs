@@ -1,0 +1,506 @@
+//! `IngressBridge`: the handoff between N producer threads and the one
+//! dispatch thread that owns a `MultiServer`.
+//!
+//! Producers (connection reader threads, in-proc load generators) parse
+//! request frames and [`IngressBridge::submit`] an [`Envelope`] each.
+//! The bridge is a **bounded** mutex+condvar MPSC queue: a full bridge
+//! rejects at submit time (`SubmitError::Busy`) and the producer sends a
+//! `Reject { Busy }` frame back — open-loop arrivals are never parked on
+//! a lock, so backpressure reaches the client instead of silently
+//! queueing unbounded memory. Lane-level backpressure (`Admit::Rejected`
+//! / `Admit::Invalid` from `Server::offer`) is mapped to the same frame
+//! type by the dispatch loop.
+//!
+//! [`run_dispatch`] is the single consumer. Its loop keeps a strict
+//! priority: (1) drain arrivals without blocking, (2) dispatch the lane
+//! the [`QosScheduler`] picks, (3) only when nothing is due, block for
+//! the next arrival — capped at the soonest batching/SLO deadline — so
+//! the dispatch thread never idles while any lane is round-ready.
+//!
+//! Requests are re-stamped (`Request::arrived_now`) at admission: the
+//! queue-wait clock starts when the server accepts the request, not
+//! when some producer happened to construct (or clone) it.
+//!
+//! [`QosScheduler`]: super::qos::QosScheduler
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::multi::MultiServer;
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::server::Admit;
+use crate::coordinator::service::RoundExecutor;
+use crate::tensor::Tensor;
+
+use super::frame::{Frame, RejectCode};
+use super::transport::{FrameQueue, Transport};
+
+/// One admitted-or-not unit of work crossing the bridge.
+pub struct Envelope {
+    /// target `MultiServer` lane
+    pub lane: usize,
+    /// the client's request id (echoed back on the wire; the dispatch
+    /// loop re-keys requests internally so ids from different
+    /// connections cannot collide)
+    pub client_id: u64,
+    pub req: Request,
+    /// where this connection's responses and rejections go
+    pub reply: FrameQueue,
+}
+
+/// Why a submit did not enqueue. The envelope is handed back so the
+/// producer can answer the client without re-parsing anything.
+pub enum SubmitError {
+    /// bridge full — backpressure, retry later
+    Busy(Envelope),
+    /// bridge closed — server shutting down
+    Closed(Envelope),
+}
+
+struct BridgeState {
+    q: VecDeque<Envelope>,
+    closed: bool,
+}
+
+struct BridgeInner {
+    state: Mutex<BridgeState>,
+    cap: usize,
+    ready: Condvar,
+}
+
+/// Bounded MPSC handoff: many producers, one dispatch thread.
+#[derive(Clone)]
+pub struct IngressBridge {
+    inner: Arc<BridgeInner>,
+}
+
+impl IngressBridge {
+    /// `cap` bounds queued envelopes (clamped >= 1): beyond it, submits
+    /// fail with [`SubmitError::Busy`] until the dispatch thread drains.
+    pub fn new(cap: usize) -> IngressBridge {
+        IngressBridge {
+            inner: Arc::new(BridgeInner {
+                state: Mutex::new(BridgeState { q: VecDeque::new(), closed: false }),
+                cap: cap.max(1),
+                ready: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Non-blocking submit (producer side). Never parks the caller: a
+    /// full or closed bridge returns the envelope for a rejection frame.
+    pub fn submit(&self, env: Envelope) -> std::result::Result<(), SubmitError> {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.closed {
+            return Err(SubmitError::Closed(env));
+        }
+        if st.q.len() >= self.inner.cap {
+            return Err(SubmitError::Busy(env));
+        }
+        st.q.push_back(env);
+        self.inner.ready.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking pop (dispatch side).
+    pub fn try_pop(&self) -> Option<Envelope> {
+        self.inner.state.lock().unwrap().q.pop_front()
+    }
+
+    /// Pop, blocking up to `timeout` for an arrival. `None` on timeout
+    /// or when the bridge is closed and drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<Envelope> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(env) = st.q.pop_front() {
+                return Some(env);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (next, res) = self.inner.ready.wait_timeout(st, deadline - now).unwrap();
+            st = next;
+            if res.timed_out() && st.q.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    /// Close the bridge: new submits fail `Closed`, queued envelopes
+    /// remain poppable, blocked pops wake.
+    pub fn close(&self) {
+        self.inner.state.lock().unwrap().closed = true;
+        self.inner.ready.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.state.lock().unwrap().closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-connection glue: transport <-> bridge
+// ---------------------------------------------------------------------------
+
+/// Threads serving one client connection, plus the reply queue the
+/// dispatch loop routes this connection's responses into.
+pub struct ConnHandle {
+    pub reader: JoinHandle<()>,
+    pub writer: JoinHandle<()>,
+    /// Close after dispatch has fully drained to flush-and-release the
+    /// writer; until then it stays open so late responses still flow.
+    pub reply: FrameQueue,
+}
+
+impl ConnHandle {
+    /// Flush remaining replies and join both threads (orchestrator
+    /// shutdown path, after dispatch has drained). The reader is joined
+    /// BEFORE the reply queue closes: it may still be answering frames
+    /// that were in flight when the bridge closed (Shutdown rejects),
+    /// and closing first would drop those outcomes. The reader exits on
+    /// `Eos`/EOF, which every client sends when it stops producing.
+    pub fn shutdown(self) {
+        let _ = self.reader.join();
+        self.reply.close();
+        let _ = self.writer.join();
+    }
+}
+
+/// Serve one client connection: a reader thread parses `Request` frames
+/// into envelopes, a writer thread drains the connection's reply queue.
+/// The reader stops at `Eos` or EOF **without** closing the reply queue
+/// (responses for still-queued requests must flush first); the
+/// orchestrator closes it via [`ConnHandle::shutdown`] once dispatch has
+/// drained. A vanished client unblocks the writer through send errors.
+pub fn serve_conn(bridge: IngressBridge, transport: Box<dyn Transport>) -> Result<ConnHandle> {
+    let (mut tx, mut rx) = transport.split()?;
+    let reply = FrameQueue::new();
+
+    let wq = reply.clone();
+    let writer = std::thread::spawn(move || {
+        while let Some(frame) = wq.pop() {
+            if tx.send(&frame).is_err() {
+                // client gone: stop delivering, let late pushes drop
+                wq.close();
+                break;
+            }
+        }
+    });
+
+    let rq = reply.clone();
+    let reader = std::thread::spawn(move || {
+        loop {
+            let frame = match rx.recv() {
+                Ok(Some(f)) => f,
+                Ok(None) | Err(_) => break, // EOF or dead connection
+            };
+            match frame {
+                Frame::Request { id, lane, model_idx, shape, data } => {
+                    let input = match Tensor::new(shape, data) {
+                        Ok(t) => t,
+                        Err(e) => {
+                            rq.push(Frame::reject(
+                                id,
+                                lane,
+                                RejectCode::Invalid,
+                                &format!("bad payload: {e}"),
+                            ));
+                            continue;
+                        }
+                    };
+                    let req = Request::new(id, model_idx as usize, input);
+                    let env =
+                        Envelope { lane: lane as usize, client_id: id, req, reply: rq.clone() };
+                    match bridge.submit(env) {
+                        Ok(()) => {}
+                        Err(SubmitError::Busy(env)) => {
+                            env.reply.push(Frame::reject(
+                                env.client_id,
+                                lane,
+                                RejectCode::Busy,
+                                "ingress bridge full",
+                            ));
+                        }
+                        // keep reading after Closed: frames already in
+                        // flight each still get their outcome frame (a
+                        // typed Shutdown reject), instead of being
+                        // orphaned with no reply at all
+                        Err(SubmitError::Closed(env)) => {
+                            env.reply.push(Frame::reject(
+                                env.client_id,
+                                lane,
+                                RejectCode::Shutdown,
+                                "server shutting down",
+                            ));
+                        }
+                    }
+                }
+                Frame::Eos => break,
+                // clients only send requests; anything else is a
+                // protocol violation answered in-band
+                _ => {
+                    rq.push(Frame::reject(0, 0, RejectCode::Invalid, "unexpected frame"));
+                }
+            }
+        }
+    });
+
+    Ok(ConnHandle { reader, writer, reply })
+}
+
+// ---------------------------------------------------------------------------
+// the dispatch loop (single consumer)
+// ---------------------------------------------------------------------------
+
+/// Counters from one [`run_dispatch`] run.
+#[derive(Debug, Default, Clone)]
+pub struct IngressStats {
+    /// envelopes admitted into lane queues
+    pub admitted: u64,
+    /// envelopes refused with `Admit::Rejected` (lane queue full)
+    pub lane_busy: u64,
+    /// envelopes refused with `Admit::Invalid`
+    pub invalid: u64,
+    /// envelopes addressed to a lane that does not exist
+    pub no_lane: u64,
+    /// responses routed back to connections
+    pub responses: u64,
+    /// rounds dispatched
+    pub rounds: u64,
+    /// failed rounds that were retried (requests requeued by the lane)
+    pub round_errors: u64,
+    /// times the pre-block recheck found a lane due (a deadline expired
+    /// in the gap since `dispatch_next` said "nothing due") — the loop
+    /// dispatches instead of napping, so nonzero means races were
+    /// *caught*, never that the thread idled while work was ready
+    pub idle_naps_avoided: u64,
+}
+
+/// Response routing entry: which connection gets server-keyed request id.
+struct Route {
+    client_id: u64,
+    lane: usize,
+    reply: FrameQueue,
+}
+
+/// Upper bound on one idle nap — even with no deadline in sight the
+/// loop re-checks arrivals and shutdown at this cadence.
+const IDLE_POLL: Duration = Duration::from_millis(5);
+/// Consecutive failed rounds tolerated (requests are requeued by the
+/// lane each time) before the loop gives up and surfaces the error.
+const MAX_CONSECUTIVE_ROUND_ERRORS: u32 = 3;
+
+/// Run the dispatch side of the bridge to completion: admit arrivals,
+/// dispatch QoS-picked rounds, route responses, and return once the
+/// bridge is closed AND every queue is drained. The loop never blocks
+/// while a lane is due (arrival drains are non-blocking and idle naps
+/// are capped at the soonest batching/SLO deadline).
+pub fn run_dispatch<E: RoundExecutor>(
+    multi: &mut MultiServer<E>,
+    bridge: &IngressBridge,
+) -> Result<IngressStats> {
+    let mut stats = IngressStats::default();
+    let mut routes: HashMap<u64, Route> = HashMap::new();
+    let mut seq: u64 = 0;
+    let mut responses: Vec<Response> = Vec::new();
+    let mut consecutive_errors: u32 = 0;
+
+    loop {
+        // 1) drain arrivals without blocking
+        while let Some(env) = bridge.try_pop() {
+            admit(multi, env, &mut routes, &mut seq, &mut stats);
+        }
+
+        // 2) dispatch whatever the QoS scheduler says is due
+        match multi.dispatch_next(&mut responses) {
+            Ok(Some((lane, _n))) => {
+                consecutive_errors = 0;
+                stats.rounds += 1;
+                route_responses(&mut responses, &mut routes, lane, &mut stats);
+                continue;
+            }
+            Ok(None) => {}
+            Err(e) => {
+                // the lane requeued its requests; retry a few times
+                // before surfacing (a persistently failing fleet)
+                stats.round_errors += 1;
+                consecutive_errors += 1;
+                if consecutive_errors >= MAX_CONSECUTIVE_ROUND_ERRORS {
+                    return Err(e).context("dispatch loop: rounds failing persistently");
+                }
+                continue;
+            }
+        }
+
+        // 3) nothing due: shutdown flush, or a deadline-capped nap
+        if bridge.is_closed() && bridge.is_empty() {
+            if multi.pending() == 0 {
+                break;
+            }
+            // flush leftovers (partial rounds before their deadline)
+            let flushed = multi.drain(&mut responses)?;
+            stats.rounds += 1; // at least one; exact count is in metrics
+            route_responses(&mut responses, &mut routes, usize::MAX, &mut stats);
+            debug_assert!(flushed > 0);
+            continue;
+        }
+        // one scan decides both "due right now?" (a deadline expired in
+        // the microseconds since dispatch_next said nothing was) and
+        // how long the nap may be
+        let nap = match multi.next_due_in() {
+            Some(d) if d.is_zero() => {
+                stats.idle_naps_avoided += 1;
+                continue;
+            }
+            Some(d) => d.min(IDLE_POLL),
+            None => IDLE_POLL,
+        };
+        if let Some(env) = bridge.pop_timeout(nap) {
+            admit(multi, env, &mut routes, &mut seq, &mut stats);
+        }
+    }
+    Ok(stats)
+}
+
+/// Admit one envelope: re-stamp arrival at the boundary, re-key the id,
+/// offer to the lane, and answer rejections in-band.
+fn admit<E: RoundExecutor>(
+    multi: &mut MultiServer<E>,
+    env: Envelope,
+    routes: &mut HashMap<u64, Route>,
+    seq: &mut u64,
+    stats: &mut IngressStats,
+) {
+    let Envelope { lane, client_id, req, reply } = env;
+    // admission-boundary stamp: queue-wait math must not inherit the
+    // producer's construction time (or a cloned request's stale stamp)
+    let mut req = req.arrived_now();
+    let sid = *seq;
+    *seq += 1;
+    req.id = sid;
+    match multi.offer(lane, req) {
+        Err(_) => {
+            stats.no_lane += 1;
+            reply.push(Frame::reject(client_id, lane as u32, RejectCode::NoLane, "no such lane"));
+        }
+        Ok(Admit::Queued) => {
+            stats.admitted += 1;
+            routes.insert(sid, Route { client_id, lane, reply });
+        }
+        Ok(Admit::Rejected) => {
+            stats.lane_busy += 1;
+            reply.push(Frame::reject(client_id, lane as u32, RejectCode::Busy, "lane queue full"));
+        }
+        Ok(Admit::Invalid) => {
+            stats.invalid += 1;
+            reply.push(Frame::reject(
+                client_id,
+                lane as u32,
+                RejectCode::Invalid,
+                "payload does not match lane fleet",
+            ));
+        }
+    }
+}
+
+/// Send a batch of responses back to their connections. `lane` is a
+/// hint for the common case; the authoritative lane is in the route
+/// (drain batches mix lanes).
+fn route_responses(
+    responses: &mut Vec<Response>,
+    routes: &mut HashMap<u64, Route>,
+    lane: usize,
+    stats: &mut IngressStats,
+) {
+    for resp in responses.drain(..) {
+        let Some(route) = routes.remove(&resp.id) else {
+            // a request admitted outside this loop (foreign offer) has
+            // no connection to answer; drop silently
+            continue;
+        };
+        debug_assert!(lane == usize::MAX || route.lane == lane);
+        stats.responses += 1;
+        let (shape, data) = resp.output.into_parts();
+        // a closed reply queue (client gone) drops the frame, which is
+        // the correct delivery semantics for a vanished connection
+        route.reply.push(Frame::Response {
+            id: route.client_id,
+            lane: route.lane as u32,
+            model_idx: resp.model_idx as u32,
+            latency: resp.latency,
+            shape,
+            data,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+    use crate::tensor::Tensor;
+
+    fn env(id: u64) -> Envelope {
+        Envelope {
+            lane: 0,
+            client_id: id,
+            req: Request::new(id, 0, Tensor::zeros(&[1, 4])),
+            reply: FrameQueue::new(),
+        }
+    }
+
+    #[test]
+    fn bridge_bounds_and_backpressure() {
+        let b = IngressBridge::new(2);
+        assert!(b.submit(env(0)).is_ok());
+        assert!(b.submit(env(1)).is_ok());
+        match b.submit(env(2)) {
+            Err(SubmitError::Busy(e)) => assert_eq!(e.client_id, 2),
+            _ => panic!("third submit must hit the bound"),
+        }
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.try_pop().unwrap().client_id, 0);
+        assert!(b.submit(env(3)).is_ok(), "pop frees a slot");
+    }
+
+    #[test]
+    fn closed_bridge_rejects_submits_but_drains_pops() {
+        let b = IngressBridge::new(4);
+        assert!(b.submit(env(0)).is_ok());
+        b.close();
+        match b.submit(env(1)) {
+            Err(SubmitError::Closed(e)) => assert_eq!(e.client_id, 1),
+            _ => panic!("closed bridge must refuse submits"),
+        }
+        assert_eq!(b.pop_timeout(Duration::from_millis(1)).unwrap().client_id, 0);
+        assert!(b.pop_timeout(Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn pop_timeout_wakes_on_submit() {
+        let b = IngressBridge::new(4);
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || b2.pop_timeout(Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(b.submit(env(7)).is_ok());
+        let got = t.join().unwrap().expect("blocked pop must wake on submit");
+        assert_eq!(got.client_id, 7);
+    }
+}

@@ -1,0 +1,390 @@
+//! Ingress wire format: length-prefixed frames.
+//!
+//! Every message on an ingress connection is one frame:
+//!
+//! ```text
+//! [u32 LE payload_len][payload]
+//! payload := [u8 tag][tag-specific fields]   (all integers little-endian)
+//!   tag 1 Request : u64 id, u32 lane, u32 model_idx,
+//!                   u8 rank, rank x u32 dims, n x f32 data
+//!   tag 2 Response: u64 id, u32 lane, u32 model_idx, u64 latency_bits,
+//!                   u8 rank, rank x u32 dims, n x f32 data
+//!   tag 3 Reject  : u64 id, u32 lane, u8 code, u32 msg_len, msg (utf8)
+//!   tag 4 Eos     : (empty) — client is done sending; the server keeps
+//!                   the connection open until queued responses flush
+//! ```
+//!
+//! Decoding is fully validated before any payload allocation is trusted:
+//! the length prefix is capped at [`MAX_FRAME`], ranks at [`MAX_RANK`],
+//! and the dim product must equal the remaining f32 count — a malformed
+//! or hostile frame fails as one `Err`, never as a huge allocation or a
+//! panic. `read_from` distinguishes clean EOF at a frame boundary
+//! (`Ok(None)`) from a connection dying mid-frame (`Err`).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+/// Upper bound on one frame's payload (64 MiB) — rejects hostile length
+/// prefixes before allocating.
+pub const MAX_FRAME: usize = 1 << 26;
+/// Upper bound on a payload tensor's rank.
+pub const MAX_RANK: usize = 8;
+
+const TAG_REQUEST: u8 = 1;
+const TAG_RESPONSE: u8 = 2;
+const TAG_REJECT: u8 = 3;
+const TAG_EOS: u8 = 4;
+
+/// Why an ingress request was refused (mirrors `coordinator::server::Admit`
+/// plus the bridge- and routing-level causes the wire adds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectCode {
+    /// backpressure: the bridge or the lane queue is full — retry later
+    Busy,
+    /// malformed request (shape/routing) — never admissible
+    Invalid,
+    /// the addressed lane does not exist
+    NoLane,
+    /// the server is shutting down
+    Shutdown,
+}
+
+impl RejectCode {
+    fn to_u8(self) -> u8 {
+        match self {
+            RejectCode::Busy => 1,
+            RejectCode::Invalid => 2,
+            RejectCode::NoLane => 3,
+            RejectCode::Shutdown => 4,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<RejectCode> {
+        Ok(match b {
+            1 => RejectCode::Busy,
+            2 => RejectCode::Invalid,
+            3 => RejectCode::NoLane,
+            4 => RejectCode::Shutdown,
+            _ => bail!("bad reject code {b}"),
+        })
+    }
+}
+
+/// One ingress wire message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// client -> server: one inference request for `lane` / `model_idx`
+    Request {
+        id: u64,
+        lane: u32,
+        model_idx: u32,
+        shape: Vec<usize>,
+        data: Vec<f32>,
+    },
+    /// server -> client: the completion for request `id`
+    Response {
+        id: u64,
+        lane: u32,
+        model_idx: u32,
+        /// end-to-end seconds (admission -> completion)
+        latency: f64,
+        shape: Vec<usize>,
+        data: Vec<f32>,
+    },
+    /// server -> client: request `id` was refused
+    Reject {
+        id: u64,
+        lane: u32,
+        code: RejectCode,
+        msg: String,
+    },
+    /// client -> server: end of request stream (graceful half-close)
+    Eos,
+}
+
+impl Frame {
+    pub fn reject(id: u64, lane: u32, code: RejectCode, msg: &str) -> Frame {
+        Frame::Reject { id, lane, code, msg: msg.to_string() }
+    }
+
+    /// Append the full framed encoding (length prefix + payload) to `out`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let at = out.len();
+        out.extend_from_slice(&[0u8; 4]); // length backpatched below
+        match self {
+            Frame::Request { id, lane, model_idx, shape, data } => {
+                out.push(TAG_REQUEST);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&lane.to_le_bytes());
+                out.extend_from_slice(&model_idx.to_le_bytes());
+                put_tensor(out, shape, data);
+            }
+            Frame::Response { id, lane, model_idx, latency, shape, data } => {
+                out.push(TAG_RESPONSE);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&lane.to_le_bytes());
+                out.extend_from_slice(&model_idx.to_le_bytes());
+                out.extend_from_slice(&latency.to_bits().to_le_bytes());
+                put_tensor(out, shape, data);
+            }
+            Frame::Reject { id, lane, code, msg } => {
+                out.push(TAG_REJECT);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&lane.to_le_bytes());
+                out.push(code.to_u8());
+                out.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+                out.extend_from_slice(msg.as_bytes());
+            }
+            Frame::Eos => out.push(TAG_EOS),
+        }
+        let len = (out.len() - at - 4) as u32;
+        out[at..at + 4].copy_from_slice(&len.to_le_bytes());
+    }
+
+    /// Write one frame (length prefix + payload) to `w`. Callers that
+    /// batch writes should wrap `w` in a `BufWriter` and flush.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        let mut buf = Vec::new();
+        self.encode_into(&mut buf);
+        w.write_all(&buf).context("frame write")
+    }
+
+    /// Read one frame. `Ok(None)` on clean EOF at a frame boundary; a
+    /// connection dying mid-frame is an error.
+    pub fn read_from(r: &mut impl Read) -> Result<Option<Frame>> {
+        let mut len4 = [0u8; 4];
+        let mut got = 0;
+        while got < 4 {
+            let n = r.read(&mut len4[got..]).context("frame length read")?;
+            if n == 0 {
+                if got == 0 {
+                    return Ok(None); // clean EOF between frames
+                }
+                bail!("connection closed mid frame-length");
+            }
+            got += n;
+        }
+        let len = u32::from_le_bytes(len4) as usize;
+        if len == 0 || len > MAX_FRAME {
+            bail!("bad frame length {len} (max {MAX_FRAME})");
+        }
+        let mut payload = vec![0u8; len];
+        r.read_exact(&mut payload).context("frame payload read")?;
+        Self::decode_payload(&payload).map(Some)
+    }
+
+    /// Decode one payload (the bytes AFTER the length prefix).
+    pub fn decode_payload(b: &[u8]) -> Result<Frame> {
+        let mut rd = Rd { b, i: 0 };
+        let frame = match rd.u8()? {
+            TAG_REQUEST => {
+                let id = rd.u64()?;
+                let lane = rd.u32()?;
+                let model_idx = rd.u32()?;
+                let (shape, data) = rd.tensor()?;
+                Frame::Request { id, lane, model_idx, shape, data }
+            }
+            TAG_RESPONSE => {
+                let id = rd.u64()?;
+                let lane = rd.u32()?;
+                let model_idx = rd.u32()?;
+                let latency = f64::from_bits(rd.u64()?);
+                let (shape, data) = rd.tensor()?;
+                Frame::Response { id, lane, model_idx, latency, shape, data }
+            }
+            TAG_REJECT => {
+                let id = rd.u64()?;
+                let lane = rd.u32()?;
+                let code = RejectCode::from_u8(rd.u8()?)?;
+                let n = rd.u32()? as usize;
+                let msg = String::from_utf8(rd.take(n)?.to_vec())
+                    .context("reject message is not utf8")?;
+                Frame::Reject { id, lane, code, msg }
+            }
+            TAG_EOS => Frame::Eos,
+            t => bail!("unknown frame tag {t}"),
+        };
+        rd.done()?;
+        Ok(frame)
+    }
+}
+
+fn put_tensor(out: &mut Vec<u8>, shape: &[usize], data: &[f32]) {
+    // encode-side guard mirroring the decoder's caps: a frame this side
+    // emits must be one the peer will accept, or a server-side success
+    // would read as a dead connection over there. (Payloads here are
+    // request/response tensors, orders of magnitude under the caps;
+    // violating them is a programming error, not a traffic condition.)
+    assert!(shape.len() <= MAX_RANK, "tensor rank {} exceeds the wire cap", shape.len());
+    assert!(
+        data.len() <= MAX_FRAME / 4,
+        "tensor of {} elements exceeds the {MAX_FRAME}-byte frame cap",
+        data.len()
+    );
+    out.push(shape.len() as u8);
+    for &d in shape {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    for &v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian payload reader.
+struct Rd<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() - self.i < n {
+            bail!("truncated frame: wanted {n} bytes, have {}", self.b.len() - self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// `u8 rank, rank x u32 dims, (prod dims) x f32` — the dim product
+    /// must equal the f32 count left in the payload.
+    fn tensor(&mut self) -> Result<(Vec<usize>, Vec<f32>)> {
+        let rank = self.u8()? as usize;
+        if rank > MAX_RANK {
+            bail!("tensor rank {rank} exceeds max {MAX_RANK}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        let mut n: usize = 1;
+        for _ in 0..rank {
+            let d = self.u32()? as usize;
+            n = n
+                .checked_mul(d)
+                .with_context(|| format!("tensor shape {shape:?} x {d} overflows"))?;
+            shape.push(d);
+        }
+        if n > MAX_FRAME / 4 {
+            bail!("tensor of {n} elements exceeds the frame cap");
+        }
+        let bytes = self.take(n * 4)?;
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok((shape, data))
+    }
+
+    /// Every payload byte must be consumed — trailing garbage is a
+    /// malformed frame, not an extension point.
+    fn done(&self) -> Result<()> {
+        if self.i != self.b.len() {
+            bail!("frame has {} trailing bytes", self.b.len() - self.i);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        f.encode_into(&mut buf);
+        let mut r = &buf[..];
+        let got = Frame::read_from(&mut r).unwrap().unwrap();
+        assert!(r.is_empty(), "reader must consume the whole frame");
+        got
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        let f = Frame::Request {
+            id: 7,
+            lane: 1,
+            model_idx: 3,
+            shape: vec![1, 4],
+            data: vec![0.5, -1.25, 3.0, f32::MIN_POSITIVE],
+        };
+        assert_eq!(roundtrip(&f), f);
+    }
+
+    #[test]
+    fn response_and_reject_and_eos_roundtrip() {
+        let r = Frame::Response {
+            id: u64::MAX,
+            lane: 0,
+            model_idx: 0,
+            latency: 0.012345,
+            shape: vec![2, 2],
+            data: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        assert_eq!(roundtrip(&r), r);
+        let j = Frame::reject(9, 2, RejectCode::Busy, "lane queue full");
+        assert_eq!(roundtrip(&j), j);
+        assert_eq!(roundtrip(&Frame::Eos), Frame::Eos);
+    }
+
+    #[test]
+    fn empty_stream_is_clean_eof() {
+        let mut r: &[u8] = &[];
+        assert!(Frame::read_from(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn mid_frame_eof_is_an_error() {
+        let mut buf = Vec::new();
+        Frame::Eos.encode_into(&mut buf);
+        let mut r = &buf[..3]; // cut inside the length prefix
+        assert!(Frame::read_from(&mut r).is_err());
+        let mut r = &buf[..4]; // length present, payload missing
+        assert!(Frame::read_from(&mut r).is_err());
+    }
+
+    #[test]
+    fn hostile_length_and_rank_are_rejected() {
+        let mut r: &[u8] = &(u32::MAX).to_le_bytes()[..];
+        assert!(Frame::read_from(&mut r).is_err(), "oversized length prefix");
+
+        // rank 9 tensor
+        let mut payload = vec![TAG_REQUEST];
+        payload.extend_from_slice(&0u64.to_le_bytes());
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        payload.push(9);
+        assert!(Frame::decode_payload(&payload).is_err(), "rank over cap");
+    }
+
+    #[test]
+    fn shape_data_mismatch_and_trailing_bytes_fail() {
+        let f = Frame::Request {
+            id: 1,
+            lane: 0,
+            model_idx: 0,
+            shape: vec![2],
+            data: vec![1.0, 2.0],
+        };
+        let mut buf = Vec::new();
+        f.encode_into(&mut buf);
+        // corrupt the encoded dim (2 -> 3): data is now one f32 short
+        let dim_at = 4 + 1 + 8 + 4 + 4 + 1;
+        buf[dim_at] = 3;
+        let mut r = &buf[..];
+        assert!(Frame::read_from(&mut r).is_err());
+
+        // trailing garbage after a valid Eos payload
+        assert!(Frame::decode_payload(&[TAG_EOS, 0xFF]).is_err());
+    }
+}

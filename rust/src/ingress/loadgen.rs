@@ -1,0 +1,294 @@
+//! Open-loop load generation for the ingress subsystem.
+//!
+//! A closed-loop driver (every driver so far) waits for round N before
+//! offering round N+1, so the server can never be overloaded and
+//! queue-wait behavior is never exercised. The [`LoadGen`] here is
+//! **open loop**: arrivals follow the traffic process regardless of
+//! completions, which is what makes the QoS scheduler's choices (and
+//! SLO violations) observable at all.
+//!
+//! Traffic shapes ([`TrafficShape`]):
+//! - `Poisson` — homogeneous arrivals at `rate` req/s (exponential
+//!   inter-arrival times, as in `coordinator::workload`);
+//! - `Bursty` — on/off modulated Poisson: `rate` during each `on`
+//!   window, silence during each `off` window (arrivals are generated
+//!   in "active time" and mapped through the gaps).
+//!
+//! Lane skew is orthogonal to the shape: each arrival picks a lane with
+//! probability proportional to its weight, then a model uniformly
+//! within the lane — `&[(2, 9.0), (2, 1.0)]` sends 90% of traffic to
+//! lane 0.
+//!
+//! [`LoadGen::shards`] splits one stream across N producer threads by
+//! rate-thinning (N independent generators at `rate/N`; the
+//! superposition of independent Poisson processes is Poisson at the
+//! original rate), with ids striped so no two shards collide.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Arrival process shape.
+#[derive(Debug, Clone, Copy)]
+pub enum TrafficShape {
+    /// homogeneous Poisson at `rate` requests/sec
+    Poisson { rate: f64 },
+    /// Poisson at `rate` during each `on` window, silent during `off`
+    Bursty { rate: f64, on: Duration, off: Duration },
+}
+
+/// One scheduled request arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    /// offset from stream start
+    pub at: Duration,
+    pub lane: usize,
+    pub model_idx: usize,
+    pub id: u64,
+}
+
+/// Deterministic open-loop arrival generator.
+pub struct LoadGen {
+    shape: TrafficShape,
+    /// per-lane (models, weight)
+    lanes: Vec<(usize, f64)>,
+    total_weight: f64,
+    rng: Rng,
+    /// active-time clock (seconds of "rate on" time)
+    active_t: f64,
+    next_id: u64,
+    id_stride: u64,
+}
+
+impl LoadGen {
+    /// `lanes` is one `(models, weight)` per lane: arrivals pick a lane
+    /// proportionally to `weight` and a model uniformly within it.
+    pub fn new(shape: TrafficShape, lanes: &[(usize, f64)], seed: u64) -> Result<LoadGen> {
+        let rate = match shape {
+            TrafficShape::Poisson { rate } => rate,
+            TrafficShape::Bursty { rate, on, off } => {
+                if on.is_zero() {
+                    bail!("bursty traffic needs a nonzero on-window");
+                }
+                if off.is_zero() {
+                    bail!("bursty traffic with a zero off-window is just Poisson");
+                }
+                rate
+            }
+        };
+        if !rate.is_finite() || rate <= 0.0 {
+            bail!("arrival rate must be positive, got {rate}");
+        }
+        if lanes.is_empty() {
+            bail!("loadgen needs at least one lane");
+        }
+        let mut total_weight = 0.0;
+        for &(models, weight) in lanes {
+            if models == 0 {
+                bail!("every lane needs at least one model");
+            }
+            if !weight.is_finite() || weight <= 0.0 {
+                bail!("lane weights must be positive, got {weight}");
+            }
+            total_weight += weight;
+        }
+        Ok(LoadGen {
+            shape,
+            lanes: lanes.to_vec(),
+            total_weight,
+            rng: Rng::new(seed),
+            active_t: 0.0,
+            next_id: 0,
+            id_stride: 1,
+        })
+    }
+
+    /// The next arrival in time order (the `at` clock only moves
+    /// forward; for bursty shapes it skips the off windows).
+    pub fn next(&mut self) -> Arrival {
+        let rate = match self.shape {
+            TrafficShape::Poisson { rate } | TrafficShape::Bursty { rate, .. } => rate,
+        };
+        self.active_t += self.rng.exp(rate);
+        let at = match self.shape {
+            TrafficShape::Poisson { .. } => self.active_t,
+            TrafficShape::Bursty { on, off, .. } => {
+                // map active time through the on/off cycle: the k-th
+                // on-window's worth of active time lands after k off-gaps
+                let on_s = on.as_secs_f64();
+                let cycle = on_s + off.as_secs_f64();
+                let k = (self.active_t / on_s).floor();
+                k * cycle + (self.active_t - k * on_s)
+            }
+        };
+        let lane = self.pick_lane();
+        let model_idx = self.rng.usize_below(self.lanes[lane].0);
+        let id = self.next_id;
+        self.next_id += self.id_stride;
+        Arrival { at: Duration::from_secs_f64(at), lane, model_idx, id }
+    }
+
+    fn pick_lane(&mut self) -> usize {
+        let mut x = self.rng.f64() * self.total_weight;
+        for (i, &(_, w)) in self.lanes.iter().enumerate() {
+            x -= w;
+            if x < 0.0 {
+                return i;
+            }
+        }
+        self.lanes.len() - 1 // fp rounding fell off the end
+    }
+
+    /// Split into `n` independent shards for `n` producer threads: each
+    /// runs the same shape at `rate / n` (thinned Poisson — their
+    /// superposition matches the original process), with ids striped
+    /// `shard, shard+n, shard+2n, ...` so shards never collide.
+    pub fn shards(mut self, n: usize) -> Vec<LoadGen> {
+        assert!(n >= 1, "need at least one shard");
+        let shape = match self.shape {
+            TrafficShape::Poisson { rate } => TrafficShape::Poisson { rate: rate / n as f64 },
+            TrafficShape::Bursty { rate, on, off } => {
+                TrafficShape::Bursty { rate: rate / n as f64, on, off }
+            }
+        };
+        (0..n as u64)
+            .map(|i| LoadGen {
+                shape,
+                lanes: self.lanes.clone(),
+                total_weight: self.total_weight,
+                rng: self.rng.split(),
+                active_t: 0.0,
+                next_id: i,
+                id_stride: n as u64,
+            })
+            .collect()
+    }
+
+    /// Replay arrivals in real time for `horizon`, calling `send` for
+    /// each. Open loop: the clock never waits for completions — if the
+    /// server falls behind, arrivals keep coming (that is the point).
+    /// Returns the number of arrivals sent.
+    pub fn drive(mut self, horizon: Duration, mut send: impl FnMut(Arrival)) -> u64 {
+        let start = Instant::now();
+        let mut sent = 0;
+        loop {
+            let a = self.next();
+            if a.at >= horizon {
+                return sent;
+            }
+            let elapsed = start.elapsed();
+            if a.at > elapsed {
+                std::thread::sleep(a.at - elapsed);
+            }
+            send(a);
+            sent += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poisson(rate: f64, seed: u64) -> LoadGen {
+        LoadGen::new(TrafficShape::Poisson { rate }, &[(2, 1.0)], seed).unwrap()
+    }
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let mut g = poisson(1000.0, 7);
+        let n = 20_000;
+        let mut last = Duration::ZERO;
+        for _ in 0..n {
+            let a = g.next();
+            assert!(a.at >= last, "arrivals must be time-ordered");
+            last = a.at;
+        }
+        let measured = n as f64 / last.as_secs_f64();
+        assert!(
+            (measured - 1000.0).abs() < 50.0,
+            "empirical rate {measured:.0} req/s should be ~1000"
+        );
+    }
+
+    #[test]
+    fn bursty_arrivals_avoid_off_windows() {
+        let on = Duration::from_millis(20);
+        let off = Duration::from_millis(80);
+        let shape = TrafficShape::Bursty { rate: 2000.0, on, off };
+        let mut g = LoadGen::new(shape, &[(1, 1.0)], 3).unwrap();
+        let cycle = (on + off).as_secs_f64();
+        for _ in 0..5000 {
+            let a = g.next();
+            let phase = a.at.as_secs_f64() % cycle;
+            assert!(
+                phase <= on.as_secs_f64() + 1e-9,
+                "arrival at {:?} lands in an off window (phase {phase:.4})",
+                a.at
+            );
+        }
+    }
+
+    #[test]
+    fn lane_skew_follows_weights() {
+        let shape = TrafficShape::Poisson { rate: 100.0 };
+        let mut g = LoadGen::new(shape, &[(2, 9.0), (2, 1.0)], 11).unwrap();
+        let n = 20_000;
+        let mut lane0 = 0usize;
+        for _ in 0..n {
+            let a = g.next();
+            assert!(a.lane < 2 && a.model_idx < 2);
+            if a.lane == 0 {
+                lane0 += 1;
+            }
+        }
+        let frac = lane0 as f64 / n as f64;
+        assert!((frac - 0.9).abs() < 0.02, "lane-0 share {frac:.3} should be ~0.9");
+    }
+
+    #[test]
+    fn shards_thin_the_rate_and_stripe_ids() {
+        let g = LoadGen::new(TrafficShape::Poisson { rate: 400.0 }, &[(1, 1.0)], 5).unwrap();
+        let shards = g.shards(4);
+        assert_eq!(shards.len(), 4);
+        let mut ids = std::collections::BTreeSet::new();
+        let mut total = 0usize;
+        let horizon = 5.0; // virtual seconds
+        for mut s in shards {
+            loop {
+                let a = s.next();
+                if a.at.as_secs_f64() > horizon {
+                    break;
+                }
+                assert!(ids.insert(a.id), "shard ids must not collide");
+                total += 1;
+            }
+        }
+        let rate = total as f64 / horizon;
+        assert!(
+            (rate - 400.0).abs() < 60.0,
+            "superposed shard rate {rate:.0} should be ~400"
+        );
+    }
+
+    #[test]
+    fn deterministic_for_seed_and_validates_config() {
+        let mut a = poisson(50.0, 42);
+        let mut b = poisson(50.0, 42);
+        for _ in 0..100 {
+            assert_eq!(a.next(), b.next());
+        }
+        assert!(LoadGen::new(TrafficShape::Poisson { rate: 0.0 }, &[(1, 1.0)], 0).is_err());
+        assert!(LoadGen::new(TrafficShape::Poisson { rate: 1.0 }, &[], 0).is_err());
+        assert!(LoadGen::new(TrafficShape::Poisson { rate: 1.0 }, &[(0, 1.0)], 0).is_err());
+        assert!(LoadGen::new(TrafficShape::Poisson { rate: 1.0 }, &[(1, -1.0)], 0).is_err());
+        let bad = TrafficShape::Bursty {
+            rate: 1.0,
+            on: Duration::ZERO,
+            off: Duration::from_millis(1),
+        };
+        assert!(LoadGen::new(bad, &[(1, 1.0)], 0).is_err());
+    }
+}

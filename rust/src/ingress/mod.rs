@@ -1,0 +1,50 @@
+//! Open-loop ingress + SLO-aware QoS scheduling — the serving front
+//! door.
+//!
+//! Everything below `coordinator` assumed a closed loop: the thread
+//! that drives rounds also fabricates the traffic, so the merged-round
+//! speedups (paper §5) never met real concurrent arrivals. This module
+//! decouples request arrival from round dispatch:
+//!
+//! ```text
+//!  clients ── Frame wire format ── Transport (TCP | in-proc chan)
+//!      │  serve_conn: reader thread per connection
+//!      ▼
+//!  IngressBridge (bounded MPSC, mutex+condvar; full => Reject{Busy})
+//!      │  run_dispatch: THE dispatch thread (owns MultiServer)
+//!      ▼
+//!  QosScheduler (WDRR weights + SLO-deadline boost) picks the lane,
+//!  responses route back through per-connection reply queues
+//! ```
+//!
+//! - [`frame`] — length-prefixed, fully validated wire format
+//!   ([`Frame`]): requests, responses, typed rejections, end-of-stream;
+//! - [`transport`] — one [`Transport`] trait, two implementations
+//!   ([`TcpTransport`], in-proc [`ChanTransport`]), splittable into
+//!   reader/writer halves;
+//! - [`bridge`] — the bounded producer→dispatch handoff
+//!   ([`IngressBridge`]), per-connection glue ([`serve_conn`]) and the
+//!   dispatch loop ([`run_dispatch`]) that admits (re-stamping arrival
+//!   at the boundary), dispatches, and routes responses;
+//! - [`qos`] — [`LaneQos`] (weight + SLO) and the [`QosScheduler`]
+//!   (weighted deficit round-robin with SLO-deadline preemption) that
+//!   `MultiServer` now schedules lanes with;
+//! - [`loadgen`] — open-loop Poisson / bursty / lane-skewed arrival
+//!   generation ([`LoadGen`]) for benches and examples.
+//!
+//! End-to-end demo: `examples/serve_ingress.rs` (TCP, 4 producers, two
+//! QoS classes); measured: `benches/ingress_qos.rs`.
+
+pub mod bridge;
+pub mod frame;
+pub mod loadgen;
+pub mod qos;
+pub mod transport;
+
+pub use bridge::{
+    run_dispatch, serve_conn, ConnHandle, Envelope, IngressBridge, IngressStats, SubmitError,
+};
+pub use frame::{Frame, RejectCode};
+pub use loadgen::{Arrival, LoadGen, TrafficShape};
+pub use qos::{LaneQos, LaneSnapshot, Pick, QosScheduler};
+pub use transport::{ChanTransport, FrameQueue, TcpTransport, Transport, TransportRx, TransportTx};

@@ -1,0 +1,322 @@
+//! Per-lane QoS: weighted deficit round-robin with an SLO-deadline
+//! boost. Replaces `MultiServer`'s pure round-robin `ready_lane` scan.
+//!
+//! Each lane carries a [`LaneQos`]: a WDRR `weight` (its share of
+//! dispatched rounds when several lanes are backlogged) and an `slo`
+//! (the end-to-end latency target its requests are supposed to meet).
+//!
+//! Scheduling is two-tier:
+//! 1. **SLO boost** — a lane whose oldest queued request has waited to
+//!    within ε ([`QosScheduler::boost_margin`]) of its `slo` preempts
+//!    the WDRR order outright, even if its round is not yet due (the
+//!    dispatch pads the missing slots): better a padded round now than
+//!    a full round after the deadline. Among urgent lanes, least slack
+//!    wins.
+//! 2. **WDRR** — otherwise, lanes whose rounds are due are served in
+//!    deficit round-robin: every replenish cycle grants each backlogged
+//!    lane `weight` round credits (capped at two cycles so an idle
+//!    spell cannot bank unbounded priority; a drained lane's credit
+//!    resets, per classic DRR); the scan starts after the last
+//!    dispatched lane, so equal weights degenerate to exactly the old
+//!    fair round-robin.
+//!
+//! The scheduler is deliberately decoupled from `Server` internals: it
+//! sees lanes only through [`LaneSnapshot`]s produced by a caller-owned
+//! closure, so it is unit-testable with plain structs and usable by any
+//! front end. [`QosScheduler::select`] is pure (usable from `&self`
+//! readiness probes); [`QosScheduler::commit`] applies the deficit
+//! charge and cursor advance for a pick that was actually dispatched.
+
+use std::time::Duration;
+
+/// Per-lane scheduling contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneQos {
+    /// WDRR share: rounds granted per replenish cycle (clamped >= 1).
+    pub weight: u32,
+    /// End-to-end latency target for the lane's requests. Lanes that
+    /// get within [`QosScheduler::boost_margin`] of it preempt WDRR.
+    pub slo: Duration,
+}
+
+impl LaneQos {
+    pub fn new(weight: u32, slo: Duration) -> LaneQos {
+        LaneQos { weight, slo }
+    }
+}
+
+impl Default for LaneQos {
+    /// Weight 1 and an SLO far beyond any real deadline: scheduling
+    /// degenerates to the plain fair round-robin `MultiServer` had.
+    fn default() -> LaneQos {
+        LaneQos { weight: 1, slo: Duration::from_secs(3600) }
+    }
+}
+
+/// What the scheduler sees of one lane at selection time.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneSnapshot {
+    /// the lane's round is due (full, or past its batching deadline)
+    pub ready: bool,
+    /// queued requests
+    pub pending: usize,
+    /// how long the lane's oldest queued request has waited
+    pub oldest_wait: Option<Duration>,
+}
+
+/// A scheduling decision from [`QosScheduler::select`].
+#[derive(Debug, Clone, Copy)]
+pub struct Pick {
+    pub lane: usize,
+    /// chosen by the SLO boost (the round may need padding)
+    pub urgent: bool,
+    /// selection assumed a deficit replenish; `commit` applies it
+    replenish: bool,
+}
+
+struct LaneState {
+    qos: LaneQos,
+    /// WDRR round credits remaining this cycle
+    deficit: u64,
+}
+
+/// Weighted-deficit round-robin + SLO-boost lane scheduler.
+pub struct QosScheduler {
+    lanes: Vec<LaneState>,
+    /// the lane AFTER the last dispatched one is scanned first
+    cursor: usize,
+    /// ε: how close to its SLO a lane's oldest wait may get before the
+    /// lane preempts the WDRR order
+    eps: Duration,
+}
+
+impl QosScheduler {
+    pub const DEFAULT_BOOST_MARGIN: Duration = Duration::from_millis(1);
+
+    pub fn new(boost_margin: Duration) -> QosScheduler {
+        QosScheduler { lanes: Vec::new(), cursor: 0, eps: boost_margin }
+    }
+
+    pub fn boost_margin(&self) -> Duration {
+        self.eps
+    }
+
+    /// Register a lane; returns its index. Weight 0 is clamped to 1 (a
+    /// zero-share lane would starve forever).
+    pub fn add_lane(&mut self, qos: LaneQos) -> usize {
+        let qos = LaneQos { weight: qos.weight.max(1), ..qos };
+        self.lanes.push(LaneState { qos, deficit: 0 });
+        self.lanes.len() - 1
+    }
+
+    pub fn qos(&self, lane: usize) -> LaneQos {
+        self.lanes[lane].qos
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    pub(crate) fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// Advance the fair cursor past `lane` without a deficit charge
+    /// (used by drain paths that bypass round-readiness).
+    pub(crate) fn rotate_after(&mut self, lane: usize) {
+        self.cursor = (lane + 1) % self.lanes.len().max(1);
+    }
+
+    /// Pick the next lane to dispatch, or `None` when nothing is due.
+    /// Pure: charging happens in [`QosScheduler::commit`], so readiness
+    /// probes can call this from `&self` without perturbing the WDRR
+    /// state.
+    pub fn select(&self, snap: &dyn Fn(usize) -> LaneSnapshot) -> Option<Pick> {
+        let n = self.lanes.len();
+        if n == 0 {
+            return None;
+        }
+        // tier 1: SLO boost — least slack wins, cursor order breaks ties
+        let mut urgent: Option<(usize, Duration)> = None;
+        for k in 0..n {
+            let i = (self.cursor + k) % n;
+            let s = snap(i);
+            if s.pending == 0 {
+                continue;
+            }
+            let Some(wait) = s.oldest_wait else { continue };
+            let slo = self.lanes[i].qos.slo;
+            if wait >= slo.saturating_sub(self.eps) {
+                let slack = slo.saturating_sub(wait);
+                let better = match urgent {
+                    None => true,
+                    Some((_, best)) => slack < best,
+                };
+                if better {
+                    urgent = Some((i, slack));
+                }
+            }
+        }
+        if let Some((lane, _)) = urgent {
+            return Some(Pick { lane, urgent: true, replenish: false });
+        }
+        // tier 2: WDRR over round-ready lanes
+        let mut any_ready = false;
+        for k in 0..n {
+            let i = (self.cursor + k) % n;
+            let s = snap(i);
+            if !s.ready {
+                continue;
+            }
+            any_ready = true;
+            if self.lanes[i].deficit >= 1 {
+                return Some(Pick { lane: i, urgent: false, replenish: false });
+            }
+        }
+        if any_ready {
+            // every ready lane is out of credit: after a replenish the
+            // first ready lane from the cursor has weight >= 1 credits
+            for k in 0..n {
+                let i = (self.cursor + k) % n;
+                if snap(i).ready {
+                    return Some(Pick { lane: i, urgent: false, replenish: true });
+                }
+            }
+        }
+        None
+    }
+
+    /// Charge a dispatched pick: apply the replenish cycle it assumed
+    /// (if any), deduct one round credit, advance the fair cursor.
+    pub fn commit(&mut self, pick: &Pick, snap: &dyn Fn(usize) -> LaneSnapshot) {
+        let n = self.lanes.len();
+        if pick.replenish {
+            for i in 0..n {
+                let w = self.lanes[i].qos.weight as u64;
+                // drained lanes lose their credit (classic DRR); busy
+                // lanes bank at most two cycles' worth
+                self.lanes[i].deficit = if snap(i).pending == 0 {
+                    0
+                } else {
+                    (self.lanes[i].deficit + w).min(w.saturating_mul(2))
+                };
+            }
+        }
+        self.lanes[pick.lane].deficit = self.lanes[pick.lane].deficit.saturating_sub(1);
+        self.cursor = (pick.lane + 1) % n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backlogged(n: usize) -> impl Fn(usize) -> LaneSnapshot {
+        move |i: usize| {
+            assert!(i < n);
+            LaneSnapshot { ready: true, pending: 8, oldest_wait: Some(Duration::ZERO) }
+        }
+    }
+
+    fn dispatch_sequence(
+        sched: &mut QosScheduler,
+        snap: &dyn Fn(usize) -> LaneSnapshot,
+        rounds: usize,
+    ) -> Vec<usize> {
+        (0..rounds)
+            .map(|_| {
+                let pick = sched.select(snap).expect("backlogged lanes must be schedulable");
+                sched.commit(&pick, snap);
+                pick.lane
+            })
+            .collect()
+    }
+
+    #[test]
+    fn equal_weights_alternate_like_plain_round_robin() {
+        let mut s = QosScheduler::new(QosScheduler::DEFAULT_BOOST_MARGIN);
+        s.add_lane(LaneQos::default());
+        s.add_lane(LaneQos::default());
+        let order = dispatch_sequence(&mut s, &backlogged(2), 6);
+        assert_eq!(order, vec![0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn three_to_one_weights_give_three_to_one_rounds() {
+        let mut s = QosScheduler::new(QosScheduler::DEFAULT_BOOST_MARGIN);
+        s.add_lane(LaneQos::new(3, Duration::from_secs(3600)));
+        s.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        let order = dispatch_sequence(&mut s, &backlogged(2), 400);
+        let a = order.iter().filter(|&&l| l == 0).count();
+        let b = order.len() - a;
+        assert_eq!(a, 300, "weight-3 lane must get 3/4 of the rounds, got {a}/{}", order.len());
+        assert_eq!(b, 100);
+    }
+
+    #[test]
+    fn slo_boost_preempts_wdrr_order() {
+        let mut s = QosScheduler::new(Duration::from_millis(1));
+        s.add_lane(LaneQos::new(8, Duration::from_secs(3600)));
+        s.add_lane(LaneQos::new(1, Duration::from_millis(10)));
+        // lane 1 is NOT round-ready (partial round) but its oldest
+        // request is within eps of the 10ms SLO -> it preempts lane 0
+        let snap = |i: usize| {
+            if i == 0 {
+                LaneSnapshot {
+                    ready: true,
+                    pending: 8,
+                    oldest_wait: Some(Duration::from_millis(1)),
+                }
+            } else {
+                LaneSnapshot {
+                    ready: false,
+                    pending: 1,
+                    oldest_wait: Some(Duration::from_micros(9500)),
+                }
+            }
+        };
+        let pick = s.select(&snap).unwrap();
+        assert_eq!(pick.lane, 1);
+        assert!(pick.urgent);
+    }
+
+    #[test]
+    fn idle_lanes_do_not_bank_unbounded_credit() {
+        let mut s = QosScheduler::new(QosScheduler::DEFAULT_BOOST_MARGIN);
+        s.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        s.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        // lane 1 idle through many replenish cycles
+        let only0 = |i: usize| LaneSnapshot {
+            ready: i == 0,
+            pending: if i == 0 { 4 } else { 0 },
+            oldest_wait: if i == 0 { Some(Duration::ZERO) } else { None },
+        };
+        for _ in 0..50 {
+            let pick = s.select(&only0).unwrap();
+            assert_eq!(pick.lane, 0);
+            s.commit(&pick, &only0);
+        }
+        // when lane 1 wakes, it gets its fair share, not 50 banked rounds
+        let order = dispatch_sequence(&mut s, &backlogged(2), 8);
+        let ones = order.iter().filter(|&&l| l == 1).count();
+        assert!(
+            (3..=5).contains(&ones),
+            "woken lane must get ~half the rounds, got {ones}/8 ({order:?})"
+        );
+    }
+
+    #[test]
+    fn empty_or_idle_schedulers_select_nothing() {
+        let s = QosScheduler::new(QosScheduler::DEFAULT_BOOST_MARGIN);
+        assert!(s.select(&|_| unreachable!()).is_none());
+
+        let mut s = QosScheduler::new(QosScheduler::DEFAULT_BOOST_MARGIN);
+        s.add_lane(LaneQos::default());
+        let idle = |_: usize| LaneSnapshot { ready: false, pending: 0, oldest_wait: None };
+        assert!(s.select(&idle).is_none());
+    }
+}

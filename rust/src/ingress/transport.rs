@@ -1,0 +1,322 @@
+//! Ingress transports: one [`Transport`] trait, two implementations.
+//!
+//! - [`TcpTransport`] — length-prefixed [`Frame`]s over a `TcpStream`
+//!   (NODELAY, buffered writes flushed per frame);
+//! - [`ChanTransport`] — an in-proc pair of [`FrameQueue`]s with the same
+//!   frame semantics, for tests and single-process benches where socket
+//!   jitter would drown the measurement.
+//!
+//! A transport is full duplex: [`Transport::split`] yields independently
+//! usable send/receive halves so a connection can run one reader thread
+//! and one writer thread (the shape `ingress::bridge::serve_conn` and
+//! every open-loop client use). Dropping a half closes its direction:
+//! the peer's `recv` drains what was already queued, then returns
+//! `Ok(None)` — the same clean-EOF signal a closed socket produces.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::frame::Frame;
+
+/// Send half of a connection.
+pub trait TransportTx: Send {
+    fn send(&mut self, frame: &Frame) -> Result<()>;
+}
+
+/// Receive half of a connection. `Ok(None)` = peer closed cleanly.
+pub trait TransportRx: Send {
+    fn recv(&mut self) -> Result<Option<Frame>>;
+}
+
+/// A full-duplex framed connection. Use the inherited `send`/`recv`
+/// directly from one thread, or [`Transport::split`] for one reader
+/// thread plus one writer thread.
+pub trait Transport: TransportTx + TransportRx {
+    #[allow(clippy::type_complexity)]
+    fn split(self: Box<Self>) -> Result<(Box<dyn TransportTx>, Box<dyn TransportRx>)>;
+}
+
+// ---------------------------------------------------------------------------
+// FrameQueue: the shared frame mailbox (in-proc transport + reply routing)
+// ---------------------------------------------------------------------------
+
+/// An unbounded MPMC frame mailbox (mutex + condvar). One direction of a
+/// [`ChanTransport`], and the per-connection reply queue the dispatch
+/// thread routes responses into. Unbounded by design: admission
+/// backpressure lives at the ingress bridge, not on the reply path — a
+/// response that was already computed must never block the dispatch
+/// thread behind a slow client connection.
+#[derive(Clone)]
+pub struct FrameQueue {
+    inner: Arc<Fq>,
+}
+
+struct Fq {
+    state: Mutex<FqState>,
+    ready: Condvar,
+}
+
+struct FqState {
+    q: VecDeque<Frame>,
+    closed: bool,
+}
+
+impl Default for FrameQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrameQueue {
+    pub fn new() -> FrameQueue {
+        FrameQueue {
+            inner: Arc::new(Fq {
+                state: Mutex::new(FqState { q: VecDeque::new(), closed: false }),
+                ready: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Enqueue a frame. Returns `false` (frame dropped) if the queue is
+    /// closed — the receiver is gone, so there is nobody to deliver to.
+    pub fn push(&self, frame: Frame) -> bool {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.closed {
+            return false;
+        }
+        st.q.push_back(frame);
+        self.inner.ready.notify_one();
+        true
+    }
+
+    /// Blocking pop: the next frame, or `None` once the queue is closed
+    /// AND drained (frames queued before `close` are still delivered).
+    pub fn pop(&self) -> Option<Frame> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(f) = st.q.pop_front() {
+                return Some(f);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.ready.wait(st).unwrap();
+        }
+    }
+
+    pub fn try_pop(&self) -> Option<Frame> {
+        self.inner.state.lock().unwrap().q.pop_front()
+    }
+
+    /// Close the queue: pending frames stay deliverable, new pushes are
+    /// dropped, and blocked poppers wake.
+    pub fn close(&self) {
+        self.inner.state.lock().unwrap().closed = true;
+        self.inner.ready.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.state.lock().unwrap().closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ChanTransport: in-proc transport over a FrameQueue pair
+// ---------------------------------------------------------------------------
+
+/// Send half of a [`ChanTransport`]. Dropping it closes the direction.
+pub struct ChanTx {
+    q: FrameQueue,
+}
+
+impl TransportTx for ChanTx {
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        if !self.q.push(frame.clone()) {
+            bail!("peer closed");
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ChanTx {
+    fn drop(&mut self) {
+        self.q.close();
+    }
+}
+
+/// Receive half of a [`ChanTransport`]. Dropping it closes the
+/// direction, so a vanished receiver turns the peer's sends into errors
+/// instead of unbounded queue growth.
+pub struct ChanRx {
+    q: FrameQueue,
+}
+
+impl TransportRx for ChanRx {
+    fn recv(&mut self) -> Result<Option<Frame>> {
+        Ok(self.q.pop())
+    }
+}
+
+impl Drop for ChanRx {
+    fn drop(&mut self) {
+        self.q.close();
+    }
+}
+
+/// In-proc transport: a connected pair of frame queues.
+pub struct ChanTransport {
+    tx: ChanTx,
+    rx: ChanRx,
+}
+
+impl ChanTransport {
+    /// A connected (client, server) pair.
+    pub fn pair() -> (ChanTransport, ChanTransport) {
+        let ab = FrameQueue::new(); // a -> b
+        let ba = FrameQueue::new(); // b -> a
+        let a = ChanTransport { tx: ChanTx { q: ab.clone() }, rx: ChanRx { q: ba.clone() } };
+        let b = ChanTransport { tx: ChanTx { q: ba }, rx: ChanRx { q: ab } };
+        (a, b)
+    }
+}
+
+impl TransportTx for ChanTransport {
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        self.tx.send(frame)
+    }
+}
+
+impl TransportRx for ChanTransport {
+    fn recv(&mut self) -> Result<Option<Frame>> {
+        self.rx.recv()
+    }
+}
+
+impl Transport for ChanTransport {
+    fn split(self: Box<Self>) -> Result<(Box<dyn TransportTx>, Box<dyn TransportRx>)> {
+        Ok((Box::new(self.tx), Box::new(self.rx)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TcpTransport: frames over a TcpStream
+// ---------------------------------------------------------------------------
+
+/// Send half of a [`TcpTransport`] (buffered, flushed per frame).
+pub struct TcpTx {
+    w: BufWriter<TcpStream>,
+    scratch: Vec<u8>,
+}
+
+impl TransportTx for TcpTx {
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        self.scratch.clear();
+        frame.encode_into(&mut self.scratch);
+        self.w.write_all(&self.scratch).context("tcp frame write")?;
+        self.w.flush().context("tcp frame flush")
+    }
+}
+
+/// Receive half of a [`TcpTransport`].
+pub struct TcpRx {
+    r: BufReader<TcpStream>,
+}
+
+impl TransportRx for TcpRx {
+    fn recv(&mut self) -> Result<Option<Frame>> {
+        Frame::read_from(&mut self.r)
+    }
+}
+
+/// Framed TCP connection (NODELAY — rounds are latency-sensitive and
+/// frames are already batched writes).
+pub struct TcpTransport {
+    tx: TcpTx,
+    rx: TcpRx,
+}
+
+impl TcpTransport {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<TcpTransport> {
+        let stream = TcpStream::connect(addr).context("tcp connect")?;
+        Self::from_stream(stream)
+    }
+
+    /// Wrap an accepted (or connected) stream.
+    pub fn from_stream(stream: TcpStream) -> Result<TcpTransport> {
+        stream.set_nodelay(true).context("tcp nodelay")?;
+        let rstream = stream.try_clone().context("tcp stream clone")?;
+        Ok(TcpTransport {
+            tx: TcpTx { w: BufWriter::new(stream), scratch: Vec::new() },
+            rx: TcpRx { r: BufReader::new(rstream) },
+        })
+    }
+}
+
+impl TransportTx for TcpTransport {
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        self.tx.send(frame)
+    }
+}
+
+impl TransportRx for TcpTransport {
+    fn recv(&mut self) -> Result<Option<Frame>> {
+        self.rx.recv()
+    }
+}
+
+impl Transport for TcpTransport {
+    fn split(self: Box<Self>) -> Result<(Box<dyn TransportTx>, Box<dyn TransportRx>)> {
+        Ok((Box::new(self.tx), Box::new(self.rx)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chan_pair_roundtrips_frames_both_ways() {
+        let (mut a, mut b) = ChanTransport::pair();
+        a.send(&Frame::Eos).unwrap();
+        assert_eq!(b.recv().unwrap(), Some(Frame::Eos));
+        let f = Frame::reject(1, 0, super::super::frame::RejectCode::Busy, "x");
+        b.send(&f).unwrap();
+        assert_eq!(a.recv().unwrap(), Some(f));
+    }
+
+    #[test]
+    fn dropping_a_half_is_clean_eof_after_drain() {
+        let (a, mut b) = ChanTransport::pair();
+        let (mut atx, arx) = (Box::new(a) as Box<dyn Transport>).split().unwrap();
+        atx.send(&Frame::Eos).unwrap();
+        drop(atx);
+        // the frame sent before the close still arrives, then EOF
+        assert_eq!(b.recv().unwrap(), Some(Frame::Eos));
+        assert_eq!(b.recv().unwrap(), None);
+        // and once the peer's receive half is gone, sends fail
+        drop(arx);
+        assert!(b.send(&Frame::Eos).is_err());
+    }
+
+    #[test]
+    fn frame_queue_close_drains_then_ends() {
+        let q = FrameQueue::new();
+        assert!(q.push(Frame::Eos));
+        q.close();
+        assert!(!q.push(Frame::Eos), "pushes after close are dropped");
+        assert_eq!(q.pop(), Some(Frame::Eos));
+        assert_eq!(q.pop(), None);
+    }
+}

@@ -51,6 +51,15 @@
 //!   logic runs under test without AOT artifacts. The `max_wait`
 //!   batching deadline is derived per request from its arrival time
 //!   (never reset by a dispatch).
+//! - [`ingress`] — the open-loop serving front door: length-prefixed
+//!   frame wire format, a `Transport` trait (TCP + in-proc channel),
+//!   the bounded `IngressBridge` MPSC through which N producer threads
+//!   feed the one dispatch thread owning a `MultiServer`, per-lane QoS
+//!   (`LaneQos` weight + SLO; weighted deficit round-robin with an
+//!   SLO-deadline boost in `QosScheduler`), and an open-loop Poisson /
+//!   bursty / skewed-lane load generator. Requests are re-stamped at
+//!   admission (`Request::arrived_now`) so producer-side clock reuse
+//!   cannot skew queue-wait math.
 //! - [`devmodel`] — analytical V100 / TITAN Xp device model (reproduces
 //!   the paper's GPU-shaped figures; we have no GPU).
 //! - [`rewriter`] — miniature TASO-like greedy graph rewriter (the §2.2
@@ -62,6 +71,7 @@ pub mod graph;
 pub mod fuse;
 pub mod runtime;
 pub mod coordinator;
+pub mod ingress;
 pub mod devmodel;
 pub mod figures;
 pub mod rewriter;

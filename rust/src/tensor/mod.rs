@@ -142,6 +142,10 @@ impl Tensor {
     pub fn into_data(self) -> Vec<f32> {
         self.data
     }
+    /// Decompose into `(shape, data)` without copying (wire encoding).
+    pub fn into_parts(self) -> (Vec<usize>, Vec<f32>) {
+        (self.shape, self.data)
+    }
     pub fn size_bytes(&self) -> u64 {
         4 * self.data.len() as u64
     }

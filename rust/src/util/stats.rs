@@ -79,6 +79,9 @@ impl Latencies {
     pub fn p50(&self) -> f64 {
         self.percentile(0.50)
     }
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
     pub fn p99(&self) -> f64 {
         self.percentile(0.99)
     }
@@ -137,6 +140,7 @@ mod tests {
             l.record(i as f64);
         }
         assert_eq!(l.p50(), 50.0);
+        assert_eq!(l.p95(), 95.0);
         assert_eq!(l.p99(), 99.0);
         assert_eq!(l.percentile(1.0), 100.0);
     }

@@ -1,0 +1,463 @@
+//! Ingress subsystem integration tests: wire format over real
+//! transports, the producer->dispatch bridge (backpressure + rejection
+//! frames), QoS scheduling (WDRR fairness, SLO boost), and the
+//! admission-boundary arrival re-stamping. Everything here is
+//! artifact-free: lanes are mock `RoundExecutor`s, so the suite runs in
+//! offline CI.
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::time::Duration;
+
+use netfuse::coordinator::mock::EchoExecutor;
+use netfuse::coordinator::multi::MultiServer;
+use netfuse::coordinator::server::{Admit, Server, ServerConfig};
+use netfuse::coordinator::service::RoundExecutor;
+use netfuse::coordinator::{Request, StrategyKind};
+use netfuse::ingress::{
+    run_dispatch, serve_conn, ChanTransport, Envelope, Frame, FrameQueue, IngressBridge, LaneQos,
+    RejectCode, TcpTransport, Transport, TransportRx, TransportTx,
+};
+use netfuse::prop_assert;
+use netfuse::tensor::Tensor;
+use netfuse::util::prop;
+
+fn echo(name: &str, m: usize, round_cost: Duration) -> EchoExecutor {
+    EchoExecutor::new(name, m, &[4], round_cost)
+}
+
+fn payload() -> Tensor {
+    Tensor::zeros(&[1, 4])
+}
+
+fn request_frame(id: u64, lane: u32, model_idx: u32, shape: &[usize]) -> Frame {
+    let n: usize = shape.iter().product();
+    Frame::Request { id, lane, model_idx, shape: shape.to_vec(), data: vec![0.0; n] }
+}
+
+// ---------------------------------------------------------------------------
+// transports
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_transport_roundtrips_frames() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut t = TcpTransport::from_stream(stream).unwrap();
+        while let Some(frame) = t.recv().unwrap() {
+            if frame == Frame::Eos {
+                break;
+            }
+            t.send(&frame).unwrap(); // echo
+        }
+    });
+
+    let mut client = TcpTransport::connect(addr).unwrap();
+    let f = request_frame(42, 1, 0, &[1, 4]);
+    client.send(&f).unwrap();
+    assert_eq!(client.recv().unwrap(), Some(f));
+    client.send(&Frame::Eos).unwrap();
+    server.join().unwrap();
+}
+
+#[test]
+fn tcp_transport_split_halves_work_from_two_threads() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let t: Box<dyn Transport> = Box::new(TcpTransport::from_stream(stream).unwrap());
+        let (mut tx, mut rx) = t.split().unwrap();
+        let n = 16u64;
+        let pump = std::thread::spawn(move || {
+            for id in 0..n {
+                tx.send(&request_frame(id, 0, 0, &[1])).unwrap();
+            }
+            // tx dropped here; the socket stays open until rx drops too
+        });
+        // count client frames until its in-band end-of-stream marker
+        // (dropping one dup'd half of a TcpStream does NOT half-close
+        // the socket, so EOF cannot signal "done sending" mid-duplex)
+        let mut got = 0;
+        loop {
+            match rx.recv().unwrap() {
+                Some(Frame::Eos) | None => break,
+                Some(_f) => got += 1,
+            }
+        }
+        pump.join().unwrap();
+        got
+    });
+
+    let t: Box<dyn Transport> = Box::new(TcpTransport::connect(addr).unwrap());
+    let (mut tx, mut rx) = t.split().unwrap();
+    for id in 0..8u64 {
+        tx.send(&request_frame(id, 0, 0, &[1])).unwrap();
+    }
+    tx.send(&Frame::Eos).unwrap();
+    let mut received = 0;
+    // the server drops its whole transport after Eos -> real EOF here
+    while let Some(_f) = rx.recv().unwrap() {
+        received += 1;
+    }
+    assert_eq!(received, 16, "client must see every server frame");
+    assert_eq!(server.join().unwrap(), 8, "server must see every client frame");
+}
+
+// ---------------------------------------------------------------------------
+// bridge + dispatch loop end to end (in-proc transport)
+// ---------------------------------------------------------------------------
+
+/// Satellite: `Admit::Invalid` and `Admit::Busy` must come back through
+/// the bridge as typed error frames WITHOUT poisoning the connection or
+/// dropping requests that were admitted.
+#[test]
+fn rejection_frames_do_not_poison_the_connection_or_drop_queued_requests() {
+    let fleet = echo("mock", 1, Duration::from_millis(30));
+    let mut multi = MultiServer::new();
+    multi.add_lane(
+        &fleet,
+        ServerConfig { strategy: StrategyKind::Sequential, queue_cap: 1, ..Default::default() },
+    );
+    let bridge = IngressBridge::new(64);
+
+    let (client, server_end) = ChanTransport::pair();
+    let conn = serve_conn(bridge.clone(), Box::new(server_end)).unwrap();
+    let (mut ctx, mut crx) = (Box::new(client) as Box<dyn Transport>).split().unwrap();
+
+    let stats = std::thread::scope(|s| {
+        let dispatch = s.spawn(|| run_dispatch(&mut multi, &bridge));
+
+        // one malformed request (wrong payload shape), then a burst of
+        // valid ones that overruns the queue_cap=1 lane while its 30ms
+        // rounds run
+        ctx.send(&request_frame(1000, 0, 0, &[9])).unwrap();
+        for id in 0..5u64 {
+            ctx.send(&request_frame(id, 0, 0, &[1, 4])).unwrap();
+        }
+
+        // every request gets exactly one outcome frame
+        let mut outcomes: BTreeMap<u64, &'static str> = BTreeMap::new();
+        while outcomes.len() < 6 {
+            match crx.recv().unwrap().expect("connection must stay open") {
+                Frame::Response { id, .. } => {
+                    outcomes.insert(id, "ok");
+                }
+                Frame::Reject { id, code: RejectCode::Invalid, .. } => {
+                    outcomes.insert(id, "invalid");
+                }
+                Frame::Reject { id, code: RejectCode::Busy, .. } => {
+                    outcomes.insert(id, "busy");
+                }
+                f => panic!("unexpected frame {f:?}"),
+            }
+        }
+        assert_eq!(outcomes.get(&1000), Some(&"invalid"));
+        let busy = outcomes.values().filter(|v| **v == "busy").count();
+        let ok = outcomes.values().filter(|v| **v == "ok").count();
+        assert_eq!(busy + ok + 1, 6);
+        assert!(busy >= 1, "queue_cap=1 under a burst must reject some");
+        assert!(ok >= 1, "admitted requests must still be served");
+
+        // the connection is NOT poisoned: a fresh request after the
+        // storm is admitted and served normally
+        ctx.send(&request_frame(99, 0, 0, &[1, 4])).unwrap();
+        match crx.recv().unwrap().unwrap() {
+            Frame::Response { id, .. } => assert_eq!(id, 99),
+            f => panic!("post-storm request must succeed, got {f:?}"),
+        }
+
+        ctx.send(&Frame::Eos).unwrap();
+        bridge.close();
+        dispatch.join().unwrap().unwrap()
+    });
+    conn.shutdown();
+
+    assert_eq!(stats.invalid, 1);
+    assert!(stats.lane_busy >= 1);
+    assert_eq!(stats.responses, stats.admitted, "no admitted request may be dropped");
+    assert_eq!(stats.no_lane, 0);
+}
+
+#[test]
+fn unknown_lane_is_rejected_with_no_lane_frame() {
+    let fleet = echo("mock", 1, Duration::ZERO);
+    let mut multi = MultiServer::new();
+    multi.add_lane(
+        &fleet,
+        ServerConfig { strategy: StrategyKind::Sequential, ..Default::default() },
+    );
+    let bridge = IngressBridge::new(8);
+    let reply = FrameQueue::new();
+    bridge
+        .submit(Envelope {
+            lane: 7,
+            client_id: 5,
+            req: Request::new(5, 0, payload()),
+            reply: reply.clone(),
+        })
+        .ok()
+        .unwrap();
+    bridge.close();
+    let stats = run_dispatch(&mut multi, &bridge).unwrap();
+    assert_eq!(stats.no_lane, 1);
+    match reply.try_pop().unwrap() {
+        Frame::Reject { id, code, .. } => {
+            assert_eq!((id, code), (5, RejectCode::NoLane));
+        }
+        f => panic!("expected NoLane reject, got {f:?}"),
+    }
+}
+
+/// Satellite (bugfix): a producer-side `arrived` stamp must not leak
+/// into queue-wait math — the bridge re-stamps at admission.
+#[test]
+fn admission_restamps_stale_producer_arrival_clocks() {
+    let fleet = echo("mock", 1, Duration::ZERO);
+    let mut multi = MultiServer::new();
+    multi.add_lane(
+        &fleet,
+        ServerConfig {
+            strategy: StrategyKind::Sequential,
+            max_wait: Duration::ZERO,
+            ..Default::default()
+        },
+    );
+    let bridge = IngressBridge::new(8);
+    let reply = FrameQueue::new();
+
+    // a request constructed 200ms before it reaches the server (clock
+    // reuse by a producer)
+    let stale = Request::new(1, 0, payload());
+    std::thread::sleep(Duration::from_millis(200));
+    bridge
+        .submit(Envelope { lane: 0, client_id: 1, req: stale, reply: reply.clone() })
+        .ok()
+        .unwrap();
+    bridge.close();
+    run_dispatch(&mut multi, &bridge).unwrap();
+
+    match reply.try_pop().unwrap() {
+        Frame::Response { latency, .. } => {
+            assert!(
+                latency < 0.15,
+                "latency {latency:.3}s includes producer-side age: arrival \
+                 was not re-stamped at admission"
+            );
+        }
+        f => panic!("expected a response, got {f:?}"),
+    }
+}
+
+#[test]
+fn server_offer_clamps_non_monotone_arrival_stamps() {
+    let fleet = echo("mock", 1, Duration::ZERO);
+    let mut server = Server::new(
+        &fleet,
+        ServerConfig { strategy: StrategyKind::Sequential, ..Default::default() },
+    );
+    let fresh = Request::new(1, 0, payload());
+    let mut backdated = Request::new(2, 0, payload());
+    backdated.arrived = fresh.arrived - Duration::from_millis(250);
+    assert_eq!(server.offer(fresh), Admit::Queued);
+    assert_eq!(server.offer(backdated), Admit::Queued);
+    // the backdated stamp was clamped to the queue tail: the oldest
+    // wait is the FIRST request's, not a fabricated 250ms history
+    let wait = server.oldest_wait().unwrap();
+    assert!(
+        wait < Duration::from_millis(100),
+        "oldest wait {wait:?} reflects a backdated arrival stamp"
+    );
+    let responses = server.dispatch().unwrap();
+    assert_eq!(responses.len(), 1);
+    let responses = server.dispatch().unwrap();
+    assert!(responses[0].latency < 0.1, "clamped request must not report fake latency");
+
+    // the clamp also covers an EMPTY queue: the floor is the server's
+    // creation time, so a backdated first request cannot fake history
+    let fleet2 = echo("mock2", 1, Duration::ZERO);
+    let mut fresh_server = Server::new(
+        &fleet2,
+        ServerConfig { strategy: StrategyKind::Sequential, ..Default::default() },
+    );
+    let mut first = Request::new(3, 0, payload());
+    first.arrived -= Duration::from_millis(250);
+    assert_eq!(fresh_server.offer(first), Admit::Queued);
+    let wait = fresh_server.oldest_wait().unwrap();
+    assert!(
+        wait < Duration::from_millis(100),
+        "empty-queue backdating must clamp to the server floor, got {wait:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// QoS: WDRR fairness + SLO boost (satellite test coverage)
+// ---------------------------------------------------------------------------
+
+/// Keep both lanes' queues topped up and count dispatched rounds.
+fn dispatch_saturated(
+    multi: &mut MultiServer<EchoExecutor>,
+    rounds: usize,
+    next_id: &mut u64,
+) -> Vec<usize> {
+    let mut order = Vec::with_capacity(rounds);
+    let mut buf = Vec::new();
+    for _ in 0..rounds {
+        for lane in 0..multi.lanes() {
+            for model in 0..multi.lane(lane).fleet().m() {
+                while multi.lane(lane).pending() < 4 {
+                    multi.offer(lane, Request::new(*next_id, model, payload())).unwrap();
+                    *next_id += 1;
+                }
+            }
+        }
+        let (lane, _) = multi
+            .dispatch_next(&mut buf)
+            .unwrap()
+            .expect("saturated lanes are always dispatchable");
+        buf.clear();
+        order.push(lane);
+    }
+    order
+}
+
+#[test]
+fn wdrr_three_to_one_ratio_converges() {
+    let a = echo("heavy", 2, Duration::ZERO);
+    let b = echo("light", 2, Duration::ZERO);
+    let mut multi = MultiServer::new();
+    let cfg = ServerConfig {
+        strategy: StrategyKind::Sequential,
+        max_wait: Duration::ZERO,
+        ..Default::default()
+    };
+    multi.add_lane_qos(&a, cfg.clone(), LaneQos::new(3, Duration::from_secs(3600)));
+    multi.add_lane_qos(&b, cfg, LaneQos::new(1, Duration::from_secs(3600)));
+    let mut id = 0;
+    let order = dispatch_saturated(&mut multi, 400, &mut id);
+    let heavy = order.iter().filter(|&&l| l == 0).count();
+    let light = order.len() - heavy;
+    let ratio = heavy as f64 / light as f64;
+    assert!(
+        (2.5..=3.5).contains(&ratio),
+        "weights 3:1 must dispatch ~3:1 rounds, got {heavy}:{light} ({ratio:.2})"
+    );
+}
+
+#[test]
+fn fairness_property_no_lane_starves_and_shares_track_weights() {
+    prop::check(
+        "wdrr-shares-track-weights",
+        12,
+        |rng, _size| (1 + rng.below(4) as u32, 1 + rng.below(4) as u32),
+        |&(wa, wb)| {
+            let a = echo("a", 2, Duration::ZERO);
+            let b = echo("b", 2, Duration::ZERO);
+            let mut multi = MultiServer::new();
+            let cfg = ServerConfig {
+                strategy: StrategyKind::Sequential,
+                max_wait: Duration::ZERO,
+                ..Default::default()
+            };
+            multi.add_lane_qos(&a, cfg.clone(), LaneQos::new(wa, Duration::from_secs(3600)));
+            multi.add_lane_qos(&b, cfg, LaneQos::new(wb, Duration::from_secs(3600)));
+            let rounds = 40 * (wa + wb) as usize;
+            let mut id = 0;
+            let order = dispatch_saturated(&mut multi, rounds, &mut id);
+            let na = order.iter().filter(|&&l| l == 0).count();
+            let nb = order.len() - na;
+            prop_assert!(na > 0 && nb > 0, "weights {wa}:{wb}: a lane starved ({na}:{nb})");
+            let share = na as f64 / order.len() as f64;
+            let want = wa as f64 / (wa + wb) as f64;
+            prop_assert!(
+                (share - want).abs() < 0.1,
+                "weights {wa}:{wb}: share {share:.3} should be ~{want:.3}"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn equal_weights_serve_sparse_lane_promptly() {
+    // weights {1,1}: a lane with a single request next to a saturated
+    // lane is served within two dispatches — no starvation
+    let a = echo("busy", 2, Duration::ZERO);
+    let b = echo("sparse", 2, Duration::ZERO);
+    let mut multi = MultiServer::new();
+    let cfg = ServerConfig {
+        strategy: StrategyKind::Sequential,
+        max_wait: Duration::ZERO,
+        ..Default::default()
+    };
+    multi.add_lane(&a, cfg.clone());
+    multi.add_lane(&b, cfg);
+    let mut id = 0u64;
+    let mut buf = Vec::new();
+    for model in 0..2 {
+        for _ in 0..4 {
+            multi.offer(0, Request::new(id, model, payload())).unwrap();
+            id += 1;
+        }
+    }
+    multi.offer(1, Request::new(id, 0, payload())).unwrap();
+    let first = multi.dispatch_next(&mut buf).unwrap().unwrap().0;
+    buf.clear();
+    let second = multi.dispatch_next(&mut buf).unwrap().unwrap().0;
+    assert!(
+        first == 1 || second == 1,
+        "sparse lane must be served within two dispatches (got {first}, {second})"
+    );
+}
+
+#[test]
+fn slo_boost_dispatches_padded_round_before_deadline() {
+    let bulk = echo("bulk", 2, Duration::ZERO);
+    let tight = echo("tight", 2, Duration::ZERO);
+    let mut multi = MultiServer::new();
+    // bulk: huge weight, no SLO pressure. tight: partial rounds never
+    // batching-ready (max_wait 1s), 50ms SLO.
+    let cfg = ServerConfig {
+        strategy: StrategyKind::Sequential,
+        max_wait: Duration::from_secs(1),
+        ..Default::default()
+    };
+    let slow_lane = multi.add_lane_qos(
+        &bulk,
+        ServerConfig { max_wait: Duration::ZERO, ..cfg.clone() },
+        LaneQos::new(8, Duration::from_secs(3600)),
+    );
+    let tight_lane = multi.add_lane_qos(&tight, cfg, LaneQos::new(1, Duration::from_millis(50)));
+
+    let mut id = 0u64;
+    let mut buf = Vec::new();
+    // tight lane: ONE request on model 0 (a partial round)
+    multi.offer(tight_lane, Request::new(900, 0, payload())).unwrap();
+    // bulk lane saturated: WDRR alone would keep picking it
+    for _ in 0..6 {
+        for model in 0..2 {
+            multi.offer(slow_lane, Request::new(id, model, payload())).unwrap();
+            id += 1;
+        }
+    }
+    // before the deadline window, dispatches go to the bulk lane
+    for _ in 0..3 {
+        let (lane, _) = multi.dispatch_next(&mut buf).unwrap().unwrap();
+        assert_eq!(lane, slow_lane, "no SLO pressure yet");
+        buf.clear();
+    }
+    // cross into the boost window (50ms SLO - 1ms margin)
+    std::thread::sleep(Duration::from_millis(60));
+    let (lane, n) = multi.dispatch_next(&mut buf).unwrap().unwrap();
+    assert_eq!(lane, tight_lane, "SLO-urgent lane must preempt WDRR");
+    assert_eq!(n, 1, "the padded round serves the one queued request");
+    assert_eq!(buf[0].id, 900);
+    assert!(buf[0].latency >= 0.05, "it really waited into the boost window");
+    assert_eq!(
+        multi.lane(tight_lane).metrics.slo_violations,
+        1,
+        "a 50ms SLO served at ~60ms is one violation"
+    );
+}
