@@ -1,0 +1,418 @@
+//! Bench: cross-fleet round coalescing — served throughput and routing
+//! fidelity of merged rounds vs lane-by-lane dispatch.
+//!
+//! Three parts, all offline (mock `RoundExecutor` lanes with a modeled
+//! per-round device cost — ONE merged execution costs one round, which
+//! is exactly the launch-amortization NETFUSE banks on):
+//!
+//! 1. **Saturated drive** — two same-family lanes kept fully loaded,
+//!    dispatched closed-loop with and without a coalesce group. The
+//!    merged run serves both lanes per device round, so the throughput
+//!    ratio must be >= 1.3x (it is ~2x by construction). Deterministic
+//!    (the sleep dominates both runs identically), so the gate runs in
+//!    every mode including `--smoke` on CI.
+//! 2. **Routing oracle** — the same seeded arrival sequence (ids, lanes,
+//!    models, payload bytes derived from the id) is served coalesced and
+//!    uncoalesced with zero-cost executors; the per-lane FIFO response
+//!    streams are diffed byte-for-byte. Gate (every mode): **zero
+//!    diffs** — the `SlotMap` scatter may never misroute, reorder, or
+//!    corrupt a response.
+//! 3. **Open loop** — producers drive Poisson arrivals through in-proc
+//!    transports, `serve_conn`, the bounded bridge, and one
+//!    `run_dispatch` thread, at a rate above one-round-per-lane capacity
+//!    but below merged capacity. Full runs gate the served-throughput
+//!    ratio >= 1.3x (smoke keeps the exactly-one-outcome-per-arrival
+//!    invariant only, so CI never flakes on timing).
+//!
+//! Results go to `BENCH_coalesce.json`.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use netfuse::coordinator::mock::EchoExecutor;
+use netfuse::coordinator::multi::MultiServer;
+use netfuse::coordinator::server::ServerConfig;
+use netfuse::coordinator::{Request, StrategyKind};
+use netfuse::ingress::{
+    run_dispatch, serve_conn, ChanTransport, Frame, IngressBridge, IngressStats, LaneQos, LoadGen,
+    TrafficShape, Transport, TransportRx, TransportTx,
+};
+use netfuse::tensor::Tensor;
+use netfuse::util::json::Json;
+
+/// The shared test scaffolding (seeded request builder, echo wiring) —
+/// the oracle diff below must use the SAME payload-seeding scheme as
+/// the coalesce property suite, so both consume one definition.
+#[path = "../rust/tests/common/mod.rs"]
+mod common;
+
+/// models per lane (the group executor runs 2 * M slots)
+const M: usize = 2;
+const INPUT_SHAPE: [usize; 2] = [1, 4];
+/// modeled device time per round — solo or merged, ONE launch. 1ms
+/// keeps one-round-per-lane capacity (~2k req/s over 2 models) far
+/// below the open-loop offered rate, so the solo baseline saturates
+/// decisively and the >= 1.3x gate is sleep-dominated, not noise.
+const ROUND_COST: Duration = Duration::from_millis(1);
+const FAR: Duration = Duration::from_secs(3600);
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// All lanes and group executors serve one model family.
+fn echo(m: usize, round_cost: Duration) -> EchoExecutor {
+    common::echo("family", m, round_cost)
+}
+
+fn lane_config() -> ServerConfig {
+    ServerConfig {
+        strategy: StrategyKind::NetFuse,
+        queue_cap: 256,
+        max_wait: Duration::from_millis(3),
+    }
+}
+
+/// Deterministic payload derived from (id, model) so the oracle can
+/// diff response bytes (the shared seeding scheme, at this bench's
+/// request shape).
+fn seeded_request(id: u64, model_idx: usize) -> Request {
+    common::seeded_request(id, model_idx, &INPUT_SHAPE[1..])
+}
+
+// ---------------------------------------------------------------------------
+// part 1: saturated closed-loop drive (deterministic ratio gate)
+// ---------------------------------------------------------------------------
+
+fn saturated(coalesced: bool, rounds: usize) -> Result<(f64, u64, u64)> {
+    let a = echo(M, ROUND_COST);
+    let b = echo(M, ROUND_COST);
+    let g = echo(2 * M, ROUND_COST);
+    let mut multi = MultiServer::new();
+    let cfg = ServerConfig { max_wait: Duration::ZERO, ..lane_config() };
+    let la = multi.add_lane_qos(&a, cfg.clone(), LaneQos::new(1, FAR));
+    let lb = multi.add_lane_qos(&b, cfg, LaneQos::new(1, FAR));
+    let group = if coalesced {
+        Some(multi.add_coalesce_group(&g, &[la, lb])?)
+    } else {
+        None
+    };
+
+    let mut id = 0u64;
+    let mut buf = Vec::new();
+    let mut served = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        // one full round of work per lane, then dispatch to empty
+        for lane in [la, lb] {
+            for model in 0..M {
+                multi.offer(lane, Request::new(id, model, Tensor::zeros(&INPUT_SHAPE)))?;
+                id += 1;
+            }
+        }
+        while let Some(d) = multi.dispatch_next(&mut buf)? {
+            served += d.responses as u64;
+            buf.clear();
+        }
+    }
+    let rps = served as f64 / t0.elapsed().as_secs_f64();
+    let merged = group.map_or(0, |g| multi.group_stats(g).rounds);
+    Ok((rps, served, merged))
+}
+
+// ---------------------------------------------------------------------------
+// part 2: routing oracle (zero-cost executors, byte-exact diff)
+// ---------------------------------------------------------------------------
+
+use common::{collect_streams, Streams};
+
+fn oracle_run(coalesced: bool, arrivals: &[(usize, usize, u64)]) -> Result<(Streams, u64)> {
+    let a = echo(M, Duration::ZERO);
+    let b = echo(M, Duration::ZERO);
+    let g = echo(2 * M, Duration::ZERO);
+    let mut multi = MultiServer::new();
+    let cfg = ServerConfig { max_wait: Duration::ZERO, queue_cap: 4096, ..lane_config() };
+    multi.add_lane_qos(&a, cfg.clone(), LaneQos::new(1, FAR));
+    multi.add_lane_qos(&b, cfg, LaneQos::new(1, FAR));
+    let group = if coalesced { multi.auto_coalesce(&g)? } else { None };
+
+    let mut streams: Streams = vec![Vec::new(); 2];
+    let mut lane_of_id = std::collections::HashMap::new();
+    let mut buf = Vec::new();
+    for batch in arrivals.chunks(8) {
+        for &(lane, model, id) in batch {
+            lane_of_id.insert(id, lane);
+            multi.offer(lane, seeded_request(id, model))?;
+        }
+        while multi.dispatch_next(&mut buf)?.is_some() {}
+        collect_streams(&mut buf, &lane_of_id, &mut streams);
+    }
+    anyhow::ensure!(multi.pending() == 0, "oracle run left requests queued");
+    Ok((streams, group.map_or(0, |g| multi.group_stats(g).rounds)))
+}
+
+fn routing_diffs(arrivals: usize, seed: u64) -> Result<(usize, u64)> {
+    // seeded arrival sequence (timing ignored — this part is about
+    // routing, not rates)
+    let mut gen = LoadGen::new(
+        TrafficShape::Poisson { rate: 1000.0 },
+        &[(M, 1.0), (M, 1.0)],
+        seed,
+    )?;
+    let seq: Vec<(usize, usize, u64)> = (0..arrivals)
+        .map(|_| {
+            let a = gen.next();
+            (a.lane, a.model_idx, a.id)
+        })
+        .collect();
+    let (want, _) = oracle_run(false, &seq)?;
+    let (got, merged) = oracle_run(true, &seq)?;
+    anyhow::ensure!(merged > 0, "oracle load must exercise merged rounds");
+    let mut diffs = 0usize;
+    for lane in 0..2 {
+        if want[lane].len() != got[lane].len() {
+            diffs += want[lane].len().abs_diff(got[lane].len());
+            continue;
+        }
+        diffs += want[lane].iter().zip(&got[lane]).filter(|(w, g)| w != g).count();
+    }
+    Ok((diffs, merged))
+}
+
+// ---------------------------------------------------------------------------
+// part 3: open-loop served throughput through the full ingress path
+// ---------------------------------------------------------------------------
+
+struct OpenRun {
+    stats: IngressStats,
+    sent: u64,
+    responses: u64,
+    rejects: u64,
+    elapsed: f64,
+    served_rps: f64,
+}
+
+fn open_loop(
+    coalesced: bool,
+    producers: usize,
+    rate: f64,
+    horizon: Duration,
+    seed: u64,
+) -> Result<OpenRun> {
+    let a = echo(M, ROUND_COST);
+    let b = echo(M, ROUND_COST);
+    let g = echo(2 * M, ROUND_COST);
+    let mut multi = MultiServer::new();
+    multi.add_lane_qos(&a, lane_config(), LaneQos::new(1, FAR));
+    multi.add_lane_qos(&b, lane_config(), LaneQos::new(1, FAR));
+    if coalesced {
+        multi.auto_coalesce(&g)?.expect("two same-family lanes must group");
+    }
+    let bridge = IngressBridge::new(1024);
+
+    let gen = LoadGen::new(TrafficShape::Poisson { rate }, &[(M, 1.0), (M, 1.0)], seed)?;
+    let shards = gen.shards(producers);
+
+    type RunOutcome = (IngressStats, u64, u64, u64);
+    let t0 = Instant::now();
+    let (stats, sent, ok, rejected) = std::thread::scope(|s| -> Result<RunOutcome> {
+        let bridge_ref = &bridge;
+        let multi_ref = &mut multi;
+        let dispatch = s.spawn(move || run_dispatch(multi_ref, bridge_ref));
+
+        let mut conns = Vec::new();
+        let mut receivers = Vec::new();
+        let mut senders = Vec::new();
+        for shard in shards {
+            let (client, server_end) = ChanTransport::pair();
+            let conn = serve_conn(bridge.clone(), Box::new(server_end))
+                .expect("in-proc serve_conn cannot fail");
+            conns.push(conn);
+            let (mut tx, mut rx) = (Box::new(client) as Box<dyn Transport>)
+                .split()
+                .expect("in-proc split cannot fail");
+            receivers.push(s.spawn(move || {
+                let (mut ok, mut rejected) = (0u64, 0u64);
+                loop {
+                    match rx.recv() {
+                        Ok(Some(Frame::Response { .. })) => ok += 1,
+                        Ok(Some(Frame::Reject { .. })) => rejected += 1,
+                        Ok(Some(_)) => {}
+                        Ok(None) | Err(_) => return (ok, rejected),
+                    }
+                }
+            }));
+            senders.push(s.spawn(move || {
+                let sent = shard.drive(horizon, |a| {
+                    let _ = tx.send(&Frame::Request {
+                        id: a.id,
+                        lane: a.lane as u32,
+                        model_idx: a.model_idx as u32,
+                        shape: INPUT_SHAPE.to_vec(),
+                        data: vec![0.0; 4],
+                    });
+                });
+                let _ = tx.send(&Frame::Eos);
+                sent
+            }));
+        }
+
+        let mut sent = 0u64;
+        for t in senders {
+            sent += t.join().unwrap();
+        }
+        bridge.close();
+        let stats_res = dispatch.join().unwrap();
+        // unwind connections BEFORE surfacing a dispatch error, or the
+        // blocked receiver threads would hang the scope join
+        for c in conns {
+            c.shutdown();
+        }
+        let (mut ok, mut rejected) = (0u64, 0u64);
+        for r in receivers {
+            let (o, j) = r.join().unwrap();
+            ok += o;
+            rejected += j;
+        }
+        Ok((stats_res?, sent, ok, rejected))
+    })?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    Ok(OpenRun {
+        sent,
+        responses: ok,
+        rejects: rejected,
+        served_rps: ok as f64 / elapsed,
+        elapsed,
+        stats,
+    })
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!(
+        "# coalesce: cross-fleet merged rounds vs lane-by-lane dispatch{}\n",
+        if smoke { " (SMOKE)" } else { "" }
+    );
+
+    // --- part 1: saturated drive ----------------------------------------
+    let sat_rounds = if smoke { 60 } else { 400 };
+    let (solo_rps, solo_served, _) = saturated(false, sat_rounds)?;
+    let (co_rps, co_served, merged) = saturated(true, sat_rounds)?;
+    let sat_ratio = co_rps / solo_rps;
+    println!(
+        "saturated: solo {solo_rps:.0} req/s vs coalesced {co_rps:.0} req/s \
+         ({sat_ratio:.2}x, {merged} merged rounds, {co_served}+{solo_served} served)"
+    );
+
+    // --- part 2: routing oracle ------------------------------------------
+    let oracle_arrivals = if smoke { 400 } else { 4000 };
+    let (diffs, oracle_merged) = routing_diffs(oracle_arrivals, 0xC0A1E5CE)?;
+    println!(
+        "oracle: {oracle_arrivals} seeded arrivals, {oracle_merged} merged rounds, \
+         {diffs} routing diffs (must be 0)"
+    );
+
+    // --- part 3: open loop ------------------------------------------------
+    let producers = 2;
+    let (rate, horizon) = if smoke {
+        (500.0, Duration::from_millis(150))
+    } else {
+        // ~3x one-round-per-lane capacity, ~1.5x merged capacity: the
+        // solo baseline saturates, the merged run mostly keeps up
+        (6000.0, Duration::from_millis(1500))
+    };
+    let solo = open_loop(false, producers, rate, horizon, 0x5EED)?;
+    let co = open_loop(true, producers, rate, horizon, 0x5EED)?;
+    let open_ratio = co.served_rps / solo.served_rps.max(1e-9);
+    for (name, run) in [("solo", &solo), ("coalesced", &co)] {
+        println!(
+            "open-loop {name:<9}: sent {} -> {} responses + {} rejects in {:.2}s \
+             ({:.0} served/s, {} merged of {} rounds)",
+            run.sent,
+            run.responses,
+            run.rejects,
+            run.elapsed,
+            run.served_rps,
+            run.stats.coalesced_rounds,
+            run.stats.rounds,
+        );
+    }
+    println!("open-loop served-throughput ratio: {open_ratio:.2}x\n");
+
+    // --- BENCH_coalesce.json ----------------------------------------------
+    let mut sat = BTreeMap::new();
+    sat.insert("rounds".to_string(), num(sat_rounds as f64));
+    sat.insert("solo_rps".to_string(), num(solo_rps));
+    sat.insert("coalesced_rps".to_string(), num(co_rps));
+    sat.insert("ratio".to_string(), num(sat_ratio));
+    sat.insert("merged_rounds".to_string(), num(merged as f64));
+
+    let mut oracle = BTreeMap::new();
+    oracle.insert("arrivals".to_string(), num(oracle_arrivals as f64));
+    oracle.insert("merged_rounds".to_string(), num(oracle_merged as f64));
+    oracle.insert("routing_diffs".to_string(), num(diffs as f64));
+
+    let mut open = BTreeMap::new();
+    open.insert("producers".to_string(), num(producers as f64));
+    open.insert("offered_rate_rps".to_string(), num(rate));
+    open.insert("horizon_s".to_string(), num(horizon.as_secs_f64()));
+    for (name, run) in [("solo", &solo), ("coalesced", &co)] {
+        let mut r = BTreeMap::new();
+        r.insert("sent".to_string(), num(run.sent as f64));
+        r.insert("responses".to_string(), num(run.responses as f64));
+        r.insert("rejects".to_string(), num(run.rejects as f64));
+        r.insert("served_rps".to_string(), num(run.served_rps));
+        r.insert("rounds".to_string(), num(run.stats.rounds as f64));
+        r.insert("coalesced_rounds".to_string(), num(run.stats.coalesced_rounds as f64));
+        open.insert(name.to_string(), Json::Obj(r));
+    }
+    open.insert("ratio".to_string(), num(open_ratio));
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("coalesce".to_string()));
+    root.insert("smoke".to_string(), Json::Bool(smoke));
+    root.insert("round_cost_s".to_string(), num(ROUND_COST.as_secs_f64()));
+    root.insert("models_per_lane".to_string(), num(M as f64));
+    root.insert("saturated".to_string(), Json::Obj(sat));
+    root.insert("oracle".to_string(), Json::Obj(oracle));
+    root.insert("open_loop".to_string(), Json::Obj(open));
+
+    let path = "BENCH_coalesce.json";
+    std::fs::write(path, Json::Obj(root).dump())?;
+    println!("report written to {path}");
+
+    // correctness gates run in every mode (written AFTER the report so a
+    // failing run still leaves its numbers behind)
+    assert_eq!(diffs, 0, "coalesced routing diverged from the uncoalesced oracle");
+    assert!(merged > 0, "saturated coalesced run dispatched no merged rounds");
+    assert!(
+        sat_ratio >= 1.3,
+        "coalescing must serve >= 1.3x under saturation (one merged launch \
+         for two lanes), got {sat_ratio:.2}x"
+    );
+    assert_eq!(
+        solo.responses + solo.rejects,
+        solo.sent,
+        "every open-loop arrival needs exactly one outcome frame"
+    );
+    assert_eq!(
+        co.responses + co.rejects,
+        co.sent,
+        "every open-loop arrival needs exactly one outcome frame"
+    );
+    // timing gates only in full runs (CI smoke must not flake on noise)
+    if !smoke {
+        assert!(
+            co.stats.coalesced_rounds > 0,
+            "open-loop coalesced run never merged a round"
+        );
+        assert!(
+            open_ratio >= 1.3,
+            "2 same-family lanes under open-loop load must serve >= 1.3x \
+             coalesced vs uncoalesced, got {open_ratio:.2}x"
+        );
+    }
+    Ok(())
+}

@@ -92,11 +92,11 @@ fn wdrr_ratio(rounds: usize) -> Result<f64> {
                 id += 1;
             }
         }
-        let (lane, _) = multi
+        let d = multi
             .dispatch_next(&mut buf)?
             .expect("backlogged lanes are always dispatchable");
         buf.clear();
-        counts[lane] += 1;
+        counts[d.lane] += 1;
     }
     Ok(counts[0] as f64 / counts[1].max(1) as f64)
 }
@@ -299,8 +299,8 @@ fn closed_loop(rounds: usize) -> Result<f64> {
                 id += 1;
             }
         }
-        while let Some((_lane, n)) = multi.dispatch_next(&mut buf)? {
-            served += n as u64;
+        while let Some(d) = multi.dispatch_next(&mut buf)? {
+            served += d.responses as u64;
             buf.clear();
         }
     }

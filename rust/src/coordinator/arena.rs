@@ -23,6 +23,21 @@
 //! copy, so the half must stay reserved until execution completes); the
 //! *other* half stays free, which is what makes cross-thread round
 //! overlap possible — `benches/multi_fleet.rs` measures the win.
+//!
+//! [`SlotMap`] extends the arena to *cross-fleet* rounds
+//! (`coordinator::coalesce`): several serving lanes of the same model
+//! family contribute contiguous windows of local slots to ONE shared
+//! megabatch. The map is the remap between a lane's local slot space
+//! and the group slot space, and it drives both directions of every
+//! coalesced dispatch (`MultiServer::dispatch_group`): gather (which
+//! lane's taken request fills a group slot) and scatter (which lane's
+//! response routing owns a merged output window).
+//! [`RoundArena::pack_with_map`] and the per-lane occupancy accessors
+//! ([`RoundArena::lane_occupied`]) are the arena-level form of that
+//! contract for a group executor that packs its own megabatch — today
+//! that is the mock-level path plus this module's tests; wiring a real
+//! `Fleet` group executor (the fused artifact at the members' total
+//! instance count) through them is a ROADMAP follow-up.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard};
@@ -48,6 +63,82 @@ impl Layout {
             "batch" => Ok(Layout::Batch),
             other => bail!("bad fleet layout {other:?} (want channel | batch)"),
         }
+    }
+}
+
+/// The slot remap of a coalesced (cross-lane) round: lane `k`'s local
+/// slot `j` owns group slot `offset(k) + j` of the shared megabatch.
+///
+/// Lanes contribute *contiguous* windows in registration order, so the
+/// map is just the prefix sums of the per-lane slot counts — `locate`
+/// is a partition-point search, `group_slot` an add. The map is built
+/// once at group formation (`coordinator::coalesce`) and read on every
+/// coalesced round, so it allocates nothing after construction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlotMap {
+    /// `offsets[k]` = first group slot of lane `k`; `offsets[len]` = total
+    offsets: Vec<usize>,
+}
+
+impl SlotMap {
+    /// Build from one slot count per member lane (each must be >= 1).
+    pub fn new(slot_counts: &[usize]) -> Result<SlotMap> {
+        if slot_counts.is_empty() {
+            bail!("slot map needs at least one lane");
+        }
+        let mut offsets = Vec::with_capacity(slot_counts.len() + 1);
+        let mut at = 0usize;
+        offsets.push(0);
+        for (k, &n) in slot_counts.iter().enumerate() {
+            if n == 0 {
+                bail!("lane {k}: a coalesce member needs at least one slot");
+            }
+            at += n;
+            offsets.push(at);
+        }
+        Ok(SlotMap { offsets })
+    }
+
+    /// `lanes` members with `per_lane` slots each (the coalesce-group
+    /// shape: the key includes the slot count, so members are uniform).
+    pub fn uniform(lanes: usize, per_lane: usize) -> Result<SlotMap> {
+        SlotMap::new(&vec![per_lane; lanes])
+    }
+
+    /// Number of member lanes.
+    pub fn lanes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total group slots (the merged megabatch's instance count).
+    pub fn total(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// First group slot of lane `k`.
+    pub fn offset(&self, lane: usize) -> usize {
+        self.offsets[lane]
+    }
+
+    /// Lane `k`'s window of group slots.
+    pub fn slots_of(&self, lane: usize) -> std::ops::Range<usize> {
+        self.offsets[lane]..self.offsets[lane + 1]
+    }
+
+    /// Lane `k`'s local slot `local` in group-slot space.
+    pub fn group_slot(&self, lane: usize, local: usize) -> usize {
+        debug_assert!(local < self.slots_of(lane).len(), "local slot out of lane window");
+        self.offsets[lane] + local
+    }
+
+    /// `(lane, local_slot)` owning group slot `g` — the scatter
+    /// direction: which lane's response routing a merged output window
+    /// belongs to.
+    pub fn locate(&self, group_slot: usize) -> (usize, usize) {
+        debug_assert!(group_slot < self.total(), "group slot out of range");
+        // offsets is strictly increasing; find the last offset <= g
+        let lane = self.offsets.partition_point(|&o| o <= group_slot) - 1;
+        (lane, group_slot - self.offsets[lane])
     }
 }
 
@@ -203,6 +294,43 @@ impl RoundArena {
             bail!("pack wants {} inputs, got {}", self.m, xs.len());
         }
         self.pack_with(&|i| Some(xs[i]))
+    }
+
+    /// Pack one **coalesced** round: `get(lane, local)` is member lane
+    /// `lane`'s payload for its local slot `local`, remapped into this
+    /// arena's group slot space through `map`. The arena must be sized
+    /// for the whole group (`map.total()` instances); everything else —
+    /// pad blocks for absent slots, skip-already-zero windows, shape
+    /// validation — is exactly [`RoundArena::pack_with`].
+    pub fn pack_with_map<'a>(
+        &mut self,
+        map: &SlotMap,
+        get: &(dyn Fn(usize, usize) -> Option<&'a Tensor> + Sync),
+    ) -> Result<()> {
+        if map.total() != self.m {
+            bail!(
+                "slot map spans {} group slots, arena packs {}",
+                map.total(),
+                self.m
+            );
+        }
+        self.pack_with(&|g| {
+            let (lane, local) = map.locate(g);
+            get(lane, local)
+        })
+    }
+
+    /// Per-slot occupancy after the last pack (`true` = payload window,
+    /// `false` = pad/zero window).
+    pub fn occupancy(&self) -> &[bool] {
+        &self.occupied
+    }
+
+    /// How many of member lane `lane`'s slots held payload in the last
+    /// pack — the per-lane share of a coalesced megabatch (metrics
+    /// attribution and pad-skip observability).
+    pub fn lane_occupied(&self, map: &SlotMap, lane: usize) -> usize {
+        map.slots_of(lane).filter(|&g| self.occupied[g]).count()
     }
 }
 
@@ -360,6 +488,63 @@ mod tests {
         // released halves are reacquirable
         let third = pair.acquire();
         assert_eq!(third.m(), 2);
+    }
+
+    #[test]
+    fn slot_map_remaps_both_directions() {
+        let map = SlotMap::new(&[2, 3, 1]).unwrap();
+        assert_eq!(map.lanes(), 3);
+        assert_eq!(map.total(), 6);
+        assert_eq!(map.offset(0), 0);
+        assert_eq!(map.offset(2), 5);
+        assert_eq!(map.slots_of(1), 2..5);
+        assert_eq!(map.group_slot(1, 2), 4);
+        // locate is the exact inverse of group_slot over every slot
+        for lane in 0..3 {
+            for local in 0..map.slots_of(lane).len() {
+                assert_eq!(map.locate(map.group_slot(lane, local)), (lane, local));
+            }
+        }
+        assert_eq!(SlotMap::uniform(2, 4).unwrap(), SlotMap::new(&[4, 4]).unwrap());
+        assert!(SlotMap::new(&[]).is_err());
+        assert!(SlotMap::new(&[2, 0]).is_err());
+    }
+
+    #[test]
+    fn pack_with_map_matches_flat_pack_and_tracks_lane_occupancy() {
+        let mut rng = Rng::new(11);
+        let shape = [1usize, 4];
+        let xs: Vec<Tensor> = (0..4).map(|_| Tensor::randn(&shape, &mut rng)).collect();
+        let map = SlotMap::uniform(2, 2).unwrap();
+
+        // lane 0 fully occupied, lane 1 only local slot 1
+        let mut coalesced = RoundArena::new(Layout::Batch, 4, &shape).unwrap();
+        coalesced
+            .pack_with_map(&map, &|lane, local| match (lane, local) {
+                (0, l) => Some(&xs[l]),
+                (1, 1) => Some(&xs[3]),
+                _ => None,
+            })
+            .unwrap();
+
+        // oracle: the same slots through the flat single-lane pack
+        let mut flat = RoundArena::new(Layout::Batch, 4, &shape).unwrap();
+        flat.pack_with(&|g| match g {
+            0 => Some(&xs[0]),
+            1 => Some(&xs[1]),
+            3 => Some(&xs[3]),
+            _ => None,
+        })
+        .unwrap();
+        assert_eq!(coalesced.merged_data(), flat.merged_data());
+
+        assert_eq!(coalesced.lane_occupied(&map, 0), 2);
+        assert_eq!(coalesced.lane_occupied(&map, 1), 1);
+        assert_eq!(coalesced.occupancy(), &[true, true, false, true]);
+
+        // a map sized for a different group must be rejected
+        let wrong = SlotMap::uniform(3, 2).unwrap();
+        assert!(coalesced.pack_with_map(&wrong, &|_, _| None).is_err());
     }
 
     #[test]

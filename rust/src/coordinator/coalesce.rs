@@ -1,0 +1,178 @@
+//! Cross-fleet round coalescing: group formation and validation.
+//!
+//! NETFUSE's win is that one merged execution amortizes per-model
+//! overhead (paper §3); `MultiServer` still paid that overhead once per
+//! *lane*, even when two lanes serve the same model family at the same
+//! batch size. A **coalesce group** closes that gap at the serving
+//! level: member lanes keep their own queues, QoS contracts, and
+//! metrics, but their rounds pack into ONE shared megabatch executed by
+//! a single group-level executor (for real fleets: the fused artifact
+//! compiled at the group's total instance count), and the outputs
+//! scatter back through each lane's own response routing.
+//!
+//! Groups are keyed by [`CoalesceKey`] — **(model family, request
+//! shape, slot count)**. All three must match for lanes to share a
+//! megabatch:
+//! - *family* (`RoundExecutor::name`): different families have
+//!   different merged programs — nothing to share;
+//! - *request shape* (`[bs, ...input]`): the megabatch windows are
+//!   fixed-shape; a mismatched payload cannot occupy a window;
+//! - *slot count* (`m`): uniform windows keep the [`SlotMap`] a pure
+//!   offset table and the group executor's instance count an exact
+//!   multiple of the lane's.
+//!
+//! This module owns the *pure* half of the feature (keys, validation,
+//! slot-map planning) so it is unit-testable without a `MultiServer`;
+//! the dispatch half (group-ready selection, megabatch execution,
+//! response scatter) lives in [`super::multi`]. See
+//! `docs/ADR-002-coalescing.md` for the full design, including why an
+//! SLO-boosted lane always dispatches solo instead of riding a group.
+
+use anyhow::{bail, Result};
+
+use super::arena::SlotMap;
+use super::service::RoundExecutor;
+
+/// What must match for lanes to coalesce: (model family, request shape,
+/// slot count).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoalesceKey {
+    /// model family (`RoundExecutor::name`)
+    pub family: String,
+    /// per-request payload shape `[bs, ...input_shape]`
+    pub request_shape: Vec<usize>,
+    /// instance slots per round (`RoundExecutor::m`)
+    pub slots: usize,
+}
+
+impl CoalesceKey {
+    /// The coalesce key of one executor.
+    pub fn of<E: RoundExecutor + ?Sized>(e: &E) -> CoalesceKey {
+        let mut request_shape = vec![e.bs()];
+        request_shape.extend_from_slice(e.input_shape());
+        CoalesceKey { family: e.name().to_string(), request_shape, slots: e.m() }
+    }
+}
+
+/// Whether two executors could share a megabatch (same coalesce key).
+pub fn compatible<E: RoundExecutor + ?Sized>(a: &E, b: &E) -> bool {
+    CoalesceKey::of(a) == CoalesceKey::of(b)
+}
+
+/// Validate a proposed group and plan its slot remap.
+///
+/// `exec` is the group-level executor that will run the merged rounds
+/// (for real fleets, the fused program compiled at `members.len() * m`
+/// instances); `members` are the member lanes' executors in window
+/// order. Rejects — with the reason — any of:
+/// - fewer than two members (a 1-lane "group" is just the lane);
+/// - members whose key (family, request shape, slot count) differs;
+/// - a group executor whose family or request shape differs from the
+///   members', or whose slot count is not exactly the members' total.
+///
+/// On success returns the [`SlotMap`] that remaps each member's local
+/// slots into the shared megabatch.
+pub fn plan_group<E: RoundExecutor + ?Sized>(exec: &E, members: &[&E]) -> Result<SlotMap> {
+    if members.len() < 2 {
+        bail!(
+            "coalesce group needs >= 2 member lanes, got {}",
+            members.len()
+        );
+    }
+    let key = CoalesceKey::of(members[0]);
+    for (k, m) in members.iter().enumerate().skip(1) {
+        let mk = CoalesceKey::of(*m);
+        if mk != key {
+            bail!(
+                "member {k} cannot coalesce: key {:?} != {:?} \
+                 (family, request shape, and slot count must all match)",
+                mk,
+                key
+            );
+        }
+    }
+    let ek = CoalesceKey::of(exec);
+    if ek.family != key.family || ek.request_shape != key.request_shape {
+        bail!(
+            "group executor {:?} serves {:?}, members are {:?} {:?}",
+            ek.family,
+            ek.request_shape,
+            key.family,
+            key.request_shape
+        );
+    }
+    let total = members.len() * key.slots;
+    if ek.slots != total {
+        bail!(
+            "group executor has {} slots, {} members x {} slots need exactly {total}",
+            ek.slots,
+            members.len(),
+            key.slots
+        );
+    }
+    SlotMap::uniform(members.len(), key.slots)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Duration;
+
+    use super::*;
+    use crate::coordinator::mock::EchoExecutor;
+
+    fn echo(name: &str, m: usize, shape: &[usize]) -> EchoExecutor {
+        EchoExecutor::new(name, m, shape, Duration::ZERO)
+    }
+
+    #[test]
+    fn key_covers_family_shape_and_slots() {
+        let a = echo("bert", 2, &[4]);
+        assert_eq!(
+            CoalesceKey::of(&a),
+            CoalesceKey {
+                family: "bert".into(),
+                request_shape: vec![1, 4],
+                slots: 2
+            }
+        );
+        assert!(compatible(&a, &echo("bert", 2, &[4])));
+        assert!(!compatible(&a, &echo("resnet", 2, &[4]))); // family
+        assert!(!compatible(&a, &echo("bert", 2, &[8]))); // request shape
+        assert!(!compatible(&a, &echo("bert", 3, &[4]))); // slot count
+    }
+
+    #[test]
+    fn plan_group_builds_the_slot_map() {
+        let a = echo("bert", 2, &[4]);
+        let b = echo("bert", 2, &[4]);
+        let g = echo("bert", 4, &[4]);
+        let map = plan_group(&g, &[&a, &b]).unwrap();
+        assert_eq!(map.lanes(), 2);
+        assert_eq!(map.total(), 4);
+        assert_eq!(map.slots_of(1), 2..4);
+    }
+
+    #[test]
+    fn plan_group_rejects_mismatched_members_and_executors() {
+        let a = echo("bert", 2, &[4]);
+        let g = echo("bert", 4, &[4]);
+        // too few members
+        assert!(plan_group(&g, &[&a]).is_err());
+        // mismatched request shape
+        let wide = echo("bert", 2, &[8]);
+        let err = plan_group(&g, &[&a, &wide]).unwrap_err();
+        assert!(err.to_string().contains("cannot coalesce"), "got: {err}");
+        // mismatched slot count
+        let tall = echo("bert", 3, &[4]);
+        assert!(plan_group(&g, &[&a, &tall]).is_err());
+        // mismatched family
+        let other = echo("resnet", 2, &[4]);
+        assert!(plan_group(&g, &[&a, &other]).is_err());
+        // group executor family / shape / capacity mismatches
+        let b = echo("bert", 2, &[4]);
+        assert!(plan_group(&echo("resnet", 4, &[4]), &[&a, &b]).is_err());
+        assert!(plan_group(&echo("bert", 4, &[8]), &[&a, &b]).is_err());
+        let err = plan_group(&echo("bert", 6, &[4]), &[&a, &b]).unwrap_err();
+        assert!(err.to_string().contains("need exactly 4"), "got: {err}");
+    }
+}

@@ -19,13 +19,19 @@
 //! batcher; [`multi`]'s `MultiServer` hosts several fleets as tenants
 //! of one machine — per-fleet lanes, QoS-scheduled round dispatch
 //! (weighted deficit round-robin + SLO-deadline boost via
-//! `crate::ingress::qos`), and one shared `WorkerPool` sized to the
-//! box. Both are generic over `service::RoundExecutor`, the slot-level
-//! round contract `Fleet` implements. Open-loop traffic reaches
-//! `MultiServer` through `crate::ingress` (frames -> transports ->
-//! bounded bridge -> the dispatch thread).
+//! `crate::ingress::qos`), one shared `WorkerPool` sized to the box,
+//! and cross-fleet round coalescing ([`coalesce`]): lanes serving the
+//! same model family at the same shape merge their rounds into ONE
+//! megabatch execution (`arena::SlotMap` remaps lane-local slots), so
+//! the merged program's launch is amortized across tenants, not just
+//! across the instances of one lane. Both front ends are generic over
+//! `service::RoundExecutor`, the slot-level round contract `Fleet`
+//! implements. Open-loop traffic reaches `MultiServer` through
+//! `crate::ingress` (frames -> transports -> bounded bridge -> the
+//! dispatch thread).
 
 pub mod arena;
+pub mod coalesce;
 pub mod memory;
 pub mod metrics;
 pub mod mock;
@@ -37,8 +43,9 @@ pub mod strategy;
 pub mod server;
 pub mod workload;
 
-pub use arena::{ArenaPair, Layout, RoundArena};
-pub use multi::MultiServer;
+pub use arena::{ArenaPair, Layout, RoundArena, SlotMap};
+pub use coalesce::CoalesceKey;
+pub use multi::{Dispatched, GroupStats, MultiServer};
 pub use pool::WorkerPool;
 pub use request::{Request, Response};
 pub use service::{Fleet, RoundExecutor};

@@ -21,7 +21,21 @@
 //!   [`Fleet::load_with_pool`] and a single
 //!   [`WorkerPool::machine_sized`] handle, and all Concurrent/Hybrid
 //!   rounds dispatch onto one thread set sized to the machine instead
-//!   of one pool per fleet.
+//!   of one pool per fleet;
+//! - **cross-fleet round coalescing** — lanes with the same coalesce
+//!   key (model family, request shape, slot count — see
+//!   [`super::coalesce`]) can be registered as a *coalesce group*
+//!   ([`MultiServer::add_coalesce_group`] /
+//!   [`MultiServer::auto_coalesce`]): whenever the QoS pick lands on a
+//!   member and at least two members hold queued work, ONE merged round
+//!   packs every member's queue fronts into the group executor's
+//!   megabatch (`arena::SlotMap` remaps lane-local slots to group
+//!   slots) and the outputs scatter back through each lane's own
+//!   response routing and metrics. An SLO-**urgent** pick always
+//!   dispatches solo on the lane's own executor — a padded group-sized
+//!   megabatch would spend the deadline slack on lanes that have
+//!   plenty. A failed merged round requeues every member's requests in
+//!   their original FIFO positions, exactly like a failed solo round.
 //!
 //! Note on round overlap: `MultiServer` itself dispatches lanes one at
 //! a time (`dispatch_next` is `&mut self`), so it does NOT overlap
@@ -40,21 +54,68 @@
 //! [`WorkerPool::machine_sized`]: super::pool::WorkerPool::machine_sized
 //! [`ArenaPair`]: super::arena::ArenaPair
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::ingress::qos::{LaneQos, LaneSnapshot, QosScheduler};
+use crate::tensor::Tensor;
 
+use super::arena::SlotMap;
+use super::coalesce::{plan_group, CoalesceKey};
 use super::request::{Request, Response};
 use super::server::{Admit, Server, ServerConfig};
 use super::service::{Fleet, RoundExecutor};
+use super::strategy::StrategyKind;
+
+/// One registered coalesce group: the group-level executor (for real
+/// fleets, the fused program compiled at the members' total slot
+/// count), the member lanes in megabatch-window order, and the slot
+/// remap between the two.
+struct Group<'f, E: RoundExecutor> {
+    exec: &'f E,
+    members: Vec<usize>,
+    map: SlotMap,
+    rounds: u64,
+    responses: u64,
+}
+
+/// Cumulative accounting for one coalesce group.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GroupStats {
+    /// merged rounds dispatched through the group executor
+    pub rounds: u64,
+    /// responses those merged rounds produced (across all members)
+    pub responses: u64,
+}
+
+/// What one [`MultiServer::dispatch_next`] did.
+#[derive(Debug, Clone, Copy)]
+pub struct Dispatched {
+    /// the lane the QoS scheduler picked (and charged)
+    pub lane: usize,
+    /// responses appended — for a coalesced round these span every
+    /// served member lane, not just `lane`
+    pub responses: usize,
+    /// lanes whose requests this round served: 1 for a solo round,
+    /// >= 2 for a coalesced group round
+    pub lanes_served: usize,
+    /// the pick came from the SLO boost (solo, possibly padded round)
+    pub urgent: bool,
+}
 
 /// Multi-tenant serving front end: one [`Server`] lane per fleet,
-/// QoS-scheduled (WDRR + SLO boost) round dispatch across lanes.
+/// QoS-scheduled (WDRR + SLO boost) round dispatch across lanes, with
+/// optional cross-fleet round coalescing.
 pub struct MultiServer<'f, E: RoundExecutor = Fleet> {
     lanes: Vec<Server<'f, E>>,
     sched: QosScheduler,
+    /// registered coalesce groups (disjoint member sets)
+    groups: Vec<Group<'f, E>>,
+    /// lane -> its group, parallel to `lanes`
+    group_of: Vec<Option<usize>>,
+    /// merged-round output scratch, reused across coalesced rounds
+    group_outs: Vec<Option<Tensor>>,
 }
 
 impl<'f, E: RoundExecutor> Default for MultiServer<'f, E> {
@@ -76,10 +137,18 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         Self::with_boost_margin(QosScheduler::DEFAULT_BOOST_MARGIN)
     }
 
-    /// `boost_margin` is the scheduler's ε: how close to its SLO a
-    /// lane's oldest wait may get before the lane preempts WDRR.
+    /// `boost_margin` is the scheduler's default ε: how close to its
+    /// SLO a lane's oldest wait may get before the lane preempts WDRR.
+    /// Individual lanes can override it per lane via
+    /// [`LaneQos::with_boost_margin`] at `add_lane_qos` time.
     pub fn with_boost_margin(eps: Duration) -> MultiServer<'f, E> {
-        MultiServer { lanes: Vec::new(), sched: QosScheduler::new(eps) }
+        MultiServer {
+            lanes: Vec::new(),
+            sched: QosScheduler::new(eps),
+            groups: Vec::new(),
+            group_of: Vec::new(),
+            group_outs: Vec::new(),
+        }
     }
 
     /// Register one fleet as a tenant with default QoS (weight 1, no
@@ -96,7 +165,100 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         let mut server = Server::new(fleet, cfg);
         server.metrics.slo = Some(qos.slo.as_secs_f64());
         self.lanes.push(server);
+        self.group_of.push(None);
         self.sched.add_lane(qos)
+    }
+
+    /// Register `members` as a coalesce group executing merged rounds
+    /// on `exec`. Validation (same model family, request shape, and
+    /// slot count across members; `exec` sized to exactly the members'
+    /// total — see [`super::coalesce::plan_group`]) rejects any lane
+    /// set that could not share a megabatch; a lane can belong to at
+    /// most one group. Returns the group handle.
+    pub fn add_coalesce_group(&mut self, exec: &'f E, members: &[usize]) -> Result<usize> {
+        for (a, &l) in members.iter().enumerate() {
+            if l >= self.lanes.len() {
+                bail!("no lane {l} (have {})", self.lanes.len());
+            }
+            if self.group_of[l].is_some() {
+                bail!("lane {l} already belongs to a coalesce group");
+            }
+            if members[..a].contains(&l) {
+                bail!("lane {l} listed twice in one coalesce group");
+            }
+        }
+        let execs: Vec<&E> = members.iter().map(|&l| self.lanes[l].fleet()).collect();
+        let map = plan_group(exec, &execs)?;
+        let g = self.groups.len();
+        for &l in members {
+            self.group_of[l] = Some(g);
+        }
+        self.groups.push(Group {
+            exec,
+            members: members.to_vec(),
+            map,
+            rounds: 0,
+            responses: 0,
+        });
+        Ok(g)
+    }
+
+    /// Form a coalesce group automatically: scan registered lanes (in
+    /// lane order) for ungrouped ones whose coalesce key — (model
+    /// family, request shape, slot count) — matches `exec`'s family and
+    /// shape, taking the first matching lane's slot count as the
+    /// group's, until `exec`'s capacity is filled. Lanes with a
+    /// mismatched key are skipped, never coalesced. Returns `Ok(None)`
+    /// when fewer than two matching lanes exist or their total does not
+    /// fill `exec` exactly.
+    pub fn auto_coalesce(&mut self, exec: &'f E) -> Result<Option<usize>> {
+        let want = CoalesceKey::of(exec);
+        let mut members: Vec<usize> = Vec::new();
+        let mut lane_m: Option<usize> = None;
+        for (l, lane) in self.lanes.iter().enumerate() {
+            if self.group_of[l].is_some() {
+                continue;
+            }
+            let k = CoalesceKey::of(lane.fleet());
+            if k.family != want.family || k.request_shape != want.request_shape {
+                continue;
+            }
+            match lane_m {
+                None => lane_m = Some(k.slots),
+                Some(m) if m != k.slots => continue,
+                Some(_) => {}
+            }
+            if (members.len() + 1) * lane_m.unwrap() > want.slots {
+                break; // group executor full
+            }
+            members.push(l);
+        }
+        match lane_m {
+            Some(m) if members.len() >= 2 && members.len() * m == want.slots => {
+                Ok(Some(self.add_coalesce_group(exec, &members)?))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Number of registered coalesce groups.
+    pub fn coalesce_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Member lanes of group `g`, in megabatch-window order.
+    pub fn group_members(&self, g: usize) -> &[usize] {
+        &self.groups[g].members
+    }
+
+    /// Cumulative merged-round accounting for group `g`.
+    pub fn group_stats(&self, g: usize) -> GroupStats {
+        GroupStats { rounds: self.groups[g].rounds, responses: self.groups[g].responses }
+    }
+
+    /// The coalesce group `lane` belongs to, if any.
+    pub fn lane_group(&self, lane: usize) -> Option<usize> {
+        self.group_of[lane]
     }
 
     pub fn lanes(&self) -> usize {
@@ -150,7 +312,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
             let batch_due = lane.config().max_wait.saturating_sub(wait);
             let slo_due = qos
                 .slo
-                .saturating_sub(self.sched.boost_margin())
+                .saturating_sub(self.sched.lane_boost_margin(i))
                 .saturating_sub(wait);
             let due = batch_due.min(slo_due);
             best = Some(match best {
@@ -161,18 +323,25 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         best
     }
 
-    /// Dispatch the next due lane (QoS pick), appending its responses
-    /// to `responses`. Returns `Some((lane, responses_appended))`, or
-    /// `None` when no lane is due yet. An SLO-urgent pick dispatches
-    /// even if the lane's round is not batching-ready — the round pads.
-    /// A failed round requeues its requests inside the lane (original
-    /// FIFO order and wait clocks) and surfaces the error; the cursor
-    /// and deficit still advance past the lane so a persistently
-    /// failing fleet cannot starve the others.
+    /// Dispatch the next due round (QoS pick), appending its responses
+    /// to `responses`. Returns `Some(`[`Dispatched`]`)`, or `None` when
+    /// no lane is due yet. An SLO-urgent pick dispatches even if the
+    /// lane's round is not batching-ready — the round pads, and it
+    /// always runs **solo** on the lane's own executor. A non-urgent
+    /// pick on a coalesce-group member with at least one other member
+    /// holding work dispatches a **merged** group round instead: every
+    /// member's queue fronts pack into one megabatch (members that are
+    /// not yet batching-ready ride along — their windows would
+    /// otherwise pad), and responses scatter back per lane. A failed
+    /// round — solo or merged — requeues its requests inside the
+    /// owning lane(s) (original FIFO order and wait clocks) and
+    /// surfaces the error; the cursor and deficit still advance past
+    /// the picked lane so a persistently failing fleet cannot starve
+    /// the others.
     pub fn dispatch_next(
         &mut self,
         responses: &mut Vec<Response>,
-    ) -> Result<Option<(usize, usize)>> {
+    ) -> Result<Option<Dispatched>> {
         let pick = {
             let lanes = &self.lanes;
             match self.sched.select(&|i| snapshot(&lanes[i])) {
@@ -184,8 +353,137 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
             let lanes = &self.lanes;
             self.sched.commit(&pick, &|i| snapshot(&lanes[i]));
         }
+        if !pick.urgent {
+            if let Some(g) = self.group_of[pick.lane] {
+                let live = self.groups[g]
+                    .members
+                    .iter()
+                    .filter(|&&l| self.lanes[l].pending() > 0)
+                    .count();
+                if live >= 2 {
+                    let (lanes_served, n) = self.dispatch_group(g, responses)?;
+                    return Ok(Some(Dispatched {
+                        lane: pick.lane,
+                        responses: n,
+                        lanes_served,
+                        urgent: false,
+                    }));
+                }
+            }
+        }
         let n = self.lanes[pick.lane].dispatch_into(responses)?;
-        Ok(Some((pick.lane, n)))
+        Ok(Some(Dispatched {
+            lane: pick.lane,
+            responses: n,
+            lanes_served: 1,
+            urgent: pick.urgent,
+        }))
+    }
+
+    /// One merged round over group `g`: take every member's queue
+    /// fronts, execute the group's megabatch once, scatter the outputs
+    /// back through each member's response path. Returns
+    /// `(lanes_served, responses)`.
+    fn dispatch_group(
+        &mut self,
+        g: usize,
+        responses: &mut Vec<Response>,
+    ) -> Result<(usize, usize)> {
+        // field-level borrow split: `groups` is only read while `lanes`
+        // and the output scratch are driven through the round phases
+        let groups = &self.groups;
+        let lanes = &mut self.lanes;
+        let outs = &mut self.group_outs;
+        let group = &groups[g];
+
+        // take: pop each member's fronts into its round scratch. Members
+        // with nothing queued still "take" (an empty round) so their
+        // megabatch windows pad; they are not counted as served.
+        let mut lanes_served = 0usize;
+        for &l in &group.members {
+            if lanes[l].take_round() > 0 {
+                lanes_served += 1;
+            }
+        }
+
+        // execute: ONE merged round through the group executor; the
+        // `get` closure is the SlotMap remap (group slot -> member
+        // lane's local slot). Coalescing exists to amortize the merged
+        // program's launch, so the group round is always NETFUSE.
+        let t0 = Instant::now();
+        let run = {
+            let lanes = &*lanes;
+            let get = |gs: usize| {
+                let (k, local) = group.map.locate(gs);
+                lanes[group.members[k]].slot_input(local)
+            };
+            group.exec.run_round_slots(StrategyKind::NetFuse, &get, outs)
+        };
+        if let Err(e) = run {
+            // merged-round failure: every member requeues its own
+            // fronts — per-queue FIFO order and wait clocks survive the
+            // remap, exactly like a failed solo round
+            for &l in &group.members {
+                lanes[l].requeue_taken();
+            }
+            return Err(e);
+        }
+
+        // verify the WHOLE merged output before any lane consumes a
+        // slot: a short or hole-y result from a misbehaving group
+        // executor must requeue every member, not answer some lanes
+        // and drop the rest mid-scatter
+        let bad = if outs.len() != group.map.total() {
+            Some(format!(
+                "executor returned {} outputs for {} group slots",
+                outs.len(),
+                group.map.total()
+            ))
+        } else {
+            (0..group.map.total())
+                .find(|&gs| {
+                    let (k, local) = group.map.locate(gs);
+                    lanes[group.members[k]].slot_input(local).is_some() && outs[gs].is_none()
+                })
+                .map(|gs| format!("group slot {gs} produced no output for an occupied slot"))
+        };
+        if let Some(msg) = bad {
+            for &l in &group.members {
+                lanes[l].requeue_taken();
+            }
+            bail!("coalesced round: {msg}");
+        }
+
+        // scatter: each member completes against its lane-relative
+        // window of the merged output. Round time is the merged round's
+        // wall time, attributed to every lane that actually held work.
+        let secs = t0.elapsed().as_secs_f64();
+        let mut n = 0usize;
+        for (k, &l) in group.members.iter().enumerate() {
+            let window = group.map.slots_of(k);
+            let occupied = (0..window.len()).any(|local| lanes[l].slot_input(local).is_some());
+            if !occupied {
+                continue;
+            }
+            match lanes[l].complete_round(secs, &mut outs[window], responses) {
+                Ok(c) => n += c,
+                Err(e) => {
+                    // mid-scatter failure (unreachable after the group
+                    // verification above, kept as defense): the failing
+                    // lane requeued its own round inside complete_round;
+                    // members not yet scattered must requeue too or
+                    // their taken requests would leak
+                    for &rest in &group.members[k + 1..] {
+                        lanes[rest].requeue_taken();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let group = &mut self.groups[g];
+        group.rounds += 1;
+        group.responses += n as u64;
+        Ok((lanes_served, n))
     }
 
     /// Dispatch (padded) rounds until every queue on every lane is

@@ -202,15 +202,7 @@ impl<'f, E: RoundExecutor> Server<'f, E> {
     /// (the allocation-free steady-state entry point). Returns the number
     /// of responses appended.
     pub fn dispatch_into(&mut self, responses: &mut Vec<Response>) -> Result<usize> {
-        self.slots.clear();
-        for q in self.queues.iter_mut() {
-            self.slots.push(q.pop_front());
-        }
-        // NOTE: no batching-clock bookkeeping here — the `max_wait`
-        // deadline is derived per request from `arrived` in
-        // `round_ready`, so requests left queued (or requeued by a
-        // failed round) keep their original wait clocks.
-
+        self.take_round();
         let slots = &self.slots;
         let get = |i: usize| slots[i].as_ref().map(|r| &r.input);
         let t0 = Instant::now();
@@ -223,26 +215,84 @@ impl<'f, E: RoundExecutor> Server<'f, E> {
             // validated at ingress (`offer`), so an error here is
             // fleet/runtime-level, not attributable to one request —
             // the caller decides whether to retry or tear down.
-            self.requeue_slots();
+            self.requeue_taken();
             return Err(e);
         }
+        let secs = t0.elapsed().as_secs_f64();
+        // hand the output scratch to the shared completion path without
+        // aliasing `self` (the Vec swap moves no elements)
+        let mut outs = std::mem::take(&mut self.outs);
+        let res = self.complete_round(secs, &mut outs, responses);
+        self.outs = outs;
+        res
+    }
+
+    /// Pop one request per model queue into the round scratch — the
+    /// **take** phase of a round, split out so a coalesced dispatch
+    /// (`MultiServer` group rounds) can pop several lanes before one
+    /// merged execution. Returns the number of occupied slots. Every
+    /// taken round should be finished with [`Server::complete_round`]
+    /// or [`Server::requeue_taken`] before the next take; a round left
+    /// unfinished is requeued here rather than leaked. `offer` remains
+    /// safe in between (it appends to the queues, not the scratch).
+    pub fn take_round(&mut self) -> usize {
+        // self-healing: a round left neither completed nor requeued (a
+        // caller bug or an abandoned error path) must not leak its
+        // requests when the scratch is cleared — restore them to their
+        // queue fronts first. A no-op for the well-behaved steady state
+        // (every slot is None between rounds).
+        self.requeue_taken();
+        self.slots.clear();
+        let mut taken = 0;
+        for q in self.queues.iter_mut() {
+            let r = q.pop_front();
+            taken += r.is_some() as usize;
+            self.slots.push(r);
+        }
+        // NOTE: no batching-clock bookkeeping here — the `max_wait`
+        // deadline is derived per request from `arrived` in
+        // `round_ready`, so requests left queued (or requeued by a
+        // failed round) keep their original wait clocks.
+        taken
+    }
+
+    /// The payload taken for local slot `i`, if any (the lane-relative
+    /// lookup a coalesced pack remaps through `arena::SlotMap`).
+    pub fn slot_input(&self, i: usize) -> Option<&Tensor> {
+        self.slots.get(i).and_then(|s| s.as_ref()).map(|r| &r.input)
+    }
+
+    /// The **complete** phase of a round: validate that every occupied
+    /// slot produced an output, then record metrics and emit responses.
+    /// `outs` is index-aligned with this lane's local slots — for a solo
+    /// round the server's own scratch, for a coalesced round the lane's
+    /// window of the group output (`round_secs` is then the merged
+    /// round's wall time, attributed to every participating lane).
+    /// Validation failure requeues the whole taken round (original FIFO
+    /// order) before surfacing, exactly like a failed execution.
+    pub fn complete_round(
+        &mut self,
+        round_secs: f64,
+        outs: &mut [Option<Tensor>],
+        responses: &mut Vec<Response>,
+    ) -> Result<usize> {
         // verify every occupied slot has an output BEFORE consuming any,
         // so a violated strategy invariant (a missing or short `outs`,
         // e.g. from a custom RoundExecutor) requeues the whole round
         // instead of dropping the requests taken so far — or panicking
         // on an out-of-bounds index
         if let Some(i) = (0..self.slots.len())
-            .find(|&i| self.slots[i].is_some() && !matches!(self.outs.get(i), Some(Some(_))))
+            .find(|&i| self.slots[i].is_some() && !matches!(outs.get(i), Some(Some(_))))
         {
-            self.requeue_slots();
+            self.requeue_taken();
             bail!("model {i} produced no output for an occupied slot");
         }
-        self.metrics.record_round(t0.elapsed().as_secs_f64());
+        self.metrics.record_round(round_secs);
 
         let mut n = 0;
         for (i, slot) in self.slots.iter_mut().enumerate() {
             if let Some(req) = slot.take() {
-                let output = self.outs[i]
+                let output = outs[i]
                     .take()
                     .expect("verified above: occupied slots have outputs");
                 let latency = req.arrived.elapsed().as_secs_f64();
@@ -260,8 +310,9 @@ impl<'f, E: RoundExecutor> Server<'f, E> {
     }
 
     /// Return every request popped into the round scratch to the head
-    /// of its queue (failed-round recovery).
-    fn requeue_slots(&mut self) {
+    /// of its queue (failed-round recovery — each queue gets back its
+    /// own front, so per-queue FIFO order and wait clocks survive).
+    pub fn requeue_taken(&mut self) {
         for (i, slot) in self.slots.iter_mut().enumerate() {
             if let Some(req) = slot.take() {
                 self.queues[i].push_front(req);

@@ -16,6 +16,12 @@
 //! the [`QosScheduler`] picks, (3) only when nothing is due, block for
 //! the next arrival — capped at the soonest batching/SLO deadline — so
 //! the dispatch thread never idles while any lane is round-ready.
+//! Dispatch prefers **group-ready over lane-ready**: when the QoS pick
+//! lands on a coalesce-group member and other members hold work,
+//! `MultiServer::dispatch_next` runs ONE merged round for the whole
+//! group, and the responses the loop routes back span several lanes
+//! (the per-request `Route` carries the authoritative lane, so the
+//! scatter needs no lane hint).
 //!
 //! Requests are re-stamped (`Request::arrived_now`) at admission: the
 //! queue-wait clock starts when the server accepts the request, not
@@ -284,6 +290,9 @@ pub struct IngressStats {
     pub responses: u64,
     /// rounds dispatched
     pub rounds: u64,
+    /// rounds that were coalesced group rounds (one merged execution
+    /// serving >= 2 lanes); included in `rounds`
+    pub coalesced_rounds: u64,
     /// failed rounds that were retried (requests requeued by the lane)
     pub round_errors: u64,
     /// times the pre-block recheck found a lane due (a deadline expired
@@ -328,12 +337,22 @@ pub fn run_dispatch<E: RoundExecutor>(
             admit(multi, env, &mut routes, &mut seq, &mut stats);
         }
 
-        // 2) dispatch whatever the QoS scheduler says is due
+        // 2) dispatch whatever the QoS scheduler says is due — a
+        // coalesced group round when the pick's group has work on
+        // several lanes, a solo lane round otherwise
         match multi.dispatch_next(&mut responses) {
-            Ok(Some((lane, _n))) => {
+            Ok(Some(d)) => {
                 consecutive_errors = 0;
                 stats.rounds += 1;
-                route_responses(&mut responses, &mut routes, lane, &mut stats);
+                // a merged round's responses span lanes; only a solo
+                // round's batch can be pinned to the picked lane
+                let hint = if d.lanes_served > 1 {
+                    stats.coalesced_rounds += 1;
+                    usize::MAX
+                } else {
+                    d.lane
+                };
+                route_responses(&mut responses, &mut routes, hint, &mut stats);
                 continue;
             }
             Ok(None) => {}
@@ -422,7 +441,8 @@ fn admit<E: RoundExecutor>(
 
 /// Send a batch of responses back to their connections. `lane` is a
 /// hint for the common case; the authoritative lane is in the route
-/// (drain batches mix lanes).
+/// (drain and coalesced-round batches mix lanes — they pass
+/// `usize::MAX`).
 fn route_responses(
     responses: &mut Vec<Response>,
     routes: &mut HashMap<u64, Route>,

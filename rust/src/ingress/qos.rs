@@ -7,11 +7,13 @@
 //!
 //! Scheduling is two-tier:
 //! 1. **SLO boost** — a lane whose oldest queued request has waited to
-//!    within ε ([`QosScheduler::boost_margin`]) of its `slo` preempts
-//!    the WDRR order outright, even if its round is not yet due (the
-//!    dispatch pads the missing slots): better a padded round now than
-//!    a full round after the deadline. Among urgent lanes, least slack
-//!    wins.
+//!    within ε of its `slo` preempts the WDRR order outright, even if
+//!    its round is not yet due (the dispatch pads the missing slots):
+//!    better a padded round now than a full round after the deadline.
+//!    Among urgent lanes, least slack wins. ε is per lane
+//!    ([`LaneQos::with_boost_margin`]), defaulting to the scheduler-wide
+//!    [`QosScheduler::boost_margin`]; a zero-margin lane never pads
+//!    early.
 //! 2. **WDRR** — otherwise, lanes whose rounds are due are served in
 //!    deficit round-robin: every replenish cycle grants each backlogged
 //!    lane `weight` round credits (capped at two cycles so an idle
@@ -35,13 +37,30 @@ pub struct LaneQos {
     /// WDRR share: rounds granted per replenish cycle (clamped >= 1).
     pub weight: u32,
     /// End-to-end latency target for the lane's requests. Lanes that
-    /// get within [`QosScheduler::boost_margin`] of it preempt WDRR.
+    /// get within their boost margin of it preempt WDRR.
     pub slo: Duration,
+    /// Per-lane SLO boost margin ε: how close to `slo` the lane's
+    /// oldest wait may get before the lane preempts the WDRR order
+    /// (dispatching a padded round early). `None` inherits the
+    /// scheduler-wide default ([`QosScheduler::boost_margin`]); an
+    /// explicit `Duration::ZERO` means the lane never pads early — it
+    /// boosts only once the deadline has actually been reached.
+    pub boost_margin: Option<Duration>,
 }
 
 impl LaneQos {
     pub fn new(weight: u32, slo: Duration) -> LaneQos {
-        LaneQos { weight, slo }
+        LaneQos { weight, slo, boost_margin: None }
+    }
+
+    /// Set this lane's own SLO boost margin ε instead of inheriting the
+    /// scheduler default. Plumbed uniformly through every
+    /// `MultiServer::add_lane_qos` path — before this, ε was fixed for
+    /// ALL lanes at `MultiServer` construction, so a single latency
+    /// tier's margin was un-tunable per lane.
+    pub fn with_boost_margin(mut self, eps: Duration) -> LaneQos {
+        self.boost_margin = Some(eps);
+        self
     }
 }
 
@@ -49,7 +68,7 @@ impl Default for LaneQos {
     /// Weight 1 and an SLO far beyond any real deadline: scheduling
     /// degenerates to the plain fair round-robin `MultiServer` had.
     fn default() -> LaneQos {
-        LaneQos { weight: 1, slo: Duration::from_secs(3600) }
+        LaneQos { weight: 1, slo: Duration::from_secs(3600), boost_margin: None }
     }
 }
 
@@ -97,8 +116,18 @@ impl QosScheduler {
         QosScheduler { lanes: Vec::new(), cursor: 0, eps: boost_margin }
     }
 
+    /// The scheduler-wide default ε (lanes without an explicit
+    /// [`LaneQos::boost_margin`] inherit it).
     pub fn boost_margin(&self) -> Duration {
         self.eps
+    }
+
+    /// The effective ε for one lane: its own margin if set, else the
+    /// scheduler default. Deadline math (`MultiServer::next_due_in`)
+    /// must use this, not [`QosScheduler::boost_margin`], or a per-lane
+    /// margin would nap the dispatch thread past its boost window.
+    pub fn lane_boost_margin(&self, lane: usize) -> Duration {
+        self.lanes[lane].qos.boost_margin.unwrap_or(self.eps)
     }
 
     /// Register a lane; returns its index. Weight 0 is clamped to 1 (a
@@ -150,7 +179,7 @@ impl QosScheduler {
             }
             let Some(wait) = s.oldest_wait else { continue };
             let slo = self.lanes[i].qos.slo;
-            if wait >= slo.saturating_sub(self.eps) {
+            if wait >= slo.saturating_sub(self.lane_boost_margin(i)) {
                 let slack = slo.saturating_sub(wait);
                 let better = match urgent {
                     None => true,
@@ -307,6 +336,38 @@ mod tests {
             (3..=5).contains(&ones),
             "woken lane must get ~half the rounds, got {ones}/8 ({order:?})"
         );
+    }
+
+    #[test]
+    fn zero_boost_margin_never_pads_early() {
+        // REGRESSION: ε used to be fixed for every lane at scheduler
+        // construction; now it is per-lane, and ZERO must mean "boost
+        // exactly at the deadline, never before" — no early padded
+        // dispatch for a lane that is within the old default 1ms window
+        let mut s = QosScheduler::new(QosScheduler::DEFAULT_BOOST_MARGIN);
+        let slo = Duration::from_millis(50);
+        s.add_lane(LaneQos::new(1, slo).with_boost_margin(Duration::ZERO));
+        let at = |wait: Duration| {
+            move |_: usize| LaneSnapshot { ready: false, pending: 1, oldest_wait: Some(wait) }
+        };
+        // inside the scheduler-default window but before the SLO: a
+        // zero-margin lane must NOT be selected (the default-ε scheduler
+        // would have padded early here)
+        assert!(
+            s.select(&at(slo - Duration::from_micros(500))).is_none(),
+            "zero-margin lane padded early"
+        );
+        // exactly at (and past) the SLO it boosts
+        let pick = s.select(&at(slo)).expect("deadline reached must boost");
+        assert!(pick.urgent);
+
+        // and the per-lane margin can also WIDEN the window past the
+        // scheduler default — plumbed per lane, not per scheduler
+        let mut s = QosScheduler::new(Duration::ZERO);
+        s.add_lane(LaneQos::new(1, slo).with_boost_margin(Duration::from_millis(20)));
+        assert_eq!(s.lane_boost_margin(0), Duration::from_millis(20));
+        let pick = s.select(&at(slo - Duration::from_millis(10))).unwrap();
+        assert!(pick.urgent, "20ms margin must boost 10ms before the SLO");
     }
 
     #[test]

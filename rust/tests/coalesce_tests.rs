@@ -1,0 +1,409 @@
+//! Cross-fleet round coalescing: the randomized/property harness and
+//! the deterministic positive/negative paths.
+//!
+//! The harness is the correctness story for slot routing: for random
+//! lane counts, WDRR weights, queue depths, and partial occupancy, a
+//! coalesced `MultiServer` must produce **byte-identical responses, per
+//! lane, in FIFO order** to an uncoalesced oracle fed the same seeded
+//! requests — including through injected round failures (merged-round
+//! requeue) in the coalesced run. Everything is artifact-free
+//! (`EchoExecutor` / `FailingEcho` lanes) and sleep-free (`max_wait`
+//! zero, zero round cost), so the 120-case property suite stays well
+//! inside the test wall-clock budget.
+
+mod common;
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use common::{collect_streams, echo, seeded_request, FailingEcho, Streams};
+use netfuse::coordinator::mock::EchoExecutor;
+use netfuse::coordinator::multi::MultiServer;
+use netfuse::coordinator::server::{Admit, ServerConfig};
+use netfuse::coordinator::StrategyKind;
+use netfuse::ingress::LaneQos;
+use netfuse::prop_assert;
+use netfuse::util::prop;
+use netfuse::util::rng::Rng;
+
+const FAR: Duration = Duration::from_secs(3600);
+
+fn lane_config() -> ServerConfig {
+    ServerConfig {
+        strategy: StrategyKind::NetFuse,
+        queue_cap: 1024,
+        max_wait: Duration::ZERO,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the property harness: coalesced vs uncoalesced oracle
+// ---------------------------------------------------------------------------
+
+/// One randomized serving scenario. `steps[k]` is the batch of
+/// `(lane, model, id)` arrivals offered before the k-th dispatch-to-
+/// empty; `fail_at_step[k]` injects that many merged-round failures
+/// (and one solo-lane failure) into the coalesced run at step k.
+#[derive(Debug, Clone)]
+struct Scenario {
+    lanes: usize,
+    lane_m: usize,
+    weights: Vec<u32>,
+    steps: Vec<Vec<(usize, usize, u64)>>,
+    fail_at_step: Vec<usize>,
+}
+
+fn gen_scenario(rng: &mut Rng, size: usize) -> Scenario {
+    let lanes = 2 + rng.usize_below(3); // 2..=4
+    let lane_m = 1 + rng.usize_below(3); // 1..=3
+    let weights = (0..lanes).map(|_| 1 + rng.below(4) as u32).collect();
+    let nsteps = 1 + size.min(6);
+    let mut id = 0u64;
+    let mut steps = Vec::new();
+    let mut fail_at_step = Vec::new();
+    for _ in 0..nsteps {
+        let mut step = Vec::new();
+        for lane in 0..lanes {
+            for model in 0..lane_m {
+                // partial occupancy: ~40% empty, ~40% one queued, ~20%
+                // a depth-2 queue (exercises multi-round steps)
+                let depth = match rng.below(10) {
+                    0..=3 => 0,
+                    4..=7 => 1,
+                    _ => 2,
+                };
+                for _ in 0..depth {
+                    step.push((lane, model, id));
+                    id += 1;
+                }
+            }
+        }
+        steps.push(step);
+        fail_at_step.push(if rng.below(5) == 0 { 1 + rng.usize_below(2) } else { 0 });
+    }
+    Scenario { lanes, lane_m, weights, steps, fail_at_step }
+}
+
+/// Run one scenario. `coalesced` registers all lanes as ONE group on a
+/// group executor sized to their total; `inject` arms the scenario's
+/// failure schedule (merged-round failures on the group executor plus a
+/// solo failure on a rotating lane executor). Returns the per-lane
+/// response streams and the number of successful merged rounds.
+fn run_case(sc: &Scenario, coalesced: bool, inject: bool) -> (Streams, u64) {
+    let lane_execs: Vec<FailingEcho> =
+        (0..sc.lanes).map(|_| FailingEcho::new("family", sc.lane_m, &[4])).collect();
+    let group_exec = FailingEcho::new("family", sc.lanes * sc.lane_m, &[4]);
+    let mut multi: MultiServer<FailingEcho> = MultiServer::new();
+    for (i, e) in lane_execs.iter().enumerate() {
+        multi.add_lane_qos(e, lane_config(), LaneQos::new(sc.weights[i], FAR));
+    }
+    let group = if coalesced {
+        let members: Vec<usize> = (0..sc.lanes).collect();
+        Some(multi.add_coalesce_group(&group_exec, &members).unwrap())
+    } else {
+        None
+    };
+
+    let mut lane_of_id: HashMap<u64, usize> = HashMap::new();
+    let mut streams: Streams = vec![Vec::new(); sc.lanes];
+    let mut buf = Vec::new();
+    for (k, step) in sc.steps.iter().enumerate() {
+        for &(lane, model, id) in step {
+            lane_of_id.insert(id, lane);
+            assert_eq!(
+                multi.offer(lane, seeded_request(id, model, &[4])).unwrap(),
+                Admit::Queued
+            );
+        }
+        if inject && sc.fail_at_step[k] > 0 {
+            group_exec.fail_rounds(sc.fail_at_step[k]);
+            lane_execs[k % sc.lanes].fail_rounds(1);
+        }
+        // dispatch to empty; injected failures requeue and are retried
+        loop {
+            match multi.dispatch_next(&mut buf) {
+                Ok(Some(_)) => {}
+                Ok(None) => break,
+                Err(e) => assert!(
+                    e.to_string().contains("injected round failure"),
+                    "unexpected round error: {e}"
+                ),
+            }
+        }
+        collect_streams(&mut buf, &lane_of_id, &mut streams);
+    }
+    assert_eq!(multi.pending(), 0, "every offered request must be served");
+    (streams, group.map_or(0, |g| multi.group_stats(g).rounds))
+}
+
+/// Satellite: the coalesce property. For random lane counts, weights,
+/// and partial occupancy — with merged-round failures injected — the
+/// coalesced server's responses are byte-identical, per lane and in
+/// FIFO order, to the same requests dispatched lane-by-lane.
+#[test]
+fn coalesced_rounds_match_the_uncoalesced_oracle() {
+    prop::check("coalesce-oracle", 120, gen_scenario, |sc| {
+        let (oracle, _) = run_case(sc, false, false);
+        let (subject, merged_rounds) = run_case(sc, true, true);
+        // scenarios where some step loads >= 2 lanes MUST coalesce at
+        // least once, or the property is vacuously comparing solo runs
+        let concurrent = sc.steps.iter().any(|step| {
+            let mut ls: Vec<usize> = step.iter().map(|&(l, _, _)| l).collect();
+            ls.sort();
+            ls.dedup();
+            ls.len() >= 2
+        });
+        prop_assert!(
+            !concurrent || merged_rounds > 0,
+            "no merged round despite concurrent work on >= 2 lanes"
+        );
+        for lane in 0..sc.lanes {
+            prop_assert!(
+                subject[lane] == oracle[lane],
+                "lane {lane} diverges from the uncoalesced oracle:\n  \
+                 coalesced: {:?}\n  oracle: {:?}",
+                subject[lane].iter().map(|(id, m, _)| (*id, *m)).collect::<Vec<_>>(),
+                oracle[lane].iter().map(|(id, m, _)| (*id, *m)).collect::<Vec<_>>()
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// deterministic positive paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn one_merged_execution_serves_every_member_lane() {
+    let a = echo("bert", 2, Duration::ZERO);
+    let b = echo("bert", 2, Duration::ZERO);
+    let g = echo("bert", 4, Duration::ZERO);
+    let mut multi = MultiServer::new();
+    let la = multi.add_lane(&a, lane_config());
+    let lb = multi.add_lane(&b, lane_config());
+    let group = multi.add_coalesce_group(&g, &[la, lb]).unwrap();
+    assert_eq!(multi.group_members(group), &[la, lb]);
+    assert_eq!(multi.lane_group(la), Some(group));
+
+    for (lane, base) in [(la, 0u64), (lb, 10u64)] {
+        for model in 0..2 {
+            assert_eq!(
+                multi.offer(lane, seeded_request(base + model as u64, model, &[4])).unwrap(),
+                Admit::Queued
+            );
+        }
+    }
+    let mut buf = Vec::new();
+    let d = multi.dispatch_next(&mut buf).unwrap().unwrap();
+    assert_eq!(d.lanes_served, 2, "both lanes must ride ONE merged round");
+    assert_eq!(d.responses, 4);
+    assert!(!d.urgent);
+    assert_eq!(buf.len(), 4);
+    // responses echo their own payloads through the slot remap
+    for r in &buf {
+        let want = seeded_request(r.id, r.model_idx, &[4]);
+        assert_eq!(r.output.data(), want.input.data(), "id {} routed wrong", r.id);
+    }
+    // metrics attribution is per lane
+    let stats = multi.group_stats(group);
+    assert_eq!((stats.rounds, stats.responses), (1, 4));
+    assert_eq!(multi.lane(la).metrics.completed_requests, 2);
+    assert_eq!(multi.lane(lb).metrics.completed_requests, 2);
+    assert_eq!(multi.lane(la).metrics.round_latency.count(), 1);
+    assert_eq!(multi.pending(), 0);
+    assert!(multi.dispatch_next(&mut buf).unwrap().is_none());
+}
+
+#[test]
+fn partial_lane_piggybacks_on_a_ready_member() {
+    // lane B's round is NOT batching-ready (1 of 2 slots, huge
+    // max_wait), but lane A's is: the merged round serves B's front
+    // early — its window would otherwise run as pad
+    let a = echo("bert", 2, Duration::ZERO);
+    let b = echo("bert", 2, Duration::ZERO);
+    let g = echo("bert", 4, Duration::ZERO);
+    let mut multi = MultiServer::new();
+    let la = multi.add_lane(&a, lane_config());
+    let lb = multi.add_lane(&b, ServerConfig { max_wait: FAR, ..lane_config() });
+    multi.add_coalesce_group(&g, &[la, lb]).unwrap();
+
+    for model in 0..2 {
+        multi.offer(la, seeded_request(model as u64, model, &[4])).unwrap();
+    }
+    multi.offer(lb, seeded_request(9, 0, &[4])).unwrap();
+    let mut buf = Vec::new();
+    let d = multi.dispatch_next(&mut buf).unwrap().unwrap();
+    assert_eq!(d.lane, la, "only lane A was round-ready");
+    assert_eq!(d.lanes_served, 2);
+    assert_eq!(d.responses, 3, "B's partial round rides along");
+    assert_eq!(multi.lane(lb).pending(), 0);
+}
+
+#[test]
+fn failed_merged_round_requeues_every_member_in_fifo_order() {
+    let a = FailingEcho::new("bert", 2, &[4]);
+    let b = FailingEcho::new("bert", 2, &[4]);
+    let g = FailingEcho::new("bert", 4, &[4]);
+    let mut multi: MultiServer<FailingEcho> = MultiServer::new();
+    let la = multi.add_lane(&a, lane_config());
+    let lb = multi.add_lane(&b, lane_config());
+    let group = multi.add_coalesce_group(&g, &[la, lb]).unwrap();
+
+    // two requests deep on every model queue of both lanes
+    let mut id = 0u64;
+    for lane in [la, lb] {
+        for model in 0..2 {
+            for _ in 0..2 {
+                multi.offer(lane, seeded_request(id, model, &[4])).unwrap();
+                id += 1;
+            }
+        }
+    }
+    g.fail_rounds(1);
+    let mut buf = Vec::new();
+    let err = multi.dispatch_next(&mut buf).unwrap_err();
+    assert!(err.to_string().contains("injected round failure"), "got: {err}");
+    assert_eq!(multi.pending(), 8, "failed merged round must not drop requests");
+    assert_eq!(multi.group_stats(group).rounds, 0);
+
+    // retry: round 1 returns the ORIGINAL fronts of both lanes, round 2
+    // the tails — per-lane FIFO survived the remap
+    let d = multi.dispatch_next(&mut buf).unwrap().unwrap();
+    assert_eq!((d.lanes_served, d.responses), (2, 4));
+    assert_eq!(common::sorted_ids(&buf), vec![0, 2, 4, 6]);
+    buf.clear();
+    let d = multi.dispatch_next(&mut buf).unwrap().unwrap();
+    assert_eq!((d.lanes_served, d.responses), (2, 4));
+    assert_eq!(common::sorted_ids(&buf), vec![1, 3, 5, 7]);
+    assert_eq!(multi.pending(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// negative paths: what must NOT coalesce
+// ---------------------------------------------------------------------------
+
+/// Satellite: lanes with mismatched request shapes or slot counts must
+/// never coalesce — group formation rejects them.
+#[test]
+fn mismatched_lanes_never_coalesce() {
+    let base = echo("bert", 2, Duration::ZERO);
+    let wide = EchoExecutor::new("bert", 2, &[8], Duration::ZERO);
+    let tall = echo("bert", 3, Duration::ZERO);
+    let other = echo("resnet", 2, Duration::ZERO);
+    let g4 = echo("bert", 4, Duration::ZERO);
+
+    // mismatched request shape
+    let mut multi = MultiServer::new();
+    let l0 = multi.add_lane(&base, lane_config());
+    let l1 = multi.add_lane(&wide, lane_config());
+    let err = multi.add_coalesce_group(&g4, &[l0, l1]).unwrap_err();
+    assert!(err.to_string().contains("cannot coalesce"), "got: {err}");
+    assert!(multi.lane_group(l0).is_none(), "rejected group must not claim lanes");
+
+    // mismatched slot count
+    let mut multi = MultiServer::new();
+    let l0 = multi.add_lane(&base, lane_config());
+    let l1 = multi.add_lane(&tall, lane_config());
+    assert!(multi.add_coalesce_group(&g4, &[l0, l1]).is_err());
+
+    // mismatched family
+    let mut multi = MultiServer::new();
+    let l0 = multi.add_lane(&base, lane_config());
+    let l1 = multi.add_lane(&other, lane_config());
+    assert!(multi.add_coalesce_group(&g4, &[l0, l1]).is_err());
+
+    // a lane cannot join two groups; unknown/duplicate lanes rejected
+    let base2 = echo("bert", 2, Duration::ZERO);
+    let mut multi = MultiServer::new();
+    let l0 = multi.add_lane(&base, lane_config());
+    let l1 = multi.add_lane(&base2, lane_config());
+    assert!(multi.add_coalesce_group(&g4, &[l0, l0]).is_err());
+    assert!(multi.add_coalesce_group(&g4, &[l0, 7]).is_err());
+    multi.add_coalesce_group(&g4, &[l0, l1]).unwrap();
+    assert!(multi.add_coalesce_group(&g4, &[l0, l1]).is_err());
+}
+
+#[test]
+fn auto_coalesce_groups_only_matching_lanes() {
+    let a = echo("bert", 2, Duration::ZERO);
+    let wide = EchoExecutor::new("bert", 2, &[8], Duration::ZERO);
+    let b = echo("bert", 2, Duration::ZERO);
+    let g4 = echo("bert", 4, Duration::ZERO);
+    let mut multi = MultiServer::new();
+    let l0 = multi.add_lane(&a, lane_config());
+    let l1 = multi.add_lane(&wide, lane_config());
+    let l2 = multi.add_lane(&b, lane_config());
+    let group = multi.auto_coalesce(&g4).unwrap().expect("two matching lanes");
+    assert_eq!(multi.group_members(group), &[l0, l2], "mismatched lane skipped");
+    assert!(multi.lane_group(l1).is_none());
+
+    // fewer than two matching lanes -> no group
+    let lonely = echo("gpt", 2, Duration::ZERO);
+    let g_lonely = echo("gpt", 4, Duration::ZERO);
+    let mut multi = MultiServer::new();
+    multi.add_lane(&lonely, lane_config());
+    assert!(multi.auto_coalesce(&g_lonely).unwrap().is_none());
+}
+
+/// Satellite: an SLO-boosted lane dispatches solo rather than waiting
+/// on (or padding out) group fill.
+#[test]
+fn slo_boosted_lane_dispatches_solo() {
+    let tight = echo("bert", 2, Duration::ZERO);
+    let bulk = echo("bert", 2, Duration::ZERO);
+    let g = echo("bert", 4, Duration::ZERO);
+    let mut multi = MultiServer::new();
+    // tight: partial rounds never batching-ready, 40ms SLO
+    let lt = multi.add_lane_qos(
+        &tight,
+        ServerConfig { max_wait: FAR, ..lane_config() },
+        LaneQos::new(1, Duration::from_millis(40)),
+    );
+    let lb = multi.add_lane_qos(&bulk, lane_config(), LaneQos::new(8, FAR));
+    let group = multi.add_coalesce_group(&g, &[lt, lb]).unwrap();
+
+    multi.offer(lt, seeded_request(0, 0, &[4])).unwrap();
+    for model in 0..2 {
+        multi.offer(lb, seeded_request(10 + model as u64, model, &[4])).unwrap();
+    }
+    // cross into the boost window
+    std::thread::sleep(Duration::from_millis(50));
+    let mut buf = Vec::new();
+    let d = multi.dispatch_next(&mut buf).unwrap().unwrap();
+    assert_eq!(d.lane, lt, "SLO-urgent lane preempts");
+    assert!(d.urgent);
+    assert_eq!(d.lanes_served, 1, "urgent pick must NOT wait on group fill");
+    assert_eq!(d.responses, 1);
+    assert_eq!(multi.lane(lb).pending(), 2, "bulk lane untouched by the solo round");
+    assert_eq!(multi.group_stats(group).rounds, 0);
+
+    // with the urgency served, the next pick coalesces... but only one
+    // lane still holds work, so it stays solo on the lane's own executor
+    let d = multi.dispatch_next(&mut buf).unwrap().unwrap();
+    assert_eq!((d.lane, d.lanes_served), (lb, 1));
+}
+
+// ---------------------------------------------------------------------------
+// drain + offer interleaving sanity under a coalescing config
+// ---------------------------------------------------------------------------
+
+#[test]
+fn drain_flushes_grouped_lanes_without_merged_rounds() {
+    // drain is the shutdown path: it bypasses readiness AND coalescing
+    // (solo padded rounds per lane), and must still empty every queue
+    let a = echo("bert", 2, Duration::ZERO);
+    let b = echo("bert", 2, Duration::ZERO);
+    let g = echo("bert", 4, Duration::ZERO);
+    let mut multi = MultiServer::new();
+    let la = multi.add_lane(&a, ServerConfig { max_wait: FAR, ..lane_config() });
+    let lb = multi.add_lane(&b, ServerConfig { max_wait: FAR, ..lane_config() });
+    let group = multi.add_coalesce_group(&g, &[la, lb]).unwrap();
+    multi.offer(la, seeded_request(1, 0, &[4])).unwrap();
+    multi.offer(lb, seeded_request(2, 1, &[4])).unwrap();
+    let mut buf = Vec::new();
+    let n = multi.drain(&mut buf).unwrap();
+    assert_eq!(n, 2);
+    assert_eq!(multi.pending(), 0);
+    assert_eq!(multi.group_stats(group).rounds, 0, "drain dispatches solo");
+}

@@ -1,0 +1,173 @@
+//! Shared scaffolding for the integration-test suites
+//! (`coordinator_tests`, `ingress_tests`, `coalesce_tests`): mock
+//! executor wiring, seeded request builders, and drain-and-sort
+//! helpers that used to be copy-pasted per suite.
+//!
+//! Each test binary compiles this module independently (`mod common;`),
+//! so not every helper is used from every suite — hence the blanket
+//! `dead_code` allow.
+
+#![allow(dead_code)]
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use netfuse::coordinator::mock::EchoExecutor;
+use netfuse::coordinator::multi::MultiServer;
+use netfuse::coordinator::request::{Request, Response};
+use netfuse::coordinator::service::RoundExecutor;
+use netfuse::coordinator::StrategyKind;
+use netfuse::ingress::Frame;
+use netfuse::tensor::Tensor;
+
+/// The standard mock lane: an [`EchoExecutor`] over the suite-wide
+/// `[4]` input shape (bs = 1).
+pub fn echo(name: &str, m: usize, round_cost: Duration) -> EchoExecutor {
+    EchoExecutor::new(name, m, &[4], round_cost)
+}
+
+/// A zero payload matching [`echo`]'s request shape.
+pub fn payload() -> Tensor {
+    Tensor::zeros(&[1, 4])
+}
+
+/// A **seeded** request: the payload is a deterministic function of
+/// `(id, model_idx)`, so two serving paths fed the same ids can be
+/// diffed byte-for-byte (the coalesce oracle harness does exactly
+/// that). `inner` is the per-request shape EXCLUDING the leading bs=1.
+pub fn seeded_request(id: u64, model_idx: usize, inner: &[usize]) -> Request {
+    let mut shape = vec![1usize];
+    shape.extend_from_slice(inner);
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = (0..n)
+        .map(|j| id as f32 * 1000.0 + model_idx as f32 * 10.0 + j as f32)
+        .collect();
+    Request::new(id, model_idx, Tensor::new(shape, data).unwrap())
+}
+
+/// A well-formed `Request` wire frame (ingress suites).
+pub fn request_frame(id: u64, lane: u32, model_idx: u32, shape: &[usize]) -> Frame {
+    let n: usize = shape.iter().product();
+    Frame::Request { id, lane, model_idx, shape: shape.to_vec(), data: vec![0.0; n] }
+}
+
+/// Dispatch until nothing is due, then flush the remainder; every
+/// response is appended to `buf`.
+pub fn drain_all<E: RoundExecutor>(
+    multi: &mut MultiServer<E>,
+    buf: &mut Vec<Response>,
+) -> Result<()> {
+    while multi.dispatch_next(buf)?.is_some() {}
+    multi.drain(buf)?;
+    Ok(())
+}
+
+/// The ids of a response batch in ascending order (round/drain batches
+/// interleave lanes and slots, so assertions compare sorted ids).
+pub fn sorted_ids(responses: &[Response]) -> Vec<u64> {
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort();
+    ids
+}
+
+/// Per-lane FIFO response streams for oracle diffs: one
+/// `(id, model_idx, payload bytes)` entry per response, in the order
+/// the lane produced them. Two serving paths fed identical seeded
+/// requests must produce identical streams, byte for byte.
+pub type Streams = Vec<Vec<(u64, usize, Vec<f32>)>>;
+
+/// Drain a response batch into per-lane streams, attributing each
+/// response through the offer-time `id -> lane` map.
+pub fn collect_streams(
+    buf: &mut Vec<Response>,
+    lane_of_id: &HashMap<u64, usize>,
+    streams: &mut Streams,
+) {
+    for r in buf.drain(..) {
+        let lane = lane_of_id[&r.id];
+        streams[lane].push((r.id, r.model_idx, r.output.data().to_vec()));
+    }
+}
+
+/// Keep every lane's queues topped up and record which lane each of
+/// `rounds` dispatches served — the saturated-drive probe the WDRR
+/// fairness suites use (only scheduling decides the order).
+pub fn dispatch_saturated(
+    multi: &mut MultiServer<EchoExecutor>,
+    rounds: usize,
+    next_id: &mut u64,
+) -> Vec<usize> {
+    let mut order = Vec::with_capacity(rounds);
+    let mut buf = Vec::new();
+    for _ in 0..rounds {
+        for lane in 0..multi.lanes() {
+            for model in 0..multi.lane(lane).fleet().m() {
+                while multi.lane(lane).pending() < 4 {
+                    multi.offer(lane, Request::new(*next_id, model, payload())).unwrap();
+                    *next_id += 1;
+                }
+            }
+        }
+        let d = multi
+            .dispatch_next(&mut buf)
+            .unwrap()
+            .expect("saturated lanes are always dispatchable");
+        buf.clear();
+        order.push(d.lane);
+    }
+    order
+}
+
+/// [`EchoExecutor`] with injectable round failures: the next
+/// [`FailingEcho::fail_rounds`] executions bail before producing
+/// outputs. Shared by the failed-round requeue tests (solo and
+/// coalesced) so the failure path is exercised through the same
+/// executor shape everywhere.
+pub struct FailingEcho {
+    inner: EchoExecutor,
+    fail_next: AtomicUsize,
+}
+
+impl FailingEcho {
+    pub fn new(name: &str, m: usize, input_shape: &[usize]) -> FailingEcho {
+        FailingEcho {
+            inner: EchoExecutor::new(name, m, input_shape, Duration::ZERO),
+            fail_next: AtomicUsize::new(0),
+        }
+    }
+
+    /// Make the next `n` rounds fail (each failure decrements).
+    pub fn fail_rounds(&self, n: usize) {
+        self.fail_next.store(n, Ordering::SeqCst);
+    }
+}
+
+impl RoundExecutor for FailingEcho {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn m(&self) -> usize {
+        self.inner.m()
+    }
+    fn bs(&self) -> usize {
+        self.inner.bs()
+    }
+    fn input_shape(&self) -> &[usize] {
+        self.inner.input_shape()
+    }
+    fn run_round_slots<'a>(
+        &self,
+        strategy: StrategyKind,
+        get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
+        outs: &mut Vec<Option<Tensor>>,
+    ) -> Result<()> {
+        if self.fail_next.load(Ordering::SeqCst) > 0 {
+            self.fail_next.fetch_sub(1, Ordering::SeqCst);
+            anyhow::bail!("injected round failure");
+        }
+        self.inner.run_round_slots(strategy, get, outs)
+    }
+}

@@ -4,7 +4,10 @@
 //!
 //! Tests over real artifacts skip when `artifacts/` is absent; the
 //! batching/requeue/scheduling tests run everywhere by substituting
-//! [`MockFleet`], an artifact-free `RoundExecutor`.
+//! [`MockFleet`], an artifact-free `RoundExecutor`. Shared scaffolding
+//! (payload builders, drain-and-sort helpers) lives in `common/`.
+
+mod common;
 
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -327,9 +330,7 @@ impl RoundExecutor for MockFleet {
     }
 }
 
-fn payload() -> Tensor {
-    Tensor::zeros(&[1, 4])
-}
+use common::{payload, sorted_ids};
 
 #[test]
 fn batching_clock_tracks_oldest_queued_request() {
@@ -392,13 +393,9 @@ fn failed_round_requeues_fifo_and_next_dispatch_returns_them() {
     // FIFO restored per queue: the next successful dispatch returns the
     // ORIGINAL fronts (1 and 3), then the tails (2 and 4)
     let round1 = server.dispatch().unwrap();
-    let mut ids: Vec<u64> = round1.iter().map(|r| r.id).collect();
-    ids.sort();
-    assert_eq!(ids, vec![1, 3], "requeue must restore per-queue FIFO order");
+    assert_eq!(sorted_ids(&round1), vec![1, 3], "requeue must restore per-queue FIFO order");
     let round2 = server.dispatch().unwrap();
-    let mut ids: Vec<u64> = round2.iter().map(|r| r.id).collect();
-    ids.sort();
-    assert_eq!(ids, vec![2, 4]);
+    assert_eq!(sorted_ids(&round2), vec![2, 4]);
     assert_eq!(server.pending(), 0);
 }
 
@@ -482,9 +479,10 @@ fn multi_server_fair_dispatch_alternates_ready_lanes() {
     }
     let mut responses = Vec::new();
     let mut order = Vec::new();
-    while let Some((lane, n)) = multi.dispatch_next(&mut responses).unwrap() {
-        assert_eq!(n, 2);
-        order.push(lane);
+    while let Some(d) = multi.dispatch_next(&mut responses).unwrap() {
+        assert_eq!(d.responses, 2);
+        assert_eq!(d.lanes_served, 1, "no coalesce group registered");
+        order.push(d.lane);
     }
     assert_eq!(order, vec![0, 1, 0, 1, 0, 1], "dispatch must alternate ready lanes");
     assert_eq!(multi.pending(), 0);

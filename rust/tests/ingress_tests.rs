@@ -5,35 +5,22 @@
 //! artifact-free: lanes are mock `RoundExecutor`s, so the suite runs in
 //! offline CI.
 
+mod common;
+
 use std::collections::BTreeMap;
 use std::net::TcpListener;
 use std::time::Duration;
 
-use netfuse::coordinator::mock::EchoExecutor;
+use common::{dispatch_saturated, echo, payload, request_frame};
 use netfuse::coordinator::multi::MultiServer;
 use netfuse::coordinator::server::{Admit, Server, ServerConfig};
-use netfuse::coordinator::service::RoundExecutor;
 use netfuse::coordinator::{Request, StrategyKind};
 use netfuse::ingress::{
     run_dispatch, serve_conn, ChanTransport, Envelope, Frame, FrameQueue, IngressBridge, LaneQos,
     RejectCode, TcpTransport, Transport, TransportRx, TransportTx,
 };
 use netfuse::prop_assert;
-use netfuse::tensor::Tensor;
 use netfuse::util::prop;
-
-fn echo(name: &str, m: usize, round_cost: Duration) -> EchoExecutor {
-    EchoExecutor::new(name, m, &[4], round_cost)
-}
-
-fn payload() -> Tensor {
-    Tensor::zeros(&[1, 4])
-}
-
-fn request_frame(id: u64, lane: u32, model_idx: u32, shape: &[usize]) -> Frame {
-    let n: usize = shape.iter().product();
-    Frame::Request { id, lane, model_idx, shape: shape.to_vec(), data: vec![0.0; n] }
-}
 
 // ---------------------------------------------------------------------------
 // transports
@@ -296,33 +283,6 @@ fn server_offer_clamps_non_monotone_arrival_stamps() {
 // QoS: WDRR fairness + SLO boost (satellite test coverage)
 // ---------------------------------------------------------------------------
 
-/// Keep both lanes' queues topped up and count dispatched rounds.
-fn dispatch_saturated(
-    multi: &mut MultiServer<EchoExecutor>,
-    rounds: usize,
-    next_id: &mut u64,
-) -> Vec<usize> {
-    let mut order = Vec::with_capacity(rounds);
-    let mut buf = Vec::new();
-    for _ in 0..rounds {
-        for lane in 0..multi.lanes() {
-            for model in 0..multi.lane(lane).fleet().m() {
-                while multi.lane(lane).pending() < 4 {
-                    multi.offer(lane, Request::new(*next_id, model, payload())).unwrap();
-                    *next_id += 1;
-                }
-            }
-        }
-        let (lane, _) = multi
-            .dispatch_next(&mut buf)
-            .unwrap()
-            .expect("saturated lanes are always dispatchable");
-        buf.clear();
-        order.push(lane);
-    }
-    order
-}
-
 #[test]
 fn wdrr_three_to_one_ratio_converges() {
     let a = echo("heavy", 2, Duration::ZERO);
@@ -403,9 +363,9 @@ fn equal_weights_serve_sparse_lane_promptly() {
         }
     }
     multi.offer(1, Request::new(id, 0, payload())).unwrap();
-    let first = multi.dispatch_next(&mut buf).unwrap().unwrap().0;
+    let first = multi.dispatch_next(&mut buf).unwrap().unwrap().lane;
     buf.clear();
-    let second = multi.dispatch_next(&mut buf).unwrap().unwrap().0;
+    let second = multi.dispatch_next(&mut buf).unwrap().unwrap().lane;
     assert!(
         first == 1 || second == 1,
         "sparse lane must be served within two dispatches (got {first}, {second})"
@@ -444,20 +404,66 @@ fn slo_boost_dispatches_padded_round_before_deadline() {
     }
     // before the deadline window, dispatches go to the bulk lane
     for _ in 0..3 {
-        let (lane, _) = multi.dispatch_next(&mut buf).unwrap().unwrap();
-        assert_eq!(lane, slow_lane, "no SLO pressure yet");
+        let d = multi.dispatch_next(&mut buf).unwrap().unwrap();
+        assert_eq!(d.lane, slow_lane, "no SLO pressure yet");
         buf.clear();
     }
     // cross into the boost window (50ms SLO - 1ms margin)
     std::thread::sleep(Duration::from_millis(60));
-    let (lane, n) = multi.dispatch_next(&mut buf).unwrap().unwrap();
-    assert_eq!(lane, tight_lane, "SLO-urgent lane must preempt WDRR");
-    assert_eq!(n, 1, "the padded round serves the one queued request");
+    let d = multi.dispatch_next(&mut buf).unwrap().unwrap();
+    assert_eq!(d.lane, tight_lane, "SLO-urgent lane must preempt WDRR");
+    assert!(d.urgent, "the pick must be SLO-boosted");
+    assert_eq!(d.responses, 1, "the padded round serves the one queued request");
     assert_eq!(buf[0].id, 900);
     assert!(buf[0].latency >= 0.05, "it really waited into the boost window");
     assert_eq!(
         multi.lane(tight_lane).metrics.slo_violations,
         1,
         "a 50ms SLO served at ~60ms is one violation"
+    );
+}
+
+/// Satellite (bugfix): the SLO boost margin ε used to be fixed for all
+/// lanes at `MultiServer` construction; it is now plumbed per lane
+/// through every `add_lane_qos` path, and the deadline math
+/// (`next_due_in`) must honor the per-lane value — a widened margin
+/// brings the lane's due time FORWARD so the dispatch thread wakes in
+/// time to pad early, and a zero margin never pads early (see
+/// `qos::tests::zero_boost_margin_never_pads_early` for the scheduler-
+/// level regression).
+#[test]
+fn per_lane_boost_margin_drives_next_due_in() {
+    let wide = echo("wide", 2, Duration::ZERO);
+    let zero = echo("zero", 2, Duration::ZERO);
+    let mut multi = MultiServer::new();
+    let slo = Duration::from_millis(100);
+    let cfg = ServerConfig {
+        strategy: StrategyKind::Sequential,
+        max_wait: Duration::from_secs(3600),
+        ..Default::default()
+    };
+    let wide_lane = multi.add_lane_qos(
+        &wide,
+        cfg.clone(),
+        LaneQos::new(1, slo).with_boost_margin(Duration::from_millis(60)),
+    );
+    multi.add_lane_qos(&zero, cfg, LaneQos::new(1, slo).with_boost_margin(Duration::ZERO));
+    assert_eq!(multi.qos(wide_lane).boost_margin, Some(Duration::from_millis(60)));
+
+    // one partial round on each lane: neither is batching-ready, so the
+    // only clocks are the SLO boosts
+    multi.offer(0, Request::new(0, 0, payload())).unwrap();
+    multi.offer(1, Request::new(1, 0, payload())).unwrap();
+    let due = multi.next_due_in().expect("queued work implies a due time");
+    // the 60ms-margin lane is due at ~slo - 60ms = 40ms; the zero-margin
+    // lane not before ~100ms. A scheduler still using one global 1ms ε
+    // would report ~99ms here and sleep through the boost window.
+    assert!(
+        due <= Duration::from_millis(45),
+        "next_due_in {due:?} ignores the widened per-lane margin"
+    );
+    assert!(
+        due >= Duration::from_millis(10),
+        "next_due_in {due:?} is earlier than any lane's boost window"
     );
 }
