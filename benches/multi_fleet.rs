@@ -1,10 +1,10 @@
-//! Bench: cross-round overlap (double-buffered `ArenaPair`) and
+//! Bench: cross-round overlap (double-buffered `ArenaRing`) and
 //! multi-fleet serving on one shared `WorkerPool`.
 //!
 //! Part 1 — overlap. PR 1's NETFUSE path held ONE arena lock across
 //! pack + stage + execute, so two rounds could never overlap even from
-//! different threads. The `ArenaPair` reserves one half per round; the
-//! other half stays free, so thread B packs + stages round N+1 while
+//! different threads. The `ArenaRing::pair` form reserves one slot per
+//! round; the other slot stays free, so thread B packs + stages round N+1 while
 //! round N is still executing. Device execution is modeled as a
 //! fixed-latency blocking call that reads the staged host buffer at
 //! execute time (the deferred-H2D contract of PJRT host buffers), which
@@ -30,7 +30,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use netfuse::coordinator::arena::{ArenaPair, Layout, RoundArena};
+use netfuse::coordinator::arena::{ArenaRing, Layout, RoundArena};
 use netfuse::coordinator::multi::MultiServer;
 use netfuse::coordinator::pool::WorkerPool;
 use netfuse::coordinator::server::{Admit, ServerConfig};
@@ -50,7 +50,7 @@ fn num(v: f64) -> Json {
 }
 
 // ---------------------------------------------------------------------------
-// part 1: single-buffer lock-spanning rounds vs double-buffered ArenaPair
+// part 1: single-buffer lock-spanning rounds vs double-buffered ArenaRing
 // ---------------------------------------------------------------------------
 
 /// Stand-in for `Bound::stage`/`run_staged` against a device whose
@@ -89,7 +89,7 @@ impl FakeDevice {
 /// the double-buffered pair.
 enum Buffers {
     Single(Mutex<RoundArena>),
-    Pair(ArenaPair),
+    Pair(ArenaRing),
 }
 
 /// `threads` workers each driving `rounds` NETFUSE-shaped rounds.
@@ -102,7 +102,7 @@ fn overlap_throughput(
 ) -> Result<f64> {
     let device = FakeDevice::new(DEVICE_LATENCY);
     let buffers = if double_buffered {
-        Buffers::Pair(ArenaPair::new(Layout::Channel, M, &REQUEST_SHAPE)?)
+        Buffers::Pair(ArenaRing::pair(Layout::Channel, M, &REQUEST_SHAPE)?)
     } else {
         Buffers::Single(Mutex::new(RoundArena::new(Layout::Channel, M, &REQUEST_SHAPE)?))
     };

@@ -1,0 +1,450 @@
+//! Bench: N-thread dispatch over an `ArenaRing` — `ParallelDispatcher`
+//! vs the single-thread dispatch loop.
+//!
+//! Two parts, all offline. The lanes are `RingEcho` executors: every
+//! round reserves a slot of a SHARED `ArenaRing`, packs its payloads
+//! into the slot's megabatch (`RoundArena::pack_with`), holds the
+//! reservation across the modeled device time (the deferred-H2D
+//! contract), and echoes outputs back *out of the staged buffer* — so
+//! ring reservation and staging integrity are in-path for every gate,
+//! across all dispatch threads at once.
+//!
+//! 1. **Served throughput** — 4 coalesce groups (8 lanes) kept fully
+//!    loaded through the real ingress path (bridge -> router -> per-
+//!    group dispatch threads). The single-thread baseline serializes
+//!    the four groups' rounds on one dispatch loop; the parallel run
+//!    overlaps them, one thread per group. Gate (every mode, sleep-
+//!    dominated so CI-safe): served throughput >= 1.5x the baseline
+//!    (it is ~4x by construction at 4 groups).
+//! 2. **Routing oracle** — a seeded arrival sequence over a mixed
+//!    topology (two coalesce groups + two standalone lanes) served by
+//!    `run_dispatch` (sequential) and `run_dispatch_parallel`, with
+//!    zero-cost executors; the per-(lane, model) FIFO response streams
+//!    are diffed byte-for-byte. Gate (every mode): **zero diffs** —
+//!    partitioned dispatch may never misroute, reorder a model queue,
+//!    or corrupt a payload, and every arrival gets exactly one outcome
+//!    frame.
+//!
+//! Results go to `BENCH_parallel_dispatch.json`.
+
+use std::collections::{BTreeMap, HashMap};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use std::sync::Arc;
+
+use netfuse::coordinator::arena::{ArenaRing, Layout};
+use netfuse::coordinator::multi::{GroupSpec, LaneSpec, MultiServer, ParallelDispatcher};
+use netfuse::coordinator::server::ServerConfig;
+use netfuse::coordinator::service::RoundExecutor;
+use netfuse::coordinator::StrategyKind;
+use netfuse::ingress::{
+    run_dispatch, run_dispatch_parallel, Envelope, Frame, FrameQueue, IngressBridge,
+    IngressStats, LaneQos,
+};
+use netfuse::tensor::Tensor;
+use netfuse::util::json::Json;
+use netfuse::util::rng::Rng;
+
+/// The shared test scaffolding (seeded request builder) — the oracle
+/// diff must use the same payload-seeding scheme as the test suites.
+#[path = "../rust/tests/common/mod.rs"]
+mod common;
+
+/// models per lane (group executors run 2 * M slots)
+const M: usize = 2;
+const INPUT_SHAPE: [usize; 2] = [1, 4];
+/// modeled device time per round — solo or merged, ONE launch. The
+/// throughput part is sleep-dominated, so the >= 1.5x gate measures
+/// dispatch-thread overlap, not host jitter.
+const ROUND_COST: Duration = Duration::from_millis(1);
+const FAR: Duration = Duration::from_secs(3600);
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn lane_config() -> ServerConfig {
+    ServerConfig {
+        strategy: StrategyKind::NetFuse,
+        queue_cap: 8192,
+        max_wait: Duration::ZERO,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// topology builders: `groups` coalesce groups of 2 lanes + `solos`
+// standalone lanes, all same shape (groups use per-group families)
+// ---------------------------------------------------------------------------
+
+/// Echo executor that stages every round through a shared [`ArenaRing`]:
+/// reserve a slot, pack the occupied payloads into its megabatch, hold
+/// the reservation across the modeled device time (PJRT's deferred-H2D
+/// contract), then read each occupied window back OUT of the staged
+/// buffer as the round's outputs. Concurrent rounds from different
+/// dispatch threads therefore contend for — and must never corrupt —
+/// the same ring the way real `Fleet`s do.
+struct RingEcho {
+    name: String,
+    m: usize,
+    input_shape: Vec<usize>,
+    ring: Arc<ArenaRing>,
+    round_cost: Duration,
+}
+
+impl RingEcho {
+    fn new(name: &str, ring: Arc<ArenaRing>, round_cost: Duration) -> RingEcho {
+        RingEcho {
+            name: name.to_string(),
+            m: ring.m(),
+            input_shape: ring.request_shape()[1..].to_vec(),
+            ring,
+            round_cost,
+        }
+    }
+}
+
+impl RoundExecutor for RingEcho {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn m(&self) -> usize {
+        self.m
+    }
+    fn bs(&self) -> usize {
+        1
+    }
+    fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+    fn run_round_slots<'a>(
+        &self,
+        strategy: StrategyKind,
+        get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
+        outs: &mut Vec<Option<Tensor>>,
+    ) -> Result<()> {
+        strategy.validate()?;
+        // pack + "execute" + unpack, all under ONE ring reservation
+        let mut slot = self.ring.acquire();
+        slot.pack_with(get)?;
+        if !self.round_cost.is_zero() {
+            std::thread::sleep(self.round_cost);
+        }
+        let inner: usize = self.input_shape.iter().product();
+        outs.clear();
+        for i in 0..self.m {
+            outs.push(match get(i) {
+                Some(_) => {
+                    let window = &slot.merged_data()[i * inner..(i + 1) * inner];
+                    let mut shape = vec![1usize];
+                    shape.extend_from_slice(&self.input_shape);
+                    Some(Tensor::new(shape, window.to_vec())?)
+                }
+                None => None,
+            });
+        }
+        Ok(())
+    }
+}
+
+struct Execs {
+    lanes: Vec<RingEcho>,
+    group_execs: Vec<RingEcho>,
+    groups: usize,
+}
+
+impl Execs {
+    fn new(groups: usize, solos: usize, cost: Duration) -> Execs {
+        // ONE ring per megabatch shape, shared across every executor of
+        // that shape — and therefore across every dispatch thread. The
+        // depth matches the dispatch-thread count so full parallelism
+        // never blocks on a staging buffer.
+        let depth = (groups + solos).max(2);
+        let lane_ring = Arc::new(
+            ArenaRing::new(Layout::Batch, M, &INPUT_SHAPE, depth).expect("lane ring"),
+        );
+        let group_ring = Arc::new(
+            ArenaRing::new(Layout::Batch, 2 * M, &INPUT_SHAPE, depth).expect("group ring"),
+        );
+        let mut lanes = Vec::new();
+        let mut group_execs = Vec::new();
+        for g in 0..groups {
+            let family = format!("fam{g}");
+            lanes.push(RingEcho::new(&family, lane_ring.clone(), cost));
+            lanes.push(RingEcho::new(&family, lane_ring.clone(), cost));
+            group_execs.push(RingEcho::new(&family, group_ring.clone(), cost));
+        }
+        for s in 0..solos {
+            lanes.push(RingEcho::new(&format!("solo{s}"), lane_ring.clone(), cost));
+        }
+        Execs { lanes, group_execs, groups }
+    }
+
+    fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    fn dispatcher(&self) -> Result<ParallelDispatcher<'_, RingEcho>> {
+        let lanes = self
+            .lanes
+            .iter()
+            .map(|x| LaneSpec::new(x, lane_config(), LaneQos::new(1, FAR)))
+            .collect();
+        let groups = (0..self.groups)
+            .map(|g| GroupSpec::new(&self.group_execs[g], &[2 * g, 2 * g + 1]))
+            .collect();
+        ParallelDispatcher::new(lanes, groups)
+    }
+
+    fn single(&self) -> Result<MultiServer<'_, RingEcho>> {
+        let mut multi = MultiServer::new();
+        for x in &self.lanes {
+            multi.add_lane_qos(x, lane_config(), LaneQos::new(1, FAR));
+        }
+        for g in 0..self.groups {
+            multi.add_coalesce_group(&self.group_execs[g], &[2 * g, 2 * g + 1])?;
+        }
+        Ok(multi)
+    }
+}
+
+/// Pre-load `arrivals` into a bridge (sized to hold them all) with one
+/// reply queue per lane, close it, and return both.
+fn load_bridge(
+    arrivals: &[(usize, usize, u64)],
+    lanes: usize,
+) -> (IngressBridge, Vec<FrameQueue>) {
+    let bridge = IngressBridge::new(arrivals.len().max(1));
+    let replies: Vec<FrameQueue> = (0..lanes).map(|_| FrameQueue::new()).collect();
+    for &(lane, model, id) in arrivals {
+        let env = Envelope {
+            lane,
+            client_id: id,
+            req: common::seeded_request(id, model, &INPUT_SHAPE[1..]),
+            reply: replies[lane].clone(),
+        };
+        assert!(bridge.submit(env).is_ok(), "bridge is sized for the whole workload");
+    }
+    bridge.close();
+    (bridge, replies)
+}
+
+fn count_responses(replies: &[FrameQueue]) -> (u64, u64) {
+    let (mut responses, mut rejects) = (0u64, 0u64);
+    for q in replies {
+        q.close();
+        while let Some(f) = q.try_pop() {
+            match f {
+                Frame::Response { .. } => responses += 1,
+                Frame::Reject { .. } => rejects += 1,
+                _ => {}
+            }
+        }
+    }
+    (responses, rejects)
+}
+
+// ---------------------------------------------------------------------------
+// part 1: served throughput, 4 groups, parallel vs single-thread
+// ---------------------------------------------------------------------------
+
+struct ThroughputRun {
+    served: u64,
+    elapsed: f64,
+    rps: f64,
+    stats: IngressStats,
+}
+
+fn throughput(execs: &Execs, rounds: usize, parallel: bool) -> Result<ThroughputRun> {
+    // `rounds` full rounds of work per lane, pre-loaded so both runs
+    // measure pure dispatch (producers out of the picture)
+    let mut arrivals = Vec::new();
+    let mut id = 0u64;
+    for _ in 0..rounds {
+        for lane in 0..execs.lane_count() {
+            for model in 0..M {
+                arrivals.push((lane, model, id));
+                id += 1;
+            }
+        }
+    }
+    let (bridge, replies) = load_bridge(&arrivals, execs.lane_count());
+
+    let t0 = Instant::now();
+    let stats = if parallel {
+        let mut d = execs.dispatcher()?;
+        run_dispatch_parallel(&mut d, &bridge, arrivals.len())?
+    } else {
+        let mut multi = execs.single()?;
+        run_dispatch(&mut multi, &bridge)?
+    };
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let (responses, rejects) = count_responses(&replies);
+    anyhow::ensure!(rejects == 0, "saturated drive must not shed load ({rejects} rejects)");
+    anyhow::ensure!(
+        responses == arrivals.len() as u64,
+        "every request must be served ({responses} of {})",
+        arrivals.len()
+    );
+    Ok(ThroughputRun {
+        served: responses,
+        elapsed,
+        rps: responses as f64 / elapsed,
+        stats,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// part 2: routing oracle — parallel vs sequential, byte-exact
+// ---------------------------------------------------------------------------
+
+type ModelStreams = HashMap<(usize, u32), Vec<(u64, Vec<f32>)>>;
+
+fn oracle_run(
+    execs: &Execs,
+    arrivals: &[(usize, usize, u64)],
+    parallel: bool,
+) -> Result<(ModelStreams, IngressStats)> {
+    let (bridge, replies) = load_bridge(arrivals, execs.lane_count());
+    let stats = if parallel {
+        let mut d = execs.dispatcher()?;
+        run_dispatch_parallel(&mut d, &bridge, arrivals.len().max(1))?
+    } else {
+        let mut multi = execs.single()?;
+        run_dispatch(&mut multi, &bridge)?
+    };
+    let mut streams: ModelStreams = HashMap::new();
+    for (lane, q) in replies.iter().enumerate() {
+        q.close();
+        while let Some(f) = q.try_pop() {
+            if let Frame::Response { id, model_idx, data, .. } = f {
+                streams.entry((lane, model_idx)).or_default().push((id, data));
+            }
+        }
+    }
+    Ok((streams, stats))
+}
+
+fn routing_diffs(execs: &Execs, arrivals: usize, seed: u64) -> Result<(usize, u64, u64)> {
+    let mut rng = Rng::new(seed);
+    let seq: Vec<(usize, usize, u64)> = (0..arrivals)
+        .map(|id| {
+            (rng.usize_below(execs.lane_count()), rng.usize_below(M), id as u64)
+        })
+        .collect();
+    let (want, seq_stats) = oracle_run(execs, &seq, false)?;
+    let (got, par_stats) = oracle_run(execs, &seq, true)?;
+    anyhow::ensure!(
+        seq_stats.responses == arrivals as u64 && par_stats.responses == arrivals as u64,
+        "oracle runs must answer every arrival"
+    );
+    anyhow::ensure!(par_stats.coalesced_rounds > 0, "oracle load must merge rounds");
+
+    let mut diffs = 0usize;
+    let mut keys: Vec<_> = want.keys().chain(got.keys()).collect();
+    keys.sort();
+    keys.dedup();
+    for key in keys {
+        match (want.get(key), got.get(key)) {
+            (Some(w), Some(g)) if w == g => {}
+            (Some(w), Some(g)) => {
+                diffs += w.len().max(g.len());
+            }
+            (Some(w), None) | (None, Some(w)) => diffs += w.len(),
+            (None, None) => unreachable!(),
+        }
+    }
+    Ok((diffs, seq_stats.coalesced_rounds, par_stats.coalesced_rounds))
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!(
+        "# parallel_dispatch: N dispatch threads over lane groups vs one{}\n",
+        if smoke { " (SMOKE)" } else { "" }
+    );
+
+    // --- part 1: served throughput at 4 groups -------------------------
+    let groups = 4usize;
+    let rounds = if smoke { 50 } else { 250 };
+    let sat = Execs::new(groups, 0, ROUND_COST);
+    let single = throughput(&sat, rounds, false)?;
+    let parallel = throughput(&sat, rounds, true)?;
+    let ratio = parallel.rps / single.rps.max(1e-9);
+    for (name, run) in [("single-thread", &single), ("parallel x4 ", &parallel)] {
+        println!(
+            "{name}: {} served in {:.3}s ({:.0} req/s, {} rounds, {} merged)",
+            run.served, run.elapsed, run.rps, run.stats.rounds, run.stats.coalesced_rounds
+        );
+    }
+    println!("served-throughput ratio: {ratio:.2}x\n");
+
+    // --- part 2: routing oracle ----------------------------------------
+    let mixed = Execs::new(2, 2, Duration::ZERO);
+    let oracle_arrivals = if smoke { 600 } else { 6000 };
+    let (diffs, seq_merged, par_merged) =
+        routing_diffs(&mixed, oracle_arrivals, 0x9A8A11E1)?;
+    println!(
+        "oracle: {oracle_arrivals} seeded arrivals over {} lanes ({} groups + 2 solo), \
+         {seq_merged}/{par_merged} merged rounds (seq/par), {diffs} routing diffs (must be 0)",
+        mixed.lane_count(),
+        2,
+    );
+
+    // --- BENCH_parallel_dispatch.json -----------------------------------
+    let mut sat_obj = BTreeMap::new();
+    sat_obj.insert("groups".to_string(), num(groups as f64));
+    sat_obj.insert("rounds_per_lane".to_string(), num(rounds as f64));
+    sat_obj.insert("round_cost_s".to_string(), num(ROUND_COST.as_secs_f64()));
+    for (name, run) in [("single", &single), ("parallel", &parallel)] {
+        let mut r = BTreeMap::new();
+        r.insert("served".to_string(), num(run.served as f64));
+        r.insert("elapsed_s".to_string(), num(run.elapsed));
+        r.insert("served_rps".to_string(), num(run.rps));
+        r.insert("rounds".to_string(), num(run.stats.rounds as f64));
+        r.insert(
+            "coalesced_rounds".to_string(),
+            num(run.stats.coalesced_rounds as f64),
+        );
+        sat_obj.insert(name.to_string(), Json::Obj(r));
+    }
+    sat_obj.insert("ratio".to_string(), num(ratio));
+
+    let mut oracle_obj = BTreeMap::new();
+    oracle_obj.insert("arrivals".to_string(), num(oracle_arrivals as f64));
+    oracle_obj.insert("merged_rounds_seq".to_string(), num(seq_merged as f64));
+    oracle_obj.insert("merged_rounds_par".to_string(), num(par_merged as f64));
+    oracle_obj.insert("routing_diffs".to_string(), num(diffs as f64));
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("parallel_dispatch".to_string()));
+    root.insert("smoke".to_string(), Json::Bool(smoke));
+    root.insert("models_per_lane".to_string(), num(M as f64));
+    root.insert("saturated".to_string(), Json::Obj(sat_obj));
+    root.insert("oracle".to_string(), Json::Obj(oracle_obj));
+
+    let path = "BENCH_parallel_dispatch.json";
+    std::fs::write(path, Json::Obj(root).dump())?;
+    println!("report written to {path}");
+
+    // correctness gates run in every mode (written AFTER the report so a
+    // failing run still leaves its numbers behind)
+    assert_eq!(
+        diffs, 0,
+        "parallel routing diverged from the sequential oracle"
+    );
+    assert!(
+        parallel.stats.coalesced_rounds > 0,
+        "grouped lanes must dispatch merged rounds in the parallel run"
+    );
+    // the throughput gate is sleep-dominated (both runs burn the same
+    // modeled device time; only dispatch-thread overlap differs), so it
+    // holds in smoke mode too
+    assert!(
+        ratio >= 1.5,
+        "4 dispatch groups must serve >= 1.5x the single-thread loop, got {ratio:.2}x"
+    );
+    Ok(())
+}

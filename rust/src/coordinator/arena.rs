@@ -1,5 +1,5 @@
 //! `RoundArena`: the reusable megabatch staging buffer of the round
-//! pipeline, and [`ArenaPair`], its double-buffered form.
+//! pipeline, and [`ArenaRing`], its multi-buffered (depth >= 2) form.
 //!
 //! The paper's merged program amortizes per-model overhead on the
 //! device; the arena does the same for the host side of every round.
@@ -16,13 +16,17 @@
 //! the pad copy entirely (the first step of letting padded slots skip
 //! upload bandwidth).
 //!
-//! [`ArenaPair`] holds two independently locked arenas so that one
-//! thread can pack round N+1 while round N's staged megabatch is still
-//! in flight on the device. A round acquires one half and holds it for
-//! pack + stage + execute (PJRT host-buffer semantics may defer the H2D
-//! copy, so the half must stay reserved until execution completes); the
-//! *other* half stays free, which is what makes cross-thread round
-//! overlap possible — `benches/multi_fleet.rs` measures the win.
+//! [`ArenaRing`] holds `depth` independently locked arenas so that up
+//! to `depth` rounds overlap: one thread packs round N+k while round
+//! N's staged megabatch is still in flight on the device. A round
+//! acquires one ring slot and holds it for pack + stage + execute
+//! (PJRT host-buffer semantics may defer the H2D copy, so the slot
+//! must stay reserved until execution completes); the remaining slots
+//! stay free, which is what makes cross-thread round overlap possible —
+//! `benches/multi_fleet.rs` measures the two-deep win and
+//! `benches/parallel_dispatch.rs` drives N dispatch threads over one
+//! shared ring. [`ArenaRing::pair`] is the depth-2 form that used to be
+//! a dedicated `ArenaPair` type.
 //!
 //! [`SlotMap`] extends the arena to *cross-fleet* rounds
 //! (`coordinator::coalesce`): several serving lanes of the same model
@@ -40,7 +44,8 @@
 //! instance count) through them is a ROADMAP follow-up.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -334,55 +339,183 @@ impl RoundArena {
     }
 }
 
-/// Double-buffered [`RoundArena`]: two identically configured halves,
-/// each behind its own lock.
+/// Multi-buffered [`RoundArena`]: `depth` identically configured ring
+/// slots, each behind its own lock, each independently reservable.
 ///
-/// One NETFUSE round acquires a half and holds it for the whole
+/// One NETFUSE round acquires a slot and holds it for the whole
 /// pack → stage → execute span (PJRT host-buffer semantics may defer
 /// the H2D copy, so the staged megabatch must not be repacked until the
-/// round completes — the `MutexGuard` *is* that reservation, and
+/// round completes — the [`RingSlot`] guard *is* that reservation, and
 /// `Bound::stage`'s borrowed [`StagedInput`] ties the staged buffer's
-/// lifetime to the guard). The other half stays free, so a second
-/// thread packs round N+1 while round N is still in flight; with the
-/// single-arena lock of PR 1 the two rounds serialized end to end.
+/// lifetime to the guard). The other slots stay free, so up to `depth`
+/// rounds — N dispatch threads' worth — pack/stage/execute while round
+/// N is still in flight; with the single-arena lock of PR 1 all rounds
+/// serialized end to end, and with the fixed pair of PR 2 overlap
+/// stopped at two.
 ///
 /// [`StagedInput`]: crate::runtime::StagedInput
-pub struct ArenaPair {
-    halves: [Mutex<RoundArena>; 2],
-    /// round-robin hint so concurrent rounds start on different halves
+pub struct ArenaRing {
+    slots: Vec<Mutex<RoundArena>>,
+    /// round-robin hint so concurrent rounds start on different slots
     next: AtomicUsize,
+    /// rounds currently holding a reservation (observability: a gauge
+    /// at `depth` means the ring is the bottleneck, not the device)
+    in_flight: AtomicUsize,
+    /// oversubscribed acquirers park here until ANY reservation drops —
+    /// not on one arbitrary slot's mutex, which could be the longest-
+    /// lived in-flight round while a neighboring slot frees first
+    released: Condvar,
+    release_lock: Mutex<()>,
+    /// configuration cached outside the locks so load-time cross-checks
+    /// and sharing validation never contend with in-flight rounds
+    layout: Layout,
+    m: usize,
+    request_shape: Vec<usize>,
+    merged_shape: Vec<usize>,
 }
 
-impl ArenaPair {
-    /// Allocate both halves for `m` instances with per-request shape
-    /// `request_shape` (`[bs, ...]`).
-    pub fn new(layout: Layout, m: usize, request_shape: &[usize]) -> Result<ArenaPair> {
-        Ok(ArenaPair {
-            halves: [
-                Mutex::new(RoundArena::new(layout, m, request_shape)?),
-                Mutex::new(RoundArena::new(layout, m, request_shape)?),
-            ],
+/// One reserved ring slot: derefs to its [`RoundArena`] and releases
+/// the reservation (and the in-flight gauge) on drop.
+pub struct RingSlot<'a> {
+    guard: MutexGuard<'a, RoundArena>,
+    index: usize,
+    ring: &'a ArenaRing,
+}
+
+impl RingSlot<'_> {
+    /// Which ring slot this reservation holds (stable for its lifetime).
+    pub fn index(&self) -> usize {
+        self.index
+    }
+}
+
+impl std::ops::Deref for RingSlot<'_> {
+    type Target = RoundArena;
+    fn deref(&self) -> &RoundArena {
+        &self.guard
+    }
+}
+
+impl std::ops::DerefMut for RingSlot<'_> {
+    fn deref_mut(&mut self) -> &mut RoundArena {
+        &mut self.guard
+    }
+}
+
+impl Drop for RingSlot<'_> {
+    fn drop(&mut self) {
+        self.ring.in_flight.fetch_sub(1, Ordering::Relaxed);
+        // pair the notify with the lock so an acquirer that failed its
+        // sweep and is about to park cannot miss this release
+        let _g = self.ring.release_lock.lock().unwrap();
+        self.ring.released.notify_one();
+    }
+}
+
+impl ArenaRing {
+    /// Allocate `depth` ring slots for `m` instances with per-request
+    /// shape `request_shape` (`[bs, ...]`). `depth >= 2` — a one-deep
+    /// "ring" is the PR 1 lock-spanning arena, which serializes rounds
+    /// end to end and defeats the type's purpose.
+    pub fn new(
+        layout: Layout,
+        m: usize,
+        request_shape: &[usize],
+        depth: usize,
+    ) -> Result<ArenaRing> {
+        if depth < 2 {
+            bail!("arena ring needs depth >= 2, got {depth} (depth 1 cannot overlap rounds)");
+        }
+        let slots = (0..depth)
+            .map(|_| RoundArena::new(layout, m, request_shape).map(Mutex::new))
+            .collect::<Result<Vec<_>>>()?;
+        let merged_shape = slots[0].lock().unwrap().merged_shape().to_vec();
+        Ok(ArenaRing {
+            slots,
             next: AtomicUsize::new(0),
+            in_flight: AtomicUsize::new(0),
+            released: Condvar::new(),
+            release_lock: Mutex::new(()),
+            layout,
+            m,
+            request_shape: request_shape.to_vec(),
+            merged_shape,
         })
     }
 
-    /// Acquire a free half for one round, preferring the one least
-    /// recently handed out. Blocks only when *both* halves have rounds
-    /// in flight (i.e. more than two concurrent rounds).
-    pub fn acquire(&self) -> MutexGuard<'_, RoundArena> {
-        let start = self.next.fetch_add(1, Ordering::Relaxed);
-        for k in 0..2 {
-            if let Ok(g) = self.halves[(start + k) % 2].try_lock() {
-                return g;
-            }
-        }
-        self.halves[start % 2].lock().unwrap()
+    /// The double-buffered configuration (formerly `ArenaPair`): the
+    /// right default for one dispatch thread overlapping with one
+    /// in-flight device round.
+    pub fn pair(layout: Layout, m: usize, request_shape: &[usize]) -> Result<ArenaRing> {
+        ArenaRing::new(layout, m, request_shape, 2)
     }
 
-    /// The merged megabatch shape both halves pack (for load-time
-    /// cross-checks against the AOT artifact).
-    pub fn merged_shape(&self) -> Vec<usize> {
-        self.halves[0].lock().unwrap().merged_shape().to_vec()
+    /// Number of independently reservable slots.
+    pub fn depth(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Rounds currently holding a reservation (0..=depth).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn request_shape(&self) -> &[usize] {
+        &self.request_shape
+    }
+
+    /// Acquire a free slot for one round, preferring the one least
+    /// recently handed out. Blocks only when *all* slots have rounds in
+    /// flight (i.e. more than `depth` concurrent rounds) — and then
+    /// parks until ANY reservation drops, taking the first slot to
+    /// free rather than gambling on one arbitrary slot's lock.
+    pub fn acquire(&self) -> RingSlot<'_> {
+        loop {
+            if let Some(slot) = self.try_acquire() {
+                return slot;
+            }
+            // all slots in flight: park until a reservation drops. The
+            // in_flight recheck under the lock catches a release that
+            // landed between the failed sweep and the park (the drop
+            // decrements BEFORE taking the lock); the 1ms timeout is a
+            // backstop against notify_one going to a thread that then
+            // loses the re-acquire race.
+            let g = self.release_lock.lock().unwrap();
+            if self.in_flight.load(Ordering::Relaxed) >= self.slots.len() {
+                let _ = self.released.wait_timeout(g, Duration::from_millis(1)).unwrap();
+            }
+        }
+    }
+
+    /// Acquire a free slot without blocking, or `None` when every slot
+    /// has a round in flight (lets a dispatch thread choose other work
+    /// over waiting on the ring).
+    pub fn try_acquire(&self) -> Option<RingSlot<'_>> {
+        let depth = self.slots.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
+        for k in 0..depth {
+            let i = (start + k) % depth;
+            if let Ok(guard) = self.slots[i].try_lock() {
+                self.in_flight.fetch_add(1, Ordering::Relaxed);
+                return Some(RingSlot { guard, index: i, ring: self });
+            }
+        }
+        None
+    }
+
+    /// The merged megabatch shape every slot packs (for load-time
+    /// cross-checks against the AOT artifact). Lock-free: cached at
+    /// construction.
+    pub fn merged_shape(&self) -> &[usize] {
+        &self.merged_shape
     }
 }
 
@@ -461,33 +594,90 @@ mod tests {
     }
 
     #[test]
-    fn arena_pair_hands_out_independent_halves() {
-        let pair = ArenaPair::new(Layout::Batch, 2, &[1, 4]).unwrap();
-        assert_eq!(pair.merged_shape(), vec![2, 1, 4]);
+    fn arena_ring_hands_out_independent_slots() {
+        let ring = ArenaRing::pair(Layout::Batch, 2, &[1, 4]).unwrap();
+        assert_eq!(ring.merged_shape(), &[2, 1, 4]);
+        assert_eq!(ring.depth(), 2);
+        assert_eq!(ring.in_flight(), 0);
 
         let mut rng = Rng::new(8);
         let a = Tensor::randn(&[1, 4], &mut rng);
         let b = Tensor::randn(&[1, 4], &mut rng);
 
-        // round N holds one half...
-        let mut first = pair.acquire();
+        // round N holds one slot...
+        let mut first = ring.acquire();
         first.pack_with(&|_| Some(&a)).unwrap();
-        // ...and round N+1 still packs without blocking (other half)
-        let mut second = pair.acquire();
+        // ...and round N+1 still packs without blocking (other slot)
+        let mut second = ring.acquire();
         second.pack_with(&|_| Some(&b)).unwrap();
         assert_ne!(
             first.merged_data().as_ptr(),
             second.merged_data().as_ptr(),
             "concurrent rounds must get distinct buffers"
         );
+        assert_ne!(first.index(), second.index());
+        assert_eq!(ring.in_flight(), 2);
         assert_eq!(&first.merged_data()[..4], a.data());
         assert_eq!(&second.merged_data()[..4], b.data());
+
+        // the ring is exhausted: a third round must not get a buffer
+        // that aliases an in-flight one
+        assert!(ring.try_acquire().is_none(), "depth-2 ring held a third reservation");
         drop(first);
         drop(second);
+        assert_eq!(ring.in_flight(), 0);
 
-        // released halves are reacquirable
-        let third = pair.acquire();
+        // released slots are reacquirable
+        let third = ring.acquire();
         assert_eq!(third.m(), 2);
+    }
+
+    #[test]
+    fn arena_ring_depth_n_overlaps_n_rounds() {
+        let ring = ArenaRing::new(Layout::Batch, 1, &[1, 2], 4).unwrap();
+        assert_eq!(ring.depth(), 4);
+        let x = Tensor::zeros(&[1, 2]);
+        let mut held = Vec::new();
+        for _ in 0..4 {
+            let mut slot = ring.try_acquire().expect("free slot while ring not full");
+            slot.pack_with(&|_| Some(&x)).unwrap();
+            held.push(slot);
+        }
+        // all four reservations are live and distinct
+        let mut ptrs: Vec<_> = held.iter().map(|s| s.merged_data().as_ptr()).collect();
+        ptrs.sort();
+        ptrs.dedup();
+        assert_eq!(ptrs.len(), 4, "ring slots aliased a buffer");
+        assert_eq!(ring.in_flight(), 4);
+        assert!(ring.try_acquire().is_none());
+
+        assert!(ArenaRing::new(Layout::Batch, 1, &[1, 2], 1).is_err());
+        assert!(ArenaRing::new(Layout::Batch, 1, &[1, 2], 0).is_err());
+    }
+
+    #[test]
+    fn oversubscribed_acquire_takes_the_first_freed_slot() {
+        // more acquirers than depth: a parked acquirer must obtain the
+        // slot that actually frees (whichever it is), not gamble on one
+        // arbitrary slot's lock while another releases first
+        let ring = ArenaRing::pair(Layout::Batch, 1, &[1, 2]).unwrap();
+        let a = ring.acquire();
+        let b = ring.acquire();
+        assert_eq!(ring.in_flight(), 2);
+        std::thread::scope(|s| {
+            let t = s.spawn(|| ring.acquire().index());
+            // give the third acquirer time to park on the full ring
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            let freed = b.index();
+            drop(b);
+            assert_eq!(
+                t.join().unwrap(),
+                freed,
+                "parked acquirer must take the freed slot"
+            );
+            drop(a);
+        });
+        assert_eq!(ring.in_flight(), 0);
     }
 
     #[test]

@@ -10,10 +10,11 @@
 //! - `NetFuse`    — one merged executable for all M models.
 //!
 //! The round data plane is zero-copy in steady state: [`arena`] owns the
-//! reusable megabatch + pad buffers (double-buffered as an
-//! `arena::ArenaPair` so NETFUSE rounds overlap across threads),
-//! [`pool`] owns the persistent strategy workers (shareable across
-//! fleets), and `service::Fleet` wires both into the four strategies.
+//! reusable megabatch + pad buffers (an `arena::ArenaRing` of `depth`
+//! independently reservable slots, so up to `depth` NETFUSE rounds
+//! overlap across threads), [`pool`] owns the persistent strategy
+//! workers (shareable across fleets), and `service::Fleet` wires both
+//! into the four strategies.
 //!
 //! Serving front ends: `server::Server` is the single-fleet router +
 //! batcher; [`multi`]'s `MultiServer` hosts several fleets as tenants
@@ -28,7 +29,9 @@
 //! `service::RoundExecutor`, the slot-level round contract `Fleet`
 //! implements. Open-loop traffic reaches `MultiServer` through
 //! `crate::ingress` (frames -> transports -> bounded bridge -> the
-//! dispatch thread).
+//! dispatch thread), or — sharded — through `multi::ParallelDispatcher`
+//! (one dispatch thread per lane group over one shared ring and pool,
+//! `crate::ingress::run_dispatch_parallel`).
 
 pub mod arena;
 pub mod coalesce;
@@ -43,9 +46,11 @@ pub mod strategy;
 pub mod server;
 pub mod workload;
 
-pub use arena::{ArenaPair, Layout, RoundArena, SlotMap};
+pub use arena::{ArenaRing, Layout, RingSlot, RoundArena, SlotMap};
 pub use coalesce::CoalesceKey;
-pub use multi::{Dispatched, GroupStats, MultiServer};
+pub use multi::{
+    Dispatched, GroupSpec, GroupStats, LaneSpec, MultiServer, ParallelDispatcher, Topology,
+};
 pub use pool::WorkerPool;
 pub use request::{Request, Response};
 pub use service::{Fleet, RoundExecutor};

@@ -37,28 +37,34 @@
 //!   plenty. A failed merged round requeues every member's requests in
 //!   their original FIFO positions, exactly like a failed solo round.
 //!
-//! Note on round overlap: `MultiServer` itself dispatches lanes one at
-//! a time (`dispatch_next` is `&mut self`), so it does NOT overlap
-//! NETFUSE rounds. The fleet's [`ArenaPair`] enables overlap for
-//! *concurrent* callers of `Fleet::run_round_slots` — e.g. one driver
-//! thread per lane — `benches/multi_fleet.rs` measures that win
-//! directly. The async ingress feeding this type from outside the
-//! dispatch thread lives in [`crate::ingress`] (`IngressBridge` +
-//! `run_dispatch`).
+//! Note on round overlap: one `MultiServer` dispatches lanes one at a
+//! time (`dispatch_next` is `&mut self`), so it does NOT overlap
+//! NETFUSE rounds by itself. Overlap comes from **sharding dispatch**:
+//! [`ParallelDispatcher`] partitions the lanes into *lane groups* (a
+//! coalesce group, or a standalone lane) and gives each group its own
+//! `MultiServer` — its own queues and [`QosScheduler`] — so one
+//! dispatch thread per group packs/stages/executes concurrently, all
+//! sharing ONE [`WorkerPool`] and reserving megabatch slots from the
+//! fleet [`ArenaRing`]s (ring depth bounds the overlap).
+//! `benches/multi_fleet.rs` measures the two-deep arena win and
+//! `benches/parallel_dispatch.rs` the N-thread dispatch win. The async
+//! ingress feeding these types from outside the dispatch thread lives
+//! in [`crate::ingress`] (`IngressBridge` + `run_dispatch`, or
+//! `run_dispatch_parallel` for the sharded form).
 //!
-//! Like [`Server`], the type is generic over [`RoundExecutor`] so the
+//! Like [`Server`], the types are generic over [`RoundExecutor`] so the
 //! scheduling logic is testable without artifacts.
 //!
 //! [`Fleet::load_with_pool`]: super::service::Fleet::load_with_pool
 //! [`WorkerPool`]: super::pool::WorkerPool
 //! [`WorkerPool::machine_sized`]: super::pool::WorkerPool::machine_sized
-//! [`ArenaPair`]: super::arena::ArenaPair
+//! [`ArenaRing`]: super::arena::ArenaRing
 
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::ingress::qos::{LaneQos, LaneSnapshot, QosScheduler};
+use crate::ingress::qos::{LaneCharge, LaneQos, LaneSnapshot, QosScheduler};
 use crate::tensor::Tensor;
 
 use super::arena::SlotMap;
@@ -116,6 +122,8 @@ pub struct MultiServer<'f, E: RoundExecutor = Fleet> {
     group_of: Vec<Option<usize>>,
     /// merged-round output scratch, reused across coalesced rounds
     group_outs: Vec<Option<Tensor>>,
+    /// per-round served-lane charge scratch, reused across dispatches
+    charges: Vec<LaneCharge>,
 }
 
 impl<'f, E: RoundExecutor> Default for MultiServer<'f, E> {
@@ -148,6 +156,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
             groups: Vec::new(),
             group_of: Vec::new(),
             group_outs: Vec::new(),
+            charges: Vec::new(),
         }
     }
 
@@ -301,26 +310,16 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// boost), `Duration::ZERO` if one already is, `None` when every
     /// queue is empty. This is the longest an ingress loop may block
     /// without risking an idle dispatch thread next to a due round.
+    /// Delegates to [`QosScheduler::next_due_in`], whose scan covers
+    /// every backlogged lane — including lanes a coalesced round would
+    /// serve only as riders, whose boost windows are dispatch triggers
+    /// of their own.
     pub fn next_due_in(&self) -> Option<Duration> {
-        if self.ready_lane().is_some() {
-            return Some(Duration::ZERO);
-        }
-        let mut best: Option<Duration> = None;
-        for (i, lane) in self.lanes.iter().enumerate() {
-            let Some(wait) = lane.oldest_wait() else { continue };
-            let qos = self.sched.qos(i);
-            let batch_due = lane.config().max_wait.saturating_sub(wait);
-            let slo_due = qos
-                .slo
-                .saturating_sub(self.sched.lane_boost_margin(i))
-                .saturating_sub(wait);
-            let due = batch_due.min(slo_due);
-            best = Some(match best {
-                Some(b) => b.min(due),
-                None => due,
-            });
-        }
-        best
+        let lanes = &self.lanes;
+        self.sched.next_due_in(
+            &|i| snapshot(&lanes[i]),
+            &|i| lanes[i].config().max_wait,
+        )
     }
 
     /// Dispatch the next due round (QoS pick), appending its responses
@@ -332,12 +331,22 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// holding work dispatches a **merged** group round instead: every
     /// member's queue fronts pack into one megabatch (members that are
     /// not yet batching-ready ride along — their windows would
-    /// otherwise pad), and responses scatter back per lane. A failed
-    /// round — solo or merged — requeues its requests inside the
-    /// owning lane(s) (original FIFO order and wait clocks) and
-    /// surfaces the error; the cursor and deficit still advance past
-    /// the picked lane so a persistently failing fleet cannot starve
-    /// the others.
+    /// otherwise pad), and responses scatter back per lane.
+    ///
+    /// Deficit charging happens AFTER the round, against what it
+    /// actually served: a solo round charges the picked lane one whole
+    /// credit (one launch = one round, padded or not — unchanged), and
+    /// a merged round charges **every served member** — rider lanes
+    /// included — proportionally to the slots each consumed of its own
+    /// round capacity ([`QosScheduler::commit_served`]). Before this,
+    /// only the picked lane was charged and riders accumulated service
+    /// for free, so strict weighted shares drifted at high lane counts.
+    ///
+    /// A failed round — solo or merged — requeues its requests inside
+    /// the owning lane(s) (original FIFO order and wait clocks) and
+    /// surfaces the error; the picked lane is still charged a whole
+    /// round and the cursor advances past it, so a persistently failing
+    /// fleet cannot starve the others.
     pub fn dispatch_next(
         &mut self,
         responses: &mut Vec<Response>,
@@ -349,10 +358,6 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
                 None => return Ok(None),
             }
         };
-        {
-            let lanes = &self.lanes;
-            self.sched.commit(&pick, &|i| snapshot(&lanes[i]));
-        }
         if !pick.urgent {
             if let Some(g) = self.group_of[pick.lane] {
                 let live = self.groups[g]
@@ -361,20 +366,36 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
                     .filter(|&&l| self.lanes[l].pending() > 0)
                     .count();
                 if live >= 2 {
-                    let (lanes_served, n) = self.dispatch_group(g, responses)?;
-                    return Ok(Some(Dispatched {
-                        lane: pick.lane,
-                        responses: n,
-                        lanes_served,
-                        urgent: false,
-                    }));
+                    match self.dispatch_group(g, responses) {
+                        Ok((lanes_served, n)) => {
+                            let (lanes, sched) = (&self.lanes, &mut self.sched);
+                            sched.commit_served(&pick, &self.charges, &|i| {
+                                snapshot(&lanes[i])
+                            });
+                            return Ok(Some(Dispatched {
+                                lane: pick.lane,
+                                responses: n,
+                                lanes_served,
+                                urgent: false,
+                            }));
+                        }
+                        Err(e) => {
+                            let (lanes, sched) = (&self.lanes, &mut self.sched);
+                            sched.commit(&pick, &|i| snapshot(&lanes[i]));
+                            return Err(e);
+                        }
+                    }
                 }
             }
         }
-        let n = self.lanes[pick.lane].dispatch_into(responses)?;
+        // solo round: success or failure, the pick costs one whole
+        // credit (one launch) and the cursor moves on
+        let result = self.lanes[pick.lane].dispatch_into(responses);
+        let (lanes, sched) = (&self.lanes, &mut self.sched);
+        sched.commit(&pick, &|i| snapshot(&lanes[i]));
         Ok(Some(Dispatched {
             lane: pick.lane,
-            responses: n,
+            responses: result?,
             lanes_served: 1,
             urgent: pick.urgent,
         }))
@@ -383,7 +404,10 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// One merged round over group `g`: take every member's queue
     /// fronts, execute the group's megabatch once, scatter the outputs
     /// back through each member's response path. Returns
-    /// `(lanes_served, responses)`.
+    /// `(lanes_served, responses)`; the per-member slot consumption is
+    /// left in `self.charges` so the caller can charge every served
+    /// lane (rider fairness — riders must pay for the service they
+    /// receive).
     fn dispatch_group(
         &mut self,
         g: usize,
@@ -394,15 +418,24 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         let groups = &self.groups;
         let lanes = &mut self.lanes;
         let outs = &mut self.group_outs;
+        let charges = &mut self.charges;
         let group = &groups[g];
 
         // take: pop each member's fronts into its round scratch. Members
         // with nothing queued still "take" (an empty round) so their
-        // megabatch windows pad; they are not counted as served.
+        // megabatch windows pad; they are not counted as served and are
+        // not charged.
         let mut lanes_served = 0usize;
+        charges.clear();
         for &l in &group.members {
-            if lanes[l].take_round() > 0 {
+            let taken = lanes[l].take_round();
+            if taken > 0 {
                 lanes_served += 1;
+                charges.push(LaneCharge {
+                    lane: l,
+                    slots: taken,
+                    round_slots: lanes[l].fleet().m(),
+                });
             }
         }
 
@@ -490,17 +523,257 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// empty, appending all responses. Returns the number of responses.
     /// Unlike [`MultiServer::dispatch_next`], this drains lanes whose
     /// rounds are not yet due — it is the shutdown/flush path.
+    ///
+    /// The flush is **group-aware**: when the round-robin scan lands on
+    /// a coalesce-group member and at least one other member still
+    /// holds work, the members flush together as ONE merged round, so
+    /// even the final partial rounds amortize the merged program's
+    /// launch instead of dispatching solo per lane.
     pub fn drain(&mut self, responses: &mut Vec<Response>) -> Result<usize> {
         let mut total = 0;
-        while self.pending() > 0 {
-            // round-robin over lanes with work so the flush stays fair
+        loop {
+            // round-robin over lanes with work so the flush stays fair;
+            // when no lane holds work (including a lane that emptied
+            // between scans) the flush is complete
             let n = self.lanes.len();
             let lane = (0..n)
                 .map(|k| (self.sched.cursor() + k) % n)
-                .find(|&i| self.lanes[i].pending() > 0)
-                .expect("pending() > 0 implies some lane has work");
+                .find(|&i| self.lanes[i].pending() > 0);
+            let Some(lane) = lane else {
+                return Ok(total);
+            };
             self.sched.rotate_after(lane);
+            if let Some(g) = self.group_of[lane] {
+                let live = self.groups[g]
+                    .members
+                    .iter()
+                    .filter(|&&l| self.lanes[l].pending() > 0)
+                    .count();
+                if live >= 2 {
+                    total += self.dispatch_group(g, responses)?.1;
+                    continue;
+                }
+            }
             total += self.lanes[lane].dispatch_into(responses)?;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parallel dispatch: one thread per lane group
+// ---------------------------------------------------------------------------
+
+/// One lane's registration for a [`ParallelDispatcher`]: the executor
+/// it dispatches onto, its batching config, and its QoS contract.
+pub struct LaneSpec<'f, E: RoundExecutor = Fleet> {
+    pub exec: &'f E,
+    pub cfg: ServerConfig,
+    pub qos: LaneQos,
+}
+
+impl<'f, E: RoundExecutor> LaneSpec<'f, E> {
+    pub fn new(exec: &'f E, cfg: ServerConfig, qos: LaneQos) -> LaneSpec<'f, E> {
+        LaneSpec { exec, cfg, qos }
+    }
+}
+
+/// One coalesce group's registration for a [`ParallelDispatcher`]:
+/// the group-level executor and the member lanes (global lane ids, in
+/// megabatch-window order). Validation is [`super::coalesce`]'s, via
+/// [`MultiServer::add_coalesce_group`] on the group's partition.
+pub struct GroupSpec<'f, E: RoundExecutor = Fleet> {
+    pub exec: &'f E,
+    pub members: Vec<usize>,
+}
+
+impl<'f, E: RoundExecutor> GroupSpec<'f, E> {
+    pub fn new(exec: &'f E, members: &[usize]) -> GroupSpec<'f, E> {
+        GroupSpec { exec, members: members.to_vec() }
+    }
+}
+
+/// The lane partition of a [`ParallelDispatcher`]: which partition owns
+/// each global lane, and the global id of every partition-local lane.
+/// Routing tables only — immutable after construction, shared by the
+/// router and every dispatch thread.
+pub struct Topology {
+    /// global lane -> (partition, partition-local lane)
+    local_of: Vec<(usize, usize)>,
+    /// partition -> local lane -> global lane
+    global_of: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    /// Number of partitions (= dispatch threads).
+    pub fn parts(&self) -> usize {
+        self.global_of.len()
+    }
+
+    /// Number of global lanes.
+    pub fn lanes(&self) -> usize {
+        self.local_of.len()
+    }
+
+    /// The `(partition, local lane)` owning global lane `lane`, or
+    /// `None` for an unknown lane id (the router's NoLane case).
+    pub fn locate(&self, lane: usize) -> Option<(usize, usize)> {
+        self.local_of.get(lane).copied()
+    }
+
+    /// Global id of partition `part`'s local lane `local`.
+    pub fn global(&self, part: usize, local: usize) -> usize {
+        self.global_of[part][local]
+    }
+
+    /// Global lane ids owned by partition `part`, in local-lane order.
+    pub fn part_lanes(&self, part: usize) -> &[usize] {
+        &self.global_of[part]
+    }
+}
+
+/// Sharded dispatch over one lane set: the lanes are partitioned into
+/// **lane groups** — each registered coalesce group is one partition,
+/// each remaining standalone lane its own — and every partition gets an
+/// independent [`MultiServer`] (its own queues and [`QosScheduler`]),
+/// so one dispatch thread per partition runs pack/stage/execute
+/// concurrently with the others. All partitions share whatever the
+/// executors share: ONE [`WorkerPool`] (via `Fleet::load_with_pool`)
+/// and the fleet [`ArenaRing`]s, whose depth bounds how many of those
+/// rounds can be staged at once.
+///
+/// Partitioning by group keeps every cross-lane interaction inside one
+/// thread: coalesced rounds only ever merge lanes of the same
+/// partition, so no lock is needed around queues or scheduling state,
+/// and per-lane FIFO response order is preserved exactly as in
+/// single-thread dispatch. Requests are routed to the owning
+/// partition's queue by global lane id ([`Topology::locate`]); the
+/// ingress form of that router is
+/// [`run_dispatch_parallel`](crate::ingress::run_dispatch_parallel).
+///
+/// What cross-partition dispatch gives up is cross-partition WDRR:
+/// weights meter shares *within* a partition (where lanes contend for
+/// one dispatch thread); partitions themselves run concurrently and
+/// contend only for device/pool capacity.
+///
+/// [`WorkerPool`]: super::pool::WorkerPool
+/// [`ArenaRing`]: super::arena::ArenaRing
+pub struct ParallelDispatcher<'f, E: RoundExecutor = Fleet> {
+    parts: Vec<MultiServer<'f, E>>,
+    topo: Topology,
+}
+
+impl<'f, E: RoundExecutor> ParallelDispatcher<'f, E> {
+    /// Partition `lanes` (indexed by their position = global lane id)
+    /// into one dispatch group per [`GroupSpec`] plus one per remaining
+    /// standalone lane. Group partitions come first, in `groups` order;
+    /// standalone partitions follow in lane order. Rejects out-of-range
+    /// or multiply grouped members and anything
+    /// [`MultiServer::add_coalesce_group`] rejects.
+    pub fn new(
+        lanes: Vec<LaneSpec<'f, E>>,
+        groups: Vec<GroupSpec<'f, E>>,
+    ) -> Result<ParallelDispatcher<'f, E>> {
+        let n = lanes.len();
+        if n == 0 {
+            bail!("parallel dispatcher needs at least one lane");
+        }
+        let mut grouped: Vec<bool> = vec![false; n];
+        for (g, spec) in groups.iter().enumerate() {
+            for &l in &spec.members {
+                if l >= n {
+                    bail!("group {g}: no lane {l} (have {n})");
+                }
+                if grouped[l] {
+                    bail!("lane {l} listed in more than one dispatch group");
+                }
+                grouped[l] = true;
+            }
+        }
+        let mut specs: Vec<Option<LaneSpec<'f, E>>> = lanes.into_iter().map(Some).collect();
+        let mut parts: Vec<MultiServer<'f, E>> = Vec::new();
+        let mut local_of: Vec<(usize, usize)> = vec![(usize::MAX, usize::MAX); n];
+        let mut global_of: Vec<Vec<usize>> = Vec::new();
+        for spec in &groups {
+            let p = parts.len();
+            let mut ms = MultiServer::new();
+            let mut locals = Vec::with_capacity(spec.members.len());
+            for &l in &spec.members {
+                let LaneSpec { exec, cfg, qos } =
+                    specs[l].take().expect("group disjointness checked above");
+                let local = ms.add_lane_qos(exec, cfg, qos);
+                local_of[l] = (p, local);
+                locals.push(local);
+            }
+            ms.add_coalesce_group(spec.exec, &locals)?;
+            parts.push(ms);
+            global_of.push(spec.members.clone());
+        }
+        for (l, spec) in specs.iter_mut().enumerate() {
+            let Some(LaneSpec { exec, cfg, qos }) = spec.take() else {
+                continue; // grouped above
+            };
+            let p = parts.len();
+            let mut ms = MultiServer::new();
+            let local = ms.add_lane_qos(exec, cfg, qos);
+            local_of[l] = (p, local);
+            parts.push(ms);
+            global_of.push(vec![l]);
+        }
+        Ok(ParallelDispatcher { parts, topo: Topology { local_of, global_of } })
+    }
+
+    /// Number of partitions (= dispatch threads a parallel run spawns).
+    pub fn parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Number of global lanes.
+    pub fn lanes(&self) -> usize {
+        self.topo.lanes()
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Partition `p`'s `MultiServer` (its lanes are local — translate
+    /// ids through [`ParallelDispatcher::topology`]).
+    pub fn part(&self, p: usize) -> &MultiServer<'f, E> {
+        &self.parts[p]
+    }
+
+    pub fn part_mut(&mut self, p: usize) -> &mut MultiServer<'f, E> {
+        &mut self.parts[p]
+    }
+
+    /// The partitioned servers plus the routing tables, borrowed
+    /// disjointly — what a parallel runner needs to hand each dispatch
+    /// thread its own `&mut MultiServer` while every thread shares the
+    /// topology.
+    pub fn split_mut(&mut self) -> (&mut [MultiServer<'f, E>], &Topology) {
+        (&mut self.parts, &self.topo)
+    }
+
+    /// Route one request to a **global** lane's queues.
+    pub fn offer(&mut self, lane: usize, req: Request) -> Result<Admit> {
+        let Some((p, local)) = self.topo.locate(lane) else {
+            bail!("no lane {lane} (have {})", self.topo.lanes());
+        };
+        self.parts[p].offer(local, req)
+    }
+
+    /// Total queued requests across every partition.
+    pub fn pending(&self) -> usize {
+        self.parts.iter().map(|p| p.pending()).sum()
+    }
+
+    /// Flush every partition to empty, sequentially (single-thread
+    /// shutdown path; the parallel runner drains each partition on its
+    /// own thread instead). Returns the number of responses appended.
+    pub fn drain(&mut self, responses: &mut Vec<Response>) -> Result<usize> {
+        let mut total = 0;
+        for part in &mut self.parts {
+            total += part.drain(responses)?;
         }
         Ok(total)
     }

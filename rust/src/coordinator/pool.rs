@@ -16,7 +16,11 @@
 //! one per fleet. `run_chunked` is `&self` and each job runs to
 //! completion independently (no job ever re-enters the pool), so
 //! concurrent rounds from different fleets interleave safely on the
-//! same workers.
+//! same workers — including rounds submitted by N parallel dispatch
+//! threads (`coordinator::multi::ParallelDispatcher`): submission
+//! wakes one worker per queued job, not the whole pool, so frequent
+//! small rounds from many dispatchers don't stampede a machine-sized
+//! worker set on every submit.
 
 use std::any::Any;
 use std::collections::VecDeque;
@@ -174,6 +178,7 @@ impl WorkerPool {
     /// any worker can touch them.
     pub fn scope<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
         let latch = Arc::new(Latch::new(jobs.len()));
+        let n_jobs = jobs.len();
         {
             let mut q = self.shared.queue.lock().unwrap();
             for job in jobs {
@@ -193,7 +198,14 @@ impl WorkerPool {
                     job();
                 }));
             }
-            self.shared.ready.notify_all();
+            // wake one worker per queued job rather than the whole
+            // pool: with several dispatch threads submitting small
+            // rounds concurrently, notify_all would stampede every
+            // idle worker (on a machine-sized pool, dozens) through
+            // the queue lock for each round
+            for _ in 0..n_jobs {
+                self.shared.ready.notify_one();
+            }
         }
         latch.wait();
     }
@@ -353,5 +365,30 @@ mod tests {
         pool.scope(Vec::new());
         assert_eq!(pool.run_chunked::<usize, _>(0, 3, |_| Ok(0)).unwrap(), Vec::<usize>::new());
         assert_eq!(pool.workers(), 1);
+    }
+
+    #[test]
+    fn concurrent_dispatchers_share_one_pool() {
+        // the parallel-dispatch shape: N threads each driving rounds
+        // through run_chunked on ONE shared pool, concurrently. Every
+        // round must complete with index-aligned results and no lost
+        // wakeups (each submit wakes exactly as many workers as jobs).
+        let pool = WorkerPool::shared(4);
+        std::thread::scope(|s| {
+            for d in 0..4usize {
+                let pool = pool.clone();
+                s.spawn(move || {
+                    for round in 0..50usize {
+                        let got = pool
+                            .run_chunked(6, 2, |i| Ok(d * 1000 + round * 10 + i))
+                            .unwrap();
+                        let want: Vec<usize> =
+                            (0..6).map(|i| d * 1000 + round * 10 + i).collect();
+                        assert_eq!(got, want, "dispatcher {d} round {round}");
+                    }
+                });
+            }
+        });
+        assert_eq!(pool.workers(), 4);
     }
 }

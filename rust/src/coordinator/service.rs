@@ -5,12 +5,16 @@
 //! of M requests produces identical outputs either way.
 //!
 //! Round data plane (zero-copy pipeline):
-//! - an [`ArenaPair`] (double-buffered [`RoundArena`]) allocated once at
-//!   [`Fleet::load`] holds two merged megabatches and pad blocks;
-//!   [`Fleet::pack_into`] writes request payloads straight into their
-//!   windows (no concat/stack allocation). A NETFUSE round reserves one
-//!   half for pack + stage + execute, so a second thread packs round
-//!   N+1 into the other half while round N is still in flight;
+//! - an [`ArenaRing`] (multi-buffered [`RoundArena`], default depth 2)
+//!   allocated once at [`Fleet::load`] holds the merged megabatches and
+//!   pad blocks; [`Fleet::pack_into`] writes request payloads straight
+//!   into their windows (no concat/stack allocation). A NETFUSE round
+//!   reserves one ring slot for pack + stage + execute, so up to
+//!   `depth` threads pack later rounds into the other slots while round
+//!   N is still in flight. [`Fleet::with_arena_depth`] widens the ring
+//!   for N-thread dispatch ([`ParallelDispatcher`]), and
+//!   [`Fleet::set_arena_ring`] lets identically shaped fleets share one
+//!   ring (one staging footprint for a whole coalesce family);
 //! - the megabatch is handed to PJRT via `Bound::stage`/`run_staged`
 //!   without an intermediate `Tensor`;
 //! - [`Fleet::unpack`] returns borrowed [`TensorView`]s into the merged
@@ -24,6 +28,8 @@
 //! [`RoundExecutor`] abstracts the slot-level round contract the
 //! serving loop needs, so `Server`/`MultiServer` batching logic is
 //! testable without AOT artifacts or a PJRT backend.
+//!
+//! [`ParallelDispatcher`]: super::multi::ParallelDispatcher
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, OnceLock};
@@ -35,7 +41,7 @@ use crate::graph::Graph;
 use crate::runtime::{Bound, Manifest, Runtime};
 use crate::tensor::{io::read_nft, Tensor, TensorView};
 
-use super::arena::{ArenaPair, Layout, RoundArena};
+use super::arena::{ArenaRing, Layout, RoundArena};
 use super::pool::WorkerPool;
 use super::strategy::StrategyKind;
 
@@ -77,9 +83,10 @@ pub struct Fleet {
     singles: Vec<Bound>,
     /// the NETFUSE executable with Rust-stacked merged weights
     fused: Bound,
-    /// double-buffered round-lifetime staging buffers, reused every
-    /// round; two halves so rounds from different threads overlap
-    arenas: ArenaPair,
+    /// ring of round-lifetime staging buffers, reused every round;
+    /// `depth` slots so rounds from different threads overlap. Behind
+    /// an `Arc` so identically shaped fleets can share one ring.
+    arenas: Arc<ArenaRing>,
     /// persistent strategy workers. Either a machine-wide pool shared
     /// across fleets (installed by [`Fleet::load_with_pool`]) or a
     /// fleet-private one spawned lazily on the first Concurrent/Hybrid
@@ -166,7 +173,7 @@ impl Fleet {
         let packing = Layout::parse(&layout)?;
         let mut request_shape = vec![bs];
         request_shape.extend_from_slice(&entry.graph.input_shape);
-        let arenas = ArenaPair::new(packing, m, &request_shape)?;
+        let arenas = Arc::new(ArenaRing::pair(packing, m, &request_shape)?);
         // the arenas' derived megabatch shape must agree with what the
         // AOT side lowered, or packing would feed the wrong windows
         if arenas.merged_shape() != fused.art().input_shape {
@@ -200,6 +207,48 @@ impl Fleet {
     /// rounds onto, if one has been installed or lazily spawned yet.
     pub fn shared_pool(&self) -> Option<&Arc<WorkerPool>> {
         self.pool.get()
+    }
+
+    /// The staging ring NETFUSE rounds reserve slots from. Clone the
+    /// `Arc` into [`Fleet::set_arena_ring`] of an identically shaped
+    /// fleet to share one staging footprint across fleets.
+    pub fn arena_ring(&self) -> &Arc<ArenaRing> {
+        &self.arenas
+    }
+
+    /// Replace this fleet's staging ring — the sharing hook: several
+    /// fleets with the same packing configuration (layout, instance
+    /// count, request shape) can reserve slots from ONE ring, and a
+    /// ring deeper than 2 lets that many dispatch threads overlap
+    /// rounds. Rejects a ring whose configuration does not match what
+    /// this fleet packs. Requires `&mut self`, so it can only happen
+    /// before the fleet is registered with a server (servers hold `&`).
+    pub fn set_arena_ring(&mut self, ring: Arc<ArenaRing>) -> Result<()> {
+        if ring.layout() != self.packing
+            || ring.m() != self.m
+            || ring.request_shape() != self.request_shape().as_slice()
+        {
+            bail!(
+                "ring packs {:?} {}x{:?}, fleet serves {:?} {}x{:?}",
+                ring.layout(),
+                ring.m(),
+                ring.request_shape(),
+                self.packing,
+                self.m,
+                self.request_shape()
+            );
+        }
+        self.arenas = ring;
+        Ok(())
+    }
+
+    /// Rebuild the staging ring at `depth` slots (builder form, applied
+    /// after load and before serving): one slot per dispatch thread
+    /// that should be able to hold a round in flight concurrently.
+    pub fn with_arena_depth(mut self, depth: usize) -> Result<Fleet> {
+        let ring = ArenaRing::new(self.packing, self.m, &self.request_shape(), depth)?;
+        self.arenas = Arc::new(ring);
+        Ok(self)
     }
 
     /// Pack one round of slot payloads into `arena`'s megabatch
@@ -287,15 +336,15 @@ impl Fleet {
             }
             StrategyKind::NetFuse => {
                 let y = {
-                    // reserve ONE arena half for this round: the guard
+                    // reserve ONE ring slot for this round: the guard
                     // spans pack + stage + execute because PJRT
                     // host-buffer semantics may defer the H2D copy, so
                     // the staged megabatch must not be repacked until
                     // the round completes (`StagedInput` borrows the
-                    // half through the guard). The OTHER half stays
-                    // free, so a concurrent round packs and stages
-                    // while this one is still in flight — the
-                    // cross-round overlap PR 1 couldn't do.
+                    // slot through the guard). The other `depth - 1`
+                    // slots stay free, so concurrent rounds — one per
+                    // dispatch thread, up to the ring depth — pack and
+                    // stage while this one is still in flight.
                     let mut arena = self.arenas.acquire();
                     self.pack_into(&mut arena, get)?;
                     let staged =

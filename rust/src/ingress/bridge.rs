@@ -36,7 +36,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::multi::MultiServer;
+use crate::coordinator::multi::{MultiServer, ParallelDispatcher, Topology};
 use crate::coordinator::request::{Request, Response};
 use crate::coordinator::server::Admit;
 use crate::coordinator::service::RoundExecutor;
@@ -282,6 +282,9 @@ pub struct IngressStats {
     pub admitted: u64,
     /// envelopes refused with `Admit::Rejected` (lane queue full)
     pub lane_busy: u64,
+    /// envelopes refused because the owning dispatch group's queue was
+    /// full (parallel dispatch only — the router's backpressure)
+    pub group_busy: u64,
     /// envelopes refused with `Admit::Invalid`
     pub invalid: u64,
     /// envelopes addressed to a lane that does not exist
@@ -302,6 +305,23 @@ pub struct IngressStats {
     pub idle_naps_avoided: u64,
 }
 
+impl IngressStats {
+    /// Fold another run's counters into this one (the parallel runner
+    /// merges the router's and every dispatch thread's stats).
+    pub fn merge(&mut self, o: &IngressStats) {
+        self.admitted += o.admitted;
+        self.lane_busy += o.lane_busy;
+        self.group_busy += o.group_busy;
+        self.invalid += o.invalid;
+        self.no_lane += o.no_lane;
+        self.responses += o.responses;
+        self.rounds += o.rounds;
+        self.coalesced_rounds += o.coalesced_rounds;
+        self.round_errors += o.round_errors;
+        self.idle_naps_avoided += o.idle_naps_avoided;
+    }
+}
+
 /// Response routing entry: which connection gets server-keyed request id.
 struct Route {
     client_id: u64,
@@ -320,11 +340,42 @@ const MAX_CONSECUTIVE_ROUND_ERRORS: u32 = 3;
 /// dispatch QoS-picked rounds, route responses, and return once the
 /// bridge is closed AND every queue is drained. The loop never blocks
 /// while a lane is due (arrival drains are non-blocking and idle naps
-/// are capped at the soonest batching/SLO deadline).
+/// are capped at the soonest batching/SLO deadline — a deadline scan
+/// that covers every backlogged lane, coalesce-group riders included).
 pub fn run_dispatch<E: RoundExecutor>(
     multi: &mut MultiServer<E>,
     bridge: &IngressBridge,
 ) -> Result<IngressStats> {
+    dispatch_loop(multi, bridge, None)
+}
+
+/// The single-consumer loop behind [`run_dispatch`], parameterized over
+/// the lane id space: `part = None` serves every envelope on `multi`
+/// with wire lane ids = `multi` lane ids; `part = Some((topo, p))` is
+/// one partition of a [`ParallelDispatcher`] — envelopes carry
+/// **global** lane ids, which translate to partition-local ids at
+/// admission and back at response routing (response frames must quote
+/// the client's own lane id regardless of which thread served it).
+fn dispatch_loop<E: RoundExecutor>(
+    multi: &mut MultiServer<E>,
+    bridge: &IngressBridge,
+    part: Option<(&Topology, usize)>,
+) -> Result<IngressStats> {
+    let to_local = |lane: usize| -> Option<usize> {
+        match part {
+            None => Some(lane),
+            Some((topo, p)) => match topo.locate(lane) {
+                Some((owner, local)) if owner == p => Some(local),
+                _ => None,
+            },
+        }
+    };
+    let to_global = |local: usize| -> usize {
+        match part {
+            None => local,
+            Some((topo, p)) => topo.global(p, local),
+        }
+    };
     let mut stats = IngressStats::default();
     let mut routes: HashMap<u64, Route> = HashMap::new();
     let mut seq: u64 = 0;
@@ -334,7 +385,8 @@ pub fn run_dispatch<E: RoundExecutor>(
     loop {
         // 1) drain arrivals without blocking
         while let Some(env) = bridge.try_pop() {
-            admit(multi, env, &mut routes, &mut seq, &mut stats);
+            let local = to_local(env.lane);
+            admit(multi, env, local, &mut routes, &mut seq, &mut stats);
         }
 
         // 2) dispatch whatever the QoS scheduler says is due — a
@@ -350,7 +402,7 @@ pub fn run_dispatch<E: RoundExecutor>(
                     stats.coalesced_rounds += 1;
                     usize::MAX
                 } else {
-                    d.lane
+                    to_global(d.lane)
                 };
                 route_responses(&mut responses, &mut routes, hint, &mut stats);
                 continue;
@@ -362,6 +414,26 @@ pub fn run_dispatch<E: RoundExecutor>(
                 stats.round_errors += 1;
                 consecutive_errors += 1;
                 if consecutive_errors >= MAX_CONSECUTIVE_ROUND_ERRORS {
+                    // every admitted-but-unanswered request and every
+                    // still-queued arrival gets its outcome frame
+                    // before the loop dies — the one-outcome-per-
+                    // arrival contract holds on the error path too
+                    for (_, route) in routes.drain() {
+                        route.reply.push(Frame::reject(
+                            route.client_id,
+                            route.lane as u32,
+                            RejectCode::Shutdown,
+                            "dispatch loop failed",
+                        ));
+                    }
+                    while let Some(env) = bridge.try_pop() {
+                        env.reply.push(Frame::reject(
+                            env.client_id,
+                            env.lane as u32,
+                            RejectCode::Shutdown,
+                            "dispatch loop failed",
+                        ));
+                    }
                     return Err(e).context("dispatch loop: rounds failing persistently");
                 }
                 continue;
@@ -392,29 +464,164 @@ pub fn run_dispatch<E: RoundExecutor>(
             None => IDLE_POLL,
         };
         if let Some(env) = bridge.pop_timeout(nap) {
-            admit(multi, env, &mut routes, &mut seq, &mut stats);
+            let local = to_local(env.lane);
+            admit(multi, env, local, &mut routes, &mut seq, &mut stats);
         }
     }
     Ok(stats)
 }
 
+/// Run a [`ParallelDispatcher`] to completion over the bridge: the
+/// calling thread becomes the **router** (the main bridge's single
+/// consumer — producer-facing semantics are identical to
+/// [`run_dispatch`]), and one dispatch thread per lane partition runs
+/// the same single-consumer loop over a partition-private sub-bridge.
+///
+/// ```text
+///  producers ── IngressBridge (bounded MPSC, unchanged)
+///      │  router thread: global lane -> owning partition
+///      ▼
+///  sub-bridge[p] (bounded, cap = group_queue_cap)
+///      │  dispatch thread p: THE consumer of partition p
+///      ▼
+///  partition p's MultiServer — own queues + QosScheduler; merged
+///  rounds never cross partitions, responses flow per connection
+/// ```
+///
+/// Backpressure composes: a full main bridge rejects at `submit` (as
+/// before), and a full sub-bridge makes the router answer `Busy`
+/// (`group_busy` in the stats) rather than ever parking — so arrivals
+/// for a slow partition cannot wedge the router, and every arrival
+/// still receives exactly one outcome frame. Envelopes keep global
+/// lane ids end to end; partition threads translate at admission and
+/// back at response routing, so the wire protocol is byte-identical to
+/// single-thread dispatch.
+///
+/// Returns the merged [`IngressStats`] of the router and every
+/// partition once the bridge is closed and every queue has drained.
+/// If any partition fails persistently, its error surfaces after all
+/// threads have been joined (the other partitions still drain; the
+/// dead partition's arrivals get Busy rejections once its sub-bridge
+/// fills).
+pub fn run_dispatch_parallel<E: RoundExecutor>(
+    dispatcher: &mut ParallelDispatcher<'_, E>,
+    bridge: &IngressBridge,
+    group_queue_cap: usize,
+) -> Result<IngressStats> {
+    let (parts, topo) = dispatcher.split_mut();
+    let subs: Vec<IngressBridge> =
+        (0..parts.len()).map(|_| IngressBridge::new(group_queue_cap)).collect();
+    let mut stats = IngressStats::default();
+
+    let results: Vec<Result<IngressStats>> = std::thread::scope(|s| {
+        let mut threads = Vec::with_capacity(parts.len());
+        for (p, multi) in parts.iter_mut().enumerate() {
+            let sub = &subs[p];
+            threads.push(s.spawn(move || dispatch_loop(multi, sub, Some((topo, p)))));
+        }
+
+        // the router: drain the main bridge into the owning partitions'
+        // sub-bridges until it is closed and empty, never blocking on a
+        // full sub-bridge (Busy goes back to the client instead)
+        loop {
+            match bridge.pop_timeout(IDLE_POLL) {
+                Some(env) => match topo.locate(env.lane) {
+                    None => {
+                        stats.no_lane += 1;
+                        env.reply.push(Frame::reject(
+                            env.client_id,
+                            env.lane as u32,
+                            RejectCode::NoLane,
+                            "no such lane",
+                        ));
+                    }
+                    Some((p, _)) => match subs[p].submit(env) {
+                        Ok(()) => {}
+                        Err(SubmitError::Busy(env)) => {
+                            stats.group_busy += 1;
+                            env.reply.push(Frame::reject(
+                                env.client_id,
+                                env.lane as u32,
+                                RejectCode::Busy,
+                                "dispatch group queue full",
+                            ));
+                        }
+                        // unreachable before the close below, kept for
+                        // the same in-band guarantee anyway
+                        Err(SubmitError::Closed(env)) => {
+                            env.reply.push(Frame::reject(
+                                env.client_id,
+                                env.lane as u32,
+                                RejectCode::Shutdown,
+                                "server shutting down",
+                            ));
+                        }
+                    },
+                },
+                None => {
+                    if bridge.is_closed() && bridge.is_empty() {
+                        break;
+                    }
+                }
+            }
+        }
+        // propagate shutdown: each partition loop exits once its
+        // sub-bridge is closed AND drained AND its lanes are empty
+        for sub in &subs {
+            sub.close();
+        }
+        let results: Vec<Result<IngressStats>> =
+            threads.into_iter().map(|t| t.join().expect("dispatch thread panicked")).collect();
+        // a partition that died with an error stopped consuming its
+        // sub-bridge; whatever the router put there afterwards still
+        // needs an outcome frame (a no-op on success paths — a healthy
+        // partition only exits with its sub-bridge drained)
+        for sub in &subs {
+            while let Some(env) = sub.try_pop() {
+                env.reply.push(Frame::reject(
+                    env.client_id,
+                    env.lane as u32,
+                    RejectCode::Shutdown,
+                    "dispatch thread unavailable",
+                ));
+            }
+        }
+        results
+    });
+
+    for r in results {
+        stats.merge(&r?);
+    }
+    Ok(stats)
+}
+
 /// Admit one envelope: re-stamp arrival at the boundary, re-key the id,
-/// offer to the lane, and answer rejections in-band.
+/// offer to the (pre-translated) local lane, and answer rejections
+/// in-band. `env.lane` stays the client's wire lane id — it is what
+/// rejection and response frames must quote.
 fn admit<E: RoundExecutor>(
     multi: &mut MultiServer<E>,
     env: Envelope,
+    local: Option<usize>,
     routes: &mut HashMap<u64, Route>,
     seq: &mut u64,
     stats: &mut IngressStats,
 ) {
     let Envelope { lane, client_id, req, reply } = env;
+    let Some(local) = local else {
+        // unmapped wire lane (or an envelope misrouted to the wrong
+        // partition): never offer, answer in-band
+        stats.no_lane += 1;
+        reply.push(Frame::reject(client_id, lane as u32, RejectCode::NoLane, "no such lane"));
+        return;
+    };
     // admission-boundary stamp: queue-wait math must not inherit the
     // producer's construction time (or a cloned request's stale stamp)
     let mut req = req.arrived_now();
     let sid = *seq;
     *seq += 1;
     req.id = sid;
-    match multi.offer(lane, req) {
+    match multi.offer(local, req) {
         Err(_) => {
             stats.no_lane += 1;
             reply.push(Frame::reject(client_id, lane as u32, RejectCode::NoLane, "no such lane"));

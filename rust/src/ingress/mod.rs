@@ -42,9 +42,10 @@ pub mod qos;
 pub mod transport;
 
 pub use bridge::{
-    run_dispatch, serve_conn, ConnHandle, Envelope, IngressBridge, IngressStats, SubmitError,
+    run_dispatch, run_dispatch_parallel, serve_conn, ConnHandle, Envelope, IngressBridge,
+    IngressStats, SubmitError,
 };
 pub use frame::{Frame, RejectCode};
 pub use loadgen::{Arrival, LoadGen, TrafficShape};
-pub use qos::{LaneQos, LaneSnapshot, Pick, QosScheduler};
+pub use qos::{LaneCharge, LaneQos, LaneSnapshot, Pick, QosScheduler, CHARGE_UNIT};
 pub use transport::{ChanTransport, FrameQueue, TcpTransport, Transport, TransportRx, TransportTx};

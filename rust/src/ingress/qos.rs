@@ -17,17 +17,30 @@
 //! 2. **WDRR** — otherwise, lanes whose rounds are due are served in
 //!    deficit round-robin: every replenish cycle grants each backlogged
 //!    lane `weight` round credits (capped at two cycles so an idle
-//!    spell cannot bank unbounded priority; a drained lane's credit
-//!    resets, per classic DRR); the scan starts after the last
+//!    spell cannot bank unbounded priority; a drained lane's unspent
+//!    credit resets, per classic DRR); the scan starts after the last
 //!    dispatched lane, so equal weights degenerate to exactly the old
 //!    fair round-robin.
+//!
+//! Deficits are **fractional** (fixed-point, [`CHARGE_UNIT`] = one full
+//! round of the lane's own capacity): a dispatched round charges every
+//! lane it served in proportion to the slots that lane consumed —
+//! [`QosScheduler::commit_served`] takes one [`LaneCharge`] per served
+//! lane. This is the merged-round fairness fix: a coalesced group round
+//! serves *rider* lanes beyond the picked one, and charging only the
+//! pick (the pre-fix behavior) let riders accumulate service for free,
+//! so strict weighted shares drifted as lane counts grew. A rider
+//! served beyond its remaining credit goes into bounded debt (two
+//! cycles' worth, mirroring the credit cap) and pays it off before
+//! being picked again.
 //!
 //! The scheduler is deliberately decoupled from `Server` internals: it
 //! sees lanes only through [`LaneSnapshot`]s produced by a caller-owned
 //! closure, so it is unit-testable with plain structs and usable by any
 //! front end. [`QosScheduler::select`] is pure (usable from `&self`
-//! readiness probes); [`QosScheduler::commit`] applies the deficit
-//! charge and cursor advance for a pick that was actually dispatched.
+//! readiness probes); [`QosScheduler::commit_served`] applies the
+//! deficit charges and cursor advance for a pick that was actually
+//! dispatched ([`QosScheduler::commit`] is the whole-round shorthand).
 
 use std::time::Duration;
 
@@ -89,14 +102,52 @@ pub struct Pick {
     pub lane: usize,
     /// chosen by the SLO boost (the round may need padding)
     pub urgent: bool,
-    /// selection assumed a deficit replenish; `commit` applies it
-    replenish: bool,
+    /// how many deficit replenish cycles selection assumed (0 = none;
+    /// more than one only when rider debt must be worked off first);
+    /// `commit_served` applies them
+    replenish: u8,
+}
+
+/// Fixed-point scale of the WDRR deficit counters: one full round of a
+/// lane's own capacity. Fractions arise from partial occupancy (a
+/// padded round consuming `slots < round_slots`) and from merged-round
+/// rider charges — see [`QosScheduler::commit_served`].
+pub const CHARGE_UNIT: i64 = 1 << 16;
+
+/// One lane's share of a dispatched round, as consumed slots: lane
+/// `lane` had `slots` of its `round_slots` instance slots served. The
+/// deficit charge is `CHARGE_UNIT * slots / round_slots` — a full
+/// round costs one credit, a half-occupied rider half a credit.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneCharge {
+    pub lane: usize,
+    /// occupied slots this round served for the lane
+    pub slots: usize,
+    /// the lane's full-round slot capacity (its executor's `m`)
+    pub round_slots: usize,
+}
+
+impl LaneCharge {
+    /// A whole-round charge (the solo-dispatch shorthand).
+    pub fn full(lane: usize) -> LaneCharge {
+        LaneCharge { lane, slots: 1, round_slots: 1 }
+    }
+
+    /// The fixed-point deficit debit this charge applies.
+    fn debit(&self) -> i64 {
+        let den = self.round_slots.max(1) as i64;
+        // clamp: a misreported over-full round never charges more than
+        // one whole round
+        (CHARGE_UNIT * (self.slots as i64).min(den) / den).max(0)
+    }
 }
 
 struct LaneState {
     qos: LaneQos,
-    /// WDRR round credits remaining this cycle
-    deficit: u64,
+    /// WDRR credits remaining this cycle, in [`CHARGE_UNIT`] fixed
+    /// point. Negative = rider debt (service received beyond credit by
+    /// merged rounds), bounded at two cycles' worth.
+    deficit: i64,
 }
 
 /// Weighted-deficit round-robin + SLO-boost lane scheduler.
@@ -191,9 +242,11 @@ impl QosScheduler {
             }
         }
         if let Some((lane, _)) = urgent {
-            return Some(Pick { lane, urgent: true, replenish: false });
+            return Some(Pick { lane, urgent: true, replenish: 0 });
         }
-        // tier 2: WDRR over round-ready lanes
+        // tier 2: WDRR over round-ready lanes — a lane is pickable when
+        // it can afford a whole round (fractional remainders and rider
+        // debt keep it waiting for a replenish)
         let mut any_ready = false;
         for k in 0..n {
             let i = (self.cursor + k) % n;
@@ -202,41 +255,129 @@ impl QosScheduler {
                 continue;
             }
             any_ready = true;
-            if self.lanes[i].deficit >= 1 {
-                return Some(Pick { lane: i, urgent: false, replenish: false });
+            if self.lanes[i].deficit >= CHARGE_UNIT {
+                return Some(Pick { lane: i, urgent: false, replenish: 0 });
             }
         }
         if any_ready {
-            // every ready lane is out of credit: after a replenish the
-            // first ready lane from the cursor has weight >= 1 credits
-            for k in 0..n {
-                let i = (self.cursor + k) % n;
-                if snap(i).ready {
-                    return Some(Pick { lane: i, urgent: false, replenish: true });
+            // every ready lane is out of credit: replenish cycles until
+            // the first ready lane (from the cursor) that can afford a
+            // whole round. One cycle suffices for any debt-free lane
+            // (weight >= 1 grants >= one round credit); rider debt is
+            // floored at two cycles' worth, so three cycles always
+            // surface a pick.
+            for cycles in 1..=3u8 {
+                for k in 0..n {
+                    let i = (self.cursor + k) % n;
+                    let after = self.lanes[i].deficit
+                        + cycles as i64 * self.lanes[i].qos.weight as i64 * CHARGE_UNIT;
+                    if snap(i).ready && after >= CHARGE_UNIT {
+                        return Some(Pick { lane: i, urgent: false, replenish: cycles });
+                    }
                 }
             }
         }
         None
     }
 
-    /// Charge a dispatched pick: apply the replenish cycle it assumed
-    /// (if any), deduct one round credit, advance the fair cursor.
-    pub fn commit(&mut self, pick: &Pick, snap: &dyn Fn(usize) -> LaneSnapshot) {
+    /// Charge a dispatched round to **every lane it served**: apply the
+    /// replenish cycle the pick assumed (if any), debit each
+    /// [`LaneCharge`] in proportion to the slots that lane consumed,
+    /// advance the fair cursor past the pick.
+    ///
+    /// This is the merged-round fairness fix: a coalesced group round
+    /// serves rider lanes beyond the picked one, and before riders were
+    /// charged, their banked credit bought them *extra* rounds — a
+    /// grouped lane received up to `group_size` times its weighted
+    /// share. A rider served beyond its remaining credit goes negative
+    /// (debt), bounded at two cycles' worth like the credit cap, and
+    /// works the debt off before its next pick.
+    pub fn commit_served(
+        &mut self,
+        pick: &Pick,
+        served: &[LaneCharge],
+        snap: &dyn Fn(usize) -> LaneSnapshot,
+    ) {
         let n = self.lanes.len();
-        if pick.replenish {
+        if pick.replenish > 0 {
             for i in 0..n {
-                let w = self.lanes[i].qos.weight as u64;
-                // drained lanes lose their credit (classic DRR); busy
-                // lanes bank at most two cycles' worth
-                self.lanes[i].deficit = if snap(i).pending == 0 {
-                    0
+                let w = self.lanes[i].qos.weight as i64 * CHARGE_UNIT;
+                // drained lanes lose unspent credit (classic DRR) but
+                // keep rider debt; busy lanes bank at most two cycles.
+                // Applying `replenish` cycles in one shot matches the
+                // cycle-by-cycle form because the cap is monotone.
+                //
+                // `snap` runs AFTER the dispatch being committed, so a
+                // lane this very round served (or picked) may read
+                // pending == 0 merely because the round emptied it —
+                // it was backlogged at selection time and has earned
+                // its replenish; only lanes the round did NOT touch
+                // can have been genuinely idle across the pick.
+                let self_drained =
+                    i == pick.lane || served.iter().any(|c| c.lane == i);
+                self.lanes[i].deficit = if snap(i).pending == 0 && !self_drained {
+                    self.lanes[i].deficit.min(0)
                 } else {
-                    (self.lanes[i].deficit + w).min(w.saturating_mul(2))
+                    (self.lanes[i].deficit + pick.replenish as i64 * w).min(w.saturating_mul(2))
                 };
             }
         }
-        self.lanes[pick.lane].deficit = self.lanes[pick.lane].deficit.saturating_sub(1);
+        for c in served {
+            let w = self.lanes[c.lane].qos.weight as i64 * CHARGE_UNIT;
+            let floor = -w.saturating_mul(2);
+            self.lanes[c.lane].deficit =
+                (self.lanes[c.lane].deficit - c.debit()).max(floor);
+        }
         self.cursor = (pick.lane + 1) % n;
+    }
+
+    /// [`QosScheduler::commit_served`] shorthand charging the picked
+    /// lane one whole round (the solo-dispatch and failed-round form —
+    /// a failed round still burns the pick's credit and advances the
+    /// cursor so a persistently failing lane cannot starve the others).
+    pub fn commit(&mut self, pick: &Pick, snap: &dyn Fn(usize) -> LaneSnapshot) {
+        self.commit_served(pick, &[LaneCharge::full(pick.lane)], snap);
+    }
+
+    /// How long until some lane becomes due — `batch_wait(i)` is lane
+    /// `i`'s batching deadline (its server's `max_wait`). Returns
+    /// `Duration::ZERO` if a lane is due right now, `None` when every
+    /// lane is idle. This is the longest a dispatch thread may nap
+    /// without idling next to a due round.
+    ///
+    /// EVERY backlogged lane contributes its batching deadline and its
+    /// SLO boost window — including lanes that would only be served as
+    /// *riders* of a coalesced group round (a rider's boost window is a
+    /// real dispatch trigger: the rider preempts as SLO-urgent the
+    /// moment its window opens, so napping past it would trade a
+    /// deadline for a sleep). The caller owns lane->group topology;
+    /// this scan is deliberately topology-free so no lane class can be
+    /// accidentally excluded from the nap cap.
+    pub fn next_due_in(
+        &self,
+        snap: &dyn Fn(usize) -> LaneSnapshot,
+        batch_wait: &dyn Fn(usize) -> Duration,
+    ) -> Option<Duration> {
+        if self.select(snap).is_some() {
+            return Some(Duration::ZERO);
+        }
+        let mut best: Option<Duration> = None;
+        for i in 0..self.lanes.len() {
+            let s = snap(i);
+            let Some(wait) = s.oldest_wait else { continue };
+            let batch_due = batch_wait(i).saturating_sub(wait);
+            let slo_due = self.lanes[i]
+                .qos
+                .slo
+                .saturating_sub(self.lane_boost_margin(i))
+                .saturating_sub(wait);
+            let due = batch_due.min(slo_due);
+            best = Some(match best {
+                Some(b) => b.min(due),
+                None => due,
+            });
+        }
+        best
     }
 }
 
@@ -379,5 +520,184 @@ mod tests {
         s.add_lane(LaneQos::default());
         let idle = |_: usize| LaneSnapshot { ready: false, pending: 0, oldest_wait: None };
         assert!(s.select(&idle).is_none());
+    }
+
+    #[test]
+    fn rider_charges_split_service_to_weighted_shares() {
+        // REGRESSION (merged-round fairness): lane 0 standalone with
+        // weight 3; lanes 1 and 2 form a coalesce group with weight 1
+        // each, so every round picked on one of them also serves the
+        // other as a rider. Charging ONLY the pick (the old behavior)
+        // let each member's credit buy a round that served both — the
+        // grouped lanes received double their weighted share. With
+        // commit_served charging every served lane, rounds-served per
+        // lane must track 3:1:1.
+        let snap = backlogged(3);
+        let mut s = QosScheduler::new(QosScheduler::DEFAULT_BOOST_MARGIN);
+        s.add_lane(LaneQos::new(3, Duration::from_secs(3600)));
+        s.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        s.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+
+        let mut served = [0u64; 3];
+        for _ in 0..500 {
+            let pick = s.select(&snap).expect("backlogged lanes must be schedulable");
+            match pick.lane {
+                0 => {
+                    served[0] += 1;
+                    let charge = [LaneCharge { lane: 0, slots: 4, round_slots: 4 }];
+                    s.commit_served(&pick, &charge, &snap);
+                }
+                l => {
+                    // a merged round: the pick AND the other group
+                    // member are served a full round of slots each
+                    let rider = if l == 1 { 2 } else { 1 };
+                    served[l] += 1;
+                    served[rider] += 1;
+                    s.commit_served(
+                        &pick,
+                        &[
+                            LaneCharge { lane: l, slots: 4, round_slots: 4 },
+                            LaneCharge { lane: rider, slots: 4, round_slots: 4 },
+                        ],
+                        &snap,
+                    );
+                }
+            }
+        }
+        let total: u64 = served.iter().sum();
+        let share0 = served[0] as f64 / total as f64;
+        // weights 3:1:1 -> lane 0 should receive 3/5 of served rounds
+        assert!(
+            (share0 - 0.6).abs() < 0.03,
+            "standalone weight-3 lane must hold a 0.6 share, got {share0:.3} ({served:?})"
+        );
+        let drift = (served[1] as f64 - served[2] as f64).abs() / total as f64;
+        assert!(drift < 0.03, "group members with equal weight drifted: {served:?}");
+    }
+
+    #[test]
+    fn partial_rounds_charge_fractionally() {
+        // a lane whose rounds are half-occupied pays half a credit per
+        // round: over a cycle it affords twice the rounds of an
+        // identically weighted full-round lane (equal SLOT shares)
+        let snap = backlogged(2);
+        let mut s = QosScheduler::new(QosScheduler::DEFAULT_BOOST_MARGIN);
+        s.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        s.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        let mut rounds = [0u64; 2];
+        for _ in 0..300 {
+            let pick = s.select(&snap).unwrap();
+            rounds[pick.lane] += 1;
+            let slots = if pick.lane == 0 { 2 } else { 4 }; // lane 0 half-full
+            s.commit_served(
+                &pick,
+                &[LaneCharge { lane: pick.lane, slots, round_slots: 4 }],
+                &snap,
+            );
+        }
+        let ratio = rounds[0] as f64 / rounds[1] as f64;
+        assert!(
+            (ratio - 2.0).abs() < 0.2,
+            "half-occupied rounds must come twice as often, got {ratio:.2} ({rounds:?})"
+        );
+    }
+
+    #[test]
+    fn rider_debt_is_bounded_and_paid_off() {
+        // a zero-credit rider served by merged rounds goes into debt,
+        // but never beyond two cycles' worth — and a debt-laden lane is
+        // not pickable until replenishes cover the debt
+        let snap = backlogged(2);
+        let mut s = QosScheduler::new(QosScheduler::DEFAULT_BOOST_MARGIN);
+        s.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        s.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        // hammer lane 1 with rider charges far beyond its credit
+        for _ in 0..10 {
+            let pick = s.select(&snap).unwrap();
+            s.commit_served(
+                &pick,
+                &[
+                    LaneCharge::full(pick.lane),
+                    LaneCharge { lane: 1, slots: 4, round_slots: 4 },
+                ],
+                &snap,
+            );
+        }
+        // debt is capped at 2 cycles (weight 1), so at most two extra
+        // replenishes are needed before lane 1 is schedulable again;
+        // the WDRR order must recover rather than starve lane 1 forever
+        let order = dispatch_sequence(&mut s, &snap, 12);
+        assert!(
+            order.iter().filter(|&&l| l == 1).count() >= 3,
+            "debt-bounded rider must recover its share, got {order:?}"
+        );
+    }
+
+    #[test]
+    fn self_drained_pick_keeps_its_replenish_credit() {
+        // REGRESSION: commit_served runs after the dispatch, so the
+        // replenish snapshot can see the picked lane's queue EMPTY only
+        // because the committed round drained it. That lane earned its
+        // replenish at selection time — resetting it like an idle lane
+        // and then debiting the round would manufacture spurious debt
+        // for every bursty (drain-to-empty) lane.
+        let mut s = QosScheduler::new(QosScheduler::DEFAULT_BOOST_MARGIN);
+        s.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        s.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        let at_select = |i: usize| LaneSnapshot {
+            ready: i == 0,
+            pending: if i == 0 { 1 } else { 0 },
+            oldest_wait: if i == 0 { Some(Duration::ZERO) } else { None },
+        };
+        let pick = s.select(&at_select).expect("lane 0 is ready");
+        assert_eq!(pick.lane, 0);
+        // the round drains lane 0: the commit-time snapshot is empty
+        let after = |_: usize| LaneSnapshot { ready: false, pending: 0, oldest_wait: None };
+        s.commit(&pick, &after);
+        // a fresh burst arrives: the lane must be dispatchable on ONE
+        // replenish cycle, exactly as before the burst (no carried debt)
+        let pick = s.select(&at_select).expect("new burst is schedulable");
+        assert_eq!(pick.lane, 0);
+        assert_eq!(pick.replenish, 1, "self-drained lane must not carry debt");
+    }
+
+    #[test]
+    fn next_due_in_considers_rider_boost_windows() {
+        // REGRESSION (nap cap): lane 0 is a group member with plenty of
+        // deadline slack; lane 1 — servable only as a rider of lane 0's
+        // group — is near ITS boost window. The nap cap must be bounded
+        // by the rider's window, not just the (far) pick candidates'.
+        let slo = Duration::from_millis(20);
+        let mut s = QosScheduler::new(Duration::from_millis(1));
+        s.add_lane(LaneQos::new(4, Duration::from_secs(3600)));
+        s.add_lane(LaneQos::new(1, slo));
+        let snap = |i: usize| LaneSnapshot {
+            ready: false,
+            pending: 1,
+            oldest_wait: Some(if i == 0 {
+                Duration::from_millis(1)
+            } else {
+                slo - Duration::from_millis(5) // 5ms from the SLO, 4ms from boost
+            }),
+        };
+        let batch = |_: usize| Duration::from_secs(3600);
+        let due = s.next_due_in(&snap, &batch).expect("backlogged lanes have a due time");
+        assert!(
+            due <= Duration::from_millis(4),
+            "nap must not run past the rider's boost window, got {due:?}"
+        );
+        assert!(due > Duration::ZERO, "nothing is due yet");
+
+        // inside the boost window the scheduler is due immediately
+        let snap_hot = |i: usize| LaneSnapshot {
+            ready: false,
+            pending: 1,
+            oldest_wait: Some(if i == 0 { Duration::from_millis(1) } else { slo }),
+        };
+        assert_eq!(s.next_due_in(&snap_hot, &batch), Some(Duration::ZERO));
+
+        // all idle -> no deadline at all
+        let idle = |_: usize| LaneSnapshot { ready: false, pending: 0, oldest_wait: None };
+        assert_eq!(s.next_due_in(&idle, &batch), None);
     }
 }

@@ -35,9 +35,9 @@
 //!   `coordinator::arena::RoundArena` owns the reusable megabatch + pad
 //!   block (packing is one in-place copy per round, zero allocations,
 //!   and windows already zeroed by a previous padded round skip even
-//!   that); `coordinator::arena::ArenaPair` double-buffers it so one
-//!   thread packs round N+1 while round N's staged megabatch is still
-//!   in flight; `coordinator::pool::WorkerPool` owns the persistent
+//!   that); `coordinator::arena::ArenaRing` multi-buffers it so up to
+//!   `depth` threads pack later rounds while round N's staged
+//!   megabatch is still in flight; `coordinator::pool::WorkerPool` owns the persistent
 //!   Concurrent/Hybrid workers (created lazily per `Fleet`, or ONE
 //!   machine-sized pool shared by many fleets via
 //!   `Fleet::load_with_pool`, fed borrowed round-scoped jobs);

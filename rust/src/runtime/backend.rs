@@ -124,8 +124,8 @@ impl PjRtClient {
     /// LAZILY (the H2D copy can be deferred until execution), so
     /// callers must keep `data` live and unmodified until the returned
     /// buffer has been executed. `Bound::stage` encodes that as a
-    /// borrowed `StagedInput<'a>`, and the coordinator's `ArenaPair`
-    /// keeps the packed half locked for the same span.
+    /// borrowed `StagedInput<'a>`, and the coordinator's `ArenaRing`
+    /// keeps the packed slot locked for the same span.
     pub fn buffer_from_host_buffer<T>(
         &self,
         _data: &[T],

@@ -93,10 +93,10 @@ unsafe impl Sync for Bound {}
 /// A device-resident input buffer produced by [`Bound::stage`]. The
 /// lifetime ties it to the host staging slice, so the compiler enforces
 /// that the host memory outlives any pending (possibly deferred) upload.
-/// When the slice comes from a `coordinator::arena::ArenaPair` half,
-/// the borrow runs through that half's `MutexGuard`, which is exactly
-/// the reservation that keeps round N's staged megabatch intact while
-/// round N+1 packs the other half.
+/// When the slice comes from a `coordinator::arena::ArenaRing` slot,
+/// the borrow runs through that slot's guard, which is exactly the
+/// reservation that keeps round N's staged megabatch intact while
+/// later rounds pack the other ring slots.
 pub struct StagedInput<'a> {
     buf: xla::PjRtBuffer,
     _host: std::marker::PhantomData<&'a [f32]>,
@@ -130,12 +130,12 @@ impl Bound {
     /// live and unmodified until the staged input has been executed
     /// ([`Bound::run_staged`]) — the borrow makes the compiler enforce
     /// liveness, and the NETFUSE path additionally holds the lock of
-    /// the `ArenaPair` half it packed across stage + execute, so that
+    /// the `ArenaRing` slot it packed across stage + execute, so that
     /// buffer cannot be *repacked* either. (xla-rs's CPU path copies
     /// synchronously — this is defense-in-depth for other PJRT
-    /// backends.) This stage/run split is what lets the double-buffered
-    /// arena overlap rounds: while one half's `StagedInput` is in
-    /// flight, the other half is free to pack the next round.
+    /// backends.) This stage/run split is what lets the ring overlap
+    /// rounds: while one slot's `StagedInput` is in flight, the other
+    /// slots are free to pack the next rounds.
     pub fn stage<'a>(&self, shape: &[usize], data: &'a [f32]) -> Result<StagedInput<'a>> {
         let art = &self.module.art;
         if shape != art.input_shape.as_slice() {

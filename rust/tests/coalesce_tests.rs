@@ -389,9 +389,12 @@ fn slo_boosted_lane_dispatches_solo() {
 // ---------------------------------------------------------------------------
 
 #[test]
-fn drain_flushes_grouped_lanes_without_merged_rounds() {
-    // drain is the shutdown path: it bypasses readiness AND coalescing
-    // (solo padded rounds per lane), and must still empty every queue
+fn drain_flushes_grouped_lanes_with_merged_rounds() {
+    // REGRESSION (group-aware drain): the shutdown flush bypasses
+    // batching readiness but NOT coalescing — live group members flush
+    // together as ONE merged round, so even the final partial rounds
+    // amortize the merged program's launch (the old drain dispatched
+    // solo per lane, paying one launch per member)
     let a = echo("bert", 2, Duration::ZERO);
     let b = echo("bert", 2, Duration::ZERO);
     let g = echo("bert", 4, Duration::ZERO);
@@ -405,5 +408,111 @@ fn drain_flushes_grouped_lanes_without_merged_rounds() {
     let n = multi.drain(&mut buf).unwrap();
     assert_eq!(n, 2);
     assert_eq!(multi.pending(), 0);
-    assert_eq!(multi.group_stats(group).rounds, 0, "drain dispatches solo");
+    assert_eq!(
+        multi.group_stats(group).rounds,
+        1,
+        "shutdown flush must coalesce live group members"
+    );
+    // responses are intact: both seeded payloads came back
+    let mut ids: Vec<u64> = buf.iter().map(|r| r.id).collect();
+    ids.sort();
+    assert_eq!(ids, vec![1, 2]);
+
+    // a group with a single live member still flushes solo (merging a
+    // one-lane round would only pad the other members' windows)
+    multi.offer(la, seeded_request(3, 0, &[4])).unwrap();
+    buf.clear();
+    assert_eq!(multi.drain(&mut buf).unwrap(), 1);
+    assert_eq!(
+        multi.group_stats(group).rounds,
+        1,
+        "a lone live member must not dispatch a merged round"
+    );
+
+    // an empty multi drains to Ok(0) — the scan simply finds no work
+    buf.clear();
+    assert_eq!(multi.drain(&mut buf).unwrap(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// rider deficit charging: weighted shares under full coalescing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rider_charging_holds_weighted_shares_under_full_coalescing() {
+    // REGRESSION (merged-round fairness): 8 lanes — two standalone
+    // (weights 3 and 1) next to three coalesce groups of two (weight 1
+    // per lane). Saturated, with zero max_wait, every group dispatch is
+    // a merged round ("full coalescing"): the pick's group mate is
+    // always served as a rider. Before riders were charged, each
+    // grouped lane was served on BOTH members' credits — double its
+    // weighted share (measured shares came out ~3:1:2:2:2:2:2:2).
+    // With `commit_served` charging every served lane for the slots it
+    // consumed, per-lane served-request shares must track
+    // 3:1:1:1:1:1:1:1 within 5%. Lanes are single-model (m = 1) so a
+    // round serves exactly one slot per live lane and the accounting
+    // below is exact.
+    let standalone: Vec<EchoExecutor> =
+        (0..2).map(|_| echo("solo", 1, Duration::ZERO)).collect();
+    let grouped: Vec<EchoExecutor> =
+        (0..6).map(|_| echo("bert", 1, Duration::ZERO)).collect();
+    let gexecs: Vec<EchoExecutor> = (0..3).map(|_| echo("bert", 2, Duration::ZERO)).collect();
+
+    let mut multi = MultiServer::new();
+    let weights: Vec<u32> = vec![3, 1, 1, 1, 1, 1, 1, 1];
+    multi.add_lane_qos(&standalone[0], lane_config(), LaneQos::new(weights[0], FAR));
+    multi.add_lane_qos(&standalone[1], lane_config(), LaneQos::new(weights[1], FAR));
+    for (k, exec) in grouped.iter().enumerate() {
+        let l = multi.add_lane_qos(exec, lane_config(), LaneQos::new(weights[2 + k], FAR));
+        assert_eq!(l, 2 + k);
+    }
+    for (gi, gexec) in gexecs.iter().enumerate() {
+        multi.add_coalesce_group(gexec, &[2 + 2 * gi, 3 + 2 * gi]).unwrap();
+    }
+
+    // saturated drive: every lane's queue stays topped up, so
+    // scheduling alone decides who is served
+    let mut id = 0u64;
+    let mut buf = Vec::new();
+    let mut served = vec![0u64; 8];
+    let mut merged_rounds = 0u64;
+    for _ in 0..2000 {
+        for lane in 0..8 {
+            while multi.lane(lane).pending() < 2 {
+                multi.offer(lane, seeded_request(id, 0, &[4])).unwrap();
+                id += 1;
+            }
+        }
+        let d = multi.dispatch_next(&mut buf).unwrap().expect("saturated lanes dispatch");
+        buf.clear();
+        // solo round: one slot on the picked lane; merged round: one
+        // slot per member (every lane is saturated, so all members are
+        // live and fully occupied)
+        if d.lanes_served == 1 {
+            assert_eq!(d.responses, 1);
+            served[d.lane] += 1;
+        } else {
+            merged_rounds += 1;
+            let g = multi.lane_group(d.lane).expect("merged pick is grouped");
+            assert_eq!(d.responses, multi.group_members(g).len());
+            for &l in multi.group_members(g) {
+                served[l] += 1;
+            }
+        }
+    }
+    assert!(
+        merged_rounds > 500,
+        "saturated grouped lanes must dispatch merged rounds, got {merged_rounds}"
+    );
+
+    let total: f64 = served.iter().sum::<u64>() as f64;
+    let weight_sum: f64 = weights.iter().sum::<u32>() as f64;
+    for lane in 0..8 {
+        let got = served[lane] as f64 / total;
+        let want = weights[lane] as f64 / weight_sum;
+        assert!(
+            (got - want).abs() / want <= 0.05,
+            "lane {lane}: share {got:.4}, want {want:.4} (weights {weights:?}, served {served:?})"
+        );
+    }
 }

@@ -1,0 +1,295 @@
+//! `ParallelDispatcher` + `run_dispatch_parallel`: partition topology,
+//! routing fidelity vs the single-thread dispatcher, and the router's
+//! backpressure/rejection semantics. Everything is artifact-free
+//! (`EchoExecutor` lanes) — the throughput side of parallel dispatch is
+//! gated by `benches/parallel_dispatch.rs`.
+
+mod common;
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use common::seeded_request;
+use netfuse::coordinator::mock::EchoExecutor;
+use netfuse::coordinator::multi::{GroupSpec, LaneSpec, MultiServer, ParallelDispatcher};
+use netfuse::coordinator::server::ServerConfig;
+use netfuse::coordinator::StrategyKind;
+use netfuse::ingress::{
+    run_dispatch, run_dispatch_parallel, Envelope, Frame, FrameQueue, IngressBridge, LaneQos,
+    RejectCode,
+};
+use netfuse::util::rng::Rng;
+
+const FAR: Duration = Duration::from_secs(3600);
+
+fn lane_config() -> ServerConfig {
+    ServerConfig {
+        strategy: StrategyKind::NetFuse,
+        queue_cap: 4096,
+        max_wait: Duration::ZERO,
+    }
+}
+
+/// The standard 5-lane topology: group {0,1} (bert), standalone 2
+/// (solo), group {3,4} (gpt). Executors are built by the caller so the
+/// dispatcher's borrows have something to point at.
+struct Execs {
+    lanes: Vec<EchoExecutor>,
+    groups: Vec<EchoExecutor>,
+}
+
+fn lane_exec(name: &str, m: usize, cost: Duration) -> EchoExecutor {
+    common::echo(name, m, cost)
+}
+
+fn build_execs(m: usize, cost: Duration) -> Execs {
+    Execs {
+        lanes: vec![
+            lane_exec("bert", m, cost),
+            lane_exec("bert", m, cost),
+            lane_exec("solo", m, cost),
+            lane_exec("gpt", m, cost),
+            lane_exec("gpt", m, cost),
+        ],
+        groups: vec![lane_exec("bert", 2 * m, cost), lane_exec("gpt", 2 * m, cost)],
+    }
+}
+
+fn build_dispatcher<'f>(e: &'f Execs) -> ParallelDispatcher<'f, EchoExecutor> {
+    let lanes = e
+        .lanes
+        .iter()
+        .map(|x| LaneSpec::new(x, lane_config(), LaneQos::new(1, FAR)))
+        .collect();
+    let groups = vec![
+        GroupSpec::new(&e.groups[0], &[0, 1]),
+        GroupSpec::new(&e.groups[1], &[3, 4]),
+    ];
+    ParallelDispatcher::new(lanes, groups).unwrap()
+}
+
+/// The equivalent single-thread `MultiServer` (the sequential oracle).
+fn build_single<'f>(e: &'f Execs) -> MultiServer<'f, EchoExecutor> {
+    let mut multi = MultiServer::new();
+    for x in &e.lanes {
+        multi.add_lane_qos(x, lane_config(), LaneQos::new(1, FAR));
+    }
+    multi.add_coalesce_group(&e.groups[0], &[0, 1]).unwrap();
+    multi.add_coalesce_group(&e.groups[1], &[3, 4]).unwrap();
+    multi
+}
+
+#[test]
+fn partitions_lanes_into_groups_then_standalones() {
+    let e = build_execs(2, Duration::ZERO);
+    let d = build_dispatcher(&e);
+    assert_eq!(d.parts(), 3, "two groups + one standalone lane");
+    assert_eq!(d.lanes(), 5);
+
+    let topo = d.topology();
+    assert_eq!(topo.parts(), 3);
+    // group partitions first (in registration order), standalone after
+    assert_eq!(topo.part_lanes(0), &[0, 1]);
+    assert_eq!(topo.part_lanes(1), &[3, 4]);
+    assert_eq!(topo.part_lanes(2), &[2]);
+    // locate/global are inverses over every lane
+    for lane in 0..5 {
+        let (p, local) = topo.locate(lane).unwrap();
+        assert_eq!(topo.global(p, local), lane);
+    }
+    assert!(topo.locate(5).is_none());
+
+    // each group partition carries its coalesce group
+    assert_eq!(d.part(0).coalesce_groups(), 1);
+    assert_eq!(d.part(1).coalesce_groups(), 1);
+    assert_eq!(d.part(2).coalesce_groups(), 0);
+    assert_eq!(d.part(0).lanes(), 2);
+    assert_eq!(d.part(2).lanes(), 1);
+}
+
+#[test]
+fn rejects_bad_partitions() {
+    let e = build_execs(2, Duration::ZERO);
+    let lanes = || -> Vec<LaneSpec<'_, EchoExecutor>> {
+        e.lanes
+            .iter()
+            .map(|x| LaneSpec::new(x, lane_config(), LaneQos::new(1, FAR)))
+            .collect()
+    };
+    // out-of-range member
+    let err = ParallelDispatcher::new(lanes(), vec![GroupSpec::new(&e.groups[0], &[0, 9])])
+        .unwrap_err();
+    assert!(err.to_string().contains("no lane 9"), "got: {err}");
+    // a lane in two groups
+    let err = ParallelDispatcher::new(
+        lanes(),
+        vec![
+            GroupSpec::new(&e.groups[0], &[0, 1]),
+            GroupSpec::new(&e.groups[1], &[1, 3]),
+        ],
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("more than one"), "got: {err}");
+    // coalesce-key mismatch surfaces from group validation
+    let err = ParallelDispatcher::new(lanes(), vec![GroupSpec::new(&e.groups[0], &[0, 3])])
+        .unwrap_err();
+    assert!(err.to_string().contains("cannot coalesce"), "got: {err}");
+    // no lanes at all
+    assert!(ParallelDispatcher::<EchoExecutor>::new(Vec::new(), Vec::new()).is_err());
+}
+
+#[test]
+fn closed_loop_offer_routes_globally_and_drains() {
+    let e = build_execs(2, Duration::ZERO);
+    let mut d = build_dispatcher(&e);
+    // one request per (lane, model)
+    let mut id = 0u64;
+    for lane in 0..5 {
+        for model in 0..2 {
+            d.offer(lane, seeded_request(id, model, &[4])).unwrap();
+            id += 1;
+        }
+    }
+    assert_eq!(d.pending(), 10);
+    assert!(d.offer(7, seeded_request(99, 0, &[4])).is_err());
+    let mut buf = Vec::new();
+    assert_eq!(d.drain(&mut buf).unwrap(), 10);
+    assert_eq!(d.pending(), 0);
+    // the group partitions flushed their members as merged rounds
+    assert_eq!(d.part(0).group_stats(0).rounds, 1);
+    assert_eq!(d.part(1).group_stats(0).rounds, 1);
+}
+
+/// Run `arrivals` through the full ingress path and collect per-
+/// `(lane, model)` FIFO response streams plus the stats. `parallel`
+/// selects run_dispatch_parallel vs the single-thread loop.
+type ModelStreams = HashMap<(usize, u32), Vec<(u64, Vec<f32>)>>;
+
+fn serve(
+    e: &Execs,
+    arrivals: &[(usize, usize, u64)],
+    parallel: bool,
+) -> (ModelStreams, netfuse::ingress::IngressStats) {
+    let bridge = IngressBridge::new(arrivals.len().max(1));
+    let replies: Vec<FrameQueue> = (0..e.lanes.len()).map(|_| FrameQueue::new()).collect();
+    // submit everything up front, then close: both serving paths see
+    // the identical arrival sequence
+    for &(lane, model, id) in arrivals {
+        let env = Envelope {
+            lane,
+            client_id: id,
+            req: seeded_request(id, model, &[4]),
+            reply: replies[lane].clone(),
+        };
+        assert!(bridge.submit(env).is_ok(), "bridge sized for all arrivals");
+    }
+    bridge.close();
+
+    let stats = if parallel {
+        let mut d = build_dispatcher(e);
+        run_dispatch_parallel(&mut d, &bridge, arrivals.len().max(1)).unwrap()
+    } else {
+        let mut multi = build_single(e);
+        run_dispatch(&mut multi, &bridge).unwrap()
+    };
+
+    let mut streams: ModelStreams = HashMap::new();
+    for (lane, q) in replies.iter().enumerate() {
+        q.close();
+        while let Some(f) = q.try_pop() {
+            match f {
+                Frame::Response { id, lane: wire_lane, model_idx, data, .. } => {
+                    assert_eq!(wire_lane as usize, lane, "response quotes the wrong lane");
+                    streams.entry((lane, model_idx)).or_default().push((id, data));
+                }
+                other => panic!("unexpected frame on lane {lane}: {other:?}"),
+            }
+        }
+    }
+    (streams, stats)
+}
+
+#[test]
+fn parallel_routing_matches_the_single_thread_dispatcher() {
+    // the sequential-oracle parity check: same seeded arrivals through
+    // run_dispatch (one thread) and run_dispatch_parallel (router + 3
+    // dispatch threads) must yield byte-identical per-(lane, model)
+    // FIFO response streams — no misrouting, reordering, or corruption
+    // across partition boundaries
+    let e = build_execs(2, Duration::ZERO);
+    let mut rng = Rng::new(0x9A11E1);
+    let arrivals: Vec<(usize, usize, u64)> = (0..600)
+        .map(|id| (rng.usize_below(5), rng.usize_below(2), id as u64))
+        .collect();
+
+    let (want, seq_stats) = serve(&e, &arrivals, false);
+    let (got, par_stats) = serve(&e, &arrivals, true);
+
+    assert_eq!(seq_stats.responses, arrivals.len() as u64);
+    assert_eq!(par_stats.responses, arrivals.len() as u64);
+    assert_eq!(par_stats.admitted, arrivals.len() as u64);
+    assert_eq!(par_stats.no_lane + par_stats.lane_busy + par_stats.group_busy, 0);
+
+    assert_eq!(want.len(), got.len(), "stream key sets diverged");
+    for (key, w) in &want {
+        let g = got.get(key).unwrap_or_else(|| panic!("missing stream {key:?}"));
+        assert_eq!(w, g, "stream {key:?} diverged between sequential and parallel");
+    }
+    // the grouped partitions actually coalesced while running parallel
+    assert!(par_stats.coalesced_rounds > 0, "parallel run never merged a round");
+}
+
+#[test]
+fn router_answers_unknown_lanes_and_full_groups_in_band() {
+    let e = build_execs(2, Duration::from_millis(2));
+    let total = 40usize;
+    let bridge = IngressBridge::new(total + 1);
+    let reply = FrameQueue::new();
+    // one envelope to a lane that does not exist...
+    assert!(bridge
+        .submit(Envelope {
+            lane: 9,
+            client_id: 1_000_000,
+            req: seeded_request(1_000_000, 0, &[4]),
+            reply: reply.clone(),
+        })
+        .is_ok());
+    // ...and a burst at one slow partition, with a sub-bridge of
+    // capacity 1 so the router must shed load
+    for id in 0..total as u64 {
+        assert!(bridge
+            .submit(Envelope {
+                lane: 2,
+                client_id: id,
+                req: seeded_request(id, 0, &[4]),
+                reply: reply.clone(),
+            })
+            .is_ok());
+    }
+    bridge.close();
+    let mut d = build_dispatcher(&e);
+    let stats = run_dispatch_parallel(&mut d, &bridge, 1).unwrap();
+
+    reply.close();
+    let (mut responses, mut busy, mut no_lane) = (0u64, 0u64, 0u64);
+    while let Some(f) = reply.try_pop() {
+        match f {
+            Frame::Response { .. } => responses += 1,
+            Frame::Reject { code: RejectCode::Busy, .. } => busy += 1,
+            Frame::Reject { code: RejectCode::NoLane, id, .. } => {
+                assert_eq!(id, 1_000_000);
+                no_lane += 1;
+            }
+            other => panic!("unexpected frame: {other:?}"),
+        }
+    }
+    assert_eq!(no_lane, 1, "unknown lane must get exactly one NoLane frame");
+    assert_eq!(
+        responses + busy,
+        total as u64,
+        "every arrival needs exactly one outcome frame (got {responses} + {busy})"
+    );
+    assert_eq!(stats.no_lane, 1);
+    assert_eq!(stats.group_busy, busy);
+    assert_eq!(stats.responses, responses);
+}

@@ -7,7 +7,7 @@
 
 use std::collections::BTreeMap;
 
-use netfuse::coordinator::arena::{ArenaPair, Layout, RoundArena};
+use netfuse::coordinator::arena::{ArenaRing, Layout, RoundArena};
 use netfuse::coordinator::pool::WorkerPool;
 use netfuse::fuse;
 use netfuse::graph::{Attr, Graph, MergeDim, Node};
@@ -363,27 +363,40 @@ fn prop_pad_skip_matches_reference_across_rounds() {
 }
 
 #[test]
-fn prop_pack_next_round_never_corrupts_inflight_round() {
-    // the double-buffer soundness property: packing round N+1 (other
-    // thread, other half) while round N's half is still reserved must
-    // leave round N's staged megabatch byte-identical
-    check("arena-pair-overlap", 60, gen_round, |c| {
+fn prop_pack_later_rounds_never_corrupt_inflight_round() {
+    // the ring soundness property: packing rounds N+1..N+depth-1 (other
+    // threads, other ring slots) while round N's slot is still reserved
+    // must leave round N's staged megabatch byte-identical, for every
+    // overlap distance k < depth
+    check("arena-ring-overlap", 60, gen_round, |c| {
         let m = c.xs.len();
-        let pair = ArenaPair::new(c.layout, m, &c.shape).map_err(|e| e.to_string())?;
+        // depth varies per case so the property covers rings beyond the
+        // old double-buffered pair
+        let depth = 2 + (m % 3); // 2..=4
+        let ring =
+            ArenaRing::new(c.layout, m, &c.shape, depth).map_err(|e| e.to_string())?;
 
-        // round N: reserve a half, pack it, snapshot the staged bytes
-        let mut inflight = pair.acquire();
+        // round N: reserve a slot, pack it, snapshot the staged bytes
+        let mut inflight = ring.acquire();
         inflight
             .pack_with(&|i| if c.occupied[i] { Some(&c.xs[i]) } else { None })
             .map_err(|e| e.to_string())?;
         let staged: Vec<f32> = inflight.merged_data().to_vec();
 
-        // round N+1 packs concurrently from another thread while round
-        // N is still "executing" (its half is still locked)
+        // rounds N+1..N+depth-1 pack concurrently from other threads
+        // while round N is still "executing" (its slot stays locked);
+        // each later round HOLDS its slot too, so all depth-1 free
+        // slots end up reserved at once
         std::thread::scope(|s| {
             s.spawn(|| {
-                let mut next = pair.acquire();
-                next.pack_with(&|i| Some(&c.xs[(i + 1) % m])).unwrap();
+                let mut held = Vec::new();
+                for k in 1..depth {
+                    let mut next = ring.try_acquire().expect("k < depth slots reserved");
+                    next.pack_with(&|i| Some(&c.xs[(i + k) % m])).unwrap();
+                    held.push(next);
+                }
+                // with round N's slot also held the ring must be full
+                assert!(ring.try_acquire().is_none(), "ring over-committed a slot");
             })
             .join()
             .unwrap();
@@ -391,6 +404,45 @@ fn prop_pack_next_round_never_corrupts_inflight_round() {
 
         if inflight.merged_data() != staged.as_slice() {
             return Err("overlapped pack corrupted the in-flight round".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_concurrent_ring_reservations_never_alias() {
+    // R threads acquiring from an ArenaRing(depth = R) at the same time
+    // must each get a distinct slot (distinct megabatch buffers); the
+    // rendezvous barrier guarantees all R reservations are live at once
+    check("arena-ring-no-alias", 40, gen_round, |c| {
+        let m = c.xs.len();
+        let depth = 2 + (m % 3); // 2..=4 concurrent reservations
+        let ring =
+            ArenaRing::new(c.layout, m, &c.shape, depth).map_err(|e| e.to_string())?;
+        let barrier = std::sync::Barrier::new(depth);
+        let ptrs = std::sync::Mutex::new(Vec::new());
+
+        std::thread::scope(|s| {
+            for t in 0..depth {
+                let (ring, barrier, ptrs, xs) = (&ring, &barrier, &ptrs, &c.xs);
+                s.spawn(move || {
+                    let mut slot = ring.acquire();
+                    slot.pack_with(&|i| Some(&xs[(i + t) % m])).unwrap();
+                    ptrs.lock().unwrap().push(slot.merged_data().as_ptr() as usize);
+                    // hold the reservation until every thread has one
+                    barrier.wait();
+                });
+            }
+        });
+
+        let mut ptrs = ptrs.into_inner().unwrap();
+        ptrs.sort_unstable();
+        ptrs.dedup();
+        if ptrs.len() != depth {
+            return Err(format!(
+                "{depth} concurrent reservations shared a slot ({} distinct buffers)",
+                ptrs.len()
+            ));
         }
         Ok(())
     });
