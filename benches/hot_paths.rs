@@ -1,0 +1,284 @@
+//! Bench: the SIMD round hot paths vs their strict scalar references,
+//! plus sharded vs single-mutex metrics recording under N threads.
+//!
+//! Three parts, all offline:
+//!
+//! 1. **Pack / gather** — an 8-instance `[16, 256]` Channel megabatch
+//!    (128 KiB staging buffer, the `RoundArena::pack_with` shape).
+//!    Production `pack_full` (which scatters through
+//!    `util::simd::scatter_rows`) races the strict per-element
+//!    `simd::reference` kernels; same for the unpack-direction
+//!    `gather_rows`. Gate (detected backends only): >= 1.5x the scalar
+//!    reference in ns/slot. Under `RUST_PALLAS_FORCE_SCALAR=1` (or a
+//!    scalar-only arch) the run is parity-only.
+//! 2. **Frame codec** — the 4096-f32 payload encode/decode primitives
+//!    (`extend_f32_le` / `extend_le_f32`) behind `Frame::encode_into`
+//!    and `Frame::decode_payload`, vs the per-element reference; plus
+//!    an untimed full-frame roundtrip equality check.
+//! 3. **Metrics recording** — 4 threads hammering `record_request` +
+//!    `record_round` through one shared `Mutex<MetricsCore>` vs a
+//!    4-shard `Sharded<MetricsCore>` (one private shard per thread).
+//!    Gate (every mode): sharded recording >= 2x the single-mutex
+//!    throughput, and the merged read is exact (completed == total).
+//!
+//! Byte-parity asserts run in EVERY mode — the speedup gates never
+//! trade correctness. Results go to `BENCH_hot_paths.json`.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use netfuse::coordinator::arena::{Layout, RoundArena};
+use netfuse::coordinator::metrics::MetricsCore;
+use netfuse::ingress::Frame;
+use netfuse::tensor::Tensor;
+use netfuse::util::bench::report::BenchReport;
+use netfuse::util::bench::Bench;
+use netfuse::util::json::Json;
+use netfuse::util::rng::Rng;
+use netfuse::util::shard::Sharded;
+use netfuse::util::simd::{self, reference, Backend, Windows};
+
+/// megabatch geometry: M instance windows of [OUTER, INNER] each
+const M: usize = 8;
+const OUTER: usize = 16;
+const INNER: usize = 256;
+const SLOT: usize = OUTER * INNER;
+/// codec payload length (one Response tensor of shape [1, PAYLOAD])
+const PAYLOAD: usize = 4096;
+/// recording threads (matches the dispatch-thread count of the
+/// parallel_dispatch bench topology)
+const THREADS: usize = 4;
+
+fn slot_window(i: usize) -> Windows {
+    Windows {
+        rows: OUTER,
+        row_len: INNER,
+        dst_offset: i * INNER,
+        dst_stride: M * INNER,
+        src_offset: 0,
+        src_stride: INNER,
+    }
+}
+
+fn seeded_inputs(rng: &mut Rng) -> Vec<Tensor> {
+    (0..M)
+        .map(|_| {
+            let data: Vec<f32> = (0..SLOT).map(|_| rng.f32_range(-4.0, 4.0)).collect();
+            Tensor::new(vec![OUTER, INNER], data).expect("input tensor")
+        })
+        .collect()
+}
+
+/// ns per instance window for a whole-megabatch op (M windows/iter).
+fn ns_per_slot(mean_s: f64, slots_per_iter: usize) -> f64 {
+    mean_s / slots_per_iter as f64 * 1e9
+}
+
+/// Best-of-3 wall time for one multi-threaded recording run of
+/// `total` records spread over [`THREADS`] threads.
+fn record_run(total: u64, one_thread: impl FnMut(usize, u64) + Copy + Send) -> f64 {
+    let per = total / THREADS as u64;
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                s.spawn(move || one_thread(t, per));
+            }
+        });
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let backend = simd::backend();
+    println!(
+        "# hot_paths: SIMD pack/gather/codec + sharded metrics (backend {backend:?}){}\n",
+        if smoke { " (SMOKE)" } else { "" }
+    );
+    let mut b = if smoke { Bench::quick() } else { Bench::new() };
+    let mut rng = Rng::new(0x51D_D15B);
+
+    // --- part 1: megabatch pack + gather -------------------------------
+    let inputs = seeded_inputs(&mut rng);
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    let mut arena = RoundArena::new(Layout::Channel, M, &[OUTER, INNER])?;
+    let pack = b.run("pack: RoundArena::pack_full (simd scatter)", || {
+        arena.pack_full(&refs).expect("pack");
+    });
+    let mut merged_ref = vec![0.0f32; M * SLOT];
+    let pack_ref = b.run("pack: reference::copy_windows per slot", || {
+        for (i, x) in inputs.iter().enumerate() {
+            reference::copy_windows(&mut merged_ref, x.data(), slot_window(i));
+        }
+    });
+    assert_eq!(
+        arena.merged().data(),
+        &merged_ref[..],
+        "simd pack must be byte-identical to the reference pack"
+    );
+
+    let merged = arena.merged().data();
+    let mut out = vec![0.0f32; SLOT];
+    let gather = b.run("gather: simd::gather_rows per slot", || {
+        for i in 0..M {
+            simd::gather_rows(&mut out, merged, i * INNER, M * INNER, OUTER, INNER);
+            std::hint::black_box(out[0]);
+        }
+    });
+    let mut out_ref = vec![0.0f32; SLOT];
+    let gather_ref = b.run("gather: reference::copy_windows per slot", || {
+        for i in 0..M {
+            let w = Windows {
+                rows: OUTER,
+                row_len: INNER,
+                dst_offset: 0,
+                dst_stride: INNER,
+                src_offset: i * INNER,
+                src_stride: M * INNER,
+            };
+            reference::copy_windows(&mut out_ref, merged, w);
+            std::hint::black_box(out_ref[0]);
+        }
+    });
+    assert_eq!(out, out_ref, "simd gather must be byte-identical to the reference gather");
+
+    // --- part 2: frame payload codec -----------------------------------
+    let payload: Vec<f32> = (0..PAYLOAD).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let mut enc = Vec::with_capacity(PAYLOAD * 4);
+    let encode = b.run("encode: simd::extend_f32_le 4096 f32", || {
+        enc.clear();
+        simd::extend_f32_le(&mut enc, &payload);
+    });
+    let mut enc_ref = Vec::with_capacity(PAYLOAD * 4);
+    let encode_ref = b.run("encode: reference per-element to_le_bytes", || {
+        enc_ref.clear();
+        reference::extend_f32_le(&mut enc_ref, &payload);
+    });
+    assert_eq!(enc, enc_ref, "simd encode must be byte-identical to the reference");
+
+    let mut dec = Vec::with_capacity(PAYLOAD);
+    let decode = b.run("decode: simd::extend_le_f32 4096 f32", || {
+        dec.clear();
+        simd::extend_le_f32(&mut dec, &enc);
+    });
+    let mut dec_ref = Vec::with_capacity(PAYLOAD);
+    let decode_ref = b.run("decode: reference per-chunk from_le_bytes", || {
+        dec_ref.clear();
+        reference::extend_le_f32(&mut dec_ref, &enc_ref);
+    });
+    assert_eq!(dec, dec_ref, "simd decode must be byte-identical to the reference");
+    assert_eq!(dec, payload, "codec roundtrip must be the identity");
+
+    // untimed: the full frame path built on those primitives roundtrips
+    let frame = Frame::Response {
+        id: 7,
+        lane: 1,
+        model_idx: 0,
+        latency: 0.0125,
+        shape: vec![1, PAYLOAD],
+        data: payload.clone(),
+    };
+    let mut wire = Vec::new();
+    frame.encode_into(&mut wire);
+    assert_eq!(
+        Frame::decode_payload(&wire[4..])?,
+        frame,
+        "frame encode/decode roundtrip through the simd codec"
+    );
+
+    // --- part 3: sharded vs single-mutex recording ---------------------
+    let total: u64 = if smoke { 50_000 } else { 400_000 };
+    let slo = Some(0.010);
+
+    let mutexed = Arc::new(Mutex::new(MetricsCore::default()));
+    let mutex_s = record_run(total, |t, per| {
+        for i in 0..per {
+            let lat = 0.001 + (t as u64 * per + i) as f64 * 1e-8;
+            let mut m = mutexed.lock().unwrap();
+            m.record_request(lat, slo);
+            m.record_round(lat);
+        }
+    });
+    assert_eq!(mutexed.lock().unwrap().completed_requests % total, 0);
+
+    let sharded: Arc<Sharded<MetricsCore>> = Arc::new(Sharded::new(THREADS));
+    let shard_s = {
+        let sharded = &sharded;
+        record_run(total, move |t, per| {
+            let h = Sharded::register(sharded);
+            for i in 0..per {
+                let lat = 0.001 + (t as u64 * per + i) as f64 * 1e-8;
+                let mut m = h.lock();
+                m.record_request(lat, slo);
+                m.record_round(lat);
+            }
+        })
+    };
+    // merge-on-read exactness: the last of the 3 runs recorded `total`
+    // more requests; the merged view must account for every one
+    let agg = sharded.read();
+    assert_eq!(agg.completed_requests, 3 * total, "sharded merge lost records");
+
+    let mutex_rps = total as f64 / mutex_s;
+    let shard_rps = total as f64 / shard_s;
+    let record_ratio = shard_rps / mutex_rps.max(1e-9);
+    println!(
+        "\nrecord x{THREADS}: mutex {mutex_rps:.0}/s, sharded {shard_rps:.0}/s \
+         ({record_ratio:.2}x)"
+    );
+
+    // --- BENCH_hot_paths.json ------------------------------------------
+    let pack_ratio = pack_ref.mean / pack.mean.max(1e-12);
+    let gather_ratio = gather_ref.mean / gather.mean.max(1e-12);
+    let encode_ratio = encode_ref.mean / encode.mean.max(1e-12);
+    let decode_ratio = decode_ref.mean / decode.mean.max(1e-12);
+    println!(
+        "speedups vs scalar reference: pack {pack_ratio:.2}x, gather {gather_ratio:.2}x, \
+         encode {encode_ratio:.2}x, decode {decode_ratio:.2}x"
+    );
+
+    let mut rep = BenchReport::new("hot_paths", smoke);
+    rep.set("backend", Json::Str(format!("{backend:?}")))
+        .num("threads", THREADS as f64)
+        .num("pack_ratio", pack_ratio)
+        .num("gather_ratio", gather_ratio)
+        .num("encode_ratio", encode_ratio)
+        .num("decode_ratio", decode_ratio)
+        .num("record_ratio", record_ratio)
+        .num("record_mutex_per_s", mutex_rps)
+        .num("record_sharded_per_s", shard_rps)
+        .ns_per_slot("pack_simd", ns_per_slot(pack.mean, M))
+        .ns_per_slot("pack_reference", ns_per_slot(pack_ref.mean, M))
+        .ns_per_slot("gather_simd", ns_per_slot(gather.mean, M))
+        .ns_per_slot("gather_reference", ns_per_slot(gather_ref.mean, M))
+        .ns_per_slot("encode_simd", ns_per_slot(encode.mean, 1))
+        .ns_per_slot("encode_reference", ns_per_slot(encode_ref.mean, 1))
+        .ns_per_slot("decode_simd", ns_per_slot(decode.mean, 1))
+        .ns_per_slot("decode_reference", ns_per_slot(decode_ref.mean, 1));
+    rep.write()?;
+
+    // speed gates run AFTER the report so a failing run leaves numbers
+    if backend == Backend::Scalar {
+        println!("scalar backend pinned: parity gates only, speedup gates skipped");
+    } else {
+        assert!(
+            pack_ratio >= 1.5,
+            "simd pack must beat the scalar reference >= 1.5x, got {pack_ratio:.2}x"
+        );
+        assert!(
+            gather_ratio >= 1.5,
+            "simd gather must beat the scalar reference >= 1.5x, got {gather_ratio:.2}x"
+        );
+    }
+    assert!(
+        record_ratio >= 2.0,
+        "sharded recording must beat the single mutex >= 2x at {THREADS} threads, \
+         got {record_ratio:.2}x"
+    );
+    Ok(())
+}

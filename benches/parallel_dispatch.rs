@@ -35,6 +35,7 @@ use anyhow::Result;
 use std::sync::Arc;
 
 use netfuse::coordinator::arena::{ArenaRing, Layout};
+use netfuse::coordinator::metrics::MetricsHub;
 use netfuse::coordinator::multi::{GroupSpec, LaneSpec, MultiServer, ParallelDispatcher};
 use netfuse::coordinator::server::ServerConfig;
 use netfuse::coordinator::service::RoundExecutor;
@@ -44,6 +45,7 @@ use netfuse::ingress::{
     IngressStats, LaneQos,
 };
 use netfuse::tensor::Tensor;
+use netfuse::util::bench::report::BenchReport;
 use netfuse::util::json::Json;
 use netfuse::util::rng::Rng;
 
@@ -310,7 +312,20 @@ fn oracle_run(
     let (bridge, replies) = load_bridge(arrivals, execs.lane_count());
     let stats = if parallel {
         let mut d = execs.dispatcher()?;
-        run_dispatch_parallel(&mut d, &bridge, arrivals.len().max(1))?
+        // sharded lane metrics ride along with the oracle run: the
+        // merged hub view must account for every served request, so
+        // "byte-identical to the sequential oracle" is checked WITH the
+        // sharded recording enabled, not around it
+        let hub = MetricsHub::new(d.parts());
+        d.attach_metrics_hub(&hub);
+        let stats = run_dispatch_parallel(&mut d, &bridge, arrivals.len().max(1))?;
+        anyhow::ensure!(
+            hub.read().completed_requests == stats.responses,
+            "sharded metrics saw {} completions but ingress routed {} responses",
+            hub.read().completed_requests,
+            stats.responses
+        );
+        stats
     } else {
         let mut multi = execs.single()?;
         run_dispatch(&mut multi, &bridge)?
@@ -418,16 +433,13 @@ fn main() -> Result<()> {
     oracle_obj.insert("merged_rounds_par".to_string(), num(par_merged as f64));
     oracle_obj.insert("routing_diffs".to_string(), num(diffs as f64));
 
-    let mut root = BTreeMap::new();
-    root.insert("bench".to_string(), Json::Str("parallel_dispatch".to_string()));
-    root.insert("smoke".to_string(), Json::Bool(smoke));
-    root.insert("models_per_lane".to_string(), num(M as f64));
-    root.insert("saturated".to_string(), Json::Obj(sat_obj));
-    root.insert("oracle".to_string(), Json::Obj(oracle_obj));
-
-    let path = "BENCH_parallel_dispatch.json";
-    std::fs::write(path, Json::Obj(root).dump())?;
-    println!("report written to {path}");
+    let mut rep = BenchReport::new("parallel_dispatch", smoke);
+    rep.num("models_per_lane", M as f64)
+        .set("saturated", Json::Obj(sat_obj))
+        .set("oracle", Json::Obj(oracle_obj))
+        .ns_per_slot("dispatch_single", single.elapsed / single.served.max(1) as f64 * 1e9)
+        .ns_per_slot("dispatch_parallel", parallel.elapsed / parallel.served.max(1) as f64 * 1e9);
+    rep.write()?;
 
     // correctness gates run in every mode (written AFTER the report so a
     // failing run still leaves its numbers behind)

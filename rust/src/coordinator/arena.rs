@@ -3,13 +3,16 @@
 //!
 //! The paper's merged program amortizes per-model overhead on the
 //! device; the arena does the same for the host side of every round.
-//! All round-lifetime storage — the merged input tensor and the zero pad
-//! block — is allocated once (at `Fleet::load`) and reused forever:
-//! [`RoundArena::pack_with`] writes each instance's payload directly
-//! into its channel/batch window of the megabatch, so the steady-state
-//! request path performs exactly one host copy (queue slot → megabatch)
-//! and zero heap allocations. `benches/round_pipeline.rs` asserts the
-//! zero-allocation property with a counting allocator.
+//! All round-lifetime storage — the merged input tensor — is allocated
+//! once (at `Fleet::load`) and reused forever: [`RoundArena::pack_with`]
+//! writes each instance's payload directly into its channel/batch
+//! window of the megabatch through the feature-detected wide kernels
+//! (`util::simd::scatter_rows`; absent slots re-zero their windows in
+//! place with `fill_rows_zero`, no pad source block needed), so the
+//! steady-state request path performs exactly one host copy (queue slot
+//! → megabatch) and zero heap allocations. `benches/round_pipeline.rs`
+//! asserts the zero-allocation property with a counting allocator and
+//! `benches/hot_paths.rs` the per-slot pack cost.
 //!
 //! The arena also tracks per-slot occupancy across rounds: an absent
 //! slot whose window is already zero from a previous padded round skips
@@ -50,6 +53,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
+use crate::util::simd;
 
 /// How M per-instance inputs pack into the merged input (paper §3.1):
 /// conv nets concatenate on the channel axis, matmul/sequence nets stack
@@ -155,17 +159,15 @@ pub struct RoundArena {
     request_shape: Vec<usize>,
     /// the megabatch: merged input tensor, written in place every round
     merged: Tensor,
-    /// zero block substituted for absent slots in a padded round
-    pad: Vec<f32>,
     /// number of outer blocks (`bs` for channel packing, 1 for batch)
     outer: usize,
     /// contiguous run per (outer block, instance)
     inner: usize,
-    /// whether slot `i`'s window currently holds payload data (vs the
-    /// zero pad). A slot that stays absent across rounds keeps its
-    /// already-zero window, so the pad copy is skipped.
+    /// whether slot `i`'s window currently holds payload data (vs
+    /// zeros). A slot that stays absent across rounds keeps its
+    /// already-zero window, so the re-zero pass is skipped.
     occupied: Vec<bool>,
-    /// pad-block copies actually performed (absent slots whose window
+    /// pad zero-fills actually performed (absent slots whose window
     /// held stale payload data); rounds where the window was already
     /// zero don't count. Observability for the skip-redundant-pad
     /// optimization.
@@ -208,7 +210,6 @@ impl RoundArena {
             m,
             request_shape: request_shape.to_vec(),
             merged: Tensor::zeros(&merged_shape),
-            pad: vec![0.0; request_len],
             outer,
             inner,
             // the megabatch starts zeroed, so every window is
@@ -238,7 +239,7 @@ impl RoundArena {
     pub fn merged_data(&self) -> &[f32] {
         self.merged.data()
     }
-    /// Pad-block copies performed so far (absent slots over stale
+    /// Pad zero-fills performed so far (absent slots over stale
     /// payload windows; already-zero windows are skipped and not
     /// counted).
     pub fn pad_writes(&self) -> u64 {
@@ -246,21 +247,22 @@ impl RoundArena {
     }
 
     /// Pack one round. `get(i)` returns instance `i`'s payload, or `None`
-    /// for an absent slot, which is filled from the arena's pad block
-    /// (the merged program is fixed-shape; padded slots are computed and
+    /// for an absent slot, whose windows are re-zeroed in place (the
+    /// merged program is fixed-shape; padded slots are computed and
     /// discarded, exactly as the paper's merged graph implies).
     ///
-    /// Steady-state cost: one `copy_from_slice` per (outer block,
-    /// instance) window — no allocation, no intermediate concat/stack.
-    /// A slot that was already padded in the previous round keeps its
-    /// zero window and skips even that copy.
+    /// Steady-state cost: one wide strided copy
+    /// (`util::simd::scatter_rows`) per instance, writing its (outer
+    /// block, instance) windows — no allocation, no intermediate
+    /// concat/stack. A slot that was already padded in the previous
+    /// round keeps its zero window and skips even the zero-fill.
     pub fn pack_with<'a>(
         &mut self,
         get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
     ) -> Result<()> {
         let (m, outer, inner) = (self.m, self.outer, self.inner);
         for i in 0..m {
-            let src: &[f32] = match get(i) {
+            match get(i) {
                 Some(x) => {
                     if x.shape() != self.request_shape.as_slice() {
                         bail!(
@@ -270,23 +272,25 @@ impl RoundArena {
                         );
                     }
                     self.occupied[i] = true;
-                    x.data()
+                    simd::scatter_rows(
+                        self.merged.data_mut(),
+                        i * inner,
+                        m * inner,
+                        x.data(),
+                        outer,
+                        inner,
+                    );
                 }
                 None => {
                     if !self.occupied[i] {
                         // window is still zero from the last padded
-                        // round (or from construction): nothing to copy
+                        // round (or from construction): nothing to do
                         continue;
                     }
                     self.occupied[i] = false;
                     self.pad_writes += 1;
-                    &self.pad
+                    simd::fill_rows_zero(self.merged.data_mut(), i * inner, m * inner, outer, inner);
                 }
-            };
-            let dst = self.merged.data_mut();
-            for o in 0..outer {
-                let at = (o * m + i) * inner;
-                dst[at..at + inner].copy_from_slice(&src[o * inner..(o + 1) * inner]);
             }
         }
         Ok(())

@@ -1,11 +1,154 @@
 //! Serving metrics: per-strategy latency/throughput collection and the
 //! table-formatted reports the benches print.
+//!
+//! Two recording surfaces share the arithmetic:
+//!
+//! - [`Metrics`] — the per-lane recorder `Server` owns, with the
+//!   strategy/model labels the report tables print. Its fields stay
+//!   public (tests, benches and examples read them directly).
+//! - [`MetricsCore`] — the label-free accumulator a [`MetricsHub`]
+//!   shards per dispatch thread. A lane whose `Metrics` has a sink
+//!   attached ([`Metrics::attach_sink`]) mirrors every record into its
+//!   thread's shard, so cross-lane aggregate metrics never take a
+//!   shared lock on the dispatch path; readers merge the shards on
+//!   demand ([`MetricsHub::read`]). Percentiles merge exactly — see
+//!   `Latencies::merge_from`.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::util::shard::{ShardHandle, Shardable, Sharded};
 use crate::util::stats::{fmt_secs, Latencies};
 
 use super::strategy::StrategyKind;
+
+/// Reconstruct a request's arrival from its end-to-end latency and
+/// keep the EARLIEST arrival seen: recording order is slot order, not
+/// arrival order, so a long-queued request may be recorded after a
+/// fresh one in the same round — the throughput span must still start
+/// at the oldest arrival.
+fn fold_first_arrival(first: &mut Option<Instant>, latency: f64) {
+    let now = Instant::now();
+    let arrived = now.checked_sub(Duration::from_secs_f64(latency.max(0.0))).unwrap_or(now);
+    *first = Some(match *first {
+        Some(f) => f.min(arrived),
+        None => arrived,
+    });
+}
+
+/// Label-free serving counters: the shardable core of [`Metrics`].
+/// One of these per dispatch thread (behind a [`MetricsHub`]) absorbs
+/// the records of every lane that thread serves.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsCore {
+    pub request_latency: Latencies,
+    pub round_latency: Latencies,
+    pub completed_requests: u64,
+    pub slo_violations: u64,
+    first_arrival: Option<Instant>,
+}
+
+impl MetricsCore {
+    pub fn record_round(&mut self, seconds: f64) {
+        self.round_latency.record(seconds);
+    }
+
+    pub fn record_request(&mut self, latency: f64, slo: Option<f64>) {
+        fold_first_arrival(&mut self.first_arrival, latency);
+        self.request_latency.record(latency);
+        self.completed_requests += 1;
+        if let Some(slo) = slo {
+            if latency > slo {
+                self.slo_violations += 1;
+            }
+        }
+    }
+
+    /// Requests per second since the oldest recorded arrival (0.0
+    /// until a measurable span exists) — same clock as
+    /// [`Metrics::throughput`].
+    pub fn throughput(&self) -> f64 {
+        let Some(first) = self.first_arrival else {
+            return 0.0;
+        };
+        let secs = first.elapsed().as_secs_f64();
+        if secs > 0.0 {
+            self.completed_requests as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Aggregate one-line report (nearest-rank percentiles, exactly as
+    /// a single recorder over all merged streams would print them).
+    pub fn report_line(&self) -> String {
+        let r = &self.round_latency;
+        let q = &self.request_latency;
+        format!(
+            "aggregate rounds={:<5} round: {:>10} ± {:>9} p50={:>10} p99={:>10} \
+             | req p50={:>10} p95={:>10} p99={:>10} completed={} slo_viol={}",
+            r.count(),
+            fmt_secs(r.summary().mean()),
+            fmt_secs(r.summary().std()),
+            fmt_secs(r.p50()),
+            fmt_secs(r.p99()),
+            fmt_secs(q.p50()),
+            fmt_secs(q.p95()),
+            fmt_secs(q.p99()),
+            self.completed_requests,
+            self.slo_violations,
+        )
+    }
+}
+
+impl Shardable for MetricsCore {
+    fn merge_from(&mut self, other: &Self) {
+        self.request_latency.merge_from(&other.request_latency);
+        self.round_latency.merge_from(&other.round_latency);
+        self.completed_requests += other.completed_requests;
+        self.slo_violations += other.slo_violations;
+        self.first_arrival = match (self.first_arrival, other.first_arrival) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+    }
+}
+
+/// Per-thread sharded aggregate metrics for an N-thread dispatcher:
+/// construct with the thread count, [`register`] one handle per
+/// dispatch thread (`ParallelDispatcher::attach_metrics_hub` does this
+/// per partition), and [`read`] the exact merged view at any time —
+/// including while dispatch threads are still recording.
+///
+/// [`register`]: MetricsHub::register
+/// [`read`]: MetricsHub::read
+pub struct MetricsHub {
+    shards: Arc<Sharded<MetricsCore>>,
+}
+
+impl MetricsHub {
+    pub fn new(threads: usize) -> MetricsHub {
+        MetricsHub { shards: Arc::new(Sharded::new(threads)) }
+    }
+
+    /// Claim the next shard (round-robin; wraps if over-registered).
+    pub fn register(&self) -> ShardHandle<MetricsCore> {
+        Sharded::register(&self.shards)
+    }
+
+    /// Merge every shard into one exact aggregate view.
+    pub fn read(&self) -> MetricsCore {
+        self.shards.read()
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.shards()
+    }
+
+    pub fn report_line(&self) -> String {
+        self.read().report_line()
+    }
+}
 
 /// Rolling metrics for one (strategy, configuration) run.
 #[derive(Debug)]
@@ -32,6 +175,9 @@ pub struct Metrics {
     pub slo: Option<f64>,
     /// completed requests whose end-to-end latency exceeded `slo`
     pub slo_violations: u64,
+    /// optional per-thread aggregate shard every record is mirrored
+    /// into (see [`MetricsHub`]); `None` = lane-local recording only
+    sink: Option<ShardHandle<MetricsCore>>,
 }
 
 impl Metrics {
@@ -47,33 +193,35 @@ impl Metrics {
             completed_requests: 0,
             slo: None,
             slo_violations: 0,
+            sink: None,
         }
+    }
+
+    /// Mirror every subsequent record into the given aggregate shard.
+    /// The shard is this dispatch thread's own (uncontended), so the
+    /// mirror adds no cross-thread traffic to the recording path.
+    pub fn attach_sink(&mut self, sink: ShardHandle<MetricsCore>) {
+        self.sink = Some(sink);
     }
 
     pub fn record_round(&mut self, seconds: f64) {
         self.round_latency.record(seconds);
+        if let Some(s) = &self.sink {
+            s.lock().record_round(seconds);
+        }
     }
 
     pub fn record_request(&mut self, latency: f64) {
-        // reconstruct this request's arrival from its end-to-end
-        // latency and keep the EARLIEST one seen: recording order is
-        // slot order, not arrival order, so a long-queued request may
-        // be recorded after a fresh one in the same round — the
-        // throughput span must still start at the oldest arrival
-        let now = Instant::now();
-        let arrived = now
-            .checked_sub(Duration::from_secs_f64(latency.max(0.0)))
-            .unwrap_or(now);
-        self.first_arrival = Some(match self.first_arrival {
-            Some(first) => first.min(arrived),
-            None => arrived,
-        });
+        fold_first_arrival(&mut self.first_arrival, latency);
         self.request_latency.record(latency);
         self.completed_requests += 1;
         if let Some(slo) = self.slo {
             if latency > slo {
                 self.slo_violations += 1;
             }
+        }
+        if let Some(s) = &self.sink {
+            s.lock().record_request(latency, self.slo);
         }
     }
 
@@ -93,6 +241,12 @@ impl Metrics {
         }
     }
 
+    /// One-line report. The p50/p95/p99 columns are **nearest-rank**
+    /// percentiles (`Latencies::percentile`: 1-indexed `ceil(q * n)`
+    /// over the sorted raw samples, no interpolation) — pinned here
+    /// because sharded aggregation relies on it: nearest-rank depends
+    /// only on the sample multiset, so a merged-on-read report is
+    /// bit-identical to a single-recorder one.
     pub fn report_line(&self) -> String {
         let r = &self.round_latency;
         let q = &self.request_latency;
@@ -208,5 +362,68 @@ mod tests {
             tp > 0.0 && tp <= 21.0,
             "single-request throughput {tp} should be ~1/latency (<= 20 rps)"
         );
+    }
+
+    /// A fixed sample set recorded through 3 shards must report the
+    /// exact same nearest-rank percentiles (and counters) as one
+    /// recorder that saw every sample — the satellite regression for
+    /// sharded merge-on-read.
+    #[test]
+    fn sharded_merge_matches_single_shard_percentiles() {
+        let slo = Some(0.080);
+        // fixed, deliberately unsorted sample set with duplicates
+        let samples: Vec<f64> =
+            (0..100).map(|i| ((i * 37 + 11) % 100) as f64 / 1000.0 + 0.001).collect();
+
+        let mut single = MetricsCore::default();
+        for &s in &samples {
+            single.record_request(s, slo);
+            single.record_round(s * 2.0);
+        }
+
+        let hub = MetricsHub::new(3);
+        let handles: Vec<_> = (0..3).map(|_| hub.register()).collect();
+        for (i, &s) in samples.iter().enumerate() {
+            let mut shard = handles[i % 3].lock();
+            shard.record_request(s, slo);
+            shard.record_round(s * 2.0);
+        }
+
+        let merged = hub.read();
+        assert_eq!(merged.completed_requests, single.completed_requests);
+        assert_eq!(merged.slo_violations, single.slo_violations);
+        // exact f64 equality: nearest-rank selects an observed sample,
+        // so merged and single-shard must agree to the bit
+        assert_eq!(merged.request_latency.p50(), single.request_latency.p50());
+        assert_eq!(merged.request_latency.p95(), single.request_latency.p95());
+        assert_eq!(merged.request_latency.p99(), single.request_latency.p99());
+        assert_eq!(merged.round_latency.p50(), single.round_latency.p50());
+        assert_eq!(merged.round_latency.p99(), single.round_latency.p99());
+        assert_eq!(merged.report_line(), single.report_line());
+    }
+
+    #[test]
+    fn attached_sink_mirrors_lane_records() {
+        let hub = MetricsHub::new(2);
+        let mut a = Metrics::new(StrategyKind::NetFuse, "bert", 2, 1);
+        let mut b = Metrics::new(StrategyKind::NetFuse, "gpt", 2, 1);
+        a.slo = Some(0.010);
+        a.attach_sink(hub.register());
+        b.attach_sink(hub.register());
+
+        a.record_round(0.004);
+        a.record_request(0.003);
+        a.record_request(0.020); // violation on lane a
+        b.record_round(0.006);
+        b.record_request(0.005);
+
+        let agg = hub.read();
+        assert_eq!(agg.completed_requests, 3);
+        assert_eq!(agg.slo_violations, 1);
+        assert_eq!(agg.round_latency.count(), 2);
+        // lane-local views are untouched by the mirror
+        assert_eq!(a.completed_requests, 2);
+        assert_eq!(b.completed_requests, 1);
+        assert_eq!(b.slo_violations, 0);
     }
 }

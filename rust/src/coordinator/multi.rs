@@ -66,9 +66,11 @@ use anyhow::{bail, Result};
 
 use crate::ingress::qos::{LaneCharge, LaneQos, LaneSnapshot, QosScheduler};
 use crate::tensor::Tensor;
+use crate::util::shard::ShardHandle;
 
 use super::arena::SlotMap;
 use super::coalesce::{plan_group, CoalesceKey};
+use super::metrics::{MetricsCore, MetricsHub};
 use super::request::{Request, Response};
 use super::server::{Admit, Server, ServerConfig};
 use super::service::{Fleet, RoundExecutor};
@@ -176,6 +178,17 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         self.lanes.push(server);
         self.group_of.push(None);
         self.sched.add_lane(qos)
+    }
+
+    /// Mirror every lane's metrics into one [`MetricsHub`] shard — the
+    /// shard of the (single) thread dispatching this `MultiServer`.
+    /// Lane-local [`Server::metrics`] views are unaffected.
+    ///
+    /// [`MetricsHub`]: super::metrics::MetricsHub
+    pub fn attach_metrics_sink(&mut self, sink: &ShardHandle<MetricsCore>) {
+        for lane in &mut self.lanes {
+            lane.attach_metrics_sink(sink.clone());
+        }
     }
 
     /// Register `members` as a coalesce group executing merged rounds
@@ -725,6 +738,20 @@ impl<'f, E: RoundExecutor> ParallelDispatcher<'f, E> {
     /// Number of partitions (= dispatch threads a parallel run spawns).
     pub fn parts(&self) -> usize {
         self.parts.len()
+    }
+
+    /// Register one [`MetricsHub`] shard per partition and mirror every
+    /// lane's metrics into its partition's shard, so each dispatch
+    /// thread records aggregate metrics without cross-thread locking.
+    /// Size the hub with [`ParallelDispatcher::parts`] for one private
+    /// shard per thread (a smaller hub shares shards, which is merely
+    /// slower, not wrong).
+    ///
+    /// [`MetricsHub`]: super::metrics::MetricsHub
+    pub fn attach_metrics_hub(&mut self, hub: &MetricsHub) {
+        for part in &mut self.parts {
+            part.attach_metrics_sink(&hub.register());
+        }
     }
 
     /// Number of global lanes.

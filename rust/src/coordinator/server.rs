@@ -36,8 +36,9 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
+use crate::util::shard::ShardHandle;
 
-use super::metrics::Metrics;
+use super::metrics::{Metrics, MetricsCore};
 use super::request::{Request, Response};
 use super::service::{Fleet, RoundExecutor};
 use super::strategy::StrategyKind;
@@ -114,6 +115,14 @@ impl<'f, E: RoundExecutor> Server<'f, E> {
 
     pub fn config(&self) -> &ServerConfig {
         &self.cfg
+    }
+
+    /// Mirror this lane's metrics into a [`MetricsHub`] shard (the
+    /// dispatch thread's own) — see [`Metrics::attach_sink`].
+    ///
+    /// [`MetricsHub`]: super::metrics::MetricsHub
+    pub fn attach_metrics_sink(&mut self, sink: ShardHandle<MetricsCore>) {
+        self.metrics.attach_sink(sink);
     }
 
     /// Route one request to its model queue.

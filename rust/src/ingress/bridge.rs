@@ -41,6 +41,7 @@ use crate::coordinator::request::{Request, Response};
 use crate::coordinator::server::Admit;
 use crate::coordinator::service::RoundExecutor;
 use crate::tensor::Tensor;
+use crate::util::shard::{ShardHandle, Shardable, Sharded};
 
 use super::frame::{Frame, RejectCode};
 use super::transport::{FrameQueue, Transport};
@@ -307,7 +308,7 @@ pub struct IngressStats {
 
 impl IngressStats {
     /// Fold another run's counters into this one (the parallel runner
-    /// merges the router's and every dispatch thread's stats).
+    /// keeps one shard per thread and merges them on read).
     pub fn merge(&mut self, o: &IngressStats) {
         self.admitted += o.admitted;
         self.lane_busy += o.lane_busy;
@@ -319,6 +320,12 @@ impl IngressStats {
         self.coalesced_rounds += o.coalesced_rounds;
         self.round_errors += o.round_errors;
         self.idle_naps_avoided += o.idle_naps_avoided;
+    }
+}
+
+impl Shardable for IngressStats {
+    fn merge_from(&mut self, other: &Self) {
+        self.merge(other);
     }
 }
 
@@ -346,7 +353,10 @@ pub fn run_dispatch<E: RoundExecutor>(
     multi: &mut MultiServer<E>,
     bridge: &IngressBridge,
 ) -> Result<IngressStats> {
-    dispatch_loop(multi, bridge, None)
+    let stats: Arc<Sharded<IngressStats>> = Arc::new(Sharded::new(1));
+    let handle = Sharded::register(&stats);
+    dispatch_loop(multi, bridge, None, &handle)?;
+    Ok(stats.read())
 }
 
 /// The single-consumer loop behind [`run_dispatch`], parameterized over
@@ -356,11 +366,17 @@ pub fn run_dispatch<E: RoundExecutor>(
 /// **global** lane ids, which translate to partition-local ids at
 /// admission and back at response routing (response frames must quote
 /// the client's own lane id regardless of which thread served it).
+///
+/// Counters go to `stats` — the caller's shard of a [`Sharded`]
+/// accumulator. One loop is one shard's only writer, so every bump is
+/// an uncontended lock, while an observer can merge-read the live
+/// totals across all loops at any time.
 fn dispatch_loop<E: RoundExecutor>(
     multi: &mut MultiServer<E>,
     bridge: &IngressBridge,
     part: Option<(&Topology, usize)>,
-) -> Result<IngressStats> {
+    stats: &ShardHandle<IngressStats>,
+) -> Result<()> {
     let to_local = |lane: usize| -> Option<usize> {
         match part {
             None => Some(lane),
@@ -376,7 +392,6 @@ fn dispatch_loop<E: RoundExecutor>(
             Some((topo, p)) => topo.global(p, local),
         }
     };
-    let mut stats = IngressStats::default();
     let mut routes: HashMap<u64, Route> = HashMap::new();
     let mut seq: u64 = 0;
     let mut responses: Vec<Response> = Vec::new();
@@ -386,7 +401,7 @@ fn dispatch_loop<E: RoundExecutor>(
         // 1) drain arrivals without blocking
         while let Some(env) = bridge.try_pop() {
             let local = to_local(env.lane);
-            admit(multi, env, local, &mut routes, &mut seq, &mut stats);
+            admit(multi, env, local, &mut routes, &mut seq, &mut stats.lock());
         }
 
         // 2) dispatch whatever the QoS scheduler says is due — a
@@ -395,23 +410,24 @@ fn dispatch_loop<E: RoundExecutor>(
         match multi.dispatch_next(&mut responses) {
             Ok(Some(d)) => {
                 consecutive_errors = 0;
-                stats.rounds += 1;
+                let mut st = stats.lock();
+                st.rounds += 1;
                 // a merged round's responses span lanes; only a solo
                 // round's batch can be pinned to the picked lane
                 let hint = if d.lanes_served > 1 {
-                    stats.coalesced_rounds += 1;
+                    st.coalesced_rounds += 1;
                     usize::MAX
                 } else {
                     to_global(d.lane)
                 };
-                route_responses(&mut responses, &mut routes, hint, &mut stats);
+                route_responses(&mut responses, &mut routes, hint, &mut st);
                 continue;
             }
             Ok(None) => {}
             Err(e) => {
                 // the lane requeued its requests; retry a few times
                 // before surfacing (a persistently failing fleet)
-                stats.round_errors += 1;
+                stats.lock().round_errors += 1;
                 consecutive_errors += 1;
                 if consecutive_errors >= MAX_CONSECUTIVE_ROUND_ERRORS {
                     // every admitted-but-unanswered request and every
@@ -447,8 +463,10 @@ fn dispatch_loop<E: RoundExecutor>(
             }
             // flush leftovers (partial rounds before their deadline)
             let flushed = multi.drain(&mut responses)?;
-            stats.rounds += 1; // at least one; exact count is in metrics
-            route_responses(&mut responses, &mut routes, usize::MAX, &mut stats);
+            let mut st = stats.lock();
+            st.rounds += 1; // at least one; exact count is in metrics
+            route_responses(&mut responses, &mut routes, usize::MAX, &mut st);
+            drop(st);
             debug_assert!(flushed > 0);
             continue;
         }
@@ -457,7 +475,7 @@ fn dispatch_loop<E: RoundExecutor>(
         // how long the nap may be
         let nap = match multi.next_due_in() {
             Some(d) if d.is_zero() => {
-                stats.idle_naps_avoided += 1;
+                stats.lock().idle_naps_avoided += 1;
                 continue;
             }
             Some(d) => d.min(IDLE_POLL),
@@ -465,10 +483,10 @@ fn dispatch_loop<E: RoundExecutor>(
         };
         if let Some(env) = bridge.pop_timeout(nap) {
             let local = to_local(env.lane);
-            admit(multi, env, local, &mut routes, &mut seq, &mut stats);
+            admit(multi, env, local, &mut routes, &mut seq, &mut stats.lock());
         }
     }
-    Ok(stats)
+    Ok(())
 }
 
 /// Run a [`ParallelDispatcher`] to completion over the bridge: the
@@ -508,16 +526,34 @@ pub fn run_dispatch_parallel<E: RoundExecutor>(
     bridge: &IngressBridge,
     group_queue_cap: usize,
 ) -> Result<IngressStats> {
+    let stats: Arc<Sharded<IngressStats>> = Arc::new(Sharded::new(dispatcher.parts() + 1));
+    run_dispatch_parallel_observed(dispatcher, bridge, group_queue_cap, &stats)?;
+    Ok(stats.read())
+}
+
+/// [`run_dispatch_parallel`] with the counters externalized: the caller
+/// provides the [`Sharded`] accumulator (size it `parts + 1` — one
+/// shard per dispatch thread plus the router — so every recording
+/// thread gets a private shard) and can `stats.read()` a live,
+/// exactly merged snapshot at ANY point while the run is in flight —
+/// the monitoring surface the single merged return value cannot offer.
+pub fn run_dispatch_parallel_observed<E: RoundExecutor>(
+    dispatcher: &mut ParallelDispatcher<'_, E>,
+    bridge: &IngressBridge,
+    group_queue_cap: usize,
+    stats: &Arc<Sharded<IngressStats>>,
+) -> Result<()> {
+    let router_stats = Sharded::register(stats);
     let (parts, topo) = dispatcher.split_mut();
     let subs: Vec<IngressBridge> =
         (0..parts.len()).map(|_| IngressBridge::new(group_queue_cap)).collect();
-    let mut stats = IngressStats::default();
 
-    let results: Vec<Result<IngressStats>> = std::thread::scope(|s| {
+    let results: Vec<Result<()>> = std::thread::scope(|s| {
         let mut threads = Vec::with_capacity(parts.len());
         for (p, multi) in parts.iter_mut().enumerate() {
             let sub = &subs[p];
-            threads.push(s.spawn(move || dispatch_loop(multi, sub, Some((topo, p)))));
+            let shard = Sharded::register(stats);
+            threads.push(s.spawn(move || dispatch_loop(multi, sub, Some((topo, p)), &shard)));
         }
 
         // the router: drain the main bridge into the owning partitions'
@@ -527,7 +563,7 @@ pub fn run_dispatch_parallel<E: RoundExecutor>(
             match bridge.pop_timeout(IDLE_POLL) {
                 Some(env) => match topo.locate(env.lane) {
                     None => {
-                        stats.no_lane += 1;
+                        router_stats.lock().no_lane += 1;
                         env.reply.push(Frame::reject(
                             env.client_id,
                             env.lane as u32,
@@ -538,7 +574,7 @@ pub fn run_dispatch_parallel<E: RoundExecutor>(
                     Some((p, _)) => match subs[p].submit(env) {
                         Ok(()) => {}
                         Err(SubmitError::Busy(env)) => {
-                            stats.group_busy += 1;
+                            router_stats.lock().group_busy += 1;
                             env.reply.push(Frame::reject(
                                 env.client_id,
                                 env.lane as u32,
@@ -570,7 +606,7 @@ pub fn run_dispatch_parallel<E: RoundExecutor>(
         for sub in &subs {
             sub.close();
         }
-        let results: Vec<Result<IngressStats>> =
+        let results: Vec<Result<()>> =
             threads.into_iter().map(|t| t.join().expect("dispatch thread panicked")).collect();
         // a partition that died with an error stopped consuming its
         // sub-bridge; whatever the router put there afterwards still
@@ -590,9 +626,9 @@ pub fn run_dispatch_parallel<E: RoundExecutor>(
     });
 
     for r in results {
-        stats.merge(&r?);
+        r?;
     }
-    Ok(stats)
+    Ok(())
 }
 
 /// Admit one envelope: re-stamp arrival at the boundary, re-key the id,

@@ -14,12 +14,23 @@
 //!                   the connection open until queued responses flush
 //! ```
 //!
-//! Decoding is fully validated before any payload allocation is trusted:
-//! the length prefix is capped at [`MAX_FRAME`], ranks at [`MAX_RANK`],
-//! and the dim product must equal the remaining f32 count — a malformed
-//! or hostile frame fails as one `Err`, never as a huge allocation or a
-//! panic. `read_from` distinguishes clean EOF at a frame boundary
-//! (`Ok(None)`) from a connection dying mid-frame (`Err`).
+//! Decoding is fully validated BEFORE the payload buffer is reserved:
+//! the length prefix is capped at [`MAX_FRAME`], and `read_from` then
+//! reads only the first [`HEADER_MAX`] payload bytes and cross-checks
+//! the length the header itself implies (tag, rank — capped at
+//! [`MAX_RANK`] — dims, message length) against the declared prefix.
+//! A hostile 64MiB-claiming prefix on a 1-byte frame is rejected after
+//! a 64-byte read, not after a 64MiB allocation. The full decode then
+//! re-validates everything (dim product must equal the remaining f32
+//! count; no trailing bytes), so a malformed frame fails as one `Err`,
+//! never as a huge allocation or a panic. `read_from` distinguishes
+//! clean EOF at a frame boundary (`Ok(None)`) from a connection dying
+//! mid-frame (`Err`).
+//!
+//! Tensor payload bytes move through the feature-detected wide kernels
+//! (`util::simd::extend_f32_le` / `extend_le_f32`) on both encode and
+//! decode — on little-endian targets the in-memory f32 bytes are the
+//! wire bytes, so both directions are single wide copies.
 
 use std::io::{Read, Write};
 
@@ -30,6 +41,11 @@ use anyhow::{bail, Context, Result};
 pub const MAX_FRAME: usize = 1 << 26;
 /// Upper bound on a payload tensor's rank.
 pub const MAX_RANK: usize = 8;
+/// Every length-determining header field lives within this many payload
+/// bytes (worst case: a Response header with [`MAX_RANK`] dims — 1 tag
+/// + 24 fixed + 1 rank + 32 dim bytes), so `read_from` can validate the
+/// declared length against the header before allocating the payload.
+pub const HEADER_MAX: usize = 64;
 
 const TAG_REQUEST: u8 = 1;
 const TAG_RESPONSE: u8 = 2;
@@ -169,9 +185,54 @@ impl Frame {
         if len == 0 || len > MAX_FRAME {
             bail!("bad frame length {len} (max {MAX_FRAME})");
         }
-        let mut payload = vec![0u8; len];
-        r.read_exact(&mut payload).context("frame payload read")?;
+        // read only the header first and cross-check the length the
+        // header implies against the declared prefix, so a hostile
+        // length claim cannot force a large allocation for a frame
+        // that will be rejected anyway
+        let head = len.min(HEADER_MAX);
+        let mut payload = vec![0u8; head];
+        r.read_exact(&mut payload).context("frame header read")?;
+        Self::validate_header(&payload, len)?;
+        if len > head {
+            payload.resize(len, 0);
+            r.read_exact(&mut payload[head..]).context("frame payload read")?;
+        }
         Self::decode_payload(&payload).map(Some)
+    }
+
+    /// Cross-check the payload length the header's own fields imply
+    /// against the declared length prefix. `head` is the first
+    /// `min(declared_len, HEADER_MAX)` payload bytes; every
+    /// length-determining field fits in them by construction, so a
+    /// truncated read here means the frame itself is short.
+    fn validate_header(head: &[u8], declared_len: usize) -> Result<()> {
+        let mut rd = Rd { b: head, i: 0 };
+        let expected = match rd.u8()? {
+            TAG_REQUEST => {
+                rd.take(16)?; // id + lane + model_idx
+                let (shape, n) = rd.shape()?;
+                17 + 1 + shape.len() * 4 + n * 4
+            }
+            TAG_RESPONSE => {
+                rd.take(24)?; // id + lane + model_idx + latency bits
+                let (shape, n) = rd.shape()?;
+                25 + 1 + shape.len() * 4 + n * 4
+            }
+            TAG_REJECT => {
+                rd.take(13)?; // id + lane + code
+                let msg_len = rd.u32()? as usize;
+                18usize.checked_add(msg_len).context("reject message length overflows")?
+            }
+            TAG_EOS => 1,
+            t => bail!("unknown frame tag {t}"),
+        };
+        if expected != declared_len {
+            bail!(
+                "frame header implies {expected} payload bytes, \
+                 length prefix declares {declared_len}"
+            );
+        }
+        Ok(())
     }
 
     /// Decode one payload (the bytes AFTER the length prefix).
@@ -226,9 +287,7 @@ fn put_tensor(out: &mut Vec<u8>, shape: &[usize], data: &[f32]) {
     for &d in shape {
         out.extend_from_slice(&(d as u32).to_le_bytes());
     }
-    for &v in data {
-        out.extend_from_slice(&v.to_le_bytes());
-    }
+    crate::util::simd::extend_f32_le(out, data);
 }
 
 /// Bounds-checked little-endian payload reader.
@@ -259,9 +318,11 @@ impl<'a> Rd<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    /// `u8 rank, rank x u32 dims, (prod dims) x f32` — the dim product
-    /// must equal the f32 count left in the payload.
-    fn tensor(&mut self) -> Result<(Vec<usize>, Vec<f32>)> {
+    /// `u8 rank, rank x u32 dims` with the rank and element-count caps
+    /// applied — shared by the pre-allocation header check
+    /// (`Frame::validate_header`) and the full tensor decode, so the
+    /// two can never disagree on what a header implies.
+    fn shape(&mut self) -> Result<(Vec<usize>, usize)> {
         let rank = self.u8()? as usize;
         if rank > MAX_RANK {
             bail!("tensor rank {rank} exceeds max {MAX_RANK}");
@@ -278,11 +339,16 @@ impl<'a> Rd<'a> {
         if n > MAX_FRAME / 4 {
             bail!("tensor of {n} elements exceeds the frame cap");
         }
+        Ok((shape, n))
+    }
+
+    /// `u8 rank, rank x u32 dims, (prod dims) x f32` — the dim product
+    /// must equal the f32 count left in the payload.
+    fn tensor(&mut self) -> Result<(Vec<usize>, Vec<f32>)> {
+        let (shape, n) = self.shape()?;
         let bytes = self.take(n * 4)?;
-        let data = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
+        let mut data = Vec::new();
+        crate::util::simd::extend_le_f32(&mut data, bytes);
         Ok((shape, data))
     }
 
@@ -365,6 +431,54 @@ mod tests {
         payload.extend_from_slice(&0u32.to_le_bytes());
         payload.push(9);
         assert!(Frame::decode_payload(&payload).is_err(), "rank over cap");
+    }
+
+    #[test]
+    fn hostile_length_claim_is_rejected_before_the_payload_allocation() {
+        // a 64MiB-claiming prefix over what is actually a 1-byte Eos
+        // payload: the header check must reject it after HEADER_MAX
+        // bytes, without trusting (or waiting for) the claimed length
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME as u32).to_le_bytes());
+        buf.push(TAG_EOS);
+        buf.resize(4 + HEADER_MAX, 0); // enough bytes for the header read
+        let mut r = &buf[..];
+        let err = Frame::read_from(&mut r).unwrap_err().to_string();
+        assert!(err.contains("implies"), "want the header cross-check, got: {err}");
+    }
+
+    #[test]
+    fn inflated_length_prefix_on_a_valid_request_is_rejected() {
+        let f = Frame::Request {
+            id: 3,
+            lane: 1,
+            model_idx: 0,
+            shape: vec![2],
+            data: vec![1.0, 2.0],
+        };
+        let mut buf = Vec::new();
+        f.encode_into(&mut buf);
+        let honest = u32::from_le_bytes(buf[..4].try_into().unwrap());
+        buf[..4].copy_from_slice(&(honest + 4).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 4]); // pad so the reads succeed
+        let mut r = &buf[..];
+        let err = Frame::read_from(&mut r).unwrap_err().to_string();
+        assert!(err.contains("implies"), "want the header cross-check, got: {err}");
+    }
+
+    #[test]
+    fn payloads_longer_than_the_header_window_roundtrip() {
+        // 64 f32s => 290 payload bytes, well past HEADER_MAX: exercises
+        // the header-read + remainder-read split in read_from
+        let f = Frame::Response {
+            id: 11,
+            lane: 2,
+            model_idx: 1,
+            latency: 0.25,
+            shape: vec![1, 64],
+            data: (0..64).map(|i| i as f32 * 0.75 - 8.0).collect(),
+        };
+        assert_eq!(roundtrip(&f), f);
     }
 
     #[test]

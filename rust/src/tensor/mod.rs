@@ -56,9 +56,10 @@ impl<'a> TensorView<'a> {
     }
 
     /// Promote to an owned tensor (the only copying step on the unpack
-    /// path, paid per occupied slot rather than per round).
+    /// path, paid per occupied slot rather than per round — so it goes
+    /// through the feature-detected wide copy).
     pub fn to_owned(&self) -> Tensor {
-        Tensor { shape: self.shape.to_vec(), data: self.data.to_vec() }
+        Tensor { shape: self.shape.to_vec(), data: crate::util::simd::to_vec(self.data) }
     }
 
     /// Max |a - b| over all elements.
@@ -308,7 +309,7 @@ impl Tensor {
             for j in 0..b {
                 let src = (i * b + j) * inner;
                 let dst = (j * a + i) * inner;
-                data[dst..dst + inner].copy_from_slice(&self.data[src..src + inner]);
+                crate::util::simd::copy(&mut data[dst..dst + inner], &self.data[src..src + inner]);
             }
         }
         let mut shape = self.shape.clone();

@@ -182,6 +182,70 @@ pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (out, t.elapsed().as_secs_f64())
 }
 
+/// Shared `BENCH_<name>.json` emitter, so every bench binary writes the
+/// same report shape instead of hand-rolling a `BTreeMap` each time.
+///
+/// Every report carries `bench` (the name) and `smoke` keys; arbitrary
+/// gate numbers go in via [`set`]/[`num`], and per-op normalized costs
+/// via [`ns_per_slot`], which collects under one `"ns_per_slot"` object
+/// so the figure generators can diff op costs across PRs uniformly.
+///
+/// [`set`]: report::BenchReport::set
+/// [`num`]: report::BenchReport::num
+/// [`ns_per_slot`]: report::BenchReport::ns_per_slot
+pub mod report {
+    use std::collections::BTreeMap;
+
+    use crate::util::json::Json;
+
+    pub struct BenchReport {
+        name: String,
+        root: BTreeMap<String, Json>,
+        ns_per_slot: BTreeMap<String, Json>,
+    }
+
+    impl BenchReport {
+        pub fn new(name: &str, smoke: bool) -> Self {
+            let mut root = BTreeMap::new();
+            root.insert("bench".to_string(), Json::Str(name.to_string()));
+            root.insert("smoke".to_string(), Json::Bool(smoke));
+            BenchReport { name: name.to_string(), root, ns_per_slot: BTreeMap::new() }
+        }
+
+        /// Set a numeric top-level field.
+        pub fn num(&mut self, key: &str, v: f64) -> &mut Self {
+            self.set(key, Json::Num(v))
+        }
+
+        /// Set an arbitrary top-level field (nested objects included).
+        pub fn set(&mut self, key: &str, v: Json) -> &mut Self {
+            self.root.insert(key.to_string(), v);
+            self
+        }
+
+        /// Record one op's normalized cost under the shared
+        /// `"ns_per_slot"` object (nanoseconds per slot/element).
+        pub fn ns_per_slot(&mut self, op: &str, ns: f64) -> &mut Self {
+            self.ns_per_slot.insert(op.to_string(), Json::Num(ns));
+            self
+        }
+
+        /// Write `BENCH_<name>.json` to the working directory and
+        /// return its path. Call BEFORE asserting gates so a failing
+        /// run still leaves its numbers behind.
+        pub fn write(&mut self) -> std::io::Result<String> {
+            if !self.ns_per_slot.is_empty() {
+                self.root
+                    .insert("ns_per_slot".to_string(), Json::Obj(self.ns_per_slot.clone()));
+            }
+            let path = format!("BENCH_{}.json", self.name);
+            std::fs::write(&path, Json::Obj(self.root.clone()).dump())?;
+            println!("report written to {path}");
+            Ok(path)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

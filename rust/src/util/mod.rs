@@ -11,3 +11,5 @@ pub mod cli;
 pub mod stats;
 pub mod prop;
 pub mod bench;
+pub mod simd;
+pub mod shard;

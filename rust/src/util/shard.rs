@@ -1,0 +1,170 @@
+//! Per-thread sharded accumulators with merge-on-read.
+//!
+//! The N-thread `ParallelDispatcher` (PR 5) records metrics on every
+//! round and every admitted request; funneling those through one
+//! `Mutex` serializes the dispatch threads at exactly the moment they
+//! should be independent. A [`Sharded<T>`] gives each recording thread
+//! its own cache-line-padded shard — the lock it takes is private to
+//! it, so the fast path is an uncontended lock/unlock (no cross-core
+//! line bouncing) — and readers fold all shards into one `T` through
+//! the [`Shardable`] merge. This generalizes the `IngressStats::merge`
+//! idiom that `run_dispatch_parallel` already used at join time, but
+//! lets the merged view be taken *while* the threads are still
+//! recording.
+//!
+//! Shard count is fixed at construction (one per expected recording
+//! thread). Registration is round-robin and wraps: over-registering
+//! shares shards, which is safe (each shard is a `Mutex`), merely less
+//! parallel.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// An accumulator whose per-shard states can be folded into one.
+/// Merging must commute with recording: merging shards A and B must
+/// equal a single accumulator that saw both record streams (in any
+/// interleaving) — that is what makes merge-on-read exact.
+pub trait Shardable: Default {
+    fn merge_from(&mut self, other: &Self);
+}
+
+/// Pad each shard to its own cache line so two threads recording into
+/// adjacent shards never false-share.
+#[repr(align(64))]
+#[derive(Default)]
+struct CacheLine<T>(Mutex<T>);
+
+/// A fixed set of cache-line-padded shards of `T`.
+pub struct Sharded<T> {
+    shards: Vec<CacheLine<T>>,
+    next: AtomicUsize,
+}
+
+impl<T: Shardable> Sharded<T> {
+    /// `shards` is clamped to at least 1.
+    pub fn new(shards: usize) -> Self {
+        let n = shards.max(1);
+        Sharded { shards: (0..n).map(|_| CacheLine::default()).collect(), next: AtomicUsize::new(0) }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Claim the next shard round-robin (associated fn: the handle
+    /// keeps the `Arc` alive). Wraps when more handles are registered
+    /// than shards exist (those handles then share a lock).
+    pub fn register(this: &Arc<Self>) -> ShardHandle<T> {
+        let index = this.next.fetch_add(1, Ordering::Relaxed) % this.shards.len();
+        ShardHandle { shared: Arc::clone(this), index }
+    }
+
+    /// Fold every shard into a fresh `T`. Safe to call while writers
+    /// are live — each shard is locked only long enough to merge it.
+    pub fn read(&self) -> T {
+        let mut out = T::default();
+        for s in &self.shards {
+            out.merge_from(&s.0.lock().unwrap());
+        }
+        out
+    }
+}
+
+/// A recording thread's claim on one shard.
+pub struct ShardHandle<T> {
+    shared: Arc<Sharded<T>>,
+    index: usize,
+}
+
+impl<T> ShardHandle<T> {
+    /// Lock this handle's shard. Uncontended unless handles share a
+    /// shard (registration wrapped) or a reader is mid-merge on it.
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        self.shared.shards[self.index].0.lock().unwrap()
+    }
+
+    pub fn index(&self) -> usize {
+        self.index
+    }
+}
+
+// manual impl: derive(Clone) would demand T: Clone
+impl<T> Clone for ShardHandle<T> {
+    fn clone(&self) -> Self {
+        ShardHandle { shared: Arc::clone(&self.shared), index: self.index }
+    }
+}
+
+// manual impl so holders (e.g. `Metrics`) can stay derive(Debug)
+// without locking the shard to format it
+impl<T> std::fmt::Debug for ShardHandle<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardHandle").field("index", &self.index).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Default)]
+    struct Count(u64);
+    impl Shardable for Count {
+        fn merge_from(&mut self, other: &Self) {
+            self.0 += other.0;
+        }
+    }
+
+    #[test]
+    fn registration_is_round_robin_and_wraps() {
+        let s = Arc::new(Sharded::<Count>::new(2));
+        let (a, b, c) = (Sharded::register(&s), Sharded::register(&s), Sharded::register(&s));
+        assert_eq!(a.index(), 0);
+        assert_eq!(b.index(), 1);
+        assert_eq!(c.index(), 0, "third handle wraps onto shard 0");
+    }
+
+    #[test]
+    fn read_merges_all_shards() {
+        let s = Arc::new(Sharded::<Count>::new(3));
+        for add in [5u64, 7, 11] {
+            Sharded::register(&s).lock().0 += add;
+        }
+        assert_eq!(s.read().0, 23);
+    }
+
+    #[test]
+    fn clones_share_the_shard() {
+        let s = Arc::new(Sharded::<Count>::new(4));
+        let h = Sharded::register(&s);
+        let h2 = h.clone();
+        h.lock().0 += 1;
+        h2.lock().0 += 1;
+        assert_eq!(h.lock().0, 2);
+        assert_eq!(s.read().0, 2);
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let s = Arc::new(Sharded::<Count>::new(0));
+        assert_eq!(s.shards(), 1);
+        Sharded::register(&s).lock().0 = 9;
+        assert_eq!(s.read().0, 9);
+    }
+
+    #[test]
+    fn concurrent_recording_sums_exactly() {
+        let s = Arc::new(Sharded::<Count>::new(4));
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let h = Sharded::register(&s);
+                scope.spawn(move || {
+                    for _ in 0..10_000 {
+                        h.lock().0 += 1;
+                    }
+                });
+            }
+        });
+        assert_eq!(s.read().0, 40_000);
+    }
+}

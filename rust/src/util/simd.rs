@@ -1,0 +1,681 @@
+//! Runtime feature-detected SIMD kernels for the round hot paths.
+//!
+//! The serving stack's per-round cost floor is a handful of wide
+//! copies: `RoundArena::pack_with` scatters each instance's payload
+//! into its strided megabatch windows, the unpack path gathers merged
+//! output windows back out (`TensorView::to_owned`), and the ingress
+//! frame codec moves tensor payloads between f32 slices and the wire.
+//! This module is the one arch-dispatch layer behind all of them:
+//!
+//! - **x86_64** — AVX2 when `is_x86_feature_detected!("avx2")` says so,
+//!   otherwise SSE2 (the x86_64 baseline, always present);
+//! - **aarch64** — NEON (detected, but mandatory on aarch64 in
+//!   practice);
+//! - **everywhere else** — a portable scalar path the compiler is free
+//!   to auto-vectorize (`ptr::copy_nonoverlapping` / `write_bytes`).
+//!
+//! Setting `RUST_PALLAS_FORCE_SCALAR` (to anything but `""`/`"0"`)
+//! pins the scalar path regardless of detection — CI runs the whole
+//! test suite under it so the fallback stays green forever. The choice
+//! is made once per process and cached ([`backend`]).
+//!
+//! [`reference`] holds the strict per-element scalar kernels: the
+//! semantics oracle the property tests (`rust/tests/simd_tests.rs`)
+//! compare every dispatched kernel against byte-for-byte, and the
+//! baseline `benches/hot_paths.rs` measures speedups over. Each
+//! element access is pinned with `std::hint::black_box` so LLVM's
+//! loop-idiom recognition cannot collapse the loop into the very
+//! memcpy/SIMD it is supposed to be a scalar baseline for (`black_box`
+//! does not change values, so the oracle stays exact).
+//!
+//! # Safety
+//!
+//! Every `unsafe` intrinsic block lives behind ONE call boundary: the
+//! safe public functions prove bounds/overlap with [`check_windows`]
+//! (checked arithmetic, so hostile sizes cannot wrap the bounds check)
+//! and slice-length asserts, then hand raw pointers to kernels that
+//! only ever touch `[ptr, ptr + n)`. All wide loads/stores are the
+//! unaligned variants (`loadu`/`storeu`/`vld1q`/`vst1q`), so no
+//! alignment invariant exists to violate. Full argument in
+//! `docs/ADR-004-simd-sharded-metrics.md`.
+
+use std::sync::OnceLock;
+
+/// Which kernel family [`backend`] selected for this process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// portable fallback (also the `RUST_PALLAS_FORCE_SCALAR` pin)
+    Scalar,
+    /// x86_64 baseline, 4 f32 lanes
+    Sse2,
+    /// x86_64 detected, 8 f32 lanes
+    Avx2,
+    /// aarch64, 4 f32 lanes
+    Neon,
+}
+
+/// `true` when `RUST_PALLAS_FORCE_SCALAR` pins the scalar path
+/// (set and neither empty nor `"0"`).
+pub fn scalar_forced() -> bool {
+    match std::env::var("RUST_PALLAS_FORCE_SCALAR") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    }
+}
+
+static BACKEND: OnceLock<Backend> = OnceLock::new();
+
+/// The kernel family every dispatched primitive uses — detected once
+/// per process (env override first, then CPU features).
+pub fn backend() -> Backend {
+    *BACKEND.get_or_init(|| if scalar_forced() { Backend::Scalar } else { detect() })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> Backend {
+    if is_x86_feature_detected!("avx2") {
+        Backend::Avx2
+    } else {
+        Backend::Sse2
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> Backend {
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        Backend::Neon
+    } else {
+        Backend::Scalar
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> Backend {
+    Backend::Scalar
+}
+
+// ---------------------------------------------------------------------------
+// safe public API
+// ---------------------------------------------------------------------------
+
+/// A batch of equal-length row copies between strided window layouts:
+/// row `r` copies `row_len` f32 from `src[src_offset + r*src_stride..]`
+/// to `dst[dst_offset + r*dst_stride..]`. Strides must cover `row_len`
+/// (windows within each buffer are overlap-free) — the shape of every
+/// slot-window scatter/gather in the round pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct Windows {
+    pub rows: usize,
+    pub row_len: usize,
+    pub dst_offset: usize,
+    pub dst_stride: usize,
+    pub src_offset: usize,
+    pub src_stride: usize,
+}
+
+/// Copy `src` into `dst` (equal lengths) on the dispatched path.
+pub fn copy(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len(), "simd::copy length mismatch");
+    // SAFETY: lengths asserted equal; &mut rules out dst/src aliasing.
+    unsafe { copy_raw(backend(), dst.as_mut_ptr(), src.as_ptr(), dst.len()) }
+}
+
+/// Copy `src` into a fresh `Vec` on the dispatched path (the
+/// `TensorView::to_owned` unpack step).
+pub fn to_vec(src: &[f32]) -> Vec<f32> {
+    let mut v = Vec::with_capacity(src.len());
+    // SAFETY: capacity reserved for exactly src.len() elements, the
+    // kernel writes [ptr, ptr+len), set_len publishes initialized data.
+    unsafe {
+        copy_raw(backend(), v.as_mut_ptr(), src.as_ptr(), src.len());
+        v.set_len(src.len());
+    }
+    v
+}
+
+/// Zero `dst` on the dispatched path.
+pub fn fill_zero(dst: &mut [f32]) {
+    // SAFETY: the kernel writes exactly [ptr, ptr + dst.len()).
+    unsafe { fill_raw(backend(), dst.as_mut_ptr(), dst.len()) }
+}
+
+/// Copy a strided window layout (see [`Windows`]) on the dispatched
+/// path. Bounds and overlap-freedom are proven up front with checked
+/// arithmetic; `rows == 0` or `row_len == 0` is a no-op.
+pub fn copy_windows(dst: &mut [f32], src: &[f32], w: Windows) {
+    check_windows(dst.len(), Some(src.len()), &w);
+    if w.rows == 0 || w.row_len == 0 {
+        return;
+    }
+    let be = backend();
+    let (d, s) = (dst.as_mut_ptr(), src.as_ptr());
+    // SAFETY: check_windows proved every row's [offset + r*stride,
+    // .. + row_len) lies inside its slice; &mut rules out aliasing.
+    unsafe {
+        for r in 0..w.rows {
+            copy_raw(
+                be,
+                d.add(w.dst_offset + r * w.dst_stride),
+                s.add(w.src_offset + r * w.src_stride),
+                w.row_len,
+            );
+        }
+    }
+}
+
+/// Scatter `rows` contiguous rows of `src` into strided windows of
+/// `dst` — the megabatch pack direction (`RoundArena::pack_with`).
+pub fn scatter_rows(
+    dst: &mut [f32],
+    dst_offset: usize,
+    dst_stride: usize,
+    src: &[f32],
+    rows: usize,
+    row_len: usize,
+) {
+    copy_windows(
+        dst,
+        src,
+        Windows { rows, row_len, dst_offset, dst_stride, src_offset: 0, src_stride: row_len },
+    );
+}
+
+/// Gather strided windows of `src` into `rows` contiguous rows of
+/// `dst` — the megabatch unpack direction.
+pub fn gather_rows(
+    dst: &mut [f32],
+    src: &[f32],
+    src_offset: usize,
+    src_stride: usize,
+    rows: usize,
+    row_len: usize,
+) {
+    copy_windows(
+        dst,
+        src,
+        Windows { rows, row_len, dst_offset: 0, dst_stride: row_len, src_offset, src_stride },
+    );
+}
+
+/// Zero `rows` strided windows of `dst` — pad re-zeroing for absent
+/// megabatch slots, without reading a pad source block.
+pub fn fill_rows_zero(dst: &mut [f32], offset: usize, stride: usize, rows: usize, row_len: usize) {
+    let w = Windows {
+        rows,
+        row_len,
+        dst_offset: offset,
+        dst_stride: stride,
+        src_offset: 0,
+        src_stride: row_len,
+    };
+    check_windows(dst.len(), None, &w);
+    if rows == 0 || row_len == 0 {
+        return;
+    }
+    let be = backend();
+    let d = dst.as_mut_ptr();
+    // SAFETY: bounds proven by check_windows, same shape as copy_windows.
+    unsafe {
+        for r in 0..rows {
+            fill_raw(be, d.add(offset + r * stride), row_len);
+        }
+    }
+}
+
+/// Append `src` to `out` as little-endian f32 bytes (frame encode).
+pub fn extend_f32_le(out: &mut Vec<u8>, src: &[f32]) {
+    if cfg!(target_endian = "big") {
+        reference::extend_f32_le(out, src);
+        return;
+    }
+    // an f32 slice occupies len*4 <= isize::MAX bytes, so no overflow
+    let n = src.len() * 4;
+    out.reserve(n);
+    let at = out.len();
+    // SAFETY: little-endian target, so the in-memory f32 bytes ARE the
+    // wire bytes; n bytes reserved past `at`; set_len publishes them.
+    unsafe {
+        copy_bytes_raw(backend(), out.as_mut_ptr().add(at), src.as_ptr().cast::<u8>(), n);
+        out.set_len(at + n);
+    }
+}
+
+/// Append the f32s encoded little-endian in `src` (length a multiple
+/// of 4) to `out` (frame decode).
+pub fn extend_le_f32(out: &mut Vec<f32>, src: &[u8]) {
+    assert!(src.len() % 4 == 0, "LE f32 stream of {} bytes is not a multiple of 4", src.len());
+    if cfg!(target_endian = "big") {
+        reference::extend_le_f32(out, src);
+        return;
+    }
+    let n = src.len() / 4;
+    out.reserve(n);
+    let at = out.len();
+    // SAFETY: every bit pattern is a valid f32; n elements reserved
+    // past `at`; the byte kernel tolerates any (mis)alignment.
+    unsafe {
+        copy_bytes_raw(backend(), out.as_mut_ptr().add(at).cast::<u8>(), src.as_ptr(), src.len());
+        out.set_len(at + n);
+    }
+}
+
+/// Prove a [`Windows`] layout stays inside both buffers and its rows
+/// cannot overlap (stride >= row_len), with checked arithmetic so
+/// degenerate sizes fail the assert instead of wrapping past it.
+/// `src_len = None` skips the source-side check (fill kernels).
+fn check_windows(dst_len: usize, src_len: Option<usize>, w: &Windows) {
+    if w.rows == 0 || w.row_len == 0 {
+        return;
+    }
+    assert!(
+        w.dst_stride >= w.row_len && w.src_stride >= w.row_len,
+        "window stride (dst {}, src {}) must cover row_len {}",
+        w.dst_stride,
+        w.src_stride,
+        w.row_len
+    );
+    let end = |offset: usize, stride: usize| {
+        (w.rows - 1)
+            .checked_mul(stride)
+            .and_then(|x| x.checked_add(offset))
+            .and_then(|x| x.checked_add(w.row_len))
+            .expect("window bounds overflow")
+    };
+    let dst_end = end(w.dst_offset, w.dst_stride);
+    assert!(dst_end <= dst_len, "windows end at {dst_end} but dst holds {dst_len}");
+    if let Some(src_len) = src_len {
+        let src_end = end(w.src_offset, w.src_stride);
+        assert!(src_end <= src_len, "windows end at {src_end} but src holds {src_len}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// strict scalar reference kernels (test oracle + bench baseline)
+// ---------------------------------------------------------------------------
+
+/// Strict per-element scalar kernels: the portable semantics every
+/// dispatched kernel must match byte-for-byte, and the ns/slot baseline
+/// of `benches/hot_paths.rs`. `black_box` pins each element so the
+/// compiler cannot rewrite the loop into memcpy or auto-vectorize it —
+/// a *scalar* baseline stays scalar (values are unchanged, so these
+/// remain exact oracles).
+pub mod reference {
+    use std::hint::black_box;
+
+    use super::{check_windows, Windows};
+
+    pub fn copy(dst: &mut [f32], src: &[f32]) {
+        assert_eq!(dst.len(), src.len(), "reference::copy length mismatch");
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d = black_box(*s);
+        }
+    }
+
+    pub fn fill_zero(dst: &mut [f32]) {
+        for d in dst.iter_mut() {
+            *d = black_box(0.0);
+        }
+    }
+
+    pub fn copy_windows(dst: &mut [f32], src: &[f32], w: Windows) {
+        check_windows(dst.len(), Some(src.len()), &w);
+        if w.rows == 0 || w.row_len == 0 {
+            return;
+        }
+        for r in 0..w.rows {
+            let d = w.dst_offset + r * w.dst_stride;
+            let s = w.src_offset + r * w.src_stride;
+            copy(&mut dst[d..d + w.row_len], &src[s..s + w.row_len]);
+        }
+    }
+
+    pub fn fill_rows_zero(
+        dst: &mut [f32],
+        offset: usize,
+        stride: usize,
+        rows: usize,
+        row_len: usize,
+    ) {
+        let w = Windows {
+            rows,
+            row_len,
+            dst_offset: offset,
+            dst_stride: stride,
+            src_offset: 0,
+            src_stride: row_len,
+        };
+        check_windows(dst.len(), None, &w);
+        if rows == 0 || row_len == 0 {
+            return;
+        }
+        for r in 0..rows {
+            let d = offset + r * stride;
+            fill_zero(&mut dst[d..d + row_len]);
+        }
+    }
+
+    pub fn extend_f32_le(out: &mut Vec<u8>, src: &[f32]) {
+        for &v in src {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn extend_le_f32(out: &mut Vec<f32>, src: &[u8]) {
+        assert!(src.len() % 4 == 0, "LE f32 stream of {} bytes is not a multiple of 4", src.len());
+        out.extend(src.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// raw kernels — dispatch + per-arch implementations
+// ---------------------------------------------------------------------------
+
+/// SAFETY: `dst` and `src` must be valid for `n` f32 reads/writes and
+/// must not overlap. Any alignment is fine (unaligned ops throughout).
+unsafe fn copy_raw(be: Backend, dst: *mut f32, src: *const f32, n: usize) {
+    match be {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => copy_avx2(dst, src, n),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Sse2 => copy_sse2(dst, src, n),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => copy_neon(dst, src, n),
+        _ => std::ptr::copy_nonoverlapping(src, dst, n),
+    }
+}
+
+/// SAFETY: `dst` must be valid for `n` f32 writes; any alignment.
+unsafe fn fill_raw(be: Backend, dst: *mut f32, n: usize) {
+    match be {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => fill_avx2(dst, n),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Sse2 => fill_sse2(dst, n),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => fill_neon(dst, n),
+        // all-zero bytes are f32 0.0
+        _ => std::ptr::write_bytes(dst, 0, n),
+    }
+}
+
+/// SAFETY: `dst` and `src` must be valid for `n` byte reads/writes and
+/// must not overlap; any alignment.
+unsafe fn copy_bytes_raw(be: Backend, dst: *mut u8, src: *const u8, n: usize) {
+    match be {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => copy_bytes_avx2(dst, src, n),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Sse2 => copy_bytes_sse2(dst, src, n),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => copy_bytes_neon(dst, src, n),
+        _ => std::ptr::copy_nonoverlapping(src, dst, n),
+    }
+}
+
+/// SAFETY: valid for elements `i..n`; the ragged-tail finisher every
+/// wide kernel ends with.
+#[inline(always)]
+unsafe fn copy_tail(dst: *mut f32, src: *const f32, mut i: usize, n: usize) {
+    while i < n {
+        *dst.add(i) = *src.add(i);
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::{
+        __m256i, _mm256_loadu_ps, _mm256_loadu_si256, _mm256_setzero_ps, _mm256_storeu_ps,
+        _mm256_storeu_si256, _mm_loadu_ps, _mm_loadu_si128, _mm_setzero_ps, _mm_storeu_ps,
+        _mm_storeu_si128,
+    };
+
+    use super::copy_tail;
+
+    /// SAFETY (all kernels here): caller guarantees `n` valid elements
+    /// behind each pointer and no overlap; unaligned ops throughout.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn copy_avx2(dst: *mut f32, src: *const f32, n: usize) {
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let a = _mm256_loadu_ps(src.add(i));
+            let b = _mm256_loadu_ps(src.add(i + 8));
+            _mm256_storeu_ps(dst.add(i), a);
+            _mm256_storeu_ps(dst.add(i + 8), b);
+            i += 16;
+        }
+        if i + 8 <= n {
+            _mm256_storeu_ps(dst.add(i), _mm256_loadu_ps(src.add(i)));
+            i += 8;
+        }
+        if i + 4 <= n {
+            _mm_storeu_ps(dst.add(i), _mm_loadu_ps(src.add(i)));
+            i += 4;
+        }
+        copy_tail(dst, src, i, n);
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn copy_sse2(dst: *mut f32, src: *const f32, n: usize) {
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let a = _mm_loadu_ps(src.add(i));
+            let b = _mm_loadu_ps(src.add(i + 4));
+            _mm_storeu_ps(dst.add(i), a);
+            _mm_storeu_ps(dst.add(i + 4), b);
+            i += 8;
+        }
+        if i + 4 <= n {
+            _mm_storeu_ps(dst.add(i), _mm_loadu_ps(src.add(i)));
+            i += 4;
+        }
+        copy_tail(dst, src, i, n);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fill_avx2(dst: *mut f32, n: usize) {
+        let z = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_ps(dst.add(i), z);
+            i += 8;
+        }
+        while i < n {
+            *dst.add(i) = 0.0;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn fill_sse2(dst: *mut f32, n: usize) {
+        let z = _mm_setzero_ps();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            _mm_storeu_ps(dst.add(i), z);
+            i += 4;
+        }
+        while i < n {
+            *dst.add(i) = 0.0;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn copy_bytes_avx2(dst: *mut u8, src: *const u8, n: usize) {
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let v = _mm256_loadu_si256(src.add(i).cast::<__m256i>());
+            _mm256_storeu_si256(dst.add(i).cast::<__m256i>(), v);
+            i += 32;
+        }
+        while i < n {
+            *dst.add(i) = *src.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn copy_bytes_sse2(dst: *mut u8, src: *const u8, n: usize) {
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let v = _mm_loadu_si128(src.add(i).cast());
+            _mm_storeu_si128(dst.add(i).cast(), v);
+            i += 16;
+        }
+        while i < n {
+            *dst.add(i) = *src.add(i);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+use x86::{copy_avx2, copy_bytes_avx2, copy_bytes_sse2, copy_sse2, fill_avx2, fill_sse2};
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use std::arch::aarch64::{vdupq_n_f32, vld1q_f32, vld1q_u8, vst1q_f32, vst1q_u8};
+
+    use super::copy_tail;
+
+    /// SAFETY (all kernels here): caller guarantees `n` valid elements
+    /// behind each pointer and no overlap; unaligned ops throughout.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn copy_neon(dst: *mut f32, src: *const f32, n: usize) {
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let a = vld1q_f32(src.add(i));
+            let b = vld1q_f32(src.add(i + 4));
+            vst1q_f32(dst.add(i), a);
+            vst1q_f32(dst.add(i + 4), b);
+            i += 8;
+        }
+        if i + 4 <= n {
+            vst1q_f32(dst.add(i), vld1q_f32(src.add(i)));
+            i += 4;
+        }
+        copy_tail(dst, src, i, n);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fill_neon(dst: *mut f32, n: usize) {
+        let z = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            vst1q_f32(dst.add(i), z);
+            i += 4;
+        }
+        while i < n {
+            *dst.add(i) = 0.0;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn copy_bytes_neon(dst: *mut u8, src: *const u8, n: usize) {
+        let mut i = 0usize;
+        while i + 16 <= n {
+            vst1q_u8(dst.add(i), vld1q_u8(src.add(i)));
+            i += 16;
+        }
+        while i < n {
+            *dst.add(i) = *src.add(i);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+use arm::{copy_bytes_neon, copy_neon, fill_neon};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(n: usize) -> Vec<f32> {
+        (0..n).map(|i| i as f32 * 0.5 - 3.0).collect()
+    }
+
+    #[test]
+    fn backend_is_stable_and_respects_the_env_pin() {
+        assert_eq!(backend(), backend());
+        if scalar_forced() {
+            assert_eq!(backend(), Backend::Scalar);
+        }
+    }
+
+    #[test]
+    fn copy_and_fill_match_reference_across_tails() {
+        // every ragged tail 0..64 plus a couple of wide bodies
+        for n in (0..64).chain([128, 1000]) {
+            let src = ramp(n);
+            let mut got = vec![f32::NAN; n];
+            let mut want = vec![f32::NAN; n];
+            copy(&mut got, &src);
+            reference::copy(&mut want, &src);
+            assert_eq!(got, want, "copy n={n}");
+
+            fill_zero(&mut got);
+            reference::fill_zero(&mut want);
+            assert_eq!(got, want, "fill n={n}");
+        }
+    }
+
+    #[test]
+    fn to_vec_is_copy() {
+        let src = ramp(77);
+        assert_eq!(to_vec(&src), src);
+        assert!(to_vec(&[]).is_empty());
+    }
+
+    #[test]
+    fn windows_scatter_gather_roundtrip() {
+        let (rows, row_len, stride) = (5usize, 7usize, 11usize);
+        let src = ramp(rows * row_len);
+        let mut mega = vec![-1.0f32; 3 + (rows - 1) * stride + row_len];
+        scatter_rows(&mut mega, 3, stride, &src, rows, row_len);
+        // gaps between windows stay untouched
+        assert_eq!(mega[0], -1.0);
+        assert_eq!(mega[3 + row_len], -1.0);
+        let mut back = vec![0.0f32; rows * row_len];
+        gather_rows(&mut back, &mega, 3, stride, rows, row_len);
+        assert_eq!(back, src);
+
+        fill_rows_zero(&mut mega, 3, stride, rows, row_len);
+        let mut want = vec![0.0f32; rows * row_len];
+        gather_rows(&mut want, &mega, 3, stride, rows, row_len);
+        assert_eq!(want, vec![0.0f32; rows * row_len]);
+        assert_eq!(mega[3 + row_len], -1.0, "gap survived the zero fill");
+    }
+
+    #[test]
+    fn le_bytes_roundtrip_matches_reference() {
+        let src = ramp(33);
+        let (mut got, mut want) = (vec![0xAAu8], vec![0xAAu8]);
+        extend_f32_le(&mut got, &src);
+        reference::extend_f32_le(&mut want, &src);
+        assert_eq!(got, want);
+
+        let (mut back, mut back_ref) = (Vec::new(), Vec::new());
+        extend_le_f32(&mut back, &got[1..]);
+        reference::extend_le_f32(&mut back_ref, &want[1..]);
+        assert_eq!(back, src);
+        assert_eq!(back_ref, src);
+    }
+
+    #[test]
+    #[should_panic(expected = "stride")]
+    fn overlapping_windows_are_rejected() {
+        let mut dst = vec![0.0f32; 32];
+        let src = ramp(16);
+        scatter_rows(&mut dst, 0, 3, &src, 4, 4); // stride 3 < row_len 4
+    }
+
+    #[test]
+    #[should_panic(expected = "windows end")]
+    fn out_of_bounds_windows_are_rejected() {
+        let mut dst = vec![0.0f32; 10];
+        let src = ramp(8);
+        scatter_rows(&mut dst, 0, 8, &src, 2, 4); // ends at 12 > 10
+    }
+}

@@ -24,6 +24,26 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Fold another summary in (Chan et al. parallel Welford merge):
+    /// the result is exactly what one summary over both sample streams
+    /// would hold, so per-thread shards can merge on read.
+    pub fn merge_from(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (n1, n2) = (self.n as f64, other.n as f64);
+        let d = other.mean - self.mean;
+        self.mean += d * n2 / (n1 + n2);
+        self.m2 += other.m2 + d * d * n1 * n2 / (n1 + n2);
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     pub fn count(&self) -> u64 {
         self.n
     }
@@ -65,7 +85,23 @@ impl Latencies {
         &self.summary
     }
 
-    /// Exact percentile by nearest-rank (q in [0,1]).
+    /// Absorb another recorder's samples. Because percentiles are
+    /// computed from the raw sample multiset (see [`percentile`]) and
+    /// multiset union is order-independent, merged shards report
+    /// *identical* percentiles to one recorder that saw every sample —
+    /// merge-on-read is exact, not approximate.
+    ///
+    /// [`percentile`]: Latencies::percentile
+    pub fn merge_from(&mut self, other: &Latencies) {
+        self.samples.extend_from_slice(&other.samples);
+        self.summary.merge_from(&other.summary);
+    }
+
+    /// Exact percentile over the raw samples, pinned to the
+    /// **nearest-rank** convention (q in [0,1]): sort ascending, take
+    /// the 1-indexed element at `ceil(q * n)` clamped to `[1, n]`. No
+    /// interpolation — the result is always an observed sample, and it
+    /// depends only on the sample multiset (not on recording order).
     pub fn percentile(&self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
@@ -87,6 +123,12 @@ impl Latencies {
     }
     pub fn count(&self) -> usize {
         self.samples.len()
+    }
+}
+
+impl crate::util::shard::Shardable for Latencies {
+    fn merge_from(&mut self, other: &Self) {
+        Latencies::merge_from(self, other);
     }
 }
 
@@ -148,6 +190,64 @@ mod tests {
     #[test]
     fn empty_latencies_nan() {
         assert!(Latencies::new().p50().is_nan());
+    }
+
+    #[test]
+    fn summary_merge_matches_single_stream() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0, 1.5, 3.25];
+        let mut whole = Summary::new();
+        for &x in &xs {
+            whole.add(x);
+        }
+        let (mut a, mut b) = (Summary::new(), Summary::new());
+        for &x in &xs[..3] {
+            a.add(x);
+        }
+        for &x in &xs[3..] {
+            b.add(x);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert!((a.var() - whole.var()).abs() < 1e-12);
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+    }
+
+    #[test]
+    fn summary_merge_with_empty_sides() {
+        let mut a = Summary::new();
+        a.merge_from(&Summary::new());
+        assert_eq!(a.count(), 0);
+        let mut b = Summary::new();
+        b.add(3.0);
+        a.merge_from(&b);
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.mean(), 3.0);
+        b.merge_from(&Summary::new());
+        assert_eq!(b.count(), 1);
+    }
+
+    #[test]
+    fn latency_merge_percentiles_are_exact() {
+        // split 1..=100 across three recorders in a scrambled order:
+        // merged percentiles must equal the single-recorder ones.
+        let mut whole = Latencies::new();
+        let mut parts = [Latencies::new(), Latencies::new(), Latencies::new()];
+        for i in 1..=100u64 {
+            whole.record(i as f64);
+            parts[(i * 7 % 3) as usize].record(i as f64);
+        }
+        let mut merged = Latencies::new();
+        for p in &parts {
+            merged.merge_from(p);
+        }
+        assert_eq!(merged.count(), whole.count());
+        assert_eq!(merged.p50(), whole.p50());
+        assert_eq!(merged.p95(), whole.p95());
+        assert_eq!(merged.p99(), whole.p99());
+        assert_eq!(merged.percentile(1.0), whole.percentile(1.0));
+        assert!((merged.summary().mean() - whole.summary().mean()).abs() < 1e-12);
     }
 
     #[test]
