@@ -1,0 +1,401 @@
+//! Bench: elastic topology churn under open-loop load (ADR-005).
+//!
+//! One serving topology — a 2-lane coalesce group + a standalone lane,
+//! plus a spare partition — is driven by an open-loop producer at a
+//! fixed pace while (in the churn run) a controller thread cycles
+//! add-lane → hot-swap → remove-lane through `TopologyController`. The
+//! control plane's balance heuristic lands every transient lane on the
+//! spare partition, so the producer's latencies measure exactly what
+//! ADR-005 promises: control-plane churn on a sibling partition must
+//! not disturb steady traffic.
+//!
+//! Gates:
+//! - **every mode**: every submission (producer + controller bursts)
+//!   gets exactly one outcome frame; zero rejects; every response is
+//!   byte-exact for its (id, model) seed — swap bursts offset by
+//!   exactly `tag * SWAP_SCALE` — so nothing is ever lost, misrouted,
+//!   or served by the wrong weights; merged rounds keep flowing.
+//! - **full mode only** (CI runs `--smoke`): producer p99 latency in
+//!   the churn run <= 2x the churn-free steady-state p99.
+//!
+//! All in-scope failure paths return errors (no asserts before the
+//! bridge closes), so a broken run fails instead of deadlocking the
+//! dispatch thread; verification runs post-join.
+//!
+//! Results go to `BENCH_elastic_churn.json`.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Result};
+
+use netfuse::coordinator::control::{ControlPlane, TopologyController};
+use netfuse::coordinator::mock::{EchoExecutor, SWAP_SCALE};
+use netfuse::coordinator::multi::{GroupSpec, LaneSpec, ParallelDispatcher};
+use netfuse::coordinator::server::ServerConfig;
+use netfuse::coordinator::StrategyKind;
+use netfuse::ingress::{
+    run_dispatch_elastic, Envelope, Frame, FrameQueue, IngressBridge, IngressStats, LaneQos,
+};
+use netfuse::util::bench::report::BenchReport;
+use netfuse::util::json::Json;
+use netfuse::util::shard::Sharded;
+
+/// The shared test scaffolding (seeded request builder) — outcome
+/// verification uses the same payload-seeding scheme as the test
+/// suites.
+#[path = "../rust/tests/common/mod.rs"]
+mod common;
+
+/// models per lane (the group executor runs 2 * M slots)
+const M: usize = 2;
+const INNER: [usize; 1] = [4];
+/// modeled device time per round — small, so steady-state latency is
+/// dominated by dispatch, and any churn-induced stall shows up
+const ROUND_COST: Duration = Duration::from_micros(100);
+/// modeled weight-upload time per hot-swap (the bounded pause)
+const SWAP_COST: Duration = Duration::from_micros(200);
+const FAR: Duration = Duration::from_secs(3600);
+/// requests per controller burst (two bursts per cycle: factory
+/// weights, then swapped weights)
+const BURST: usize = 8;
+/// transient-lane burst ids start here — disjoint from producer ids
+const BURST_ID0: u64 = 1_000_000;
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn lane_config() -> ServerConfig {
+    ServerConfig {
+        strategy: StrategyKind::NetFuse,
+        queue_cap: 8192,
+        max_wait: Duration::ZERO,
+    }
+}
+
+/// The whole-run executors plus one pre-built transient executor per
+/// churn cycle (the dispatcher borrows them, so they must outlive it).
+struct Execs {
+    bert0: EchoExecutor,
+    bert1: EchoExecutor,
+    group: EchoExecutor,
+    solo: EchoExecutor,
+    churners: Vec<EchoExecutor>,
+}
+
+impl Execs {
+    fn new(cycles: usize) -> Execs {
+        Execs {
+            bert0: EchoExecutor::new("bert", M, &INNER, ROUND_COST),
+            bert1: EchoExecutor::new("bert", M, &INNER, ROUND_COST),
+            group: EchoExecutor::new("bert", 2 * M, &INNER, ROUND_COST),
+            solo: EchoExecutor::new("solo", M, &INNER, ROUND_COST),
+            churners: (0..cycles)
+                .map(|c| {
+                    EchoExecutor::new(&format!("churn{c}"), M, &INNER, ROUND_COST)
+                        .with_swap_cost(SWAP_COST)
+                })
+                .collect(),
+        }
+    }
+}
+
+fn seeded_at(id: u64, model: usize, j: usize) -> f32 {
+    id as f32 * 1000.0 + model as f32 * 10.0 + j as f32
+}
+
+/// Check one response against its (id, model) seed plus a weight
+/// offset.
+fn check_exact(id: u64, model: usize, offset: f32, data: &[f32]) -> Result<()> {
+    ensure!(data.len() == INNER[0], "id {id}: bad payload length {}", data.len());
+    for (j, &x) in data.iter().enumerate() {
+        ensure!(
+            x == seeded_at(id, model, j) + offset,
+            "id {id} misrouted or served by the wrong weights \
+             (byte {j}: got {x}, want {})",
+            seeded_at(id, model, j) + offset
+        );
+    }
+    Ok(())
+}
+
+fn p99(sorted: &[f64]) -> f64 {
+    sorted[(sorted.len() as f64 * 0.99) as usize - 1]
+}
+
+struct RunOut {
+    p50: f64,
+    p99: f64,
+    served: usize,
+    burst_served: usize,
+    swap_pause_max: f64,
+    stats: IngressStats,
+    epochs: u64,
+}
+
+/// One serving run: `load` paced producer requests over the three
+/// whole-run lanes; when `churn` is set, a controller thread cycles
+/// add → burst → swap → burst → remove through every transient
+/// executor concurrently.
+fn run(execs: &Execs, load: usize, pace: Duration, churn: bool) -> Result<RunOut> {
+    let mut d = ParallelDispatcher::new(
+        vec![
+            LaneSpec::new(&execs.bert0, lane_config(), LaneQos::new(1, FAR)),
+            LaneSpec::new(&execs.bert1, lane_config(), LaneQos::new(1, FAR)),
+            LaneSpec::new(&execs.solo, lane_config(), LaneQos::new(1, FAR)),
+        ],
+        vec![GroupSpec::new(&execs.group, &[0, 1])],
+    )?;
+    d.add_spare_part(); // where the balance heuristic lands every add
+    let plane = Arc::new(ControlPlane::for_dispatcher(&d));
+    let ctl = TopologyController::new(d.topology_handle(), Arc::clone(&plane));
+    let stats: Arc<Sharded<IngressStats>> = Arc::new(Sharded::new(d.parts() + 1));
+    let bridge = IngressBridge::new(load + 4 * BURST * execs.churners.len() + 16);
+    let epoch0 = ctl.epoch();
+
+    // producer-side records: submit time per id, (frame, arrival) pairs
+    let mut submitted: HashMap<u64, (usize, Instant)> = HashMap::new();
+    let mut arrived: Vec<(Frame, Instant)> = Vec::with_capacity(load);
+    let mut ctl_out: Result<(Vec<Frame>, f64)> = Ok((Vec::new(), 0.0));
+    let run_out: Result<()> = std::thread::scope(|s| {
+        let runner = s.spawn(|| run_dispatch_elastic(&mut d, &bridge, 4096, &stats, &plane));
+
+        // churn controller: every transient lane lives on the spare
+        // partition (it is always the least-mapped), gets a factory
+        // burst, a hot-swap, a swapped burst, and a clean removal
+        let controller = churn.then(|| {
+            let ctl = &ctl;
+            let bridge = &bridge;
+            let churners = &execs.churners;
+            s.spawn(move || -> Result<(Vec<Frame>, f64)> {
+                let reply = FrameQueue::new();
+                let mut frames = Vec::new();
+                let mut pause_max = 0.0f64;
+                let mut id = BURST_ID0;
+                let wait = Duration::from_secs(10);
+                for (c, exec) in churners.iter().enumerate() {
+                    let spec = LaneSpec::new(exec, lane_config(), LaneQos::new(1, FAR));
+                    let (global, ticket) = ctl.add_lane(spec)?;
+                    ticket.wait(wait)?;
+                    for phase in 0..2u64 {
+                        for i in 0..BURST {
+                            let env = Envelope {
+                                lane: global,
+                                client_id: id,
+                                req: common::seeded_request(id, i % M, &INNER),
+                                reply: reply.clone(),
+                            };
+                            if bridge.submit(env).is_err() {
+                                bail!("burst submit refused (bridge sized for the run)");
+                            }
+                            id += 1;
+                        }
+                        // the burst must be fully answered before the
+                        // swap/remove so neither can strand it
+                        let deadline = Instant::now() + wait;
+                        let mut got = 0;
+                        while got < BURST {
+                            if let Some(f) = reply.try_pop() {
+                                frames.push(f);
+                                got += 1;
+                                continue;
+                            }
+                            if Instant::now() >= deadline {
+                                bail!("transient-lane burst stalled ({got}/{BURST})");
+                            }
+                            std::thread::sleep(Duration::from_micros(50));
+                        }
+                        if phase == 0 {
+                            let pause = ctl.swap_model(global, c as u64 + 1)?.wait(wait)?;
+                            pause_max = pause_max.max(pause.as_secs_f64());
+                        }
+                    }
+                    ctl.remove_lane(global)?.wait(wait)?;
+                }
+                Ok((frames, pause_max))
+            })
+        });
+
+        // open-loop producer: paced submissions over the whole-run
+        // lanes regardless of response progress, draining replies
+        // opportunistically so arrival timestamps stay honest
+        let reply = FrameQueue::new();
+        let mut drain = |arrived: &mut Vec<(Frame, Instant)>| {
+            while let Some(f) = reply.try_pop() {
+                arrived.push((f, Instant::now()));
+            }
+        };
+        for i in 0..load {
+            let id = i as u64;
+            let env = Envelope {
+                lane: i % 3,
+                client_id: id,
+                req: common::seeded_request(id, i % M, &INNER),
+                reply: reply.clone(),
+            };
+            if bridge.submit(env).is_err() {
+                bridge.close(); // let the runner drain out before we bail
+                bail!("producer submit refused (bridge sized for the run)");
+            }
+            submitted.insert(id, (i % M, Instant::now()));
+            drain(&mut arrived);
+            std::thread::sleep(pace);
+        }
+
+        if let Some(t) = controller {
+            ctl_out = t.join().expect("controller panicked");
+        }
+        bridge.close(); // runner drains everything queued, then exits
+
+        // keep timestamping arrivals while the tail drains
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while !runner.is_finished() && Instant::now() < deadline {
+            drain(&mut arrived);
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        drain(&mut arrived);
+        runner.join().expect("dispatch runner panicked")
+    });
+    run_out?;
+    let (burst_frames, swap_pause_max) = ctl_out?;
+
+    // ---- post-join verification: nothing lost, nothing misrouted ----
+    let mut lat = Vec::with_capacity(load);
+    for (f, at) in &arrived {
+        match f {
+            Frame::Response { id, model_idx, data, .. } => {
+                let Some((model, t0)) = submitted.remove(id) else {
+                    bail!("id {id}: response never submitted, or served twice");
+                };
+                ensure!(*model_idx as usize == model, "id {id}: wrong model");
+                check_exact(*id, model, 0.0, data)?;
+                lat.push((*at - t0).as_secs_f64());
+            }
+            other => bail!("steady lanes must never reject: {other:?}"),
+        }
+    }
+    ensure!(
+        submitted.is_empty(),
+        "{} producer requests lost under churn",
+        submitted.len()
+    );
+    let mut burst_seen: HashMap<u64, ()> = HashMap::new();
+    for f in &burst_frames {
+        match f {
+            Frame::Response { id, model_idx, data, .. } => {
+                ensure!(*id >= BURST_ID0, "burst reply with a producer id {id}");
+                ensure!(burst_seen.insert(*id, ()).is_none(), "id {id} served twice");
+                // ids encode (cycle, phase, i): recover the expected
+                // model and weight offset
+                let k = (id - BURST_ID0) as usize;
+                let (cycle, phase, i) = (k / (2 * BURST), k / BURST % 2, k % BURST);
+                ensure!(*model_idx as usize == i % M, "burst id {id}: wrong model");
+                let offset = if phase == 1 { (cycle as u64 + 1) as f32 * SWAP_SCALE } else { 0.0 };
+                check_exact(*id, i % M, offset, data)?;
+            }
+            other => bail!("transient lanes must never reject mid-life: {other:?}"),
+        }
+    }
+
+    ensure!(!lat.is_empty(), "no producer latencies recorded");
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(RunOut {
+        p50: lat[lat.len() / 2],
+        p99: p99(&lat),
+        served: lat.len(),
+        burst_served: burst_frames.len(),
+        swap_pause_max,
+        epochs: ctl.epoch() - epoch0,
+        stats: stats.read(),
+    })
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!(
+        "# elastic_churn: control-plane churn next to open-loop traffic{}\n",
+        if smoke { " (SMOKE)" } else { "" }
+    );
+
+    let load = if smoke { 400 } else { 4000 };
+    let pace = Duration::from_micros(if smoke { 200 } else { 400 });
+    let cycles = if smoke { 2 } else { 10 };
+
+    let steady_execs = Execs::new(0);
+    let steady = run(&steady_execs, load, pace, false)?;
+    let churn_execs = Execs::new(cycles);
+    let churned = run(&churn_execs, load, pace, true)?;
+    let inflation = churned.p99 / steady.p99.max(1e-9);
+
+    for (name, r) in [("steady", &steady), ("churn ", &churned)] {
+        println!(
+            "{name}: {} served, p50 {:.0}us p99 {:.0}us | {} burst reqs, \
+             {} ctrl ops, {} epochs, {} merged rounds",
+            r.served,
+            r.p50 * 1e6,
+            r.p99 * 1e6,
+            r.burst_served,
+            r.stats.ctrl_ops,
+            r.epochs,
+            r.stats.coalesced_rounds,
+        );
+    }
+    println!(
+        "p99 inflation under churn: {inflation:.2}x (max swap pause {:.0}us)\n",
+        churned.swap_pause_max * 1e6
+    );
+
+    let obj = |r: &RunOut| {
+        let mut o = BTreeMap::new();
+        o.insert("served".to_string(), num(r.served as f64));
+        o.insert("burst_served".to_string(), num(r.burst_served as f64));
+        o.insert("p50_s".to_string(), num(r.p50));
+        o.insert("p99_s".to_string(), num(r.p99));
+        o.insert("ctrl_ops".to_string(), num(r.stats.ctrl_ops as f64));
+        o.insert("epochs".to_string(), num(r.epochs as f64));
+        o.insert("merged_rounds".to_string(), num(r.stats.coalesced_rounds as f64));
+        o.insert("responses".to_string(), num(r.stats.responses as f64));
+        Json::Obj(o)
+    };
+    let mut rep = BenchReport::new("elastic_churn", smoke);
+    rep.num("load", load as f64)
+        .num("pace_us", pace.as_secs_f64() * 1e6)
+        .num("churn_cycles", cycles as f64)
+        .num("p99_inflation", inflation)
+        .num("swap_pause_max_s", churned.swap_pause_max)
+        .set("steady", obj(&steady))
+        .set("churn", obj(&churned))
+        .ns_per_slot("steady_p99", steady.p99 * 1e9)
+        .ns_per_slot("churn_p99", churned.p99 * 1e9);
+    rep.write()?;
+
+    // correctness gates run in every mode (written AFTER the report so
+    // a failing run still leaves its numbers behind); run() already
+    // enforced exactly-one byte-exact outcome per submission
+    assert_eq!(steady.served, load, "steady run lost requests");
+    assert_eq!(churned.served, load, "churn run lost requests");
+    assert_eq!(churned.burst_served, cycles * 2 * BURST, "transient bursts lost requests");
+    assert_eq!(
+        churned.stats.ctrl_ops as usize,
+        cycles * 3,
+        "every add/swap/remove must be applied"
+    );
+    assert!(
+        churned.stats.coalesced_rounds > 0,
+        "the group must keep merging rounds during churn"
+    );
+    assert_eq!(steady.stats.ctrl_ops, 0);
+    assert!(churned.epochs >= cycles as u64 * 3, "epoch must advance with every op");
+    // the p99 gate is full-mode only: smoke runs are too short for a
+    // stable tail estimate on shared CI runners
+    if !smoke {
+        assert!(
+            inflation <= 2.0,
+            "churn inflated steady-traffic p99 by {inflation:.2}x (> 2x): \
+             sibling-partition churn is supposed to be non-disruptive"
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,290 @@
+//! Elastic-topology demo: TCP clients -> `IngressBridge` -> partitioned
+//! dispatch threads, with a live **operator** reshaping the topology
+//! mid-traffic through `TopologyController` (ADR-005).
+//!
+//! The serving side starts as a 2-lane `bert` coalesce group
+//! (partition 0) + a standalone `solo` lane (partition 1) + one spare
+//! partition. Open-loop producers drive Poisson traffic at the three
+//! construction-time lanes for the whole run while the operator, on its
+//! own TCP connection:
+//!
+//! 1. **adds** a fresh lane (lands on the spare partition) and serves a
+//!    burst through it;
+//! 2. **hot-swaps** the lane's weights (bounded pause, printed) and
+//!    serves a second burst — echoed outputs shift by
+//!    `tag * SWAP_SCALE`, proving the new weights answer;
+//! 3. **removes** the lane (quiesce: drain, then excise) — follow-up
+//!    frames to the dead global id come back as typed `NoLane` rejects,
+//!    never silent drops.
+//!
+//! After every control-plane step the example prints the epoch-stamped
+//! lane table (`TopologySnapshot`), and at exit the merged-round
+//! counts, showing the coalesce group kept merging throughout.
+//!
+//! The lanes are in-process echo executors, so the demo runs without
+//! AOT artifacts — swap in `Fleet::load_with_pool` lanes to serve the
+//! real thing; every other line stays identical.
+//!
+//! ```bash
+//! cargo run --release --example serve_elastic -- [horizon_ms] [rate_rps]
+//! ```
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use netfuse::coordinator::control::{ControlPlane, TopologyController};
+use netfuse::coordinator::mock::{EchoExecutor, SWAP_SCALE};
+use netfuse::coordinator::multi::{
+    GroupSpec, LaneSpec, ParallelDispatcher, TopologySnapshot,
+};
+use netfuse::coordinator::server::ServerConfig;
+use netfuse::coordinator::StrategyKind;
+use netfuse::ingress::{
+    run_dispatch_elastic, serve_conn, Frame, IngressBridge, IngressStats, LaneQos, LoadGen,
+    RejectCode, TcpTransport, TrafficShape, Transport, TransportRx, TransportTx,
+};
+use netfuse::util::shard::Sharded;
+
+const M: usize = 2;
+const INPUT_SHAPE: [usize; 2] = [1, 4];
+const PRODUCERS: usize = 2;
+const BURST: usize = 10;
+const SWAP_TAG: u64 = 7;
+const ACK: Duration = Duration::from_secs(5);
+
+fn lane_config() -> ServerConfig {
+    ServerConfig {
+        strategy: StrategyKind::NetFuse,
+        queue_cap: 1024,
+        max_wait: Duration::from_millis(1),
+    }
+}
+
+fn qos() -> LaneQos {
+    LaneQos::new(1, Duration::from_millis(250))
+}
+
+fn print_topo(what: &str, snap: &TopologySnapshot) {
+    println!("[epoch {:>2}] {what}", snap.epoch);
+    for (g, loc) in snap.lanes.iter().enumerate() {
+        match loc {
+            Some((p, l)) => println!("    lane {g} -> partition {p} slot {l}"),
+            None => println!("    lane {g} -> (unmapped: rejects NoLane)"),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let horizon_ms: u64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(800.0);
+    let horizon = Duration::from_millis(horizon_ms);
+    let step = horizon / 5; // operator pacing between control-plane ops
+
+    // in-process echo lanes so the demo runs without AOT artifacts
+    let cost = Duration::from_micros(200);
+    let bert0 = EchoExecutor::new("bert", M, &[4], cost);
+    let bert1 = EchoExecutor::new("bert", M, &[4], cost);
+    let group = EchoExecutor::new("bert", 2 * M, &[4], cost);
+    let solo = EchoExecutor::new("solo", M, &[4], cost);
+    let fresh = EchoExecutor::new("fresh", M, &[4], cost)
+        .with_swap_cost(Duration::from_micros(500));
+
+    let mut d = ParallelDispatcher::new(
+        vec![
+            LaneSpec::new(&bert0, lane_config(), qos()),
+            LaneSpec::new(&bert1, lane_config(), qos()),
+            LaneSpec::new(&solo, lane_config(), qos()),
+        ],
+        vec![GroupSpec::new(&group, &[0, 1])],
+    )?;
+    d.add_spare_part(); // the control plane installs into this one
+    let plane = Arc::new(ControlPlane::for_dispatcher(&d));
+    let ctl = TopologyController::new(d.topology_handle(), Arc::clone(&plane));
+    let stats: Arc<Sharded<IngressStats>> = Arc::new(Sharded::new(d.parts() + 1));
+    let bridge = IngressBridge::new(1024);
+
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    println!(
+        "serving bert x2 (coalesced) + solo on {addr}; {PRODUCERS} open-loop \
+         producers at {rate:.0} req/s for {horizon:?}, operator churn every {step:?}"
+    );
+    print_topo("initial topology", &ctl.snapshot());
+
+    let gen = LoadGen::new(
+        TrafficShape::Poisson { rate },
+        &[(M, 1.0), (M, 1.0), (M, 1.0)],
+        0xE1A57,
+    )?;
+    let shards = gen.shards(PRODUCERS);
+
+    let (sent, ok, rejected, op_report) = std::thread::scope(|s| {
+        let accept = s.spawn(|| {
+            (0..PRODUCERS + 1)
+                .map(|_| {
+                    let (stream, _) = listener.accept().expect("accept");
+                    let t = TcpTransport::from_stream(stream).expect("tcp transport");
+                    serve_conn(bridge.clone(), Box::new(t)).expect("serve_conn")
+                })
+                .collect::<Vec<_>>()
+        });
+
+        // the dispatch side: router + one thread per partition, control
+        // commands applied between rounds
+        let d_ref = &mut d;
+        let bridge_ref = &bridge;
+        let stats_ref = &stats;
+        let plane_ref = &plane;
+        let runner =
+            s.spawn(move || run_dispatch_elastic(d_ref, bridge_ref, 1024, stats_ref, plane_ref));
+
+        // the operator: scripted add -> swap -> remove on its own conn
+        let op = {
+            let ctl = &ctl;
+            let fresh = &fresh;
+            s.spawn(move || -> Result<String> {
+                let t: Box<dyn Transport> = Box::new(TcpTransport::connect(addr)?);
+                let (mut tx, mut rx) = t.split()?;
+                let mut id = 0u64;
+                let mut burst = |tx: &mut Box<dyn TransportTx>,
+                                 rx: &mut Box<dyn TransportRx>,
+                                 lane: usize,
+                                 n: usize|
+                 -> Result<(u64, u64, f32)> {
+                    let (mut ok, mut no_lane, mut first) = (0u64, 0u64, 0.0f32);
+                    for i in 0..n {
+                        tx.send(&Frame::Request {
+                            id,
+                            lane: lane as u32,
+                            model_idx: (i % M) as u32,
+                            shape: INPUT_SHAPE.to_vec(),
+                            data: vec![1.0; 4],
+                        })?;
+                        id += 1;
+                    }
+                    for _ in 0..n {
+                        match rx.recv()? {
+                            Some(Frame::Response { data, .. }) => {
+                                if ok == 0 {
+                                    first = data[0];
+                                }
+                                ok += 1;
+                            }
+                            Some(Frame::Reject { code: RejectCode::NoLane, .. }) => no_lane += 1,
+                            other => anyhow::bail!("operator got {other:?}"),
+                        }
+                    }
+                    Ok((ok, no_lane, first))
+                };
+
+                std::thread::sleep(step);
+                let (global, ticket) = ctl.add_lane(LaneSpec::new(fresh, lane_config(), qos()))?;
+                let out = ticket.wait(ACK)?;
+                print_topo(
+                    &format!(
+                        "added lane {global} -> partition {} slot {} (under traffic)",
+                        out.global, out.local
+                    ),
+                    &ctl.snapshot(),
+                );
+                let (ok1, nl1, first1) = burst(&mut tx, &mut rx, global, BURST)?;
+                ensure!(ok1 == BURST as u64 && nl1 == 0, "factory burst: {ok1} ok {nl1} nolane");
+                println!("    burst of {BURST} served by factory weights (echo[0] = {first1})");
+
+                std::thread::sleep(step);
+                let pause = ctl.swap_model(global, SWAP_TAG)?.wait(ACK)?;
+                print_topo(
+                    &format!("hot-swapped lane {global} to tag {SWAP_TAG} (pause {pause:?})"),
+                    &ctl.snapshot(),
+                );
+                let (ok2, nl2, first2) = burst(&mut tx, &mut rx, global, BURST)?;
+                ensure!(ok2 == BURST as u64 && nl2 == 0, "swapped burst: {ok2} ok {nl2} nolane");
+                println!(
+                    "    burst of {BURST} served by NEW weights (echo[0] = {first2}, \
+                     shifted by tag*SWAP_SCALE = {})",
+                    SWAP_TAG as f32 * SWAP_SCALE
+                );
+
+                std::thread::sleep(step);
+                ctl.remove_lane(global)?.wait(ACK)?;
+                print_topo(&format!("removed lane {global} (drained, then excised)"), &ctl.snapshot());
+                let (ok3, nl3, _) = burst(&mut tx, &mut rx, global, 3)?;
+                ensure!(ok3 == 0 && nl3 == 3, "dead lane: {ok3} ok {nl3} nolane");
+                println!("    3 follow-up frames to lane {global}: all typed NoLane rejects");
+
+                tx.send(&Frame::Eos)?;
+                Ok(format!(
+                    "operator: add+swap+remove acked; {}+{} burst responses, 3 NoLane",
+                    ok1, ok2
+                ))
+            })
+        };
+
+        // open-loop producers over the three construction-time lanes
+        let mut senders = Vec::new();
+        let mut receivers = Vec::new();
+        for shard in shards {
+            let t: Box<dyn Transport> = Box::new(TcpTransport::connect(addr).expect("connect"));
+            let (mut tx, mut rx) = t.split().expect("split");
+            receivers.push(s.spawn(move || {
+                let (mut ok, mut rejected) = (0u64, 0u64);
+                loop {
+                    match rx.recv() {
+                        Ok(Some(Frame::Response { .. })) => ok += 1,
+                        Ok(Some(Frame::Reject { .. })) => rejected += 1,
+                        Ok(Some(_)) => {}
+                        Ok(None) | Err(_) => return (ok, rejected),
+                    }
+                }
+            }));
+            senders.push(s.spawn(move || {
+                let sent = shard.drive(horizon, |a| {
+                    let _ = tx.send(&Frame::Request {
+                        id: a.id,
+                        lane: a.lane as u32,
+                        model_idx: a.model_idx as u32,
+                        shape: INPUT_SHAPE.to_vec(),
+                        data: vec![0.5; 4],
+                    });
+                });
+                let _ = tx.send(&Frame::Eos);
+                sent
+            }));
+        }
+
+        let sent: u64 = senders.into_iter().map(|t| t.join().unwrap()).sum();
+        let op_report = op.join().unwrap();
+        let conns = accept.join().unwrap();
+        bridge.close();
+        runner.join().unwrap().expect("elastic dispatch failed");
+        for c in conns {
+            c.shutdown();
+        }
+        let (mut ok, mut rejected) = (0u64, 0u64);
+        for r in receivers {
+            let (o, j) = r.join().unwrap();
+            ok += o;
+            rejected += j;
+        }
+        (sent, ok, rejected, op_report)
+    });
+    println!("{}", op_report?);
+
+    let st = stats.read();
+    println!(
+        "\nopen loop done: {sent} sent -> {ok} responses + {rejected} rejects \
+         ({} rounds, {} merged, {} admitted, {} ctrl ops, {} NoLane)",
+        st.rounds, st.coalesced_rounds, st.admitted, st.ctrl_ops, st.no_lane
+    );
+    let gs = d.part(0).group_stats(0);
+    println!(
+        "coalesce group: {} merged rounds -> {} responses (kept merging through churn)",
+        gs.rounds, gs.responses
+    );
+    print_topo("final topology", &ctl.snapshot());
+    Ok(())
+}

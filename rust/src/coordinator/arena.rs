@@ -81,8 +81,14 @@ impl Layout {
 /// Lanes contribute *contiguous* windows in registration order, so the
 /// map is just the prefix sums of the per-lane slot counts — `locate`
 /// is a partition-point search, `group_slot` an add. The map is built
-/// once at group formation (`coordinator::coalesce`) and read on every
-/// coalesced round, so it allocates nothing after construction.
+/// at group formation (`coordinator::coalesce`) and read on every
+/// coalesced round, so it allocates nothing after construction. Under
+/// elastic topology (ADR-005) group membership churns at runtime: the
+/// owning dispatch thread REPLACES the map between rounds (`uniform`
+/// over the surviving members) rather than mutating it, so a map in
+/// use by a round is immutable for that round's whole life — the same
+/// argument that makes `ArenaRing` slot independence safe lets sibling
+/// partitions' in-flight rounds ignore the churn entirely.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SlotMap {
     /// `offsets[k]` = first group slot of lane `k`; `offsets[len]` = total

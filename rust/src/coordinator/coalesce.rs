@@ -27,6 +27,12 @@
 //! response scatter) lives in [`super::multi`]. See
 //! `docs/ADR-002-coalescing.md` for the full design, including why an
 //! SLO-boosted lane always dispatches solo instead of riding a group.
+//!
+//! [`plan_group`]'s validation is **construction-time strict**: the
+//! group executor must be exactly full. After formation, membership is
+//! elastic (ADR-005) — `MultiServer` shrinks/grows the `SlotMap`
+//! between rounds as lanes retire or install, with the executor's
+//! compiled width as the ceiling and unused windows padding.
 
 use anyhow::{bail, Result};
 

@@ -1,0 +1,419 @@
+//! The elastic-topology control plane (ADR-005): add, remove, and
+//! hot-swap lanes on a LIVE [`ParallelDispatcher`] under open-loop
+//! traffic.
+//!
+//! Ownership is the whole design. Each partition's lanes — queues, QoS
+//! deficits, coalesce-group `SlotMap` — are owned by exactly one
+//! dispatch thread and are mutated lock-free. The control plane never
+//! touches them directly: a [`TopologyController`] (any thread) enqueues
+//! a [`LaneCmd`] on the owning partition's [`PartControl`] queue, and
+//! the partition's dispatch loop applies it **strictly between rounds**
+//! (the loop polls its queue once per iteration, and one iteration
+//! dispatches at most one round). That gives every mutation the same
+//! safety argument the data plane already has: no round is in flight on
+//! the structures being changed, and sibling partitions — whose rounds
+//! may be mid-execution on their own `ArenaRing` slots — are never
+//! touched at all (ring slots are independently reserved; see ADR-003).
+//! Command latency is bounded by one round plus the loop's idle poll.
+//!
+//! The only shared-mutable state is the [`Topology`] routing table,
+//! which ADR-005 moved behind a lock with an epoch stamp. Ordering
+//! makes the quiesce race-free:
+//!
+//! - **add**: reserve a fresh global id (router answers `NoLane` — the
+//!   id exists but is unmapped) → the owning thread installs the lane
+//!   (reusing a retired slot when one exists) → `map_lane` publishes
+//!   it. A client racing the install sees a clean typed reject, never a
+//!   misroute.
+//! - **remove**: `unmap_lane` FIRST — from that instant the router
+//!   rejects new arrivals with `NoLane` — then the owning thread marks
+//!   the lane `Draining` and its already-admitted requests flow out
+//!   through normal dispatch (merged rounds included). Once empty, the
+//!   thread excises it from the group `SlotMap` and the QoS table and
+//!   acks with the lane's carried WDRR deficit.
+//! - **swap**: applied between rounds by the owning thread on both the
+//!   lane executor and the lane's group-megabatch window; the ack
+//!   carries the measured pause (FusedInf's bounded-pause contract).
+//!
+//! Every command is acknowledged exactly once through a
+//! [`Ticket`]/[`Ack`] pair — including on dispatch-loop shutdown or
+//! failure, where outstanding commands fail with an error instead of
+//! hanging their waiters. Results cross threads as `Result<T, String>`
+//! because `anyhow::Error` is not `Clone` and the dispatch thread must
+//! not die with a controller's error.
+//!
+//! [`Topology`]: super::multi::Topology
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::ingress::qos::LaneQos;
+
+use super::multi::{LaneSpec, ParallelDispatcher, Topology, TopologySnapshot};
+use super::server::ServerConfig;
+use super::service::{Fleet, RoundExecutor};
+
+// ---------------------------------------------------------------------------
+// one-shot completion: Ticket (waiter) / Ack (resolver)
+// ---------------------------------------------------------------------------
+
+struct Cell<T> {
+    slot: Mutex<Option<std::result::Result<T, String>>>,
+    done: Condvar,
+}
+
+/// The waiting half of a one-shot completion: blocks until the paired
+/// [`Ack`] resolves, or the timeout expires.
+pub struct Ticket<T>(Arc<Cell<T>>);
+
+/// The resolving half: the dispatch thread completes it exactly once.
+/// Dropping an `Ack` unresolved fails the ticket (a "command dropped"
+/// error) rather than hanging the waiter forever.
+pub struct Ack<T>(Option<Arc<Cell<T>>>);
+
+/// A fresh, unresolved completion pair.
+pub fn ticket<T>() -> (Ticket<T>, Ack<T>) {
+    let cell = Arc::new(Cell { slot: Mutex::new(None), done: Condvar::new() });
+    (Ticket(Arc::clone(&cell)), Ack(Some(cell)))
+}
+
+impl<T> Ticket<T> {
+    /// Block until the command is acknowledged. Times out with an error
+    /// after `timeout` (the command may still complete later; its
+    /// result is then discarded).
+    pub fn wait(self, timeout: Duration) -> Result<T> {
+        let deadline = Instant::now() + timeout;
+        let mut slot = self.0.slot.lock().unwrap();
+        loop {
+            if let Some(res) = slot.take() {
+                return res.map_err(|e| anyhow!(e)).context("control command failed");
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("control command not acknowledged within {timeout:?}");
+            }
+            let (next, _) = self.0.done.wait_timeout(slot, deadline - now).unwrap();
+            slot = next;
+        }
+    }
+
+    /// Non-blocking probe: the result if the command has completed.
+    pub fn try_take(&self) -> Option<Result<T>> {
+        self.0
+            .slot
+            .lock()
+            .unwrap()
+            .take()
+            .map(|res| res.map_err(|e| anyhow!(e).context("control command failed")))
+    }
+}
+
+impl<T> Ack<T> {
+    /// Resolve the paired ticket (exactly once; later calls are no-ops
+    /// because `complete` consumes the ack).
+    pub fn complete(mut self, res: std::result::Result<T, String>) {
+        if let Some(cell) = self.0.take() {
+            *cell.slot.lock().unwrap() = Some(res);
+            cell.done.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for Ack<T> {
+    fn drop(&mut self) {
+        if let Some(cell) = self.0.take() {
+            *cell.slot.lock().unwrap() =
+                Some(Err("control command dropped without acknowledgement".to_string()));
+            cell.done.notify_all();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// commands and their outcomes
+// ---------------------------------------------------------------------------
+
+/// What a completed add reports back.
+#[derive(Debug, Clone, Copy)]
+pub struct AddOutcome {
+    /// the global lane id clients address (reserved before install)
+    pub global: usize,
+    /// the partition-local lane slot (possibly a reused retired slot)
+    pub local: usize,
+    /// the coalesce group the lane auto-attached to, if any
+    pub group: Option<usize>,
+    /// topology epoch after the lane was published
+    pub epoch: u64,
+}
+
+/// What a completed remove reports back.
+#[derive(Debug, Clone, Copy)]
+pub struct RemoveOutcome {
+    /// the lane's carried WDRR deficit at excision — feed it to the
+    /// add side of a migration so weighted shares hold across the move
+    pub deficit: i64,
+    /// topology epoch after the lane was excised
+    pub epoch: u64,
+}
+
+/// One mutation for a partition's dispatch thread to apply between
+/// rounds.
+pub enum LaneCmd<'f, E: RoundExecutor = Fleet> {
+    /// Install a lane and publish `global -> (part, local)`.
+    Add {
+        global: usize,
+        spec: LaneSpec<'f, E>,
+        /// carried WDRR deficit (0 for a fresh tenant)
+        deficit: i64,
+        ack: Ack<AddOutcome>,
+    },
+    /// Quiesce local lane `local` (already unmapped by the controller):
+    /// drain through normal dispatch, then excise. Acked when excised.
+    Remove {
+        local: usize,
+        /// the unmapped global id (for diagnostics/logging only — the
+        /// routing table no longer knows it)
+        global: usize,
+        ack: Ack<RemoveOutcome>,
+    },
+    /// Hot-swap local lane `local`'s weights to version `tag` between
+    /// rounds; acked with the measured pause.
+    Swap { local: usize, tag: u64, ack: Ack<Duration> },
+}
+
+impl<'f, E: RoundExecutor> LaneCmd<'f, E> {
+    /// Fail this command's waiter with `reason` (shutdown/error paths).
+    pub fn fail(self, reason: &str) {
+        match self {
+            LaneCmd::Add { ack, .. } => ack.complete(Err(reason.to_string())),
+            LaneCmd::Remove { ack, .. } => ack.complete(Err(reason.to_string())),
+            LaneCmd::Swap { ack, .. } => ack.complete(Err(reason.to_string())),
+        }
+    }
+}
+
+/// One partition's command queue: controller threads push, the
+/// partition's dispatch thread pops between rounds.
+pub struct PartControl<'f, E: RoundExecutor = Fleet> {
+    q: Mutex<VecDeque<LaneCmd<'f, E>>>,
+}
+
+impl<'f, E: RoundExecutor> Default for PartControl<'f, E> {
+    fn default() -> Self {
+        PartControl { q: Mutex::new(VecDeque::new()) }
+    }
+}
+
+impl<'f, E: RoundExecutor> PartControl<'f, E> {
+    pub(crate) fn push(&self, cmd: LaneCmd<'f, E>) {
+        self.q.lock().unwrap().push_back(cmd);
+    }
+
+    /// Pop the next pending command (dispatch-thread side).
+    pub fn pop(&self) -> Option<LaneCmd<'f, E>> {
+        self.q.lock().unwrap().pop_front()
+    }
+
+    /// Commands waiting to be applied.
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Command queues for every partition of one dispatcher. Created once,
+/// shared (`Arc`) between the controller and the dispatch run.
+pub struct ControlPlane<'f, E: RoundExecutor = Fleet> {
+    parts: Vec<PartControl<'f, E>>,
+}
+
+impl<'f, E: RoundExecutor> ControlPlane<'f, E> {
+    /// One queue per partition — size with
+    /// [`ParallelDispatcher::parts`] AFTER pre-provisioning spares
+    /// ([`ParallelDispatcher::add_spare_part`]): partitions cannot be
+    /// added once the run starts.
+    pub fn new(parts: usize) -> ControlPlane<'f, E> {
+        ControlPlane { parts: (0..parts).map(|_| PartControl::default()).collect() }
+    }
+
+    /// For a dispatcher, sized to its current partitions.
+    pub fn for_dispatcher(d: &ParallelDispatcher<'f, E>) -> ControlPlane<'f, E> {
+        Self::new(d.parts())
+    }
+
+    pub fn parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Partition `p`'s command queue.
+    pub fn part(&self, p: usize) -> &PartControl<'f, E> {
+        &self.parts[p]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the controller
+// ---------------------------------------------------------------------------
+
+/// The operator's handle on a live dispatcher: issues add / remove /
+/// swap / migrate against the shared [`Topology`] and the per-partition
+/// command queues, from ANY thread, while the dispatch threads own the
+/// data plane. Every method returns a [`Ticket`] (or acts through one)
+/// so callers choose between fire-and-forget and bounded waits.
+pub struct TopologyController<'f, E: RoundExecutor = Fleet> {
+    topo: Arc<Topology>,
+    plane: Arc<ControlPlane<'f, E>>,
+}
+
+impl<'f, E: RoundExecutor> TopologyController<'f, E> {
+    /// `topo` from [`ParallelDispatcher::topology_handle`], `plane`
+    /// shared with the `run_dispatch_elastic` call driving the same
+    /// dispatcher. The plane must have one queue per partition.
+    pub fn new(topo: Arc<Topology>, plane: Arc<ControlPlane<'f, E>>) -> TopologyController<'f, E> {
+        TopologyController { topo, plane }
+    }
+
+    /// Current topology epoch (bumped by every mutation).
+    pub fn epoch(&self) -> u64 {
+        self.topo.epoch()
+    }
+
+    /// One coherent copy of the routing table with its epoch.
+    pub fn snapshot(&self) -> TopologySnapshot {
+        self.topo.snapshot()
+    }
+
+    /// Add a lane to the partition currently mapping the fewest lanes
+    /// (the simple balance heuristic; use
+    /// [`TopologyController::add_lane_to`] to choose explicitly).
+    /// Returns the reserved global id — valid for addressing the lane
+    /// as soon as the ticket resolves — and the install ticket.
+    pub fn add_lane(&self, spec: LaneSpec<'f, E>) -> Result<(usize, Ticket<AddOutcome>)> {
+        let snap = self.topo.snapshot();
+        let parts = snap.parts.min(self.plane.parts());
+        if parts == 0 {
+            bail!("no partitions to add a lane to");
+        }
+        let mut load = vec![0usize; parts];
+        for slot in snap.lanes.iter().flatten() {
+            if slot.0 < parts {
+                load[slot.0] += 1;
+            }
+        }
+        let part = (0..parts).min_by_key(|&p| load[p]).expect("parts > 0");
+        self.add_lane_to(spec, part, 0)
+    }
+
+    /// Add a lane to partition `part`, carrying `deficit` WDRR credit
+    /// (0 for a fresh tenant; a migration passes the removed lane's
+    /// carried deficit). The global id is reserved — and permanently
+    /// owned by this tenant — before the command is queued, so a racing
+    /// client sees `NoLane`, never another tenant's lane.
+    pub fn add_lane_to(
+        &self,
+        spec: LaneSpec<'f, E>,
+        part: usize,
+        deficit: i64,
+    ) -> Result<(usize, Ticket<AddOutcome>)> {
+        if part >= self.plane.parts() {
+            bail!("no partition {part} (have {})", self.plane.parts());
+        }
+        let global = self.topo.reserve_lane();
+        let (t, ack) = ticket();
+        self.plane.part(part).push(LaneCmd::Add { global, spec, deficit, ack });
+        Ok((global, t))
+    }
+
+    /// Remove global lane `global`: unmap it NOW (the router starts
+    /// answering `NoLane` before this returns) and queue the quiesce on
+    /// the owning partition. The ticket resolves once the lane has
+    /// drained through normal dispatch and been excised, carrying its
+    /// WDRR deficit.
+    pub fn remove_lane(&self, global: usize) -> Result<Ticket<RemoveOutcome>> {
+        let Some((part, local)) = self.topo.unmap_lane(global) else {
+            bail!("no such lane {global} (not mapped)");
+        };
+        let (t, ack) = ticket();
+        self.plane.part(part).push(LaneCmd::Remove { local, global, ack });
+        Ok(t)
+    }
+
+    /// Hot-swap global lane `global`'s weights to version `tag`. The
+    /// owning dispatch thread applies it between rounds; the ticket
+    /// resolves with the measured pause. The epoch bumps on completion
+    /// so watchers observe the change.
+    pub fn swap_model(&self, global: usize, tag: u64) -> Result<Ticket<Duration>> {
+        let Some((part, local)) = self.topo.locate(global) else {
+            bail!("no such lane {global} (not mapped)");
+        };
+        let (t, ack) = ticket();
+        self.plane.part(part).push(LaneCmd::Swap { local, tag, ack });
+        Ok(t)
+    }
+
+    /// Migrate a lane to `to_part`: remove it (quiesce + excise), then
+    /// re-add it on the target partition **carrying its WDRR deficit**,
+    /// so its earned weighted share survives the rebalance (the ADR-003
+    /// "weights meter within a partition only" caveat would otherwise
+    /// let a migration reset a lane's credit). Blocks up to `timeout`
+    /// for EACH phase. The lane gets a fresh global id (ids are
+    /// monotone; the old id answers `NoLane` forever) — returned in the
+    /// outcome.
+    pub fn migrate_lane(
+        &self,
+        global: usize,
+        to_part: usize,
+        spec: LaneSpec<'f, E>,
+        timeout: Duration,
+    ) -> Result<AddOutcome> {
+        let removed = self
+            .remove_lane(global)?
+            .wait(timeout)
+            .with_context(|| format!("migrating lane {global}: remove phase"))?;
+        let (_, t) = self.add_lane_to(spec, to_part, removed.deficit)?;
+        t.wait(timeout)
+            .with_context(|| format!("migrating lane {global}: add phase"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticket_resolves_and_times_out() {
+        let (t, ack) = ticket::<u32>();
+        ack.complete(Ok(7));
+        assert_eq!(t.wait(Duration::from_millis(1)).unwrap(), 7);
+
+        let (t, _ack) = {
+            let (t, ack) = ticket::<u32>();
+            (t, Box::new(ack)) // keep the ack alive past the wait
+        };
+        let err = t.wait(Duration::from_millis(5)).unwrap_err();
+        assert!(err.to_string().contains("not acknowledged"), "got: {err}");
+    }
+
+    #[test]
+    fn dropped_ack_fails_the_ticket_instead_of_hanging() {
+        let (t, ack) = ticket::<u32>();
+        drop(ack);
+        let err = t.wait(Duration::from_secs(1)).unwrap_err();
+        assert!(err.to_string().contains("dropped"), "got: {err}");
+    }
+
+    #[test]
+    fn error_results_cross_as_context() {
+        let (t, ack) = ticket::<u32>();
+        ack.complete(Err("lane 3 is not live".to_string()));
+        let err = t.wait(Duration::from_millis(1)).unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("lane 3 is not live"), "got: {chain}");
+    }
+}

@@ -10,25 +10,41 @@
 //! benches and examples need it too; it is NOT part of the serving
 //! data plane.
 //!
+//! For the elastic-topology work (ADR-005) the mock also models
+//! FusedInf-style weight hot-swap: each slot carries a version tag, and
+//! outputs are offset by `version * SWAP_SCALE` so tests can tell from
+//! a response's bytes exactly which weight version served it.
+//!
 //! Failure-injection and worker-pool-dispatching mocks stay local to
 //! the tests that need them (see `rust/tests/coordinator_tests.rs`).
 
-use std::time::Duration;
+use std::ops::Range;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
 
 use super::service::RoundExecutor;
 use super::strategy::StrategyKind;
 
-/// Echo-the-payload executor with a modeled per-round device latency.
+/// Per-version payload offset applied by [`EchoExecutor`] after a
+/// [`RoundExecutor::swap_model`]: a slot at version `v` echoes
+/// `input + v * SWAP_SCALE`. Large enough to never collide with the
+/// seeded test payloads (`id*1000 + model*10 + j`).
+pub const SWAP_SCALE: f32 = 100_000.0;
+
+/// Echo-the-payload executor with a modeled per-round device latency
+/// and per-slot weight versions for hot-swap tests.
 /// Batch size is fixed at 1 (every serving mock in the repo uses bs=1).
 pub struct EchoExecutor {
     name: String,
     m: usize,
     input_shape: Vec<usize>,
     round_cost: Duration,
+    swap_cost: Duration,
+    versions: Mutex<Vec<u64>>,
 }
 
 impl EchoExecutor {
@@ -38,7 +54,21 @@ impl EchoExecutor {
             m,
             input_shape: input_shape.to_vec(),
             round_cost,
+            swap_cost: Duration::ZERO,
+            versions: Mutex::new(vec![0; m]),
         }
+    }
+
+    /// Model a fixed weight-staging pause per swap (the "bounded pause"
+    /// ADR-005 budgets); `Duration::ZERO` (the default) swaps instantly.
+    pub fn with_swap_cost(mut self, swap_cost: Duration) -> EchoExecutor {
+        self.swap_cost = swap_cost;
+        self
+    }
+
+    /// Current weight version of slot `i` (0 = never swapped).
+    pub fn version(&self, i: usize) -> u64 {
+        self.versions.lock().unwrap()[i]
     }
 }
 
@@ -65,10 +95,39 @@ impl RoundExecutor for EchoExecutor {
         if !self.round_cost.is_zero() {
             std::thread::sleep(self.round_cost);
         }
+        let versions = self.versions.lock().unwrap();
         outs.clear();
         for i in 0..self.m {
-            outs.push(get(i).cloned());
+            let mut out = get(i).cloned();
+            let v = versions[i];
+            if v != 0 {
+                if let Some(t) = out.as_mut() {
+                    for x in t.data_mut() {
+                        *x += v as f32 * SWAP_SCALE;
+                    }
+                }
+            }
+            outs.push(out);
         }
         Ok(())
+    }
+
+    fn swap_model(&self, slots: Range<usize>, tag: u64) -> Result<Duration> {
+        if slots.start >= slots.end || slots.end > self.m {
+            bail!(
+                "{}: swap window {slots:?} out of bounds (m={})",
+                self.name,
+                self.m
+            );
+        }
+        let started = Instant::now();
+        if !self.swap_cost.is_zero() {
+            std::thread::sleep(self.swap_cost);
+        }
+        let mut versions = self.versions.lock().unwrap();
+        for v in &mut versions[slots] {
+            *v = tag;
+        }
+        Ok(started.elapsed())
     }
 }

@@ -32,9 +32,17 @@
 //! dispatch thread), or — sharded — through `multi::ParallelDispatcher`
 //! (one dispatch thread per lane group over one shared ring and pool,
 //! `crate::ingress::run_dispatch_parallel`).
+//!
+//! Since ADR-005 the topology is **elastic**: [`control`]'s
+//! `TopologyController` adds, removes, and hot-swaps lanes on a live
+//! dispatcher (`crate::ingress::run_dispatch_elastic`) — the routing
+//! tables are epoch-stamped state behind `multi::Topology`, lane slots
+//! carry a `multi::LaneLife` lifecycle, and per-partition command
+//! queues apply every mutation strictly between rounds.
 
 pub mod arena;
 pub mod coalesce;
+pub mod control;
 pub mod memory;
 pub mod metrics;
 pub mod mock;
@@ -48,8 +56,12 @@ pub mod workload;
 
 pub use arena::{ArenaRing, Layout, RingSlot, RoundArena, SlotMap};
 pub use coalesce::CoalesceKey;
+pub use control::{
+    AddOutcome, ControlPlane, LaneCmd, PartControl, RemoveOutcome, Ticket, TopologyController,
+};
 pub use multi::{
-    Dispatched, GroupSpec, GroupStats, LaneSpec, MultiServer, ParallelDispatcher, Topology,
+    Dispatched, GroupSpec, GroupStats, LaneLife, LaneSpec, MultiServer, ParallelDispatcher,
+    Topology, TopologySnapshot,
 };
 pub use pool::WorkerPool;
 pub use request::{Request, Response};

@@ -37,6 +37,24 @@
 //!   plenty. A failed merged round requeues every member's requests in
 //!   their original FIFO positions, exactly like a failed solo round.
 //!
+//! **Elastic topology (ADR-005):** lanes are no longer fixed at
+//! startup. Every lane has a [`LaneLife`] — `Live` lanes admit and
+//! dispatch; [`MultiServer::begin_retire`] turns one `Draining` (stops
+//! admitting, keeps dispatching until its queues empty through the
+//! normal QoS path); [`MultiServer::finish_retire`] excises a drained
+//! lane from its coalesce group's `SlotMap` and the QoS table, leaving
+//! a `Retired` slot that [`MultiServer::install_lane`] may reuse for a
+//! future tenant (with fresh QoS credit — retired deficit/debt never
+//! leaks to the reuser). Coalesce-group membership is **elastic**: the
+//! group executor keeps its compiled width while the `SlotMap` grows
+//! and shrinks with the members, so merged rounds of the survivors
+//! continue across churn (unused megabatch windows pad).
+//! [`MultiServer::swap_lane_model`] hot-swaps one lane's weights
+//! between rounds — the FusedInf on-demand pattern — on both the
+//! lane's own executor and its group-megabatch window. The live
+//! control plane driving these from outside the dispatch thread is
+//! [`super::control`].
+//!
 //! Note on round overlap: one `MultiServer` dispatches lanes one at a
 //! time (`dispatch_next` is `&mut self`), so it does NOT overlap
 //! NETFUSE rounds by itself. Overlap comes from **sharding dispatch**:
@@ -50,7 +68,8 @@
 //! `benches/parallel_dispatch.rs` the N-thread dispatch win. The async
 //! ingress feeding these types from outside the dispatch thread lives
 //! in [`crate::ingress`] (`IngressBridge` + `run_dispatch`, or
-//! `run_dispatch_parallel` for the sharded form).
+//! `run_dispatch_parallel` for the sharded form;
+//! `run_dispatch_elastic` adds the control plane).
 //!
 //! Like [`Server`], the types are generic over [`RoundExecutor`] so the
 //! scheduling logic is testable without artifacts.
@@ -60,6 +79,8 @@
 //! [`WorkerPool::machine_sized`]: super::pool::WorkerPool::machine_sized
 //! [`ArenaRing`]: super::arena::ArenaRing
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -77,13 +98,20 @@ use super::service::{Fleet, RoundExecutor};
 use super::strategy::StrategyKind;
 
 /// One registered coalesce group: the group-level executor (for real
-/// fleets, the fused program compiled at the members' total slot
-/// count), the member lanes in megabatch-window order, and the slot
-/// remap between the two.
+/// fleets, the fused program compiled at its construction-time total
+/// slot count), the member lanes in megabatch-window order, and the
+/// slot remap between the two. Membership is elastic: `members` and
+/// `map` shrink/grow under churn while `exec` keeps its compiled
+/// width — `map.total() <= exec.m()`, and megabatch slots beyond the
+/// current members pad.
 struct Group<'f, E: RoundExecutor> {
     exec: &'f E,
     members: Vec<usize>,
     map: SlotMap,
+    /// uniform member window width (slots per member) — fixed for the
+    /// group's whole life even as membership churns, so window
+    /// arithmetic never depends on which members remain
+    member_m: usize,
     rounds: u64,
     responses: u64,
 }
@@ -95,6 +123,19 @@ pub struct GroupStats {
     pub rounds: u64,
     /// responses those merged rounds produced (across all members)
     pub responses: u64,
+}
+
+/// Lifecycle of one lane slot (ADR-005).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneLife {
+    /// admitting and dispatching
+    Live,
+    /// quiescing: no longer admitting, still dispatching until its
+    /// queues drain through the normal QoS path
+    Draining,
+    /// excised from its group and the QoS table; the slot is inert and
+    /// reusable by a future [`MultiServer::install_lane`]
+    Retired,
 }
 
 /// What one [`MultiServer::dispatch_next`] did.
@@ -114,7 +155,7 @@ pub struct Dispatched {
 
 /// Multi-tenant serving front end: one [`Server`] lane per fleet,
 /// QoS-scheduled (WDRR + SLO boost) round dispatch across lanes, with
-/// optional cross-fleet round coalescing.
+/// optional cross-fleet round coalescing and runtime lane churn.
 pub struct MultiServer<'f, E: RoundExecutor = Fleet> {
     lanes: Vec<Server<'f, E>>,
     sched: QosScheduler,
@@ -122,6 +163,16 @@ pub struct MultiServer<'f, E: RoundExecutor = Fleet> {
     groups: Vec<Group<'f, E>>,
     /// lane -> its group, parallel to `lanes`
     group_of: Vec<Option<usize>>,
+    /// lane lifecycle, parallel to `lanes`
+    life: Vec<LaneLife>,
+    /// last weight version swapped onto each lane (0 = factory
+    /// weights), parallel to `lanes`. Needed because a lane's group
+    /// megabatch window MOVES when membership churns — the window's
+    /// version must be re-stamped wherever the lane lands.
+    swap_tag: Vec<u64>,
+    /// cached metrics sink so lanes installed at runtime mirror into
+    /// the same shard the construction-time lanes were attached to
+    metrics_sink: Option<ShardHandle<MetricsCore>>,
     /// merged-round output scratch, reused across coalesced rounds
     group_outs: Vec<Option<Tensor>>,
     /// per-round served-lane charge scratch, reused across dispatches
@@ -157,6 +208,9 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
             sched: QosScheduler::new(eps),
             groups: Vec::new(),
             group_of: Vec::new(),
+            life: Vec::new(),
+            swap_tag: Vec::new(),
+            metrics_sink: None,
             group_outs: Vec::new(),
             charges: Vec::new(),
         }
@@ -175,20 +229,28 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     pub fn add_lane_qos(&mut self, fleet: &'f E, cfg: ServerConfig, qos: LaneQos) -> usize {
         let mut server = Server::new(fleet, cfg);
         server.metrics.slo = Some(qos.slo.as_secs_f64());
+        if let Some(sink) = &self.metrics_sink {
+            server.attach_metrics_sink(sink.clone());
+        }
         self.lanes.push(server);
         self.group_of.push(None);
+        self.life.push(LaneLife::Live);
+        self.swap_tag.push(0);
         self.sched.add_lane(qos)
     }
 
     /// Mirror every lane's metrics into one [`MetricsHub`] shard — the
     /// shard of the (single) thread dispatching this `MultiServer`.
-    /// Lane-local [`Server::metrics`] views are unaffected.
+    /// Lane-local [`Server::metrics`] views are unaffected. The sink is
+    /// remembered, so lanes installed later ([`MultiServer::install_lane`])
+    /// mirror into the same shard.
     ///
     /// [`MetricsHub`]: super::metrics::MetricsHub
     pub fn attach_metrics_sink(&mut self, sink: &ShardHandle<MetricsCore>) {
         for lane in &mut self.lanes {
             lane.attach_metrics_sink(sink.clone());
         }
+        self.metrics_sink = Some(sink.clone());
     }
 
     /// Register `members` as a coalesce group executing merged rounds
@@ -197,10 +259,17 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// total — see [`super::coalesce::plan_group`]) rejects any lane
     /// set that could not share a megabatch; a lane can belong to at
     /// most one group. Returns the group handle.
+    ///
+    /// Construction-time validation is strict (`exec` exactly full);
+    /// afterwards membership is elastic — removals shrink the
+    /// `SlotMap` below `exec`'s width and installs may grow it back.
     pub fn add_coalesce_group(&mut self, exec: &'f E, members: &[usize]) -> Result<usize> {
         for (a, &l) in members.iter().enumerate() {
             if l >= self.lanes.len() {
                 bail!("no lane {l} (have {})", self.lanes.len());
+            }
+            if self.life[l] != LaneLife::Live {
+                bail!("lane {l} is not live ({:?})", self.life[l]);
             }
             if self.group_of[l].is_some() {
                 bail!("lane {l} already belongs to a coalesce group");
@@ -211,6 +280,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         }
         let execs: Vec<&E> = members.iter().map(|&l| self.lanes[l].fleet()).collect();
         let map = plan_group(exec, &execs)?;
+        let member_m = self.lanes[members[0]].fleet().m();
         let g = self.groups.len();
         for &l in members {
             self.group_of[l] = Some(g);
@@ -219,6 +289,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
             exec,
             members: members.to_vec(),
             map,
+            member_m,
             rounds: 0,
             responses: 0,
         });
@@ -226,7 +297,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     }
 
     /// Form a coalesce group automatically: scan registered lanes (in
-    /// lane order) for ungrouped ones whose coalesce key — (model
+    /// lane order) for ungrouped live ones whose coalesce key — (model
     /// family, request shape, slot count) — matches `exec`'s family and
     /// shape, taking the first matching lane's slot count as the
     /// group's, until `exec`'s capacity is filled. Lanes with a
@@ -238,7 +309,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         let mut members: Vec<usize> = Vec::new();
         let mut lane_m: Option<usize> = None;
         for (l, lane) in self.lanes.iter().enumerate() {
-            if self.group_of[l].is_some() {
+            if self.group_of[l].is_some() || self.life[l] != LaneLife::Live {
                 continue;
             }
             let k = CoalesceKey::of(lane.fleet());
@@ -283,8 +354,20 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         self.group_of[lane]
     }
 
+    /// Number of lane SLOTS (live, draining, and retired — retired
+    /// slots stay addressable so ids remain stable under churn).
     pub fn lanes(&self) -> usize {
         self.lanes.len()
+    }
+
+    /// Lanes currently in [`LaneLife::Live`].
+    pub fn live_lanes(&self) -> usize {
+        self.life.iter().filter(|&&l| l == LaneLife::Live).count()
+    }
+
+    /// Lifecycle state of lane slot `lane`.
+    pub fn lane_life(&self, lane: usize) -> LaneLife {
+        self.life[lane]
     }
 
     /// Per-lane router/batcher (queue state, metrics).
@@ -297,10 +380,196 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         self.sched.qos(lane)
     }
 
-    /// Route one request to `lane`'s per-model queues.
+    // -----------------------------------------------------------------
+    // elastic lane lifecycle (ADR-005)
+    // -----------------------------------------------------------------
+
+    /// Install a tenant at runtime: reuse the first [`LaneLife::Retired`]
+    /// slot if one exists (its QoS state was fully torn down at
+    /// retirement, so the reuser starts from exactly the carried
+    /// `deficit` — use 0 for a fresh tenant, or a migrated lane's
+    /// carried deficit so weighted shares hold across a rebalance),
+    /// else append a new slot. Then try to attach the lane to the first
+    /// existing coalesce group with a matching key and free megabatch
+    /// capacity, so future rounds merge. Returns
+    /// `(lane, attached group)`.
+    ///
+    /// Call strictly between rounds (the control plane's dispatch-thread
+    /// command path guarantees this); sibling lanes' queues, deficits,
+    /// and in-flight state are untouched.
+    pub fn install_lane(
+        &mut self,
+        exec: &'f E,
+        cfg: ServerConfig,
+        qos: LaneQos,
+        deficit: i64,
+    ) -> Result<(usize, Option<usize>)> {
+        let mut server = Server::new(exec, cfg);
+        server.metrics.slo = Some(qos.slo.as_secs_f64());
+        if let Some(sink) = &self.metrics_sink {
+            server.attach_metrics_sink(sink.clone());
+        }
+        let local = match self.life.iter().position(|&l| l == LaneLife::Retired) {
+            Some(i) => {
+                debug_assert!(self.group_of[i].is_none(), "retired lane left grouped");
+                self.lanes[i] = server;
+                self.sched.restore_lane(i, qos, deficit);
+                self.life[i] = LaneLife::Live;
+                self.swap_tag[i] = 0;
+                i
+            }
+            None => {
+                self.lanes.push(server);
+                self.group_of.push(None);
+                self.life.push(LaneLife::Live);
+                self.swap_tag.push(0);
+                let i = self.sched.add_lane_carrying(qos, deficit);
+                debug_assert_eq!(i + 1, self.lanes.len(), "scheduler/lane slot drift");
+                i
+            }
+        };
+
+        // auto-attach: first key-compatible group with free capacity
+        // (same family + request shape, same member width, and the
+        // group executor has at least one more member window to give)
+        let key = CoalesceKey::of(exec);
+        let mut attached = None;
+        {
+            let groups = &mut self.groups;
+            let group_of = &mut self.group_of;
+            for (g, group) in groups.iter_mut().enumerate() {
+                let gk = CoalesceKey::of(group.exec);
+                if gk.family != key.family
+                    || gk.request_shape != key.request_shape
+                    || key.slots != group.member_m
+                    || (group.members.len() + 1) * group.member_m > group.exec.m()
+                {
+                    continue;
+                }
+                group.members.push(local);
+                group.map = SlotMap::uniform(group.members.len(), group.member_m)?;
+                group_of[local] = Some(g);
+                attached = Some(g);
+                break;
+            }
+        }
+        if let Some(g) = attached {
+            // membership changed every member's window start is stable
+            // (append-only), but the NEW member's window may hold a
+            // previously-retired member's swapped weights — re-stamp
+            self.restamp_group_versions(g)?;
+        }
+        Ok((local, attached))
+    }
+
+    /// Begin quiescing `lane`: it stops admitting ([`MultiServer::offer`]
+    /// now refuses) but keeps dispatching through the normal QoS path —
+    /// including merged group rounds — until its queues empty. Siblings
+    /// are untouched.
+    pub fn begin_retire(&mut self, lane: usize) -> Result<()> {
+        if lane >= self.lanes.len() || self.life[lane] != LaneLife::Live {
+            bail!(
+                "lane {lane} is not live (have {} slots)",
+                self.lanes.len()
+            );
+        }
+        self.life[lane] = LaneLife::Draining;
+        Ok(())
+    }
+
+    /// True when a [`LaneLife::Draining`] lane has fully drained and
+    /// [`MultiServer::finish_retire`] may excise it. Safe to act on
+    /// between rounds: dispatch is synchronous on this thread, so a
+    /// lane with `pending() == 0` here has no in-flight round either
+    /// (a failed round's requeue restores `pending` before this can be
+    /// observed).
+    pub fn retire_ready(&self, lane: usize) -> bool {
+        lane < self.lanes.len()
+            && self.life[lane] == LaneLife::Draining
+            && self.lanes[lane].pending() == 0
+    }
+
+    /// Excise a drained lane: remove it from its coalesce group (the
+    /// group's `SlotMap` shrinks; surviving members keep merging) and
+    /// retire its QoS slot — deficit/debt/boost state is fully torn
+    /// down, returned as the lane's **carried deficit** so a rebalance
+    /// can hand it to the lane's next home
+    /// ([`MultiServer::install_lane`] with the same value). The slot
+    /// becomes [`LaneLife::Retired`] and reusable.
+    pub fn finish_retire(&mut self, lane: usize) -> Result<i64> {
+        if lane >= self.lanes.len() || self.life[lane] != LaneLife::Draining {
+            bail!("lane {lane} is not draining");
+        }
+        let pending = self.lanes[lane].pending();
+        if pending > 0 {
+            bail!("lane {lane} still holds {pending} queued requests");
+        }
+        if let Some(g) = self.group_of[lane].take() {
+            let group = &mut self.groups[g];
+            group.members.retain(|&l| l != lane);
+            // an emptied group keeps a 1-member-shaped placeholder map
+            // (SlotMap rejects zero lanes); dispatch never uses it —
+            // merged rounds need >= 2 members with work
+            let n = group.members.len().max(1);
+            group.map = SlotMap::uniform(n, group.member_m)?;
+            // surviving members' windows shifted: re-stamp their weight
+            // versions onto the group executor's new window layout
+            self.restamp_group_versions(g)?;
+        }
+        self.life[lane] = LaneLife::Retired;
+        self.swap_tag[lane] = 0;
+        Ok(self.sched.remove_lane(lane))
+    }
+
+    /// Hot-swap `lane`'s model weights to version `tag`, between rounds
+    /// (FusedInf-style; see [`RoundExecutor::swap_model`]). Swaps BOTH
+    /// the lane's own executor (full range — solo and urgent rounds)
+    /// and, for a grouped lane, its megabatch window on the group
+    /// executor — sibling windows are untouched. Returns the total
+    /// bounded pause spent swapping.
+    pub fn swap_lane_model(&mut self, lane: usize, tag: u64) -> Result<Duration> {
+        if lane >= self.lanes.len() || self.life[lane] == LaneLife::Retired {
+            bail!("no live lane {lane} (have {} slots)", self.lanes.len());
+        }
+        let m = self.lanes[lane].fleet().m();
+        let mut pause = self.lanes[lane].fleet().swap_model(0..m, tag)?;
+        if let Some(g) = self.group_of[lane] {
+            let group = &self.groups[g];
+            let k = group
+                .members
+                .iter()
+                .position(|&l| l == lane)
+                .expect("grouped lane is one of its group's members");
+            pause += group.exec.swap_model(group.map.slots_of(k), tag)?;
+        }
+        self.swap_tag[lane] = tag;
+        Ok(pause)
+    }
+
+    /// Re-apply every member's weight version to its CURRENT megabatch
+    /// window on the group executor. Membership churn moves windows
+    /// (removal shifts survivors left; install may reuse a departed
+    /// member's window), so versions must follow the lanes, not the
+    /// slots. Skipped entirely while no member has ever swapped — so
+    /// executors without swap support still churn membership freely.
+    fn restamp_group_versions(&self, g: usize) -> Result<()> {
+        let group = &self.groups[g];
+        if group.members.iter().all(|&l| self.swap_tag[l] == 0) {
+            return Ok(());
+        }
+        for (k, &l) in group.members.iter().enumerate() {
+            group.exec.swap_model(group.map.slots_of(k), self.swap_tag[l])?;
+        }
+        Ok(())
+    }
+
+    /// Route one request to `lane`'s per-model queues. Only
+    /// [`LaneLife::Live`] lanes admit — a draining or retired lane
+    /// refuses (the ingress router maps this to a typed
+    /// `Reject{NoLane}` frame).
     pub fn offer(&mut self, lane: usize, req: Request) -> Result<Admit> {
-        if lane >= self.lanes.len() {
-            bail!("no lane {lane} (have {})", self.lanes.len());
+        if lane >= self.lanes.len() || self.life[lane] != LaneLife::Live {
+            bail!("no live lane {lane} (have {} slots)", self.lanes.len());
         }
         Ok(self.lanes[lane].offer(req))
     }
@@ -454,12 +723,18 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
 
         // execute: ONE merged round through the group executor; the
         // `get` closure is the SlotMap remap (group slot -> member
-        // lane's local slot). Coalescing exists to amortize the merged
-        // program's launch, so the group round is always NETFUSE.
+        // lane's local slot). Megabatch slots at or beyond the current
+        // membership's total pad (elastic membership may leave the map
+        // narrower than the executor's compiled width). Coalescing
+        // exists to amortize the merged program's launch, so the group
+        // round is always NETFUSE.
         let t0 = Instant::now();
         let run = {
             let lanes = &*lanes;
             let get = |gs: usize| {
+                if gs >= group.map.total() {
+                    return None; // beyond current members: pad window
+                }
                 let (k, local) = group.map.locate(gs);
                 lanes[group.members[k]].slot_input(local)
             };
@@ -478,8 +753,10 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         // verify the WHOLE merged output before any lane consumes a
         // slot: a short or hole-y result from a misbehaving group
         // executor must requeue every member, not answer some lanes
-        // and drop the rest mid-scatter
-        let bad = if outs.len() != group.map.total() {
+        // and drop the rest mid-scatter. (`outs` may legitimately be
+        // LONGER than the map — the executor answers its compiled
+        // width; slots beyond the members' total are padding.)
+        let bad = if outs.len() < group.map.total() {
             Some(format!(
                 "executor returned {} outputs for {} group slots",
                 outs.len(),
@@ -541,7 +818,8 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// a coalesce-group member and at least one other member still
     /// holds work, the members flush together as ONE merged round, so
     /// even the final partial rounds amortize the merged program's
-    /// launch instead of dispatching solo per lane.
+    /// launch instead of dispatching solo per lane. Draining lanes
+    /// flush like any other; retired lanes hold nothing by definition.
     pub fn drain(&mut self, responses: &mut Vec<Response>) -> Result<usize> {
         let mut total = 0;
         loop {
@@ -605,42 +883,173 @@ impl<'f, E: RoundExecutor> GroupSpec<'f, E> {
     }
 }
 
-/// The lane partition of a [`ParallelDispatcher`]: which partition owns
-/// each global lane, and the global id of every partition-local lane.
-/// Routing tables only — immutable after construction, shared by the
-/// router and every dispatch thread.
-pub struct Topology {
-    /// global lane -> (partition, partition-local lane)
-    local_of: Vec<(usize, usize)>,
-    /// partition -> local lane -> global lane
+/// The routing tables behind [`Topology`], behind one lock.
+struct TopoState {
+    /// global lane -> owning `(partition, local lane)`; `None` = not
+    /// (or no longer) mapped — the router's typed NoLane case. Global
+    /// ids are **monotone**: a removed lane's id is never reissued, so
+    /// a stale client keeps getting NoLane instead of someone else's
+    /// lane.
+    local_of: Vec<Option<(usize, usize)>>,
+    /// partition -> local lane -> last mapped global id. Grow-only and
+    /// kept after unmap: a quiescing lane's drained responses must
+    /// still quote the client's wire lane id. A reused local slot gets
+    /// overwritten only at its next `map_lane` — after the old lane has
+    /// fully drained (the dispatch thread is sequential).
     global_of: Vec<Vec<usize>>,
 }
 
+/// One coherent read of the live topology (ADR-005): the routing table
+/// as of `epoch`. Epochs advance on every mutation (map, unmap, new
+/// partition), so two snapshots with equal epochs are identical.
+#[derive(Debug, Clone)]
+pub struct TopologySnapshot {
+    pub epoch: u64,
+    /// global lane -> `Some((partition, local))` while mapped
+    pub lanes: Vec<Option<(usize, usize)>>,
+    /// number of partitions
+    pub parts: usize,
+}
+
+/// The lane partition of a [`ParallelDispatcher`]: which partition owns
+/// each global lane, and the global id of every partition-local lane.
+/// Shared by the router and every dispatch thread — and, since ADR-005,
+/// **live**: the tables sit behind a lock with an epoch stamp
+/// ([`Topology::epoch`]) bumped on every change, so the control plane
+/// can map/unmap lanes under traffic. Readers see each change atomically
+/// (a lane is mapped or it is not — never half-routed); the router's
+/// per-envelope [`Topology::locate`] is the single admission gate, so an
+/// unmapped lane yields a typed NoLane the instant `unmap_lane` returns.
+pub struct Topology {
+    state: RwLock<TopoState>,
+    epoch: AtomicU64,
+}
+
 impl Topology {
-    /// Number of partitions (= dispatch threads).
-    pub fn parts(&self) -> usize {
-        self.global_of.len()
+    fn new(local_of: Vec<Option<(usize, usize)>>, global_of: Vec<Vec<usize>>) -> Topology {
+        Topology {
+            state: RwLock::new(TopoState { local_of, global_of }),
+            epoch: AtomicU64::new(0),
+        }
     }
 
-    /// Number of global lanes.
+    /// Number of partitions (= dispatch threads).
+    pub fn parts(&self) -> usize {
+        self.state.read().unwrap().global_of.len()
+    }
+
+    /// Number of global lane ids ever issued (mapped or not — ids are
+    /// monotone and never reissued).
     pub fn lanes(&self) -> usize {
-        self.local_of.len()
+        self.state.read().unwrap().local_of.len()
     }
 
     /// The `(partition, local lane)` owning global lane `lane`, or
-    /// `None` for an unknown lane id (the router's NoLane case).
+    /// `None` for an unknown or unmapped lane id (the router's NoLane
+    /// case — removed lanes land here forever).
     pub fn locate(&self, lane: usize) -> Option<(usize, usize)> {
-        self.local_of.get(lane).copied()
+        self.state.read().unwrap().local_of.get(lane).copied().flatten()
     }
 
-    /// Global id of partition `part`'s local lane `local`.
+    /// Global id of partition `part`'s local lane `local`. For a local
+    /// slot whose lane was removed, this keeps answering the REMOVED
+    /// lane's global id until the slot is remapped — exactly what
+    /// response routing needs while that lane drains.
     pub fn global(&self, part: usize, local: usize) -> usize {
-        self.global_of[part][local]
+        self.state.read().unwrap().global_of[part][local]
     }
 
-    /// Global lane ids owned by partition `part`, in local-lane order.
-    pub fn part_lanes(&self, part: usize) -> &[usize] {
-        &self.global_of[part]
+    /// Global lane ids currently mapped to partition `part`, in
+    /// local-lane order.
+    pub fn part_lanes(&self, part: usize) -> Vec<usize> {
+        let st = self.state.read().unwrap();
+        st.global_of[part]
+            .iter()
+            .enumerate()
+            .filter(|(local, &g)| st.local_of.get(g).copied().flatten() == Some((part, *local)))
+            .map(|(_, &g)| g)
+            .collect()
+    }
+
+    /// The current topology epoch: bumped on every mutation. Two equal
+    /// epochs bracket an unchanged routing table.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// One coherent copy of the routing table with its epoch.
+    pub fn snapshot(&self) -> TopologySnapshot {
+        let st = self.state.read().unwrap();
+        TopologySnapshot {
+            epoch: self.epoch.load(Ordering::Acquire),
+            lanes: st.local_of.clone(),
+            parts: st.global_of.len(),
+        }
+    }
+
+    fn bump(&self) {
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Issue a fresh global lane id, unmapped (NoLane) until
+    /// [`Topology::map_lane`] binds it. Reserving BEFORE the owning
+    /// partition installs the lane means a client racing the install
+    /// gets a clean NoLane, never a misroute.
+    pub(crate) fn reserve_lane(&self) -> usize {
+        let mut st = self.state.write().unwrap();
+        st.local_of.push(None);
+        let g = st.local_of.len() - 1;
+        drop(st);
+        self.bump();
+        g
+    }
+
+    /// Bind global lane `global` to `(part, local)` and bump the epoch.
+    pub(crate) fn map_lane(&self, global: usize, part: usize, local: usize) {
+        let mut st = self.state.write().unwrap();
+        if global >= st.local_of.len() {
+            st.local_of.resize(global + 1, None);
+        }
+        st.local_of[global] = Some((part, local));
+        let row = &mut st.global_of[part];
+        if local >= row.len() {
+            row.resize(local + 1, usize::MAX);
+        }
+        row[local] = global;
+        drop(st);
+        self.bump();
+    }
+
+    /// Unbind global lane `global`: from this call on, the router
+    /// answers NoLane for it. Returns the `(partition, local)` it was
+    /// mapped to (the quiesce path needs it to address the drain), or
+    /// `None` if it was not mapped. The reverse record
+    /// ([`Topology::global`]) intentionally survives — see its doc.
+    pub(crate) fn unmap_lane(&self, global: usize) -> Option<(usize, usize)> {
+        let mut st = self.state.write().unwrap();
+        let old = st.local_of.get_mut(global)?.take();
+        drop(st);
+        if old.is_some() {
+            self.bump();
+        }
+        old
+    }
+
+    /// Register one more (initially empty) partition; returns its id.
+    pub(crate) fn add_part(&self) -> usize {
+        let mut st = self.state.write().unwrap();
+        st.global_of.push(Vec::new());
+        let p = st.global_of.len() - 1;
+        drop(st);
+        self.bump();
+        p
+    }
+
+    /// Record a topology-relevant change that the tables themselves do
+    /// not encode (e.g. a completed in-place model swap), so epoch
+    /// watchers observe it.
+    pub(crate) fn note_change(&self) {
+        self.bump();
     }
 }
 
@@ -661,18 +1070,24 @@ impl Topology {
 /// single-thread dispatch. Requests are routed to the owning
 /// partition's queue by global lane id ([`Topology::locate`]); the
 /// ingress form of that router is
-/// [`run_dispatch_parallel`](crate::ingress::run_dispatch_parallel).
+/// [`run_dispatch_parallel`](crate::ingress::run_dispatch_parallel),
+/// and [`run_dispatch_elastic`](crate::ingress::run_dispatch_elastic)
+/// adds the runtime add/remove/swap command path
+/// ([`super::control::TopologyController`]).
 ///
 /// What cross-partition dispatch gives up is cross-partition WDRR:
 /// weights meter shares *within* a partition (where lanes contend for
 /// one dispatch thread); partitions themselves run concurrently and
-/// contend only for device/pool capacity.
+/// contend only for device/pool capacity. A controller-driven
+/// **migration** carries the lane's WDRR deficit to its new partition
+/// ([`MultiServer::finish_retire`] → [`MultiServer::install_lane`]),
+/// so a rebalance does not reset earned shares.
 ///
 /// [`WorkerPool`]: super::pool::WorkerPool
 /// [`ArenaRing`]: super::arena::ArenaRing
 pub struct ParallelDispatcher<'f, E: RoundExecutor = Fleet> {
     parts: Vec<MultiServer<'f, E>>,
-    topo: Topology,
+    topo: Arc<Topology>,
 }
 
 impl<'f, E: RoundExecutor> ParallelDispatcher<'f, E> {
@@ -704,7 +1119,7 @@ impl<'f, E: RoundExecutor> ParallelDispatcher<'f, E> {
         }
         let mut specs: Vec<Option<LaneSpec<'f, E>>> = lanes.into_iter().map(Some).collect();
         let mut parts: Vec<MultiServer<'f, E>> = Vec::new();
-        let mut local_of: Vec<(usize, usize)> = vec![(usize::MAX, usize::MAX); n];
+        let mut local_of: Vec<Option<(usize, usize)>> = vec![None; n];
         let mut global_of: Vec<Vec<usize>> = Vec::new();
         for spec in &groups {
             let p = parts.len();
@@ -714,7 +1129,7 @@ impl<'f, E: RoundExecutor> ParallelDispatcher<'f, E> {
                 let LaneSpec { exec, cfg, qos } =
                     specs[l].take().expect("group disjointness checked above");
                 let local = ms.add_lane_qos(exec, cfg, qos);
-                local_of[l] = (p, local);
+                local_of[l] = Some((p, local));
                 locals.push(local);
             }
             ms.add_coalesce_group(spec.exec, &locals)?;
@@ -728,11 +1143,14 @@ impl<'f, E: RoundExecutor> ParallelDispatcher<'f, E> {
             let p = parts.len();
             let mut ms = MultiServer::new();
             let local = ms.add_lane_qos(exec, cfg, qos);
-            local_of[l] = (p, local);
+            local_of[l] = Some((p, local));
             parts.push(ms);
             global_of.push(vec![l]);
         }
-        Ok(ParallelDispatcher { parts, topo: Topology { local_of, global_of } })
+        Ok(ParallelDispatcher {
+            parts,
+            topo: Arc::new(Topology::new(local_of, global_of)),
+        })
     }
 
     /// Number of partitions (= dispatch threads a parallel run spawns).
@@ -740,12 +1158,26 @@ impl<'f, E: RoundExecutor> ParallelDispatcher<'f, E> {
         self.parts.len()
     }
 
+    /// Pre-provision one more (initially laneless) partition and its
+    /// dispatch thread slot, for the control plane to install lanes
+    /// into at runtime. Partitions are pinned to dispatch threads at
+    /// run start (`std::thread::scope` spawns one per partition), so
+    /// spares must be added BEFORE the run; an idle spare costs one
+    /// parked thread (the idle-poll nap). Returns the partition id.
+    pub fn add_spare_part(&mut self) -> usize {
+        self.parts.push(MultiServer::new());
+        let p = self.topo.add_part();
+        debug_assert_eq!(p + 1, self.parts.len(), "topology/partition drift");
+        p
+    }
+
     /// Register one [`MetricsHub`] shard per partition and mirror every
     /// lane's metrics into its partition's shard, so each dispatch
     /// thread records aggregate metrics without cross-thread locking.
     /// Size the hub with [`ParallelDispatcher::parts`] for one private
     /// shard per thread (a smaller hub shares shards, which is merely
-    /// slower, not wrong).
+    /// slower, not wrong). Lanes installed at runtime inherit their
+    /// partition's shard.
     ///
     /// [`MetricsHub`]: super::metrics::MetricsHub
     pub fn attach_metrics_hub(&mut self, hub: &MetricsHub) {
@@ -761,6 +1193,14 @@ impl<'f, E: RoundExecutor> ParallelDispatcher<'f, E> {
 
     pub fn topology(&self) -> &Topology {
         &self.topo
+    }
+
+    /// A shared handle to the live topology — what a
+    /// [`TopologyController`](super::control::TopologyController)
+    /// holds while the dispatcher itself is mutably borrowed by the
+    /// running dispatch threads.
+    pub fn topology_handle(&self) -> Arc<Topology> {
+        Arc::clone(&self.topo)
     }
 
     /// Partition `p`'s `MultiServer` (its lanes are local — translate

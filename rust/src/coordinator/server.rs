@@ -113,6 +113,15 @@ impl<'f, E: RoundExecutor> Server<'f, E> {
         self.fleet
     }
 
+    /// Hot-swap this server's model weights to version `tag` (full
+    /// instance range), between rounds — see
+    /// [`RoundExecutor::swap_model`]. Call strictly between
+    /// [`Server::dispatch`] calls; queued requests are untouched and
+    /// the next round serves the new weights.
+    pub fn swap_model(&self, tag: u64) -> Result<Duration> {
+        self.fleet.swap_model(0..self.fleet.m(), tag)
+    }
+
     pub fn config(&self) -> &ServerConfig {
         &self.cfg
     }

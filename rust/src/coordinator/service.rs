@@ -66,6 +66,31 @@ pub trait RoundExecutor: Sync {
         get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
         outs: &mut Vec<Option<Tensor>>,
     ) -> Result<()>;
+
+    /// Hot-swap the model weights backing instance `slots` to version
+    /// `tag`, **between rounds** — the FusedInf-style on-demand swap
+    /// (PAPERS.md, arxiv 2410.21120). For a standalone executor `slots`
+    /// is the full `0..m()`; for a coalesce-group executor it is one
+    /// member lane's megabatch window, so one tenant's weights swap
+    /// without touching its siblings' windows. Returns the pause the
+    /// swap cost (the bounded hot-swap pause ADR-005 budgets).
+    ///
+    /// The control plane calls this only from the thread that dispatches
+    /// this executor, strictly between its rounds, so implementations
+    /// may re-stage weight banks without guarding against an in-flight
+    /// round of their own; rounds of OTHER executors (other `ArenaRing`
+    /// slots, other partitions) stay untouched by construction.
+    ///
+    /// Default: unsupported — executors that cannot swap (today:
+    /// [`Fleet`], whose merged-bank re-stage needs the real PJRT
+    /// backend; see ROADMAP open item 1) refuse with a typed error the
+    /// controller surfaces, rather than silently serving stale weights.
+    fn swap_model(&self, slots: std::ops::Range<usize>, tag: u64) -> Result<std::time::Duration> {
+        bail!(
+            "{}: model hot-swap unsupported (slots {slots:?}, tag {tag})",
+            self.name()
+        )
+    }
 }
 
 /// A fleet of M instances of one model family at a fixed batch size.

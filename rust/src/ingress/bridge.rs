@@ -34,8 +34,9 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::coordinator::control::{Ack, AddOutcome, ControlPlane, LaneCmd, PartControl, RemoveOutcome};
 use crate::coordinator::multi::{MultiServer, ParallelDispatcher, Topology};
 use crate::coordinator::request::{Request, Response};
 use crate::coordinator::server::Admit;
@@ -304,6 +305,9 @@ pub struct IngressStats {
     /// dispatches instead of napping, so nonzero means races were
     /// *caught*, never that the thread idled while work was ready
     pub idle_naps_avoided: u64,
+    /// control-plane commands applied between rounds (lane add /
+    /// remove / swap — elastic dispatch only)
+    pub ctrl_ops: u64,
 }
 
 impl IngressStats {
@@ -320,6 +324,7 @@ impl IngressStats {
         self.coalesced_rounds += o.coalesced_rounds;
         self.round_errors += o.round_errors;
         self.idle_naps_avoided += o.idle_naps_avoided;
+        self.ctrl_ops += o.ctrl_ops;
     }
 }
 
@@ -355,7 +360,7 @@ pub fn run_dispatch<E: RoundExecutor>(
 ) -> Result<IngressStats> {
     let stats: Arc<Sharded<IngressStats>> = Arc::new(Sharded::new(1));
     let handle = Sharded::register(&stats);
-    dispatch_loop(multi, bridge, None, &handle)?;
+    dispatch_loop(multi, bridge, None, None, &handle)?;
     Ok(stats.read())
 }
 
@@ -367,15 +372,62 @@ pub fn run_dispatch<E: RoundExecutor>(
 /// admission and back at response routing (response frames must quote
 /// the client's own lane id regardless of which thread served it).
 ///
+/// `ctrl = Some(queue)` makes the loop this partition's control-plane
+/// executor (ADR-005): once per iteration — which is strictly between
+/// rounds, since an iteration dispatches at most one round — it applies
+/// queued [`LaneCmd`]s (install/publish, begin-quiesce, hot-swap) and
+/// excises any quiescing lane that has fully drained. Every command is
+/// acknowledged exactly once on every exit path, including shutdown and
+/// round-failure, so controller waits never hang.
+///
 /// Counters go to `stats` — the caller's shard of a [`Sharded`]
 /// accumulator. One loop is one shard's only writer, so every bump is
 /// an uncontended lock, while an observer can merge-read the live
 /// totals across all loops at any time.
-fn dispatch_loop<E: RoundExecutor>(
-    multi: &mut MultiServer<E>,
+fn dispatch_loop<'f, E: RoundExecutor>(
+    multi: &mut MultiServer<'f, E>,
     bridge: &IngressBridge,
     part: Option<(&Topology, usize)>,
+    ctrl: Option<&PartControl<'f, E>>,
     stats: &ShardHandle<IngressStats>,
+) -> Result<()> {
+    let mut retiring: Vec<(usize, usize, Ack<RemoveOutcome>)> = Vec::new();
+    let result = dispatch_core(multi, bridge, part, ctrl, stats, &mut retiring);
+    // exactly-once acknowledgement on every exit path: quiescing lanes
+    // that finished draining during the final flush excise here; the
+    // rest — and any commands still queued — fail their waiters rather
+    // than hanging them
+    if let Some(ctrl) = ctrl {
+        let epoch = part.map(|(topo, _)| topo.epoch()).unwrap_or(0);
+        for (local, global, ack) in retiring.drain(..) {
+            if multi.retire_ready(local) {
+                match multi.finish_retire(local) {
+                    Ok(deficit) => ack.complete(Ok(RemoveOutcome { deficit, epoch })),
+                    Err(e) => ack.complete(Err(e.to_string())),
+                }
+            } else {
+                ack.complete(Err(format!(
+                    "dispatch loop exited before lane {global} drained"
+                )));
+            }
+        }
+        while let Some(cmd) = ctrl.pop() {
+            cmd.fail("dispatch loop shut down");
+        }
+    }
+    result
+}
+
+/// The loop body of [`dispatch_loop`]; `retiring` is owned by the
+/// wrapper so outstanding quiesces survive an early return and get
+/// resolved there.
+fn dispatch_core<'f, E: RoundExecutor>(
+    multi: &mut MultiServer<'f, E>,
+    bridge: &IngressBridge,
+    part: Option<(&Topology, usize)>,
+    ctrl: Option<&PartControl<'f, E>>,
+    stats: &ShardHandle<IngressStats>,
+    retiring: &mut Vec<(usize, usize, Ack<RemoveOutcome>)>,
 ) -> Result<()> {
     let to_local = |lane: usize| -> Option<usize> {
         match part {
@@ -398,6 +450,77 @@ fn dispatch_loop<E: RoundExecutor>(
     let mut consecutive_errors: u32 = 0;
 
     loop {
+        // 0) control plane: apply queued lane commands strictly BETWEEN
+        // rounds (an iteration dispatches at most one round), then
+        // excise any quiescing lane that has fully drained. Sibling
+        // lanes' queues and any merged rounds in flight on OTHER
+        // partitions' ArenaRing slots are untouched by construction —
+        // this thread owns everything it mutates here.
+        if let Some(ctrl) = ctrl {
+            while let Some(cmd) = ctrl.pop() {
+                stats.lock().ctrl_ops += 1;
+                match cmd {
+                    LaneCmd::Add { global, spec, deficit, ack } => {
+                        let Some((topo, p)) = part else {
+                            ack.complete(Err(
+                                "elastic add needs a partitioned run".to_string()
+                            ));
+                            continue;
+                        };
+                        match multi.install_lane(spec.exec, spec.cfg, spec.qos, deficit) {
+                            Ok((local, group)) => {
+                                // publish AFTER install: the reserved
+                                // global id answered NoLane until the
+                                // lane could actually serve
+                                topo.map_lane(global, p, local);
+                                ack.complete(Ok(AddOutcome {
+                                    global,
+                                    local,
+                                    group,
+                                    epoch: topo.epoch(),
+                                }));
+                            }
+                            Err(e) => ack.complete(Err(e.to_string())),
+                        }
+                    }
+                    LaneCmd::Remove { local, global, ack } => {
+                        // the controller unmapped the global id before
+                        // queueing this, so no new arrivals can reach
+                        // the lane; admitted work drains through normal
+                        // dispatch until retire_ready
+                        match multi.begin_retire(local) {
+                            Ok(()) => retiring.push((local, global, ack)),
+                            Err(e) => ack.complete(Err(e.to_string())),
+                        }
+                    }
+                    LaneCmd::Swap { local, tag, ack } => {
+                        let res = multi.swap_lane_model(local, tag).map_err(|e| e.to_string());
+                        if res.is_ok() {
+                            if let Some((topo, _)) = part {
+                                topo.note_change();
+                            }
+                        }
+                        ack.complete(res);
+                    }
+                }
+            }
+            let mut k = 0;
+            while k < retiring.len() {
+                if multi.retire_ready(retiring[k].0) {
+                    let (local, _global, ack) = retiring.remove(k);
+                    match multi.finish_retire(local) {
+                        Ok(deficit) => {
+                            let epoch = part.map(|(topo, _)| topo.epoch()).unwrap_or(0);
+                            ack.complete(Ok(RemoveOutcome { deficit, epoch }));
+                        }
+                        Err(e) => ack.complete(Err(e.to_string())),
+                    }
+                } else {
+                    k += 1;
+                }
+            }
+        }
+
         // 1) drain arrivals without blocking
         while let Some(env) = bridge.try_pop() {
             let local = to_local(env.lane);
@@ -543,6 +666,48 @@ pub fn run_dispatch_parallel_observed<E: RoundExecutor>(
     group_queue_cap: usize,
     stats: &Arc<Sharded<IngressStats>>,
 ) -> Result<()> {
+    run_parallel_inner(dispatcher, bridge, group_queue_cap, stats, None)
+}
+
+/// [`run_dispatch_parallel_observed`] with a live control plane
+/// (ADR-005): each partition's dispatch thread doubles as the executor
+/// of that partition's [`ControlPlane`] command queue, applying lane
+/// add / remove / hot-swap strictly between its rounds while a
+/// [`TopologyController`](crate::coordinator::control::TopologyController)
+/// — on any other thread — issues commands against the same plane and
+/// the dispatcher's shared [`Topology`] handle.
+///
+/// Size the plane AFTER pre-provisioning spare partitions
+/// ([`ParallelDispatcher::add_spare_part`]): dispatch threads are
+/// pinned at run start, so `plane.parts()` must cover every partition.
+/// Command apply latency is bounded by one round plus the loop's idle
+/// poll; a removed lane's already-admitted requests drain through
+/// normal dispatch before its ticket resolves.
+pub fn run_dispatch_elastic<'f, E: RoundExecutor>(
+    dispatcher: &mut ParallelDispatcher<'f, E>,
+    bridge: &IngressBridge,
+    group_queue_cap: usize,
+    stats: &Arc<Sharded<IngressStats>>,
+    plane: &ControlPlane<'f, E>,
+) -> Result<()> {
+    if plane.parts() < dispatcher.parts() {
+        bail!(
+            "control plane covers {} partitions, dispatcher has {} \
+             (size the plane after add_spare_part)",
+            plane.parts(),
+            dispatcher.parts()
+        );
+    }
+    run_parallel_inner(dispatcher, bridge, group_queue_cap, stats, Some(plane))
+}
+
+fn run_parallel_inner<'f, E: RoundExecutor>(
+    dispatcher: &mut ParallelDispatcher<'f, E>,
+    bridge: &IngressBridge,
+    group_queue_cap: usize,
+    stats: &Arc<Sharded<IngressStats>>,
+    plane: Option<&ControlPlane<'f, E>>,
+) -> Result<()> {
     let router_stats = Sharded::register(stats);
     let (parts, topo) = dispatcher.split_mut();
     let subs: Vec<IngressBridge> =
@@ -553,7 +718,10 @@ pub fn run_dispatch_parallel_observed<E: RoundExecutor>(
         for (p, multi) in parts.iter_mut().enumerate() {
             let sub = &subs[p];
             let shard = Sharded::register(stats);
-            threads.push(s.spawn(move || dispatch_loop(multi, sub, Some((topo, p)), &shard)));
+            let ctrl = plane.map(|pl| pl.part(p));
+            threads.push(
+                s.spawn(move || dispatch_loop(multi, sub, Some((topo, p)), ctrl, &shard)),
+            );
         }
 
         // the router: drain the main bridge into the owning partitions'
@@ -562,7 +730,20 @@ pub fn run_dispatch_parallel_observed<E: RoundExecutor>(
         loop {
             match bridge.pop_timeout(IDLE_POLL) {
                 Some(env) => match topo.locate(env.lane) {
+                    // unmapped — including lanes the control plane has
+                    // removed or reserved-but-not-yet-installed — and,
+                    // defensively, anything mapped beyond the
+                    // partitions this run actually spawned
                     None => {
+                        router_stats.lock().no_lane += 1;
+                        env.reply.push(Frame::reject(
+                            env.client_id,
+                            env.lane as u32,
+                            RejectCode::NoLane,
+                            "no such lane",
+                        ));
+                    }
+                    Some((p, _)) if p >= subs.len() => {
                         router_stats.lock().no_lane += 1;
                         env.reply.push(Frame::reject(
                             env.client_id,

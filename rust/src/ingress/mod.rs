@@ -42,8 +42,8 @@ pub mod qos;
 pub mod transport;
 
 pub use bridge::{
-    run_dispatch, run_dispatch_parallel, run_dispatch_parallel_observed, serve_conn, ConnHandle,
-    Envelope, IngressBridge, IngressStats, SubmitError,
+    run_dispatch, run_dispatch_elastic, run_dispatch_parallel, run_dispatch_parallel_observed,
+    serve_conn, ConnHandle, Envelope, IngressBridge, IngressStats, SubmitError,
 };
 pub use frame::{Frame, RejectCode};
 pub use loadgen::{Arrival, LoadGen, TrafficShape};

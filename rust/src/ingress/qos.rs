@@ -34,6 +34,14 @@
 //! cycles' worth, mirroring the credit cap) and pays it off before
 //! being picked again.
 //!
+//! Lanes have a **lifecycle** (elastic topology, ADR-005): the control
+//! plane retires a removed lane with [`QosScheduler::remove_lane`] —
+//! which clears its deficit/debt/boost state completely, so a later
+//! tenant reusing the id ([`QosScheduler::restore_lane`]) starts from
+//! zero credit — and a lane migrated to another partition carries its
+//! deficit with it ([`QosScheduler::add_lane_carrying`]), so weighted
+//! shares hold across a partition rebalance.
+//!
 //! The scheduler is deliberately decoupled from `Server` internals: it
 //! sees lanes only through [`LaneSnapshot`]s produced by a caller-owned
 //! closure, so it is unit-testable with plain structs and usable by any
@@ -148,6 +156,12 @@ struct LaneState {
     /// point. Negative = rider debt (service received beyond credit by
     /// merged rounds), bounded at two cycles' worth.
     deficit: i64,
+    /// `false` once the lane is retired by the control plane
+    /// ([`QosScheduler::remove_lane`]): never selected, never
+    /// replenished, never charged. The slot itself is kept — lane ids
+    /// are positional across `MultiServer` — and waits for reuse via
+    /// [`QosScheduler::restore_lane`].
+    live: bool,
 }
 
 /// Weighted-deficit round-robin + SLO-boost lane scheduler.
@@ -185,8 +199,65 @@ impl QosScheduler {
     /// zero-share lane would starve forever).
     pub fn add_lane(&mut self, qos: LaneQos) -> usize {
         let qos = LaneQos { weight: qos.weight.max(1), ..qos };
-        self.lanes.push(LaneState { qos, deficit: 0 });
+        self.lanes.push(LaneState { qos, deficit: 0, live: true });
         self.lanes.len() - 1
+    }
+
+    /// [`QosScheduler::add_lane`] carrying a migrated deficit: when the
+    /// control plane rebalances partitions, the lane's credit/debt moves
+    /// with it (clamped to the new weight's ±2-cycle bounds), so
+    /// weighted shares hold *across* the rebalance instead of the
+    /// migrated lane restarting from zero and jumping the WDRR queue.
+    pub fn add_lane_carrying(&mut self, qos: LaneQos, deficit: i64) -> usize {
+        let lane = self.add_lane(qos);
+        let w = self.lanes[lane].qos.weight as i64 * CHARGE_UNIT;
+        self.lanes[lane].deficit = deficit.clamp(-w.saturating_mul(2), w.saturating_mul(2));
+        lane
+    }
+
+    /// Retire a lane from scheduling **entirely**: it is never selected,
+    /// replenished, or charged again, and its slot waits for reuse.
+    /// Returns the lane's final deficit (positive credit or negative
+    /// rider debt) so a *migrating* lane can carry it to its new
+    /// partition ([`QosScheduler::add_lane_carrying`] /
+    /// [`QosScheduler::restore_lane`]).
+    ///
+    /// Every piece of the retired lane's state — deficit, rider debt,
+    /// boost margin, weight — is cleared HERE, not lazily at reuse: a
+    /// later lane reusing the id must start from zero credit, never from
+    /// the previous tenant's inherited debt (or banked boost window).
+    pub fn remove_lane(&mut self, lane: usize) -> i64 {
+        let st = &mut self.lanes[lane];
+        let carried = st.deficit;
+        st.live = false;
+        st.deficit = 0;
+        st.qos = LaneQos::default();
+        carried
+    }
+
+    /// Re-register a retired lane slot under a (possibly new) tenant.
+    /// `deficit` is 0 for a fresh lane, or the value
+    /// [`QosScheduler::remove_lane`] returned when the same tenant is
+    /// migrating in from another partition (clamped to the new weight's
+    /// ±2-cycle bounds, mirroring the credit cap and debt floor).
+    pub fn restore_lane(&mut self, lane: usize, qos: LaneQos, deficit: i64) {
+        let qos = LaneQos { weight: qos.weight.max(1), ..qos };
+        let w = qos.weight as i64 * CHARGE_UNIT;
+        self.lanes[lane] = LaneState {
+            qos,
+            deficit: deficit.clamp(-w.saturating_mul(2), w.saturating_mul(2)),
+            live: true,
+        };
+    }
+
+    /// Whether `lane` is currently schedulable (not retired).
+    pub fn is_live(&self, lane: usize) -> bool {
+        self.lanes[lane].live
+    }
+
+    /// Number of live (non-retired) lanes.
+    pub fn live_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| l.live).count()
     }
 
     pub fn qos(&self, lane: usize) -> LaneQos {
@@ -224,6 +295,9 @@ impl QosScheduler {
         let mut urgent: Option<(usize, Duration)> = None;
         for k in 0..n {
             let i = (self.cursor + k) % n;
+            if !self.lanes[i].live {
+                continue;
+            }
             let s = snap(i);
             if s.pending == 0 {
                 continue;
@@ -250,6 +324,9 @@ impl QosScheduler {
         let mut any_ready = false;
         for k in 0..n {
             let i = (self.cursor + k) % n;
+            if !self.lanes[i].live {
+                continue;
+            }
             let s = snap(i);
             if !s.ready {
                 continue;
@@ -269,6 +346,9 @@ impl QosScheduler {
             for cycles in 1..=3u8 {
                 for k in 0..n {
                     let i = (self.cursor + k) % n;
+                    if !self.lanes[i].live {
+                        continue;
+                    }
                     let after = self.lanes[i].deficit
                         + cycles as i64 * self.lanes[i].qos.weight as i64 * CHARGE_UNIT;
                     if snap(i).ready && after >= CHARGE_UNIT {
@@ -301,6 +381,9 @@ impl QosScheduler {
         let n = self.lanes.len();
         if pick.replenish > 0 {
             for i in 0..n {
+                if !self.lanes[i].live {
+                    continue; // retired slots bank nothing
+                }
                 let w = self.lanes[i].qos.weight as i64 * CHARGE_UNIT;
                 // drained lanes lose unspent credit (classic DRR) but
                 // keep rider debt; busy lanes bank at most two cycles.
@@ -323,6 +406,9 @@ impl QosScheduler {
             }
         }
         for c in served {
+            if !self.lanes[c.lane].live {
+                continue; // defensive: a committed round never serves a retired lane
+            }
             let w = self.lanes[c.lane].qos.weight as i64 * CHARGE_UNIT;
             let floor = -w.saturating_mul(2);
             self.lanes[c.lane].deficit =
@@ -363,6 +449,9 @@ impl QosScheduler {
         }
         let mut best: Option<Duration> = None;
         for i in 0..self.lanes.len() {
+            if !self.lanes[i].live {
+                continue;
+            }
             let s = snap(i);
             let Some(wait) = s.oldest_wait else { continue };
             let batch_due = batch_wait(i).saturating_sub(wait);
@@ -659,6 +748,117 @@ mod tests {
         let pick = s.select(&at_select).expect("new burst is schedulable");
         assert_eq!(pick.lane, 0);
         assert_eq!(pick.replenish, 1, "self-drained lane must not carry debt");
+    }
+
+    #[test]
+    fn removed_lane_state_fully_retires() {
+        // REGRESSION (elastic topology, satellite of ADR-005): removing
+        // a lane must clear its deficit/debt/boost state completely. A
+        // later lane REUSING the id starts from zero credit — one
+        // replenish cycle away from dispatch, exactly like a brand-new
+        // lane — never from the previous tenant's inherited rider debt.
+        // (Companion to rider_charges_split_service_to_weighted_shares,
+        // the PR 5 rider-charging regression.)
+        let snap = backlogged(2);
+        let mut s = QosScheduler::new(QosScheduler::DEFAULT_BOOST_MARGIN);
+        s.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        s.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        // bury lane 1 in rider debt (served by merged rounds it never
+        // had credit for), down to the -2-cycle floor
+        for _ in 0..10 {
+            let pick = s.select(&snap).unwrap();
+            s.commit_served(
+                &pick,
+                &[
+                    LaneCharge::full(pick.lane),
+                    LaneCharge { lane: 1, slots: 4, round_slots: 4 },
+                ],
+                &snap,
+            );
+        }
+        let carried = s.remove_lane(1);
+        assert!(carried < 0, "the hammered rider must retire in debt, got {carried}");
+        assert!(!s.is_live(1));
+        assert_eq!(s.live_lanes(), 1);
+        // while retired the slot is unschedulable even though its
+        // snapshot claims a backlog
+        for _ in 0..4 {
+            let pick = s.select(&snap).unwrap();
+            assert_eq!(pick.lane, 0, "retired lane must never be selected");
+            s.commit(&pick, &snap);
+        }
+        // a new tenant reuses the id: zero inherited debt — its very
+        // first pick needs only the single replenish a fresh lane needs
+        s.restore_lane(1, LaneQos::new(1, Duration::from_secs(3600)), 0);
+        let order = dispatch_sequence(&mut s, &snap, 8);
+        let ones = order.iter().filter(|&&l| l == 1).count();
+        assert!(
+            (3..=5).contains(&ones),
+            "reused lane id must get a fresh fair share, got {ones}/8 ({order:?})"
+        );
+    }
+
+    #[test]
+    fn carried_deficit_holds_shares_across_migration() {
+        // cross-partition WDRR (ADR-005, folds the ADR-003 residual):
+        // a lane migrated between partitions carries its deficit, so a
+        // debt-laden lane cannot launder its debt by moving. Partition
+        // P: lane 0 rides merged rounds into debt; migrate it to
+        // partition Q (a fresh scheduler) carrying the returned deficit.
+        // In Q, the fresh sibling must win the first TWO rounds while
+        // the migrant pays off its two-cycle debt; with the carry
+        // dropped (deficit 0), the migrant — sitting first in cursor
+        // order — would win round one instead.
+        let snap = backlogged(2);
+        let mut p = QosScheduler::new(QosScheduler::DEFAULT_BOOST_MARGIN);
+        p.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        p.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        for _ in 0..10 {
+            let pick = p.select(&snap).unwrap();
+            s_commit_with_rider(&mut p, &pick, 0, &snap);
+        }
+        let carried = p.remove_lane(0);
+        assert_eq!(carried, -2 * CHARGE_UNIT, "weight-1 debt floors at two cycles");
+
+        let mut q = QosScheduler::new(QosScheduler::DEFAULT_BOOST_MARGIN);
+        q.add_lane_carrying(LaneQos::new(1, Duration::from_secs(3600)), carried);
+        q.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        let order = dispatch_sequence(&mut q, &snap, 6);
+        assert_eq!(
+            &order[..2],
+            &[1, 1],
+            "migrant must pay its carried debt before its first pick, got {order:?}"
+        );
+        assert!(
+            order[2..].contains(&0),
+            "debt paid, the migrant recovers its share: {order:?}"
+        );
+
+        // control: the same migration WITHOUT the carry — the migrant
+        // jumps straight back into the rotation (the unfair behavior
+        // the carry exists to prevent)
+        let mut q0 = QosScheduler::new(QosScheduler::DEFAULT_BOOST_MARGIN);
+        q0.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        q0.add_lane(LaneQos::new(1, Duration::from_secs(3600)));
+        assert_eq!(dispatch_sequence(&mut q0, &snap, 1), vec![0]);
+    }
+
+    /// Commit `pick` charging both the pick and `rider` a full round
+    /// (the merged-round shape the migration test hammers with).
+    fn s_commit_with_rider(
+        s: &mut QosScheduler,
+        pick: &Pick,
+        rider: usize,
+        snap: &dyn Fn(usize) -> LaneSnapshot,
+    ) {
+        s.commit_served(
+            pick,
+            &[
+                LaneCharge::full(pick.lane),
+                LaneCharge { lane: rider, slots: 4, round_slots: 4 },
+            ],
+            snap,
+        );
     }
 
     #[test]

@@ -59,7 +59,11 @@
 //!   SLO-deadline boost in `QosScheduler`), and an open-loop Poisson /
 //!   bursty / skewed-lane load generator. Requests are re-stamped at
 //!   admission (`Request::arrived_now`) so producer-side clock reuse
-//!   cannot skew queue-wait math.
+//!   cannot skew queue-wait math. Since ADR-005 the lane topology is
+//!   **elastic**: `coordinator::control::TopologyController` adds,
+//!   removes, and hot-swaps lanes on a live `ParallelDispatcher`
+//!   (`ingress::run_dispatch_elastic`) without disturbing sibling
+//!   lanes' in-flight rounds.
 //! - [`devmodel`] — analytical V100 / TITAN Xp device model (reproduces
 //!   the paper's GPU-shaped figures; we have no GPU).
 //! - [`rewriter`] — miniature TASO-like greedy graph rewriter (the §2.2

@@ -11,10 +11,12 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
+use netfuse::coordinator::arena::ArenaRing;
 use netfuse::coordinator::mock::EchoExecutor;
 use netfuse::coordinator::multi::MultiServer;
 use netfuse::coordinator::request::{Request, Response};
@@ -119,6 +121,77 @@ pub fn dispatch_saturated(
         order.push(d.lane);
     }
     order
+}
+
+/// Echo executor that stages every round through a shared
+/// [`ArenaRing`]: reserve a slot, pack the occupied payloads into its
+/// megabatch, hold the reservation across the modeled device time,
+/// then read each occupied window back OUT of the staged buffer as
+/// the round's outputs. The shared ring makes a round's lifetime
+/// *observable* (`ring.in_flight()` counts held reservations), which
+/// is what the elastic-topology suite uses to prove a sibling
+/// partition's in-flight round is untouched by lane churn.
+pub struct RingEcho {
+    name: String,
+    m: usize,
+    input_shape: Vec<usize>,
+    ring: Arc<ArenaRing>,
+    round_cost: Duration,
+}
+
+impl RingEcho {
+    pub fn new(name: &str, ring: Arc<ArenaRing>, round_cost: Duration) -> RingEcho {
+        RingEcho {
+            name: name.to_string(),
+            m: ring.m(),
+            input_shape: ring.request_shape()[1..].to_vec(),
+            ring,
+            round_cost,
+        }
+    }
+}
+
+impl RoundExecutor for RingEcho {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn m(&self) -> usize {
+        self.m
+    }
+    fn bs(&self) -> usize {
+        1
+    }
+    fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+    fn run_round_slots<'a>(
+        &self,
+        strategy: StrategyKind,
+        get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
+        outs: &mut Vec<Option<Tensor>>,
+    ) -> Result<()> {
+        strategy.validate()?;
+        // pack + "execute" + unpack, all under ONE ring reservation
+        let mut slot = self.ring.acquire();
+        slot.pack_with(get)?;
+        if !self.round_cost.is_zero() {
+            std::thread::sleep(self.round_cost);
+        }
+        let inner: usize = self.input_shape.iter().product();
+        outs.clear();
+        for i in 0..self.m {
+            outs.push(match get(i) {
+                Some(_) => {
+                    let window = &slot.merged_data()[i * inner..(i + 1) * inner];
+                    let mut shape = vec![1usize];
+                    shape.extend_from_slice(&self.input_shape);
+                    Some(Tensor::new(shape, window.to_vec())?)
+                }
+                None => None,
+            });
+        }
+        Ok(())
+    }
 }
 
 /// [`EchoExecutor`] with injectable round failures: the next

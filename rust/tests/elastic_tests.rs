@@ -1,0 +1,861 @@
+//! Elastic topology (ADR-005): lane lifecycle guards, the churn-storm
+//! property harness, group-aware drain under member excision, sibling
+//! in-flight non-disruption (via the `ArenaRing` gauge), WDRR share
+//! re-convergence after removal, and the full control-plane integration
+//! over `run_dispatch_elastic` with live traffic.
+//!
+//! Everything is artifact-free (`EchoExecutor` / ring-staged `RingEcho`
+//! lanes); the throughput/latency side of elastic churn is gated by
+//! `benches/elastic_churn.rs`.
+
+mod common;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::{drain_all, echo, payload, seeded_request, RingEcho};
+use netfuse::coordinator::arena::{ArenaRing, Layout};
+use netfuse::coordinator::control::{ControlPlane, TopologyController};
+use netfuse::coordinator::mock::{EchoExecutor, SWAP_SCALE};
+use netfuse::coordinator::multi::{
+    GroupSpec, LaneLife, LaneSpec, MultiServer, ParallelDispatcher,
+};
+use netfuse::coordinator::request::{Request, Response};
+use netfuse::coordinator::server::{Admit, ServerConfig};
+use netfuse::coordinator::StrategyKind;
+use netfuse::ingress::{
+    run_dispatch_elastic, Envelope, Frame, FrameQueue, IngressBridge, IngressStats, LaneQos,
+    RejectCode,
+};
+use netfuse::util::rng::Rng;
+use netfuse::util::shard::Sharded;
+
+const FAR: Duration = Duration::from_secs(3600);
+
+fn cfg() -> ServerConfig {
+    ServerConfig {
+        strategy: StrategyKind::NetFuse,
+        queue_cap: 4096,
+        max_wait: Duration::ZERO,
+    }
+}
+
+fn qos1() -> LaneQos {
+    LaneQos::new(1, FAR)
+}
+
+/// The seeded payload element `j` of request `(id, model)` — what an
+/// unswapped echo lane must return byte-for-byte.
+fn seeded_at(id: u64, model: usize, j: usize) -> f32 {
+    id as f32 * 1000.0 + model as f32 * 10.0 + j as f32
+}
+
+// ---------------------------------------------------------------------------
+// lifecycle guards + retired-slot reuse (deterministic)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lane_lifecycle_guards_and_slot_reuse() {
+    let a = echo("a", 2, Duration::ZERO);
+    let b = echo("b", 2, Duration::ZERO);
+    let c = echo("c", 2, Duration::ZERO);
+    let mut multi: MultiServer<EchoExecutor> = MultiServer::new();
+    multi.add_lane(&a, cfg());
+    let (slot_b, attached) = multi.install_lane(&b, cfg(), qos1(), 0).unwrap();
+    assert_eq!(slot_b, 1);
+    assert!(attached.is_none());
+    assert_eq!(multi.live_lanes(), 2);
+    multi.offer(slot_b, seeded_request(0, 0, &[4])).unwrap();
+
+    // draining: no admission, not ready while pending, cannot finish
+    // early, cannot retire twice
+    multi.begin_retire(slot_b).unwrap();
+    assert_eq!(multi.lane_life(slot_b), LaneLife::Draining);
+    assert!(multi.offer(slot_b, seeded_request(1, 0, &[4])).is_err());
+    assert!(!multi.retire_ready(slot_b));
+    assert!(multi.finish_retire(slot_b).is_err());
+    assert!(multi.begin_retire(slot_b).is_err());
+
+    let mut buf: Vec<Response> = Vec::new();
+    drain_all(&mut multi, &mut buf).unwrap();
+    assert_eq!(buf.len(), 1, "queued request drains through normal dispatch");
+    assert!(multi.retire_ready(slot_b));
+    multi.finish_retire(slot_b).unwrap();
+    assert_eq!(multi.lane_life(slot_b), LaneLife::Retired);
+    assert!(multi.offer(slot_b, seeded_request(2, 0, &[4])).is_err());
+    assert!(multi.swap_lane_model(slot_b, 1).is_err(), "retired lane cannot swap");
+    assert_eq!(multi.live_lanes(), 1);
+
+    // reuse: the SAME slot comes back with a fresh life and no stale
+    // swap offset from the previous tenant
+    let (slot_c, attached) = multi.install_lane(&c, cfg(), LaneQos::new(2, FAR), 0).unwrap();
+    assert_eq!(slot_c, slot_b, "retired slot must be reused");
+    assert!(attached.is_none());
+    assert_eq!(multi.lane_life(slot_c), LaneLife::Live);
+    assert_eq!(multi.lanes(), 2, "reuse must not grow the slot table");
+    multi.offer(slot_c, seeded_request(3, 1, &[4])).unwrap();
+    buf.clear();
+    drain_all(&mut multi, &mut buf).unwrap();
+    assert_eq!(buf.len(), 1);
+    assert_eq!(buf[0].output.data()[0], seeded_at(3, 1, 0));
+}
+
+// ---------------------------------------------------------------------------
+// hot-swap semantics: versions follow the LANE across membership churn
+// ---------------------------------------------------------------------------
+
+#[test]
+fn grouped_swap_follows_the_lane_across_membership_churn() {
+    let a = echo("bert", 2, Duration::ZERO);
+    let b = echo("bert", 2, Duration::ZERO);
+    let c = echo("bert", 2, Duration::ZERO);
+    let g = echo("bert", 4, Duration::ZERO);
+    let mut multi: MultiServer<EchoExecutor> = MultiServer::new();
+    multi.add_lane(&a, cfg());
+    multi.add_lane(&b, cfg());
+    multi.add_coalesce_group(&g, &[0, 1]).unwrap();
+
+    // swap lane 1 only: its own executor AND its megabatch window
+    let pause = multi.swap_lane_model(1, 5).unwrap();
+    assert!(pause < Duration::from_secs(1));
+
+    let mut buf: Vec<Response> = Vec::new();
+    for model in 0..2 {
+        multi.offer(0, seeded_request(model as u64, model, &[4])).unwrap();
+        multi.offer(1, seeded_request(10 + model as u64, model, &[4])).unwrap();
+    }
+    let d = multi.dispatch_next(&mut buf).unwrap().unwrap();
+    assert_eq!(d.lanes_served, 2, "both members merged");
+    assert_eq!(buf.len(), 4);
+    for r in buf.drain(..) {
+        let offset = if r.id >= 10 { 5.0 * SWAP_SCALE } else { 0.0 };
+        let base = if r.id >= 10 { r.id - 10 } else { r.id } as usize; // model
+        for (j, &x) in r.output.data().iter().enumerate() {
+            assert_eq!(
+                x,
+                seeded_at(r.id, base, j) + offset,
+                "id {} served by the wrong weight version",
+                r.id
+            );
+        }
+    }
+
+    // excise lane 0: lane 1's window shifts left and must carry its
+    // version with it
+    multi.begin_retire(0).unwrap();
+    assert!(multi.retire_ready(0), "lane 0 is already empty");
+    multi.finish_retire(0).unwrap();
+    assert_eq!(multi.group_members(0), &[1]);
+
+    // install a third bert lane: it reuses the retired slot, attaches to
+    // the group, and its window — previously stamped with lane 1's tag —
+    // must be re-stamped back to factory weights
+    let (slot, attached) = multi.install_lane(&c, cfg(), qos1(), 0).unwrap();
+    assert_eq!(slot, 0);
+    assert_eq!(attached, Some(0));
+    assert_eq!(multi.group_members(0), &[1, 0]);
+
+    for model in 0..2 {
+        multi.offer(1, seeded_request(20 + model as u64, model, &[4])).unwrap();
+        multi.offer(slot, seeded_request(30 + model as u64, model, &[4])).unwrap();
+    }
+    let d = multi.dispatch_next(&mut buf).unwrap().unwrap();
+    assert_eq!(d.lanes_served, 2, "survivor + newcomer merge");
+    assert_eq!(buf.len(), 4);
+    for r in buf.drain(..) {
+        let (offset, model) = if r.id >= 30 {
+            (0.0, (r.id - 30) as usize) // newcomer: factory weights
+        } else {
+            (5.0 * SWAP_SCALE, (r.id - 20) as usize) // survivor: version 5
+        };
+        for (j, &x) in r.output.data().iter().enumerate() {
+            assert_eq!(
+                x,
+                seeded_at(r.id, model, j) + offset,
+                "id {} lost its lane's weight version across churn",
+                r.id
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// churn storm: randomized add/remove/swap against a churn-free oracle
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Target {
+    /// lane present for the whole run (0,1 = coalesced bert pair, 2 = solo)
+    Whole(usize),
+    /// churny pool slot `k` — installed/retired/swapped at random
+    Churn(usize),
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Offer { target: Target, model: usize, id: u64 },
+    Dispatch,
+    Install(usize),
+    Retire(usize),
+    Swap { k: usize, tag: u64 },
+}
+
+/// A deterministic event schedule: ids and swap tags are assigned at
+/// generation time so the storm run and the churn-free oracle run see
+/// IDENTICAL arrivals for the whole-run lanes.
+fn schedule(rng: &mut Rng, events: usize) -> Vec<Ev> {
+    let mut id = 0u64;
+    let mut tag = 0u64;
+    let mut evs = Vec::with_capacity(events);
+    for _ in 0..events {
+        let r = rng.below(100);
+        if r < 50 {
+            let target = if rng.below(100) < 60 {
+                Target::Whole(rng.usize_below(3))
+            } else {
+                Target::Churn(rng.usize_below(3))
+            };
+            evs.push(Ev::Offer { target, model: rng.usize_below(2), id });
+            id += 1;
+        } else if r < 80 {
+            evs.push(Ev::Dispatch);
+        } else {
+            let k = rng.usize_below(3);
+            match rng.below(3) {
+                0 => evs.push(Ev::Install(k)),
+                1 => evs.push(Ev::Retire(k)),
+                _ => {
+                    tag += 1;
+                    evs.push(Ev::Swap { k, tag });
+                }
+            }
+        }
+    }
+    evs
+}
+
+/// Fresh executors per run: churny `EchoExecutor`s carry per-slot weight
+/// versions, so they must not leak state across runs or seeds.
+struct Pool {
+    whole: Vec<EchoExecutor>,
+    group: EchoExecutor,
+    churn: Vec<EchoExecutor>,
+}
+
+fn pool() -> Pool {
+    Pool {
+        whole: vec![
+            echo("bert", 2, Duration::ZERO),
+            echo("bert", 2, Duration::ZERO),
+            echo("solo", 2, Duration::ZERO),
+        ],
+        group: echo("bert", 4, Duration::ZERO),
+        // distinct families so churny lanes never join the bert group
+        churn: (0..3).map(|k| echo(&format!("churn{k}"), 2, Duration::ZERO)).collect(),
+    }
+}
+
+/// Per-(whole-run lane, model) FIFO response streams — the byte-level
+/// oracle surface.
+type WholeStreams = HashMap<(usize, usize), Vec<(u64, Vec<f32>)>>;
+
+/// Consume a response batch: every response must match exactly one
+/// still-pending admission (no drops, no double-serves), carry the
+/// seeded payload (no misroutes/corruption), and — for churny lanes —
+/// a weight-version offset that is an exact, monotone multiple of
+/// [`SWAP_SCALE`].
+fn absorb(
+    buf: &mut Vec<Response>,
+    pending: &mut HashMap<u64, (Target, usize)>,
+    streams: &mut WholeStreams,
+    last_v: &mut [u64; 3],
+) {
+    for r in buf.drain(..) {
+        let (target, model) = pending
+            .remove(&r.id)
+            .expect("response for an id never admitted, or served twice");
+        assert_eq!(r.model_idx, model, "id {} answered under the wrong model", r.id);
+        let out = r.output.data();
+        assert_eq!(out.len(), 4);
+        match target {
+            Target::Whole(l) => {
+                for (j, &x) in out.iter().enumerate() {
+                    assert_eq!(
+                        x,
+                        seeded_at(r.id, model, j),
+                        "corrupted payload for id {} on whole-run lane {l}",
+                        r.id
+                    );
+                }
+                streams.entry((l, model)).or_default().push((r.id, out.to_vec()));
+            }
+            Target::Churn(k) => {
+                let delta = out[0] - seeded_at(r.id, model, 0);
+                for (j, &x) in out.iter().enumerate() {
+                    assert_eq!(
+                        x - seeded_at(r.id, model, j),
+                        delta,
+                        "inconsistent swap offset within id {}",
+                        r.id
+                    );
+                }
+                let v = delta / SWAP_SCALE;
+                assert!(
+                    v >= 0.0 && v.fract() == 0.0,
+                    "offset {delta} is not a whole weight version"
+                );
+                let v = v as u64;
+                assert!(
+                    v >= last_v[k],
+                    "weight version went backwards on churn slot {k}: {v} < {}",
+                    last_v[k]
+                );
+                last_v[k] = v;
+            }
+        }
+    }
+}
+
+/// Excise every draining churny lane that has fully drained.
+fn finish_ready(
+    multi: &mut MultiServer<'_, EchoExecutor>,
+    churn_lane: &mut [Option<usize>; 3],
+    draining: &mut [bool; 3],
+) {
+    for k in 0..3 {
+        if !draining[k] {
+            continue;
+        }
+        let slot = churn_lane[k].expect("draining implies installed");
+        if multi.retire_ready(slot) {
+            multi.finish_retire(slot).unwrap();
+            assert_eq!(multi.lane_life(slot), LaneLife::Retired);
+            churn_lane[k] = None;
+            draining[k] = false;
+        }
+    }
+}
+
+/// Run one schedule. `churn = false` is the oracle: churn events (and
+/// offers to churny lanes) are skipped, whole-run arrivals are
+/// identical. Returns the whole-run lanes' FIFO streams.
+fn run_storm(pool: &Pool, evs: &[Ev], churn: bool) -> WholeStreams {
+    let mut multi: MultiServer<'_, EchoExecutor> = MultiServer::new();
+    for x in &pool.whole {
+        multi.add_lane_qos(x, cfg(), qos1());
+    }
+    multi.add_coalesce_group(&pool.group, &[0, 1]).unwrap();
+
+    let mut churn_lane: [Option<usize>; 3] = [None; 3];
+    let mut draining: [bool; 3] = [false; 3];
+    let mut last_v: [u64; 3] = [0; 3];
+    let mut pending: HashMap<u64, (Target, usize)> = HashMap::new();
+    let mut streams: WholeStreams = HashMap::new();
+    let mut buf: Vec<Response> = Vec::new();
+
+    for ev in evs {
+        match *ev {
+            Ev::Offer { target, model, id } => {
+                let slot = match target {
+                    Target::Whole(l) => Some(l),
+                    Target::Churn(k) if churn => {
+                        churn_lane[k].filter(|&s| multi.lane_life(s) == LaneLife::Live)
+                    }
+                    Target::Churn(_) => None, // oracle has no churny lanes
+                };
+                if let Some(slot) = slot {
+                    let admit = multi.offer(slot, seeded_request(id, model, &[4])).unwrap();
+                    assert!(matches!(admit, Admit::Queued));
+                    pending.insert(id, (target, model));
+                }
+            }
+            Ev::Dispatch => {
+                multi.dispatch_next(&mut buf).unwrap();
+                absorb(&mut buf, &mut pending, &mut streams, &mut last_v);
+                if churn {
+                    finish_ready(&mut multi, &mut churn_lane, &mut draining);
+                }
+            }
+            Ev::Install(k) if churn => {
+                if churn_lane[k].is_none() {
+                    let (slot, attached) =
+                        multi.install_lane(&pool.churn[k], cfg(), qos1(), 0).unwrap();
+                    assert!(attached.is_none(), "churn lane joined the bert group");
+                    assert_eq!(multi.lane_life(slot), LaneLife::Live);
+                    churn_lane[k] = Some(slot);
+                }
+            }
+            Ev::Retire(k) if churn => {
+                if let Some(slot) = churn_lane[k] {
+                    if multi.lane_life(slot) == LaneLife::Live {
+                        multi.begin_retire(slot).unwrap();
+                        draining[k] = true;
+                    }
+                }
+            }
+            Ev::Swap { k, tag } if churn => {
+                if let Some(slot) = churn_lane[k] {
+                    multi.swap_lane_model(slot, tag).unwrap();
+                }
+            }
+            _ => {} // churn event skipped by the oracle run
+        }
+    }
+
+    drain_all(&mut multi, &mut buf).unwrap();
+    absorb(&mut buf, &mut pending, &mut streams, &mut last_v);
+    if churn {
+        finish_ready(&mut multi, &mut churn_lane, &mut draining);
+        assert!(draining.iter().all(|&d| !d), "a drained lane failed to excise");
+        let installed = churn_lane.iter().filter(|s| s.is_some()).count();
+        assert_eq!(multi.live_lanes(), 3 + installed, "lifecycle accounting drifted");
+    }
+    assert_eq!(multi.pending(), 0);
+    assert!(
+        pending.is_empty(),
+        "admitted requests were dropped: {:?}",
+        pending.keys().collect::<Vec<_>>()
+    );
+    streams
+}
+
+#[test]
+fn churn_storm_matches_churn_free_oracle() {
+    // 120 seeds x 160 events: random install/retire/swap interleaved
+    // with seeded traffic. The whole-run lanes' per-(lane, model) FIFO
+    // streams must be byte-identical to a run with NO churn at all;
+    // every admitted request (churny lanes included) gets exactly one
+    // correctly-attributed response.
+    for seed in 0..120u64 {
+        let mut rng = Rng::new(0xE1A5_7100 + seed);
+        let evs = schedule(&mut rng, 160);
+        let storm_pool = pool();
+        let got = run_storm(&storm_pool, &evs, true);
+        let oracle_pool = pool();
+        let want = run_storm(&oracle_pool, &evs, false);
+        assert_eq!(
+            want, got,
+            "whole-run lane streams diverged under churn (seed {seed})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// group-aware drain under churn (satellite 3)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn merged_flush_continues_across_member_excision() {
+    let lanes: Vec<EchoExecutor> = (0..3).map(|_| echo("bert", 2, Duration::ZERO)).collect();
+    let g = echo("bert", 6, Duration::ZERO);
+    let mut multi: MultiServer<'_, EchoExecutor> = MultiServer::new();
+    for x in &lanes {
+        multi.add_lane_qos(x, cfg(), qos1());
+    }
+    multi.add_coalesce_group(&g, &[0, 1, 2]).unwrap();
+
+    let mut pending: HashMap<u64, (Target, usize)> = HashMap::new();
+    let mut streams: WholeStreams = HashMap::new();
+    let mut last_v = [0u64; 3];
+    let mut buf: Vec<Response> = Vec::new();
+    let mut id = 0u64;
+    for lane in 0..3usize {
+        for model in 0..2 {
+            for _ in 0..3 {
+                multi.offer(lane, seeded_request(id, model, &[4])).unwrap();
+                pending.insert(id, (Target::Whole(lane), model));
+                id += 1;
+            }
+        }
+    }
+
+    // quiesce lane 1 mid-backlog: merged rounds must keep flushing all
+    // three members (the drainer rides along) and the group counters
+    // must stay monotone — no underflow when membership shrinks
+    multi.begin_retire(1).unwrap();
+    let mut prev = multi.group_stats(0);
+    while !multi.retire_ready(1) {
+        let d = multi.dispatch_next(&mut buf).unwrap().expect("backlog pending");
+        assert!(d.lanes_served >= 2, "backlogged group members must merge");
+        absorb(&mut buf, &mut pending, &mut streams, &mut last_v);
+        let now = multi.group_stats(0);
+        assert!(
+            now.rounds >= prev.rounds && now.responses >= prev.responses,
+            "group counters went backwards: {now:?} after {prev:?}"
+        );
+        prev = now;
+    }
+    assert!(prev.rounds >= 3, "draining a 6-deep backlog takes >= 3 merged rounds");
+    multi.finish_retire(1).unwrap();
+    assert_eq!(multi.group_members(0), &[0, 2]);
+    assert_eq!(multi.lane_life(1), LaneLife::Retired);
+
+    // survivors keep merging after the excision
+    for lane in [0usize, 2] {
+        for model in 0..2 {
+            multi.offer(lane, seeded_request(id, model, &[4])).unwrap();
+            pending.insert(id, (Target::Whole(lane), model));
+            id += 1;
+        }
+    }
+    let before = multi.group_stats(0).rounds;
+    let d = multi.dispatch_next(&mut buf).unwrap().unwrap();
+    assert_eq!(d.lanes_served, 2, "survivors stopped merging after excision");
+    assert_eq!(multi.group_stats(0).rounds, before + 1);
+    absorb(&mut buf, &mut pending, &mut streams, &mut last_v);
+
+    drain_all(&mut multi, &mut buf).unwrap();
+    absorb(&mut buf, &mut pending, &mut streams, &mut last_v);
+    assert!(pending.is_empty(), "requests dropped during group churn");
+    let stats = multi.group_stats(0);
+    assert_eq!(stats.responses, 22, "every request flushed through merged rounds");
+}
+
+// ---------------------------------------------------------------------------
+// sibling non-disruption: churn next to an in-flight ring round
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sibling_in_flight_round_survives_churn() {
+    // partition A stages its round through a shared ArenaRing with a
+    // long modeled device time; partition B churns (retire + reinstall)
+    // while A's reservation is held. The ring gauge proves A's round is
+    // never disturbed: its reservation survives the churn and its
+    // outputs come back intact.
+    let ring = Arc::new(ArenaRing::new(Layout::Batch, 2, &[1, 4], 2).unwrap());
+    let slow = RingEcho::new("sib", Arc::clone(&ring), Duration::from_millis(200));
+    let mut a: MultiServer<'_, RingEcho> = MultiServer::new();
+    a.add_lane(&slow, cfg());
+    a.offer(0, seeded_request(0, 0, &[4])).unwrap();
+    a.offer(0, seeded_request(1, 1, &[4])).unwrap();
+
+    let b0 = echo("b0", 2, Duration::ZERO);
+    let fresh = echo("fresh", 2, Duration::ZERO);
+    let mut b: MultiServer<'_, EchoExecutor> = MultiServer::new();
+    b.add_lane(&b0, cfg());
+    for model in 0..2u64 {
+        b.offer(0, seeded_request(10 + model, model as usize, &[4])).unwrap();
+    }
+
+    std::thread::scope(|s| {
+        let t = s.spawn(|| {
+            let mut buf = Vec::new();
+            let d = a.dispatch_next(&mut buf).unwrap().unwrap();
+            (d, buf)
+        });
+
+        // wait for A's round to take its ring reservation
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while ring.in_flight() == 0 {
+            assert!(Instant::now() < deadline, "round never reached the ring");
+            std::thread::yield_now();
+        }
+
+        // full churn cycle on partition B while A's round is in flight
+        let mut buf = Vec::new();
+        b.begin_retire(0).unwrap();
+        while !b.retire_ready(0) {
+            b.dispatch_next(&mut buf).unwrap();
+        }
+        b.finish_retire(0).unwrap();
+        let (slot, attached) = b.install_lane(&fresh, cfg(), qos1(), 0).unwrap();
+        assert_eq!(slot, 0, "retired slot is reused");
+        assert!(attached.is_none());
+        assert_eq!(buf.len(), 2, "partition B drained its own lane");
+
+        assert_eq!(
+            ring.in_flight(),
+            1,
+            "sibling churn disturbed the in-flight round's reservation"
+        );
+
+        let (d, buf_a) = t.join().unwrap();
+        assert_eq!(d.lanes_served, 1);
+        assert_eq!(buf_a.len(), 2);
+        for r in &buf_a {
+            for (j, &x) in r.output.data().iter().enumerate() {
+                assert_eq!(x, seeded_at(r.id, r.model_idx, j), "staged round corrupted");
+            }
+        }
+    });
+    assert_eq!(ring.in_flight(), 0, "reservation leaked");
+}
+
+// ---------------------------------------------------------------------------
+// WDRR share re-convergence after removal
+// ---------------------------------------------------------------------------
+
+/// Like `common::dispatch_saturated`, but only tops up Live lanes so it
+/// keeps working across retirement.
+fn saturate_live(
+    multi: &mut MultiServer<'_, EchoExecutor>,
+    rounds: usize,
+    next_id: &mut u64,
+) -> Vec<usize> {
+    let mut order = Vec::with_capacity(rounds);
+    let mut buf = Vec::new();
+    for _ in 0..rounds {
+        for lane in 0..multi.lanes() {
+            if multi.lane_life(lane) != LaneLife::Live {
+                continue;
+            }
+            for model in 0..multi.lane(lane).fleet().m() {
+                while multi.lane(lane).pending() < 4 {
+                    multi.offer(lane, Request::new(*next_id, model, payload())).unwrap();
+                    *next_id += 1;
+                }
+            }
+        }
+        let d = multi
+            .dispatch_next(&mut buf)
+            .unwrap()
+            .expect("saturated lanes are always dispatchable");
+        buf.clear();
+        order.push(d.lane);
+    }
+    order
+}
+
+#[test]
+fn surviving_shares_reconverge_after_removal() {
+    // weights 3:1:1 over three standalone lanes; retire the heavy lane
+    // and the survivors must re-converge to 1:1 within 5%
+    let execs: Vec<EchoExecutor> =
+        (0..3).map(|k| echo(&format!("w{k}"), 2, Duration::ZERO)).collect();
+    let weights = [3u64, 1, 1];
+    let mut multi: MultiServer<'_, EchoExecutor> = MultiServer::new();
+    for (x, &w) in execs.iter().zip(&weights) {
+        multi.add_lane_qos(x, cfg(), LaneQos::new(w, FAR));
+    }
+
+    let mut id = 0u64;
+    let warm = saturate_live(&mut multi, 250, &mut id);
+    let heavy = warm.iter().filter(|&&l| l == 0).count() as f64 / 250.0;
+    assert!(
+        (heavy - 0.6).abs() <= 0.05,
+        "weight-3 lane took {heavy} of rounds, want ~0.6"
+    );
+
+    multi.begin_retire(0).unwrap();
+    let mut buf = Vec::new();
+    while !multi.retire_ready(0) {
+        multi.dispatch_next(&mut buf).unwrap().expect("backlog pending");
+        buf.clear();
+    }
+    multi.finish_retire(0).unwrap();
+
+    let after = saturate_live(&mut multi, 400, &mut id);
+    assert!(after.iter().all(|&l| l != 0), "retired lane was dispatched");
+    for lane in [1usize, 2] {
+        let share = after.iter().filter(|&&l| l == lane).count() as f64 / 400.0;
+        assert!(
+            (share - 0.5).abs() <= 0.05,
+            "surviving lane {lane} share {share} did not re-converge to 0.5"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// full control plane over live parallel dispatch
+// ---------------------------------------------------------------------------
+
+/// What one submitted request must come back as.
+#[derive(Debug, Clone, Copy)]
+enum Want {
+    Echo { lane: usize, model: usize, offset: f32 },
+    NoLane { lane: usize },
+}
+
+fn await_frames(reply: &FrameQueue, n: usize, sink: &mut Vec<Frame>) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut got = 0;
+    while got < n {
+        if let Some(f) = reply.try_pop() {
+            sink.push(f);
+            got += 1;
+            continue;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {n} outcome frames");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+#[test]
+fn elastic_control_plane_over_live_traffic() {
+    const WAIT: Duration = Duration::from_secs(10);
+    let bert0 = echo("bert", 2, Duration::ZERO);
+    let bert1 = echo("bert", 2, Duration::ZERO);
+    let group = echo("bert", 4, Duration::ZERO);
+    let solo = echo("solo", 2, Duration::ZERO);
+    let added = echo("fresh", 2, Duration::ZERO);
+
+    let mut d = ParallelDispatcher::new(
+        vec![
+            LaneSpec::new(&bert0, cfg(), qos1()),
+            LaneSpec::new(&bert1, cfg(), qos1()),
+            LaneSpec::new(&solo, cfg(), qos1()),
+        ],
+        vec![GroupSpec::new(&group, &[0, 1])],
+    )
+    .unwrap(); // p0 = group {0,1}, p1 = solo
+    let spare = d.add_spare_part(); // p2, laneless until the control plane fills it
+    assert_eq!(spare, 2);
+    let plane = Arc::new(ControlPlane::for_dispatcher(&d));
+    let ctl = TopologyController::new(d.topology_handle(), Arc::clone(&plane));
+    let stats: Arc<Sharded<IngressStats>> = Arc::new(Sharded::new(d.parts() + 1));
+    let bridge = IngressBridge::new(4096);
+    let reply = FrameQueue::new();
+
+    let mut want: HashMap<u64, Want> = HashMap::new();
+    let mut frames: Vec<Frame> = Vec::new();
+    let mut epochs: Vec<u64> = Vec::new();
+
+    std::thread::scope(|s| {
+        let runner = s.spawn(|| run_dispatch_elastic(&mut d, &bridge, 1024, &stats, &plane));
+        let submit = |id: u64, lane: usize, model: usize| {
+            let env = Envelope {
+                lane,
+                client_id: id,
+                req: seeded_request(id, model, &[4]),
+                reply: reply.clone(),
+            };
+            assert!(bridge.submit(env).is_ok(), "bridge sized for the test");
+        };
+        let mut id = 0u64;
+        epochs.push(ctl.epoch());
+
+        // phase 1: steady traffic over the construction-time lanes
+        for i in 0..40 {
+            let lane = i % 3;
+            let model = i % 2;
+            submit(id, lane, model);
+            want.insert(id, Want::Echo { lane, model, offset: 0.0 });
+            id += 1;
+        }
+        await_frames(&reply, 40, &mut frames);
+
+        // phase 2: add a lane under traffic — the balance heuristic must
+        // pick the empty spare partition
+        let (g_new, ticket) = ctl.add_lane(LaneSpec::new(&added, cfg(), qos1())).unwrap();
+        assert_eq!(g_new, 3, "global ids are monotone");
+        let out = ticket.wait(WAIT).unwrap();
+        assert_eq!((out.global, out.local), (3, 0));
+        assert!(out.group.is_none());
+        let snap = ctl.snapshot();
+        assert_eq!(snap.lanes[3], Some((spare, 0)));
+        epochs.push(ctl.epoch());
+        for i in 0..10 {
+            let model = i % 2;
+            submit(id, g_new, model);
+            want.insert(id, Want::Echo { lane: g_new, model, offset: 0.0 });
+            id += 1;
+        }
+        await_frames(&reply, 10, &mut frames);
+
+        // phase 3: hot-swap the new lane; traffic submitted after the
+        // ack must be served entirely by the new weights
+        let pause = ctl.swap_model(g_new, 7).unwrap().wait(WAIT).unwrap();
+        assert!(pause < Duration::from_secs(1));
+        epochs.push(ctl.epoch());
+        for i in 0..10 {
+            let model = i % 2;
+            submit(id, g_new, model);
+            want.insert(id, Want::Echo { lane: g_new, model, offset: 7.0 * SWAP_SCALE });
+            id += 1;
+        }
+        await_frames(&reply, 10, &mut frames);
+
+        // phase 4: remove a coalesce-group member; its global id answers
+        // NoLane from then on
+        let removed = ctl.remove_lane(1).unwrap().wait(WAIT).unwrap();
+        assert!(removed.epoch > epochs[0]);
+        assert!(ctl.snapshot().lanes[1].is_none());
+        epochs.push(ctl.epoch());
+        for _ in 0..5 {
+            submit(id, 1, 0);
+            want.insert(id, Want::NoLane { lane: 1 });
+            id += 1;
+        }
+        await_frames(&reply, 5, &mut frames);
+
+        // phase 5: migrate the solo lane into partition 0 — it gets a
+        // fresh global id, reuses p0's retired local slot, carries its
+        // WDRR deficit, and does NOT join the bert group
+        let out = ctl
+            .migrate_lane(2, 0, LaneSpec::new(&solo, cfg(), qos1()), WAIT)
+            .unwrap();
+        assert_eq!((out.global, out.local), (4, 1), "migrant must reuse the retired slot");
+        assert!(out.group.is_none(), "solo lane must not join the bert group");
+        epochs.push(ctl.epoch());
+        for i in 0..10 {
+            let model = i % 2;
+            submit(id, out.global, model);
+            want.insert(id, Want::Echo { lane: out.global, model, offset: 0.0 });
+            id += 1;
+        }
+        for _ in 0..3 {
+            submit(id, 2, 0); // the old global id is gone forever
+            want.insert(id, Want::NoLane { lane: 2 });
+            id += 1;
+        }
+        await_frames(&reply, 13, &mut frames);
+
+        bridge.close();
+        runner
+            .join()
+            .expect("dispatch runner panicked")
+            .expect("elastic dispatch failed");
+    });
+
+    // every submission got exactly one outcome frame, correctly typed,
+    // correctly laned, and byte-exact
+    for f in &frames {
+        match f {
+            Frame::Response { id, lane, model_idx, data, .. } => {
+                match want.remove(id) {
+                    Some(Want::Echo { lane: wl, model, offset }) => {
+                        assert_eq!(*lane as usize, wl, "id {id} quoted the wrong lane");
+                        assert_eq!(*model_idx as usize, model);
+                        for (j, &x) in data.iter().enumerate() {
+                            assert_eq!(x, seeded_at(*id, model, j) + offset);
+                        }
+                    }
+                    other => panic!("unexpected Response for id {id} (want {other:?})"),
+                }
+            }
+            Frame::Reject { id, lane, code, .. } => match want.remove(id) {
+                Some(Want::NoLane { lane: wl }) => {
+                    assert_eq!(*code, RejectCode::NoLane, "id {id}: wrong reject type");
+                    assert_eq!(*lane as usize, wl);
+                }
+                other => panic!("unexpected Reject for id {id} (want {other:?})"),
+            },
+            other => panic!("unexpected frame: {other:?}"),
+        }
+    }
+    assert!(want.is_empty(), "submissions without an outcome: {want:?}");
+
+    // epochs advanced at every control-plane phase
+    for w in epochs.windows(2) {
+        assert!(w[0] < w[1], "epoch did not advance: {epochs:?}");
+    }
+
+    let st = stats.read();
+    assert_eq!(st.admitted, 70);
+    assert_eq!(st.responses, 70);
+    assert_eq!(st.no_lane, 8);
+    assert_eq!(st.ctrl_ops, 5, "add + swap + remove + migrate(remove, add)");
+    assert_eq!(st.lane_busy + st.group_busy + st.invalid + st.round_errors, 0);
+    assert!(st.rounds > 0);
+
+    // post-run structure: retired slots where lanes left, reuse where
+    // the migrant landed
+    assert_eq!(d.part(0).lane_life(1), LaneLife::Live, "slot reused by the migrant");
+    assert_eq!(d.part(1).lane_life(0), LaneLife::Retired, "migrated-away lane retired");
+    assert_eq!(d.part(spare).live_lanes(), 1);
+    let snap = ctl.snapshot();
+    assert_eq!(snap.lanes.len(), 5);
+    assert!(snap.lanes[1].is_none() && snap.lanes[2].is_none());
+    assert_eq!(snap.lanes[4], Some((0, 1)));
+}
