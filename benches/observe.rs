@@ -1,0 +1,332 @@
+//! Bench: observability-plane overhead (ADR-006).
+//!
+//! The same open-loop serving scenario — a 2-lane coalesce group plus a
+//! standalone lane on a `ParallelDispatcher` — runs twice: once bare,
+//! once with the full observability plane attached (stage tracing into
+//! per-lane histograms, flight recorder, lane gauges, a `MetricsHub`,
+//! and one live `ObsQuery` answered mid-run). Producer-observed
+//! latencies diff the two.
+//!
+//! Gates:
+//! - **every mode**: every submission gets exactly one byte-exact
+//!   response in both runs (instrumentation must not change a byte);
+//!   in the instrumented run the `ObsReport`'s counters must equal the
+//!   run's final merged `IngressStats` field by field, and the stage
+//!   histograms must hold exactly one fold per response per stage.
+//! - **full mode only** (CI runs `--smoke`): mean producer latency
+//!   with observability on <= 1.05x off — the <=5% overhead budget.
+//!
+//! Results (including per-stage mean nanoseconds from the merged
+//! histograms) go to `BENCH_observe.json`.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Result};
+
+use netfuse::coordinator::metrics::MetricsHub;
+use netfuse::coordinator::mock::EchoExecutor;
+use netfuse::coordinator::multi::{GroupSpec, LaneSpec, ParallelDispatcher};
+use netfuse::coordinator::obs::{ObsHub, Stage};
+use netfuse::coordinator::server::ServerConfig;
+use netfuse::coordinator::StrategyKind;
+use netfuse::ingress::{
+    run_dispatch_parallel_observed, Envelope, Frame, FrameQueue, IngressBridge, IngressStats,
+    LaneQos,
+};
+use netfuse::util::bench::report::BenchReport;
+use netfuse::util::json::Json;
+use netfuse::util::shard::Sharded;
+
+/// The shared test scaffolding (seeded request builder) — outcome
+/// verification uses the same payload-seeding scheme as the suites.
+#[path = "../rust/tests/common/mod.rs"]
+mod common;
+
+/// models per lane (the group executor runs 2 * M slots)
+const M: usize = 2;
+const INNER: [usize; 1] = [4];
+/// modeled device time per round — realistic enough that the per-seam
+/// stamp copies and histogram folds must stay invisible next to it
+const ROUND_COST: Duration = Duration::from_micros(200);
+const FAR: Duration = Duration::from_secs(3600);
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn lane_config() -> ServerConfig {
+    ServerConfig {
+        strategy: StrategyKind::NetFuse,
+        queue_cap: 8192,
+        max_wait: Duration::ZERO,
+    }
+}
+
+fn seeded_at(id: u64, model: usize, j: usize) -> f32 {
+    id as f32 * 1000.0 + model as f32 * 10.0 + j as f32
+}
+
+struct RunOut {
+    mean: f64,
+    p50: f64,
+    p99: f64,
+    served: usize,
+    stats: IngressStats,
+    /// per-stage (mean ns, count) from the merged histograms (obs run)
+    stage_ns: Option<BTreeMap<String, (f64, u64)>>,
+}
+
+/// One serving run: `load` paced producer requests over the three
+/// lanes. With `obs` the full plane is attached and, once every
+/// response is back (but before shutdown), one `ObsQuery` is answered
+/// live and checked against the final counters.
+fn run(load: usize, pace: Duration, obs: bool) -> Result<RunOut> {
+    let bert0 = EchoExecutor::new("bert", M, &INNER, ROUND_COST);
+    let bert1 = EchoExecutor::new("bert", M, &INNER, ROUND_COST);
+    let group = EchoExecutor::new("bert", 2 * M, &INNER, ROUND_COST);
+    let solo = EchoExecutor::new("solo", M, &INNER, ROUND_COST);
+    let mut d = ParallelDispatcher::new(
+        vec![
+            LaneSpec::new(&bert0, lane_config(), LaneQos::new(1, FAR)),
+            LaneSpec::new(&bert1, lane_config(), LaneQos::new(1, FAR)),
+            LaneSpec::new(&solo, lane_config(), LaneQos::new(1, FAR)),
+        ],
+        vec![GroupSpec::new(&group, &[0, 1])],
+    )?;
+    let stats: Arc<Sharded<IngressStats>> = Arc::new(Sharded::new(d.parts() + 1));
+    let bridge = IngressBridge::new(load + 16);
+    let metrics = Arc::new(MetricsHub::new(d.parts()));
+    let hub = obs.then(|| Arc::new(ObsHub::new(d.parts() + 1)));
+    if let Some(h) = &hub {
+        d.attach_metrics_hub(&metrics);
+        h.attach_metrics(Arc::clone(&metrics));
+        bridge.attach_obs(Arc::clone(h));
+    }
+
+    let mut submitted: HashMap<u64, (usize, Instant)> = HashMap::new();
+    let mut arrived: Vec<(Frame, Instant)> = Vec::with_capacity(load);
+    let mut report: Option<String> = None;
+    let run_out: Result<()> = std::thread::scope(|s| {
+        let runner = s.spawn(|| run_dispatch_parallel_observed(&mut d, &bridge, 4096, &stats));
+
+        let reply = FrameQueue::new();
+        let mut drain = |arrived: &mut Vec<(Frame, Instant)>| {
+            while let Some(f) = reply.try_pop() {
+                arrived.push((f, Instant::now()));
+            }
+        };
+        for i in 0..load {
+            let id = i as u64;
+            let env = Envelope {
+                lane: i % 3,
+                client_id: id,
+                req: common::seeded_request(id, i % M, &INNER),
+                reply: reply.clone(),
+            };
+            if bridge.submit(env).is_err() {
+                bridge.close();
+                bail!("producer submit refused (bridge sized for the run)");
+            }
+            submitted.insert(id, (i % M, Instant::now()));
+            drain(&mut arrived);
+            std::thread::sleep(pace);
+        }
+        // drain the tail BEFORE the query: the report is taken at a
+        // quiesced moment, so its counters must match shutdown's
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while arrived.len() < load {
+            if Instant::now() >= deadline {
+                bridge.close(); // let the runner drain out before we bail
+                bail!("tail stalled at {}/{load} responses", arrived.len());
+            }
+            drain(&mut arrived);
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        if let Some(h) = &hub {
+            let q = FrameQueue::new();
+            h.enqueue_query(7, q.clone());
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                if let Some(Frame::ObsReport { id: 7, json }) = q.try_pop() {
+                    report = Some(json);
+                    break;
+                }
+                if Instant::now() >= deadline {
+                    bridge.close();
+                    bail!("ObsQuery went unanswered on the live loop");
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        bridge.close();
+        runner.join().expect("dispatch runner panicked")
+    });
+    run_out?;
+    let stats = stats.read();
+
+    // ---- post-join verification: nothing lost, nothing perturbed ----
+    let mut lat = Vec::with_capacity(load);
+    for (f, at) in &arrived {
+        match f {
+            Frame::Response { id, model_idx, data, .. } => {
+                let Some((model, t0)) = submitted.remove(id) else {
+                    bail!("id {id}: response never submitted, or served twice");
+                };
+                ensure!(*model_idx as usize == model, "id {id}: wrong model");
+                for (j, &x) in data.iter().enumerate() {
+                    ensure!(
+                        x == seeded_at(*id, model, j),
+                        "id {id} byte {j}: got {x} (observability changed a payload?)"
+                    );
+                }
+                lat.push((*at - t0).as_secs_f64());
+            }
+            other => bail!("nothing may reject in this scenario: {other:?}"),
+        }
+    }
+    ensure!(submitted.is_empty(), "{} requests lost", submitted.len());
+
+    // the deterministic introspection gates (every mode)
+    let stage_ns = match &hub {
+        None => None,
+        Some(h) => {
+            let json = report.as_ref().expect("instrumented run must carry a report");
+            let r = Json::parse(json).map_err(|e| anyhow::anyhow!("bad report JSON: {e:?}"))?;
+            let pairs: [(&str, u64); 11] = [
+                ("admitted", stats.admitted),
+                ("lane_busy", stats.lane_busy),
+                ("group_busy", stats.group_busy),
+                ("invalid", stats.invalid),
+                ("no_lane", stats.no_lane),
+                ("responses", stats.responses),
+                ("rounds", stats.rounds),
+                ("coalesced_rounds", stats.coalesced_rounds),
+                ("round_errors", stats.round_errors),
+                ("idle_naps_avoided", stats.idle_naps_avoided),
+                ("ctrl_ops", stats.ctrl_ops),
+            ];
+            for (key, want) in pairs {
+                ensure!(
+                    r.get("stats").get(key).as_usize() == Some(want as usize),
+                    "ObsReport stats.{key} diverged from the final counters \
+                     ({:?} vs {want})",
+                    r.get("stats").get(key)
+                );
+            }
+            ensure!(
+                r.get("metrics").get("completed_requests").as_usize() == Some(load),
+                "MetricsHub aggregate missed responses"
+            );
+            // stage histograms: one fold per response per stage
+            let stages = h.stages();
+            let mut out = BTreeMap::new();
+            for st in Stage::ALL {
+                let (mut count, mut sum) = (0u64, 0u64);
+                for lane in stages.lanes() {
+                    count += lane.stage(st).count();
+                    sum += lane.stage(st).sum_ns();
+                }
+                ensure!(
+                    count as usize == load,
+                    "stage {} folded {count} of {load} responses",
+                    st.name()
+                );
+                out.insert(st.name().to_string(), (sum as f64 / count as f64, count));
+            }
+            Some(out)
+        }
+    };
+
+    ensure!(!lat.is_empty(), "no latencies recorded");
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = lat.iter().sum::<f64>() / lat.len() as f64;
+    Ok(RunOut {
+        mean,
+        p50: lat[lat.len() / 2],
+        p99: lat[(lat.len() as f64 * 0.99) as usize - 1],
+        served: lat.len(),
+        stats,
+        stage_ns,
+    })
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!(
+        "# observe: observability-plane overhead next to open-loop traffic{}\n",
+        if smoke { " (SMOKE)" } else { "" }
+    );
+
+    let load = if smoke { 300 } else { 3000 };
+    let pace = Duration::from_micros(if smoke { 200 } else { 400 });
+
+    let off = run(load, pace, false)?;
+    let on = run(load, pace, true)?;
+    let inflation = on.mean / off.mean.max(1e-9);
+
+    for (name, r) in [("obs off", &off), ("obs on ", &on)] {
+        println!(
+            "{name}: {} served, mean {:.0}us p50 {:.0}us p99 {:.0}us | {} rounds, {} merged",
+            r.served,
+            r.mean * 1e6,
+            r.p50 * 1e6,
+            r.p99 * 1e6,
+            r.stats.rounds,
+            r.stats.coalesced_rounds,
+        );
+    }
+    println!("mean-latency inflation with observability on: {inflation:.3}x");
+    if let Some(stages) = &on.stage_ns {
+        for (name, (ns, count)) in stages {
+            println!("  stage {name:<8} mean {ns:>10.0} ns  ({count} folds)");
+        }
+    }
+    println!();
+
+    let obj = |r: &RunOut| {
+        let mut o = BTreeMap::new();
+        o.insert("served".to_string(), num(r.served as f64));
+        o.insert("mean_s".to_string(), num(r.mean));
+        o.insert("p50_s".to_string(), num(r.p50));
+        o.insert("p99_s".to_string(), num(r.p99));
+        o.insert("rounds".to_string(), num(r.stats.rounds as f64));
+        o.insert("merged_rounds".to_string(), num(r.stats.coalesced_rounds as f64));
+        Json::Obj(o)
+    };
+    let mut rep = BenchReport::new("observe", smoke);
+    rep.num("load", load as f64)
+        .num("pace_us", pace.as_secs_f64() * 1e6)
+        .num("mean_inflation", inflation)
+        .set("off", obj(&off))
+        .set("on", obj(&on));
+    if let Some(stages) = &on.stage_ns {
+        let mut o = BTreeMap::new();
+        for (name, (ns, _)) in stages {
+            o.insert(name.clone(), num(*ns));
+        }
+        rep.set("stage_mean_ns", Json::Obj(o));
+        for (name, (ns, _)) in stages {
+            rep.ns_per_slot(&format!("stage_{name}"), *ns);
+        }
+    }
+    rep.write()?;
+
+    // correctness gates (written AFTER the report so a failing run
+    // still leaves its numbers behind); run() already enforced
+    // byte-exact outcomes and report-vs-final counter equality
+    assert_eq!(off.served, load, "bare run lost requests");
+    assert_eq!(on.served, load, "instrumented run lost requests");
+    assert!(on.stage_ns.is_some(), "instrumented run must produce stage data");
+    // the overhead gate is full-mode only: smoke runs are too short
+    // for a stable mean on shared CI runners
+    if !smoke {
+        assert!(
+            inflation <= 1.05,
+            "observability inflated mean latency by {inflation:.3}x (> 1.05x): \
+             the plane's hot-path budget is 5%"
+        );
+    }
+    Ok(())
+}

@@ -21,6 +21,14 @@
 //! lane table (`TopologySnapshot`), and at exit the merged-round
 //! counts, showing the coalesce group kept merging throughout.
 //!
+//! The observability plane (ADR-006) is attached: after each control
+//! op the operator also sends `Frame::ObsQuery` down the same TCP
+//! connection and prints the live `ObsReport` — the report's own
+//! epoch-stamped lane table with each lane's per-stage latency
+//! breakdown (queue/pack/execute/scatter/write p99), plus merged
+//! counters and flight-recorder depth — all answered by a dispatch
+//! thread between rounds, mid-churn.
+//!
 //! The lanes are in-process echo executors, so the demo runs without
 //! AOT artifacts — swap in `Fleet::load_with_pool` lanes to serve the
 //! real thing; every other line stays identical.
@@ -36,7 +44,9 @@ use std::time::Duration;
 use anyhow::{ensure, Result};
 
 use netfuse::coordinator::control::{ControlPlane, TopologyController};
+use netfuse::coordinator::metrics::MetricsHub;
 use netfuse::coordinator::mock::{EchoExecutor, SWAP_SCALE};
+use netfuse::coordinator::obs::ObsHub;
 use netfuse::coordinator::multi::{
     GroupSpec, LaneSpec, ParallelDispatcher, TopologySnapshot,
 };
@@ -46,6 +56,7 @@ use netfuse::ingress::{
     run_dispatch_elastic, serve_conn, Frame, IngressBridge, IngressStats, LaneQos, LoadGen,
     RejectCode, TcpTransport, TrafficShape, Transport, TransportRx, TransportTx,
 };
+use netfuse::util::json::Json;
 use netfuse::util::shard::Sharded;
 
 const M: usize = 2;
@@ -65,6 +76,37 @@ fn lane_config() -> ServerConfig {
 
 fn qos() -> LaneQos {
     LaneQos::new(1, Duration::from_millis(250))
+}
+
+/// Render a live `ObsReport`: the introspection plane's own view of
+/// the topology (epoch, lane gauges) plus each lane's stage-latency
+/// breakdown from the merged histograms.
+fn print_obs(what: &str, r: &Json) {
+    println!(
+        "[epoch {:>2}] obs after {what}: {} responses over {} rounds ({} merged), \
+         recorder holds {} of {} events",
+        r.get("epoch").as_i64().unwrap_or(-1),
+        r.get("stats").get("responses").as_i64().unwrap_or(0),
+        r.get("stats").get("rounds").as_i64().unwrap_or(0),
+        r.get("stats").get("coalesced_rounds").as_i64().unwrap_or(0),
+        r.get("recorder").get("retained").as_i64().unwrap_or(0),
+        r.get("recorder").get("recorded").as_i64().unwrap_or(0),
+    );
+    for lane in r.get("lanes").as_arr().unwrap_or(&[]) {
+        print!(
+            "    lane {} [{} p{}s{}] pending {:>2} | stage p99 us:",
+            lane.get("global").as_i64().unwrap_or(-1),
+            lane.get("life").as_str().unwrap_or("?"),
+            lane.get("part").as_i64().unwrap_or(-1),
+            lane.get("local").as_i64().unwrap_or(-1),
+            lane.get("pending").as_i64().unwrap_or(0),
+        );
+        for st in ["queue", "pack", "execute", "scatter", "write"] {
+            let ns = lane.get("stages").get(st).get("p99_ns").as_f64().unwrap_or(0.0);
+            print!(" {st} {:.0}", ns / 1e3);
+        }
+        println!();
+    }
 }
 
 fn print_topo(what: &str, snap: &TopologySnapshot) {
@@ -106,6 +148,14 @@ fn main() -> Result<()> {
     let ctl = TopologyController::new(d.topology_handle(), Arc::clone(&plane));
     let stats: Arc<Sharded<IngressStats>> = Arc::new(Sharded::new(d.parts() + 1));
     let bridge = IngressBridge::new(1024);
+
+    // observability plane (ADR-006): stage tracing + flight recorder +
+    // live ObsQuery, attached before the dispatch threads start
+    let metrics = Arc::new(MetricsHub::new(d.parts()));
+    d.attach_metrics_hub(&metrics);
+    let hub = Arc::new(ObsHub::new(d.parts() + 1));
+    hub.attach_metrics(Arc::clone(&metrics));
+    bridge.attach_obs(Arc::clone(&hub));
 
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
@@ -180,6 +230,24 @@ fn main() -> Result<()> {
                     }
                     Ok((ok, no_lane, first))
                 };
+                // live introspection on the same connection: a dispatch
+                // thread answers between rounds with the full report
+                let observe = |tx: &mut Box<dyn TransportTx>,
+                               rx: &mut Box<dyn TransportRx>,
+                               qid: u64,
+                               what: &str|
+                 -> Result<()> {
+                    tx.send(&Frame::ObsQuery { id: qid })?;
+                    match rx.recv()? {
+                        Some(Frame::ObsReport { id, json }) if id == qid => {
+                            let r = Json::parse(&json)
+                                .map_err(|e| anyhow::anyhow!("bad ObsReport: {e:?}"))?;
+                            print_obs(what, &r);
+                            Ok(())
+                        }
+                        other => anyhow::bail!("operator expected ObsReport, got {other:?}"),
+                    }
+                };
 
                 std::thread::sleep(step);
                 let (global, ticket) = ctl.add_lane(LaneSpec::new(fresh, lane_config(), qos()))?;
@@ -194,6 +262,7 @@ fn main() -> Result<()> {
                 let (ok1, nl1, first1) = burst(&mut tx, &mut rx, global, BURST)?;
                 ensure!(ok1 == BURST as u64 && nl1 == 0, "factory burst: {ok1} ok {nl1} nolane");
                 println!("    burst of {BURST} served by factory weights (echo[0] = {first1})");
+                observe(&mut tx, &mut rx, 9001, "add")?;
 
                 std::thread::sleep(step);
                 let pause = ctl.swap_model(global, SWAP_TAG)?.wait(ACK)?;
@@ -208,13 +277,18 @@ fn main() -> Result<()> {
                      shifted by tag*SWAP_SCALE = {})",
                     SWAP_TAG as f32 * SWAP_SCALE
                 );
+                observe(&mut tx, &mut rx, 9002, "swap")?;
 
                 std::thread::sleep(step);
                 ctl.remove_lane(global)?.wait(ACK)?;
-                print_topo(&format!("removed lane {global} (drained, then excised)"), &ctl.snapshot());
+                print_topo(
+                    &format!("removed lane {global} (drained, then excised)"),
+                    &ctl.snapshot(),
+                );
                 let (ok3, nl3, _) = burst(&mut tx, &mut rx, global, 3)?;
                 ensure!(ok3 == 0 && nl3 == 3, "dead lane: {ok3} ok {nl3} nolane");
                 println!("    3 follow-up frames to lane {global}: all typed NoLane rejects");
+                observe(&mut tx, &mut rx, 9003, "remove")?;
 
                 tx.send(&Frame::Eos)?;
                 Ok(format!(

@@ -79,6 +79,14 @@ impl MetricsCore {
         }
     }
 
+    /// Observed round-time p99 in seconds, `None` until a round has
+    /// been recorded (ADR-006: the aggregate gauge `ObsReport` quotes).
+    /// Nearest-rank, so the merged hub value equals what one recorder
+    /// over every shard's rounds would report.
+    pub fn round_p99(&self) -> Option<f64> {
+        (self.round_latency.count() > 0).then(|| self.round_latency.p99())
+    }
+
     /// Aggregate one-line report (nearest-rank percentiles, exactly as
     /// a single recorder over all merged streams would print them).
     pub fn report_line(&self) -> String {
@@ -139,6 +147,14 @@ impl MetricsHub {
     /// Merge every shard into one exact aggregate view.
     pub fn read(&self) -> MetricsCore {
         self.shards.read()
+    }
+
+    /// Merged round-time p99 in seconds (`None` before any round) —
+    /// ADR-006 satellite: the one-number health gauge operators poll,
+    /// exact across shards because nearest-rank depends only on the
+    /// merged sample multiset.
+    pub fn round_p99(&self) -> Option<f64> {
+        self.read().round_p99()
     }
 
     pub fn shards(&self) -> usize {
@@ -239,6 +255,13 @@ impl Metrics {
         } else {
             0.0
         }
+    }
+
+    /// This lane's observed round-time p99 in seconds, `None` until a
+    /// round has been recorded — the per-lane gauge the dispatch loop
+    /// publishes to the observability hub (ADR-006).
+    pub fn round_p99(&self) -> Option<f64> {
+        (self.round_latency.count() > 0).then(|| self.round_latency.p99())
     }
 
     /// One-line report. The p50/p95/p99 columns are **nearest-rank**
@@ -400,6 +423,57 @@ mod tests {
         assert_eq!(merged.round_latency.p50(), single.round_latency.p50());
         assert_eq!(merged.round_latency.p99(), single.round_latency.p99());
         assert_eq!(merged.report_line(), single.report_line());
+    }
+
+    /// ADR-006 satellite: `round_p99` across a 2-shard hub is pinned to
+    /// the exact nearest-rank value — rank `ceil(0.99 * 100)` = sample
+    /// #100 of the merged multiset 0.001..=0.100.
+    #[test]
+    fn hub_round_p99_is_exact_across_shards() {
+        let hub = MetricsHub::new(2);
+        assert_eq!(hub.round_p99(), None, "no rounds yet");
+        let handles: Vec<_> = (0..2).map(|_| hub.register()).collect();
+        // 100 known round times, split alternately across the shards
+        for i in 1..=100u32 {
+            handles[(i % 2) as usize].lock().record_round(i as f64 / 1000.0);
+        }
+        // nearest-rank p99 of 100 samples is rank 99 -> 0.099
+        assert_eq!(hub.round_p99(), Some(0.099));
+        // and the per-lane accessor agrees with its own samples
+        let mut m = Metrics::new(StrategyKind::NetFuse, "bert", 2, 1);
+        assert_eq!(m.round_p99(), None);
+        for i in 1..=100u32 {
+            m.record_round(i as f64 / 1000.0);
+        }
+        assert_eq!(m.round_p99(), Some(0.099));
+        assert_eq!(MetricsCore::default().round_p99(), None);
+    }
+
+    /// ADR-006 satellite: merged throughput must span back to the
+    /// OLDEST arrival across shards — the cross-shard analogue of
+    /// `throughput_spans_back_to_the_oldest_recorded_arrival`. Shard 0
+    /// records a fresh arrival FIRST; shard 1 then records a request
+    /// that arrived 250ms ago. A first-wins (or last-wins) merge of
+    /// `first_arrival` would anchor the span at the fresh arrival and
+    /// report ~2000 rps; the min-merge reports ~8.
+    #[test]
+    fn merged_throughput_spans_the_oldest_arrival_across_staggered_shards() {
+        let hub = MetricsHub::new(2);
+        let h0 = hub.register();
+        let h1 = hub.register();
+        h0.lock().record_request(0.001, None); // fresh, recorded first
+        h1.lock().record_request(0.250, None); // arrived 250ms ago
+        let tp = hub.read().throughput();
+        assert!(
+            tp > 0.0 && tp <= 9.0,
+            "merged throughput {tp} must anchor at the oldest shard arrival (~8 rps)"
+        );
+        // merge the other direction too (fold order must not matter)
+        let mut rev = MetricsCore::default();
+        rev.merge_from(&h1.lock());
+        rev.merge_from(&h0.lock());
+        let tp = rev.throughput();
+        assert!(tp > 0.0 && tp <= 9.0, "reverse-order merge reports {tp}");
     }
 
     #[test]

@@ -39,6 +39,13 @@
 //! tables are epoch-stamped state behind `multi::Topology`, lane slots
 //! carry a `multi::LaneLife` lifecycle, and per-partition command
 //! queues apply every mutation strictly between rounds.
+//!
+//! Since ADR-006 the whole plane is **observable**: requests carry
+//! monotonic stage stamps ([`request::Stamps`]) folded into per-lane
+//! stage histograms, each dispatch thread keeps a flight-recorder ring
+//! of recent decisions, and a live [`obs::ObsHub`] answers
+//! `ObsQuery`/`ObsReport` introspection frames over the same wire that
+//! carries traffic.
 
 pub mod arena;
 pub mod coalesce;
@@ -47,6 +54,7 @@ pub mod memory;
 pub mod metrics;
 pub mod mock;
 pub mod multi;
+pub mod obs;
 pub mod pool;
 pub mod request;
 pub mod service;
@@ -63,7 +71,11 @@ pub use multi::{
     Dispatched, GroupSpec, GroupStats, LaneLife, LaneSpec, MultiServer, ParallelDispatcher,
     Topology, TopologySnapshot,
 };
+pub use obs::{
+    CtrlKind, Dump, Event, EventKind, EventRing, FlightRecorder, LaneGauge, ObsCore, ObsHub,
+    RecHandle, Stage, StageTracer,
+};
 pub use pool::WorkerPool;
-pub use request::{Request, Response};
+pub use request::{Request, Response, Stamps};
 pub use service::{Fleet, RoundExecutor};
 pub use strategy::StrategyKind;

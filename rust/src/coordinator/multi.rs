@@ -380,6 +380,20 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         self.sched.qos(lane)
     }
 
+    /// `lane`'s current WDRR deficit (scheduler credit). Observability
+    /// read (ADR-006): the gauge a dispatch thread publishes between
+    /// rounds, and the value the flight recorder stamps on QoS-pick
+    /// events.
+    pub fn lane_deficit(&self, lane: usize) -> i64 {
+        self.sched.deficit(lane)
+    }
+
+    /// The effective SLO boost margin ε for `lane` (its own override or
+    /// the scheduler default) — published as a gauge (ADR-006).
+    pub fn lane_boost_margin(&self, lane: usize) -> Duration {
+        self.sched.lane_boost_margin(lane)
+    }
+
     // -----------------------------------------------------------------
     // elastic lane lifecycle (ADR-005)
     // -----------------------------------------------------------------
@@ -780,7 +794,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         // scatter: each member completes against its lane-relative
         // window of the merged output. Round time is the merged round's
         // wall time, attributed to every lane that actually held work.
-        let secs = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
         let mut n = 0usize;
         for (k, &l) in group.members.iter().enumerate() {
             let window = group.map.slots_of(k);
@@ -788,7 +802,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
             if !occupied {
                 continue;
             }
-            match lanes[l].complete_round(secs, &mut outs[window], responses) {
+            match lanes[l].complete_round(t0, t1, &mut outs[window], responses) {
                 Ok(c) => n += c,
                 Err(e) => {
                     // mid-scatter failure (unreachable after the group

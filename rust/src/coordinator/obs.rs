@@ -1,0 +1,827 @@
+//! Observability plane (ADR-006): stage tracing, the flight recorder,
+//! and the live introspection hub behind `ObsQuery`/`ObsReport`.
+//!
+//! Three surfaces, all built on the `util::shard` merge-on-read idiom
+//! so the dispatch hot path never takes a contended lock:
+//!
+//! - **Stage tracing** — every `Request` is stamped with monotonic
+//!   [`Stamps`](super::request::Stamps) at the existing dispatch seams;
+//!   at response-routing time a [`StageTracer`] folds the telescoping
+//!   segments (queue → pack → execute → scatter → write) into per-lane
+//!   fixed-log-bucket histograms ([`crate::util::hist::Hist`]). The
+//!   bucketization is a pure function applied before sharding, so the
+//!   merged view is **exactly** what one histogram fed every stream
+//!   would hold — the ADR-004 exactness contract extended to stages.
+//! - **Flight recorder** — each dispatch thread holds a [`RecHandle`]
+//!   onto its own fixed-capacity overwriting [`EventRing`] of compact
+//!   [`Event`]s (round start/end, coalesce decisions, QoS picks with
+//!   deficits, control ops with epochs, rejects, round errors). The
+//!   merged ring — the newest events across all threads in global
+//!   sequence order — is dumped automatically on round failure and on
+//!   unresolved control tickets, and on demand.
+//! - **Introspection hub** — [`ObsHub`] collects per-lane gauges,
+//!   tracked [`ArenaRing`]s, an optional [`MetricsHub`], and the
+//!   pending `ObsQuery` replies; a dispatch loop answers every waiting
+//!   query with one JSON [`ObsHub::report`] built from the exactly
+//!   merged state.
+//!
+//! The hub is attached to an `IngressBridge`
+//! (`IngressBridge::attach_obs`) *before* dispatch starts; with no hub
+//! attached, the only per-request cost is the unconditional stamp
+//! copies (one `Instant::now()` per round per seam).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::ingress::bridge::IngressStats;
+use crate::ingress::frame::{Frame, RejectCode};
+use crate::ingress::transport::FrameQueue;
+use crate::util::hist::Hist;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::shard::{ShardHandle, Shardable, Sharded};
+
+use super::arena::ArenaRing;
+use super::metrics::MetricsHub;
+use super::multi::TopologySnapshot;
+use super::request::Stamps;
+
+// ---------------------------------------------------------------------------
+// stage tracing
+// ---------------------------------------------------------------------------
+
+/// The five request stages the seams stamp. The first four telescope
+/// exactly to the end-to-end latency (`completed - arrived`); `Write`
+/// is the routing seam's own segment, measured against `completed`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Stage {
+    /// admission → QoS pick (`picked - arrived`)
+    Queue = 0,
+    /// QoS pick → megabatch execution start (`exec_start - picked`)
+    Pack = 1,
+    /// megabatch execution (`exec_end - exec_start`)
+    Execute = 2,
+    /// execution end → response materialized (`completed - exec_end`)
+    Scatter = 3,
+    /// response materialized → handed to the reply queue
+    Write = 4,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 5] =
+        [Stage::Queue, Stage::Pack, Stage::Execute, Stage::Scatter, Stage::Write];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Pack => "pack",
+            Stage::Execute => "execute",
+            Stage::Scatter => "scatter",
+            Stage::Write => "write",
+        }
+    }
+}
+
+/// One lane's per-stage histograms.
+#[derive(Clone, Debug)]
+pub struct LaneStages {
+    pub stages: [Hist; 5],
+}
+
+impl Default for LaneStages {
+    fn default() -> Self {
+        LaneStages { stages: std::array::from_fn(|_| Hist::new()) }
+    }
+}
+
+impl LaneStages {
+    pub fn stage(&self, stage: Stage) -> &Hist {
+        &self.stages[stage as usize]
+    }
+}
+
+/// The shardable per-lane stage-histogram accumulator: lanes are
+/// indexed by **global** lane id (the vec grows on demand — global ids
+/// are monotone, so the index is stable across topology churn).
+#[derive(Clone, Debug, Default)]
+pub struct ObsCore {
+    lanes: Vec<LaneStages>,
+}
+
+impl ObsCore {
+    pub fn fold(&mut self, lane: usize, stage: Stage, ns: u64) {
+        if lane >= self.lanes.len() {
+            self.lanes.resize_with(lane + 1, LaneStages::default);
+        }
+        self.lanes[lane].stages[stage as usize].record_ns(ns);
+    }
+
+    pub fn lanes(&self) -> &[LaneStages] {
+        &self.lanes
+    }
+
+    pub fn lane(&self, lane: usize) -> Option<&LaneStages> {
+        self.lanes.get(lane)
+    }
+}
+
+impl Shardable for ObsCore {
+    fn merge_from(&mut self, other: &Self) {
+        if other.lanes.len() > self.lanes.len() {
+            self.lanes.resize_with(other.lanes.len(), LaneStages::default);
+        }
+        for (a, b) in self.lanes.iter_mut().zip(&other.lanes) {
+            for (ha, hb) in a.stages.iter_mut().zip(&b.stages) {
+                ha.merge_from(hb);
+            }
+        }
+    }
+}
+
+fn dur_ns(from: Instant, to: Instant) -> u64 {
+    u64::try_from(to.saturating_duration_since(from).as_nanos()).unwrap_or(u64::MAX)
+}
+
+/// One dispatch thread's claim on a stage-histogram shard. Folding is
+/// an uncontended lock (the shard is private to the thread) plus five
+/// bucket increments per response.
+#[derive(Clone, Debug)]
+pub struct StageTracer {
+    shard: ShardHandle<ObsCore>,
+}
+
+impl StageTracer {
+    /// Fold one response's stamps into lane `lane`'s stage histograms.
+    /// A response missing any stamp (a foreign-offered request that
+    /// never crossed the admission seam) folds nothing.
+    pub fn fold_stamps(&self, lane: usize, st: &Stamps, write_end: Instant) {
+        let (Some(arrived), Some(picked), Some(es), Some(ee), Some(done)) =
+            (st.arrived, st.picked, st.exec_start, st.exec_end, st.completed)
+        else {
+            return;
+        };
+        let mut core = self.shard.lock();
+        core.fold(lane, Stage::Queue, dur_ns(arrived, picked));
+        core.fold(lane, Stage::Pack, dur_ns(picked, es));
+        core.fold(lane, Stage::Execute, dur_ns(es, ee));
+        core.fold(lane, Stage::Scatter, dur_ns(ee, done));
+        core.fold(lane, Stage::Write, dur_ns(done, write_end));
+    }
+
+    /// The exactly merged view across every tracer shard.
+    pub fn merged(&self) -> ObsCore {
+        self.shard.merged()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// flight recorder
+// ---------------------------------------------------------------------------
+
+/// Per-shard event capacity of the operating configuration.
+/// `EventRing::default()` — what `Sharded::new` constructs shards with —
+/// MUST carry this cap; explicit caps are for direct test construction.
+pub const DEFAULT_EVENT_CAP: usize = 512;
+
+/// What kind of lane-lifecycle control op an event records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CtrlKind {
+    Add,
+    Remove,
+    Swap,
+}
+
+/// One compact flight-recorder event. All variants are `Copy`-sized:
+/// the ring is a flat overwrite buffer, never an allocation per event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// a round is about to dispatch on partition `part`
+    RoundStart { part: usize },
+    /// a round completed: the QoS-picked global lane, how many lanes
+    /// the round served, and the responses it produced
+    RoundEnd { lane: usize, lanes_served: usize, responses: usize },
+    /// the round coalesced: `members` lanes merged into one megabatch
+    Coalesce { lane: usize, members: usize },
+    /// the QoS pick, with the picked lane's post-charge deficit
+    /// ([`crate::ingress::qos::CHARGE_UNIT`] fixed point) and whether
+    /// the SLO boost preempted WDRR
+    QosPick { lane: usize, deficit: i64, urgent: bool },
+    /// a control-plane command applied, with the topology epoch
+    /// observed after it
+    CtrlOp { op: CtrlKind, global: usize, epoch: u64 },
+    /// an envelope refused in-band
+    Reject { code: RejectCode, lane: usize },
+    /// a failed round (requests requeued); `consecutive` counts the
+    /// current failure streak
+    RoundError { consecutive: u32 },
+}
+
+/// One recorded event: a globally ordered sequence number, nanoseconds
+/// since the recorder's epoch, and the payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// global order across every shard (one `AtomicU64` per recorder)
+    pub seq: u64,
+    /// nanoseconds since [`FlightRecorder`] construction
+    pub t_ns: u64,
+    pub kind: EventKind,
+}
+
+/// A fixed-capacity overwriting ring of [`Event`]s — one per dispatch
+/// thread, behind the [`Sharded`] idiom. Pushing is O(1) with no
+/// allocation once the ring is full; [`EventRing::events`] returns the
+/// retained events oldest→newest.
+///
+/// **Merge exactness:** `seq` is issued by one global counter, so the
+/// merged ring — union of all shards, sorted by `seq`, truncated to the
+/// newest `cap` — contains exactly the last `cap` events recorded
+/// across all shards: an event within the global last-`cap` has fewer
+/// than `cap` successors globally, hence fewer on its own shard, hence
+/// was not yet overwritten there. Intermediate fold truncation is safe
+/// for the same reason — each partial merge keeps the newest `cap` of
+/// what it has seen, and anything it drops has `cap` successors in that
+/// partial view already.
+#[derive(Clone, Debug)]
+pub struct EventRing {
+    cap: usize,
+    buf: Vec<Event>,
+    /// oldest element when the ring is full (`buf.len() == cap`)
+    head: usize,
+}
+
+impl Default for EventRing {
+    fn default() -> Self {
+        EventRing::with_cap(DEFAULT_EVENT_CAP)
+    }
+}
+
+impl EventRing {
+    /// `cap` is clamped to at least 1.
+    pub fn with_cap(cap: usize) -> EventRing {
+        EventRing { cap: cap.max(1), buf: Vec::new(), head: 0 }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Append, overwriting the oldest event once full.
+    pub fn push(&mut self, e: Event) {
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+        } else {
+            self.buf[self.head] = e;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> Vec<Event> {
+        if self.buf.len() < self.cap {
+            self.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(self.cap);
+            out.extend_from_slice(&self.buf[self.head..]);
+            out.extend_from_slice(&self.buf[..self.head]);
+            out
+        }
+    }
+}
+
+impl Shardable for EventRing {
+    fn merge_from(&mut self, other: &Self) {
+        let cap = self.cap.max(other.cap);
+        let mut all = self.events();
+        all.extend(other.events());
+        all.sort_by_key(|e| e.seq);
+        if all.len() > cap {
+            let cut = all.len() - cap;
+            all.drain(..cut);
+        }
+        *self = EventRing { cap, buf: all, head: 0 };
+    }
+}
+
+/// A stored flight-recorder dump: why it was taken and the merged
+/// events at that moment (oldest first).
+#[derive(Debug, Clone)]
+pub struct Dump {
+    pub reason: String,
+    pub events: Vec<Event>,
+}
+
+/// The per-thread-ringed flight recorder. Construct sized to the
+/// dispatch thread count; each thread takes a [`FlightRecorder::handle`]
+/// and records through it lock-contention-free.
+pub struct FlightRecorder {
+    epoch: Instant,
+    seq: Arc<AtomicU64>,
+    rings: Arc<Sharded<EventRing>>,
+    last: Mutex<Option<Dump>>,
+}
+
+impl FlightRecorder {
+    pub fn new(threads: usize) -> FlightRecorder {
+        FlightRecorder {
+            epoch: Instant::now(),
+            seq: Arc::new(AtomicU64::new(0)),
+            rings: Arc::new(Sharded::new(threads)),
+            last: Mutex::new(None),
+        }
+    }
+
+    /// Claim the next ring shard (round-robin, wraps) for one recording
+    /// thread. The handle is self-contained (`'static`).
+    pub fn handle(&self) -> RecHandle {
+        RecHandle {
+            ring: Sharded::register(&self.rings),
+            seq: Arc::clone(&self.seq),
+            epoch: self.epoch,
+        }
+    }
+
+    /// Events recorded so far (global counter — may exceed what the
+    /// rings retain).
+    pub fn recorded(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// The merged retained events across every shard, oldest first.
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.rings.read().events()
+    }
+
+    /// Take a dump now: store it as the last dump (readable via
+    /// [`FlightRecorder::last_dump`]) and print a one-line summary to
+    /// stderr so an operator tailing logs sees the trigger.
+    pub fn dump_now(&self, reason: &str) {
+        let events = self.snapshot();
+        eprintln!(
+            "[flight-recorder] dump ({reason}): {} events retained, newest seq {}",
+            events.len(),
+            events.last().map(|e| e.seq).map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+        );
+        *self.last.lock().unwrap() = Some(Dump { reason: reason.to_string(), events });
+    }
+
+    /// The most recent dump, if any was taken.
+    pub fn last_dump(&self) -> Option<Dump> {
+        self.last.lock().unwrap().clone()
+    }
+}
+
+/// One thread's recording claim: its ring shard plus the shared
+/// sequence counter and epoch.
+#[derive(Clone)]
+pub struct RecHandle {
+    ring: ShardHandle<EventRing>,
+    seq: Arc<AtomicU64>,
+    epoch: Instant,
+}
+
+impl RecHandle {
+    /// Record one event: one atomic increment, one `Instant` read, one
+    /// uncontended ring push.
+    pub fn record(&self, kind: EventKind) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let t_ns = u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        self.ring.lock().push(Event { seq, t_ns, kind });
+    }
+
+    /// The merged retained events across every shard (oldest first) —
+    /// readable from a thread that only holds a handle.
+    pub fn merged(&self) -> Vec<Event> {
+        self.ring.merged().events()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the introspection hub
+// ---------------------------------------------------------------------------
+
+/// A point-in-time gauge for one lane, published by the dispatch thread
+/// that owns it (between rounds, so every field is coherent).
+#[derive(Debug, Clone, Copy)]
+pub struct LaneGauge {
+    /// global (wire) lane id
+    pub global: usize,
+    /// owning partition
+    pub part: usize,
+    /// partition-local lane slot
+    pub local: usize,
+    /// "live" | "draining" (retired lanes drop their gauge)
+    pub life: &'static str,
+    /// WDRR weight
+    pub weight: u32,
+    /// current WDRR deficit (CHARGE_UNIT fixed point; negative = debt)
+    pub deficit: i64,
+    /// effective SLO boost margin ε, nanoseconds
+    pub boost_ns: u64,
+    /// queued requests
+    pub pending: usize,
+    /// the lane's observed round-time p99, seconds (`None` until a
+    /// round completes)
+    pub round_p99_s: Option<f64>,
+}
+
+/// The live introspection plane: per-lane stage histograms, the flight
+/// recorder, lane gauges, tracked arena rings, optional aggregate
+/// metrics, and the pending `ObsQuery` reply queues.
+///
+/// Attach one hub to the `IngressBridge` before dispatch starts
+/// (`IngressBridge::attach_obs`); connection readers enqueue queries,
+/// and whichever dispatch loop polls next answers every pending one
+/// with a single [`ObsHub::report`].
+pub struct ObsHub {
+    stages: Arc<Sharded<ObsCore>>,
+    pub recorder: FlightRecorder,
+    gauges: Mutex<HashMap<usize, LaneGauge>>,
+    queries: Mutex<VecDeque<(u64, FrameQueue)>>,
+    rings: Mutex<Vec<(String, Arc<ArenaRing>)>>,
+    metrics: Mutex<Option<Arc<MetricsHub>>>,
+}
+
+impl ObsHub {
+    /// Size to the number of recording threads (dispatch threads; the
+    /// parallel router counts as one more).
+    pub fn new(threads: usize) -> ObsHub {
+        ObsHub {
+            stages: Arc::new(Sharded::new(threads)),
+            recorder: FlightRecorder::new(threads),
+            gauges: Mutex::new(HashMap::new()),
+            queries: Mutex::new(VecDeque::new()),
+            rings: Mutex::new(Vec::new()),
+            metrics: Mutex::new(None),
+        }
+    }
+
+    /// Claim a stage-histogram shard for one dispatch thread.
+    pub fn tracer(&self) -> StageTracer {
+        StageTracer { shard: Sharded::register(&self.stages) }
+    }
+
+    /// Claim a flight-recorder ring for one dispatch thread.
+    pub fn rec_handle(&self) -> RecHandle {
+        self.recorder.handle()
+    }
+
+    /// The exactly merged per-lane stage histograms.
+    pub fn stages(&self) -> ObsCore {
+        self.stages.read()
+    }
+
+    /// Publish (or refresh) one lane's gauge, keyed by global lane id.
+    pub fn publish_gauge(&self, g: LaneGauge) {
+        self.gauges.lock().unwrap().insert(g.global, g);
+    }
+
+    /// Drop a retired lane's gauge.
+    pub fn drop_gauge(&self, global: usize) {
+        self.gauges.lock().unwrap().remove(&global);
+    }
+
+    pub fn gauges(&self) -> Vec<LaneGauge> {
+        let mut v: Vec<LaneGauge> = self.gauges.lock().unwrap().values().copied().collect();
+        v.sort_by_key(|g| g.global);
+        v
+    }
+
+    /// Track an [`ArenaRing`]'s in-flight gauge in reports.
+    pub fn track_ring(&self, label: &str, ring: Arc<ArenaRing>) {
+        self.rings.lock().unwrap().push((label.to_string(), ring));
+    }
+
+    /// Include a [`MetricsHub`]'s merged aggregates in reports.
+    pub fn attach_metrics(&self, hub: Arc<MetricsHub>) {
+        *self.metrics.lock().unwrap() = Some(hub);
+    }
+
+    /// Queue one `ObsQuery` for the next dispatch-loop poll; the answer
+    /// goes to `reply` as a `Frame::ObsReport` with the same `id`.
+    pub fn enqueue_query(&self, id: u64, reply: FrameQueue) {
+        self.queries.lock().unwrap().push_back((id, reply));
+    }
+
+    pub fn has_queries(&self) -> bool {
+        !self.queries.lock().unwrap().is_empty()
+    }
+
+    /// Answer every pending query with one report built from `stats`
+    /// (the caller's exactly merged counters) and the topology snapshot.
+    /// Returns how many queries were answered. Queries are popped under
+    /// the lock, so concurrent answering threads never double-answer.
+    pub fn answer(&self, stats: &IngressStats, topo: Option<&TopologySnapshot>) -> usize {
+        let waiting: Vec<(u64, FrameQueue)> = {
+            let mut q = self.queries.lock().unwrap();
+            if q.is_empty() {
+                return 0;
+            }
+            q.drain(..).collect()
+        };
+        let json = self.report(stats, topo).dump();
+        let n = waiting.len();
+        for (id, reply) in waiting {
+            // a closed reply queue (client gone) drops the report,
+            // matching response-delivery semantics
+            reply.push(Frame::ObsReport { id, json: json.clone() });
+        }
+        n
+    }
+
+    /// Build the full introspection report.
+    pub fn report(&self, stats: &IngressStats, topo: Option<&TopologySnapshot>) -> Json {
+        let stages = self.stages.read();
+        let lanes = arr(self.gauges().into_iter().map(|g| {
+            let hists = stages.lane(g.global);
+            obj(vec![
+                ("global", num(g.global as f64)),
+                ("part", num(g.part as f64)),
+                ("local", num(g.local as f64)),
+                ("life", s(g.life)),
+                ("weight", num(g.weight as f64)),
+                ("deficit", num(g.deficit as f64)),
+                ("boost_ns", num(g.boost_ns as f64)),
+                ("pending", num(g.pending as f64)),
+                (
+                    "round_p99_s",
+                    g.round_p99_s.map(num).unwrap_or(Json::Null),
+                ),
+                (
+                    "stages",
+                    obj(Stage::ALL
+                        .iter()
+                        .map(|&st| {
+                            let h = hists.map(|l| l.stage(st));
+                            (st.name(), stage_json(h))
+                        })
+                        .collect()),
+                ),
+            ])
+        }));
+        let unmapped = arr(topo.iter().flat_map(|t| {
+            t.lanes
+                .iter()
+                .enumerate()
+                .filter(|(_, m)| m.is_none())
+                .map(|(i, _)| num(i as f64))
+        }));
+        let rings = arr(self.rings.lock().unwrap().iter().map(|(label, ring)| {
+            obj(vec![
+                ("label", s(label)),
+                ("depth", num(ring.depth() as f64)),
+                ("in_flight", num(ring.in_flight() as f64)),
+            ])
+        }));
+        let stats_json = obj(vec![
+            ("admitted", num(stats.admitted as f64)),
+            ("lane_busy", num(stats.lane_busy as f64)),
+            ("group_busy", num(stats.group_busy as f64)),
+            ("invalid", num(stats.invalid as f64)),
+            ("no_lane", num(stats.no_lane as f64)),
+            ("responses", num(stats.responses as f64)),
+            ("rounds", num(stats.rounds as f64)),
+            ("coalesced_rounds", num(stats.coalesced_rounds as f64)),
+            ("round_errors", num(stats.round_errors as f64)),
+            ("idle_naps_avoided", num(stats.idle_naps_avoided as f64)),
+            ("ctrl_ops", num(stats.ctrl_ops as f64)),
+        ]);
+        let metrics = self.metrics.lock().unwrap().as_ref().map(|hub| {
+            let m = hub.read();
+            obj(vec![
+                ("completed_requests", num(m.completed_requests as f64)),
+                ("slo_violations", num(m.slo_violations as f64)),
+                ("rounds", num(m.round_latency.count() as f64)),
+                (
+                    "round_p99_s",
+                    m.round_p99().map(num).unwrap_or(Json::Null),
+                ),
+                (
+                    "request_p50_s",
+                    finite(m.request_latency.p50()),
+                ),
+                (
+                    "request_p99_s",
+                    finite(m.request_latency.p99()),
+                ),
+            ])
+        });
+        let recorder = obj(vec![
+            ("recorded", num(self.recorder.recorded() as f64)),
+            ("retained", num(self.recorder.snapshot().len() as f64)),
+            (
+                "last_dump",
+                self.recorder
+                    .last_dump()
+                    .map(|d| s(&d.reason))
+                    .unwrap_or(Json::Null),
+            ),
+        ]);
+        obj(vec![
+            ("epoch", num(topo.map(|t| t.epoch as f64).unwrap_or(0.0))),
+            ("parts", num(topo.map(|t| t.parts as f64).unwrap_or(1.0))),
+            ("lanes", lanes),
+            ("unmapped", unmapped),
+            ("rings", rings),
+            ("stats", stats_json),
+            ("metrics", metrics.unwrap_or(Json::Null)),
+            ("recorder", recorder),
+        ])
+    }
+}
+
+/// One stage histogram as JSON (`null` percentiles while empty; a lane
+/// with no folded responses yet reports zero counts).
+fn stage_json(h: Option<&Hist>) -> Json {
+    let Some(h) = h else {
+        return obj(vec![("count", num(0.0)), ("sum_ns", num(0.0))]);
+    };
+    obj(vec![
+        ("count", num(h.count() as f64)),
+        ("sum_ns", num(h.sum_ns() as f64)),
+        ("mean_ns", h.mean_ns().map(num).unwrap_or(Json::Null)),
+        ("p50_ns", h.p50_ns().map(|v| num(v as f64)).unwrap_or(Json::Null)),
+        ("p95_ns", h.p95_ns().map(|v| num(v as f64)).unwrap_or(Json::Null)),
+        ("p99_ns", h.p99_ns().map(|v| num(v as f64)).unwrap_or(Json::Null)),
+    ])
+}
+
+/// NaN-safe number (empty `Latencies` percentiles are NaN, which JSON
+/// cannot carry).
+fn finite(v: f64) -> Json {
+    if v.is_finite() {
+        num(v)
+    } else {
+        Json::Null
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(seq: u64) -> Event {
+        Event { seq, t_ns: seq * 10, kind: EventKind::RoundStart { part: 0 } }
+    }
+
+    #[test]
+    fn ring_keeps_exactly_the_last_cap_events_in_order() {
+        let mut r = EventRing::with_cap(4);
+        assert!(r.is_empty());
+        for i in 0..10 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.len(), 4);
+        let seqs: Vec<u64> = r.events().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "wrapped ring must hold the newest, oldest first");
+        // below capacity: everything retained
+        let mut small = EventRing::with_cap(8);
+        for i in 0..3 {
+            small.push(ev(i));
+        }
+        assert_eq!(small.events().len(), 3);
+    }
+
+    #[test]
+    fn default_ring_carries_the_operating_cap() {
+        // Sharded::new builds shards via Default — the operating cap
+        // MUST live there, or production rings would be cap-1
+        assert_eq!(EventRing::default().cap(), DEFAULT_EVENT_CAP);
+        assert_eq!(EventRing::with_cap(0).cap(), 1, "cap clamps to 1");
+    }
+
+    #[test]
+    fn merged_rings_equal_the_global_last_cap() {
+        // interleave one global seq stream across two shards, merge:
+        // the result must be exactly the newest `cap` of the union
+        let mut a = EventRing::with_cap(6);
+        let mut b = EventRing::with_cap(6);
+        for i in 0..40u64 {
+            if i % 3 == 0 { &mut a } else { &mut b }.push(ev(i));
+        }
+        let mut merged = EventRing::with_cap(6);
+        Shardable::merge_from(&mut merged, &a);
+        Shardable::merge_from(&mut merged, &b);
+        let seqs: Vec<u64> = merged.events().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![34, 35, 36, 37, 38, 39]);
+    }
+
+    #[test]
+    fn recorder_orders_events_across_handles_and_dumps() {
+        let rec = FlightRecorder::new(2);
+        let (h1, h2) = (rec.handle(), rec.handle());
+        h1.record(EventKind::RoundStart { part: 0 });
+        h2.record(EventKind::Reject { code: RejectCode::Busy, lane: 3 });
+        h1.record(EventKind::RoundEnd { lane: 1, lanes_served: 2, responses: 8 });
+        let evs = rec.snapshot();
+        assert_eq!(evs.len(), 3);
+        let seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2], "merged snapshot is in global order");
+        assert!(rec.last_dump().is_none());
+        rec.dump_now("test trigger");
+        let d = rec.last_dump().expect("dump stored");
+        assert_eq!(d.reason, "test trigger");
+        assert_eq!(d.events.len(), 3);
+    }
+
+    #[test]
+    fn tracer_folds_telescoping_stamps_exactly() {
+        use std::time::Duration;
+        let hub = ObsHub::new(1);
+        let t = hub.tracer();
+        let t0 = Instant::now();
+        let st = Stamps {
+            arrived: Some(t0),
+            picked: Some(t0 + Duration::from_nanos(100)),
+            exec_start: Some(t0 + Duration::from_nanos(250)),
+            exec_end: Some(t0 + Duration::from_nanos(1_250)),
+            completed: Some(t0 + Duration::from_nanos(1_400)),
+        };
+        t.fold_stamps(2, &st, t0 + Duration::from_nanos(1_500));
+        let core = hub.stages();
+        let lane = core.lane(2).expect("lane 2 folded");
+        assert_eq!(lane.stage(Stage::Queue).sum_ns(), 100);
+        assert_eq!(lane.stage(Stage::Pack).sum_ns(), 150);
+        assert_eq!(lane.stage(Stage::Execute).sum_ns(), 1_000);
+        assert_eq!(lane.stage(Stage::Scatter).sum_ns(), 150);
+        assert_eq!(lane.stage(Stage::Write).sum_ns(), 100);
+        // the first four stages telescope to completed - arrived
+        let e2e: u64 =
+            [Stage::Queue, Stage::Pack, Stage::Execute, Stage::Scatter]
+                .iter()
+                .map(|&s| lane.stage(s).sum_ns())
+                .sum();
+        assert_eq!(e2e, 1_400);
+        // lanes below 2 exist but are empty; a missing stamp folds nothing
+        assert!(core.lane(0).unwrap().stage(Stage::Queue).is_empty());
+        t.fold_stamps(0, &Stamps::default(), Instant::now());
+        assert!(hub.stages().lane(0).unwrap().stage(Stage::Queue).is_empty());
+    }
+
+    #[test]
+    fn hub_answers_every_pending_query_once() {
+        let hub = ObsHub::new(1);
+        let stats = IngressStats { admitted: 7, responses: 7, rounds: 3, ..Default::default() };
+        assert_eq!(hub.answer(&stats, None), 0, "no queries, no work");
+        let (q1, q2) = (FrameQueue::new(), FrameQueue::new());
+        hub.enqueue_query(11, q1.clone());
+        hub.enqueue_query(12, q2.clone());
+        assert!(hub.has_queries());
+        assert_eq!(hub.answer(&stats, None), 2);
+        assert!(!hub.has_queries());
+        let Some(Frame::ObsReport { id, json }) = q1.try_pop() else {
+            panic!("query 11 must be answered with a report");
+        };
+        assert_eq!(id, 11);
+        let v = Json::parse(&json).expect("report is valid JSON");
+        assert_eq!(v.get("stats").get("admitted").as_usize(), Some(7));
+        assert_eq!(v.get("stats").get("rounds").as_usize(), Some(3));
+        let Some(Frame::ObsReport { id, .. }) = q2.try_pop() else {
+            panic!("query 12 must be answered too");
+        };
+        assert_eq!(id, 12);
+    }
+
+    #[test]
+    fn report_includes_gauges_rings_and_recorder_state() {
+        use crate::coordinator::arena::Layout;
+        let hub = ObsHub::new(1);
+        hub.publish_gauge(LaneGauge {
+            global: 4,
+            part: 1,
+            local: 0,
+            life: "live",
+            weight: 3,
+            deficit: -65536,
+            boost_ns: 1_000_000,
+            pending: 2,
+            round_p99_s: Some(0.004),
+        });
+        let ring = Arc::new(ArenaRing::pair(Layout::Batch, 2, &[4]).unwrap());
+        hub.track_ring("fleet-a", Arc::clone(&ring));
+        hub.rec_handle().record(EventKind::RoundStart { part: 0 });
+        let r = hub.report(&IngressStats::default(), None);
+        let lane = r.get("lanes").idx(0);
+        assert_eq!(lane.get("global").as_usize(), Some(4));
+        assert_eq!(lane.get("deficit").as_i64(), Some(-65536));
+        assert_eq!(lane.get("stages").get("queue").get("count").as_usize(), Some(0));
+        let rj = r.get("rings").idx(0);
+        assert_eq!(rj.get("label").as_str(), Some("fleet-a"));
+        assert_eq!(rj.get("in_flight").as_usize(), Some(0));
+        assert_eq!(r.get("recorder").get("recorded").as_usize(), Some(1));
+        assert_eq!(r.get("metrics"), &Json::Null, "no metrics hub attached");
+        // dropping the gauge removes the lane from the next report
+        hub.drop_gauge(4);
+        let empty = hub.report(&IngressStats::default(), None);
+        assert_eq!(empty.get("lanes").as_arr().unwrap().len(), 0);
+    }
+}

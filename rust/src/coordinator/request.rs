@@ -4,6 +4,33 @@ use std::time::Instant;
 
 use crate::tensor::Tensor;
 
+/// Monotonic stage timestamps stamped at the existing dispatch seams
+/// (ADR-006). Stamping is unconditional and costs one `Instant` copy
+/// per seam — the seams reuse one `Instant::now()` per ROUND — so
+/// observability never changes routing or payloads; the stamps are only
+/// *folded* into stage histograms when an `ObsHub` is attached.
+///
+/// Stage segments telescope: with `arrived` from admission,
+/// `queue = picked - arrived`, `pack = exec_start - picked`,
+/// `execute = exec_end - exec_start`, `scatter = completed - exec_end`,
+/// and the first four sum exactly to `completed - arrived` — the same
+/// interval `Response::latency` measures (nanoseconds apart). The
+/// response-write stage is measured at the routing seam
+/// (`ingress::bridge::route_responses`) against `completed`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Stamps {
+    /// admission boundary (copied from `Request::arrived` at completion)
+    pub arrived: Option<Instant>,
+    /// QoS pick: the round-take that claimed this request
+    pub picked: Option<Instant>,
+    /// megabatch execution began (arena pack happens at its start)
+    pub exec_start: Option<Instant>,
+    /// megabatch execution returned
+    pub exec_end: Option<Instant>,
+    /// response materialized (verify + scatter done)
+    pub completed: Option<Instant>,
+}
+
 /// A single inference request targeting one model instance.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -14,11 +41,19 @@ pub struct Request {
     pub input: Tensor,
     /// arrival time (set by the workload generator / ingress)
     pub arrived: Instant,
+    /// stage timestamps (ADR-006); re-stamped as the request moves
+    pub stamps: Stamps,
 }
 
 impl Request {
     pub fn new(id: u64, model_idx: usize, input: Tensor) -> Request {
-        Request { id, model_idx, input, arrived: Instant::now() }
+        Request {
+            id,
+            model_idx,
+            input,
+            arrived: Instant::now(),
+            stamps: Stamps::default(),
+        }
     }
 
     /// Re-stamp `arrived` to now — the **admission-boundary** stamp.
@@ -44,4 +79,6 @@ pub struct Response {
     pub output: Tensor,
     /// end-to-end seconds (arrival -> completion)
     pub latency: f64,
+    /// stage timestamps carried from the request (ADR-006)
+    pub stamps: Stamps,
 }

@@ -236,11 +236,11 @@ impl<'f, E: RoundExecutor> Server<'f, E> {
             self.requeue_taken();
             return Err(e);
         }
-        let secs = t0.elapsed().as_secs_f64();
+        let exec_end = Instant::now();
         // hand the output scratch to the shared completion path without
         // aliasing `self` (the Vec swap moves no elements)
         let mut outs = std::mem::take(&mut self.outs);
-        let res = self.complete_round(secs, &mut outs, responses);
+        let res = self.complete_round(t0, exec_end, &mut outs, responses);
         self.outs = outs;
         res
     }
@@ -262,8 +262,13 @@ impl<'f, E: RoundExecutor> Server<'f, E> {
         self.requeue_taken();
         self.slots.clear();
         let mut taken = 0;
+        // one pick stamp per round (ADR-006 queue-stage boundary)
+        let picked = Instant::now();
         for q in self.queues.iter_mut() {
-            let r = q.pop_front();
+            let mut r = q.pop_front();
+            if let Some(req) = r.as_mut() {
+                req.stamps.picked = Some(picked);
+            }
             taken += r.is_some() as usize;
             self.slots.push(r);
         }
@@ -284,13 +289,17 @@ impl<'f, E: RoundExecutor> Server<'f, E> {
     /// slot produced an output, then record metrics and emit responses.
     /// `outs` is index-aligned with this lane's local slots — for a solo
     /// round the server's own scratch, for a coalesced round the lane's
-    /// window of the group output (`round_secs` is then the merged
-    /// round's wall time, attributed to every participating lane).
+    /// window of the group output. `exec_start`/`exec_end` bracket the
+    /// round's execution (for a coalesced round the MERGED execution,
+    /// attributed to every participating lane): the round wall time
+    /// recorded into metrics is their difference, and both instants are
+    /// stamped onto every emitted response (ADR-006 stage tracing).
     /// Validation failure requeues the whole taken round (original FIFO
     /// order) before surfacing, exactly like a failed execution.
     pub fn complete_round(
         &mut self,
-        round_secs: f64,
+        exec_start: Instant,
+        exec_end: Instant,
         outs: &mut [Option<Tensor>],
         responses: &mut Vec<Response>,
     ) -> Result<usize> {
@@ -305,21 +314,32 @@ impl<'f, E: RoundExecutor> Server<'f, E> {
             self.requeue_taken();
             bail!("model {i} produced no output for an occupied slot");
         }
-        self.metrics.record_round(round_secs);
+        self.metrics
+            .record_round(exec_end.saturating_duration_since(exec_start).as_secs_f64());
 
+        // one completion stamp per round: latency and the stage stamps
+        // are derived from the SAME instant, so the ADR-006 stage
+        // segments telescope exactly to the reported latency
+        let completed = Instant::now();
         let mut n = 0;
         for (i, slot) in self.slots.iter_mut().enumerate() {
             if let Some(req) = slot.take() {
                 let output = outs[i]
                     .take()
                     .expect("verified above: occupied slots have outputs");
-                let latency = req.arrived.elapsed().as_secs_f64();
+                let latency = completed.saturating_duration_since(req.arrived).as_secs_f64();
                 self.metrics.record_request(latency);
+                let mut stamps = req.stamps;
+                stamps.arrived = Some(req.arrived);
+                stamps.exec_start = Some(exec_start);
+                stamps.exec_end = Some(exec_end);
+                stamps.completed = Some(completed);
                 responses.push(Response {
                     id: req.id,
                     model_idx: i,
                     output,
                     latency,
+                    stamps,
                 });
                 n += 1;
             }

@@ -27,17 +27,27 @@
 //! queue-wait clock starts when the server accepts the request, not
 //! when some producer happened to construct (or clone) it.
 //!
+//! Observability (ADR-006) is opt-in per bridge: after
+//! [`IngressBridge::attach_obs`], connection readers enqueue `ObsQuery`
+//! frames on the hub, every dispatch loop folds response stage stamps
+//! into the hub's per-lane histograms, records its decisions on a
+//! flight-recorder ring (dumped automatically when rounds fail
+//! persistently or control tickets die unresolved), publishes lane
+//! gauges between rounds, and answers pending queries with one merged
+//! `ObsReport`. With no hub attached none of these paths run.
+//!
 //! [`QosScheduler`]: super::qos::QosScheduler
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::control::{Ack, AddOutcome, ControlPlane, LaneCmd, PartControl, RemoveOutcome};
-use crate::coordinator::multi::{MultiServer, ParallelDispatcher, Topology};
+use crate::coordinator::multi::{LaneLife, MultiServer, ParallelDispatcher, Topology};
+use crate::coordinator::obs::{CtrlKind, EventKind, LaneGauge, ObsHub, RecHandle, StageTracer};
 use crate::coordinator::request::{Request, Response};
 use crate::coordinator::server::Admit;
 use crate::coordinator::service::RoundExecutor;
@@ -78,6 +88,9 @@ struct BridgeInner {
     state: Mutex<BridgeState>,
     cap: usize,
     ready: Condvar,
+    /// observability plane (ADR-006) — attach BEFORE dispatch starts:
+    /// the dispatch loops read it once at entry
+    obs: Mutex<Option<Arc<ObsHub>>>,
 }
 
 /// Bounded MPSC handoff: many producers, one dispatch thread.
@@ -95,8 +108,22 @@ impl IngressBridge {
                 state: Mutex::new(BridgeState { q: VecDeque::new(), closed: false }),
                 cap: cap.max(1),
                 ready: Condvar::new(),
+                obs: Mutex::new(None),
             }),
         }
+    }
+
+    /// Attach the observability plane (ADR-006). Must happen BEFORE the
+    /// dispatch loops start: each loop reads the hub exactly once at
+    /// entry (attaching later silently observes nothing). Size the hub
+    /// to the dispatch thread count (`parts + 1` for parallel runs).
+    pub fn attach_obs(&self, hub: Arc<ObsHub>) {
+        *self.inner.obs.lock().unwrap() = Some(hub);
+    }
+
+    /// The attached observability hub, if any.
+    pub fn obs(&self) -> Option<Arc<ObsHub>> {
+        self.inner.obs.lock().unwrap().clone()
     }
 
     /// Non-blocking submit (producer side). Never parks the caller: a
@@ -261,6 +288,18 @@ pub fn serve_conn(bridge: IngressBridge, transport: Box<dyn Transport>) -> Resul
                     }
                 }
                 Frame::Eos => break,
+                // introspection (ADR-006): park the query on the hub;
+                // the next dispatch-loop poll answers it out of band on
+                // this connection's reply queue
+                Frame::ObsQuery { id } => match bridge.obs() {
+                    Some(hub) => hub.enqueue_query(id, rq.clone()),
+                    None => rq.push(Frame::reject(
+                        id,
+                        0,
+                        RejectCode::Invalid,
+                        "observability not enabled",
+                    )),
+                },
                 // clients only send requests; anything else is a
                 // protocol violation answered in-band
                 _ => {
@@ -398,6 +437,20 @@ fn dispatch_loop<'f, E: RoundExecutor>(
     // rest — and any commands still queued — fail their waiters rather
     // than hanging them
     if let Some(ctrl) = ctrl {
+        // a control ticket about to fail is exactly the moment an
+        // operator wants the recent decision history (ADR-006); retires
+        // that finished draining during the final flush resolve cleanly
+        // below and are not failures
+        let failing_retires = retiring.iter().filter(|(l, _, _)| !multi.retire_ready(*l)).count();
+        if failing_retires > 0 || !ctrl.is_empty() {
+            if let Some(hub) = bridge.obs() {
+                hub.recorder.dump_now(&format!(
+                    "dispatch loop exiting with {failing_retires} undrained retire(s) \
+                     and {} queued command(s)",
+                    ctrl.len(),
+                ));
+            }
+        }
         let epoch = part.map(|(topo, _)| topo.epoch()).unwrap_or(0);
         for (local, global, ack) in retiring.drain(..) {
             if multi.retire_ready(local) {
@@ -449,6 +502,13 @@ fn dispatch_core<'f, E: RoundExecutor>(
     let mut responses: Vec<Response> = Vec::new();
     let mut consecutive_errors: u32 = 0;
 
+    // observability claims (ADR-006): read once — attach_obs after the
+    // loop starts is a documented no-op for this thread
+    let hub = bridge.obs();
+    let tracer = hub.as_ref().map(|h| h.tracer());
+    let rec = hub.as_ref().map(|h| h.rec_handle());
+    let mut last_gauges: Option<Instant> = None;
+
     loop {
         // 0) control plane: apply queued lane commands strictly BETWEEN
         // rounds (an iteration dispatches at most one round), then
@@ -459,6 +519,14 @@ fn dispatch_core<'f, E: RoundExecutor>(
         if let Some(ctrl) = ctrl {
             while let Some(cmd) = ctrl.pop() {
                 stats.lock().ctrl_ops += 1;
+                // capture (kind, global) before the match consumes the
+                // command; record after, so the event's epoch reflects
+                // the applied mutation
+                let ev = rec.as_ref().map(|_| match &cmd {
+                    LaneCmd::Add { global, .. } => (CtrlKind::Add, *global),
+                    LaneCmd::Remove { global, .. } => (CtrlKind::Remove, *global),
+                    LaneCmd::Swap { local, .. } => (CtrlKind::Swap, to_global(*local)),
+                });
                 match cmd {
                     LaneCmd::Add { global, spec, deficit, ack } => {
                         let Some((topo, p)) = part else {
@@ -503,6 +571,10 @@ fn dispatch_core<'f, E: RoundExecutor>(
                         ack.complete(res);
                     }
                 }
+                if let (Some(r), Some((op, global))) = (&rec, ev) {
+                    let epoch = part.map(|(topo, _)| topo.epoch()).unwrap_or(0);
+                    r.record(EventKind::CtrlOp { op, global, epoch });
+                }
             }
             let mut k = 0;
             while k < retiring.len() {
@@ -521,18 +593,62 @@ fn dispatch_core<'f, E: RoundExecutor>(
             }
         }
 
+        // 0.5) observability (ADR-006): refresh this partition's lane
+        // gauges at the idle-poll cadence (the p99 read sorts a sample
+        // clone — cheap at this rate, not per round), then answer any
+        // pending introspection queries with the exactly merged
+        // counters. Whichever thread polls first answers ALL pending
+        // queries; other partitions' gauges are at most one gauge
+        // cadence plus one round stale (documented bound).
+        if let Some(hub) = &hub {
+            let stale = last_gauges.is_none_or(|t| t.elapsed() >= IDLE_POLL);
+            if stale || hub.has_queries() {
+                publish_lane_gauges(hub, multi, part);
+                last_gauges = Some(Instant::now());
+            }
+            if hub.has_queries() {
+                let snap = part.map(|(topo, _)| topo.snapshot());
+                hub.answer(&stats.merged(), snap.as_ref());
+            }
+        }
+
         // 1) drain arrivals without blocking
         while let Some(env) = bridge.try_pop() {
             let local = to_local(env.lane);
-            admit(multi, env, local, &mut routes, &mut seq, &mut stats.lock());
+            admit(multi, env, local, &mut routes, &mut seq, &mut stats.lock(), rec.as_ref());
         }
 
         // 2) dispatch whatever the QoS scheduler says is due — a
         // coalesced group round when the pick's group has work on
         // several lanes, a solo lane round otherwise
+        if let Some(r) = &rec {
+            // guard on a ready lane so idle iterations don't flood the
+            // ring with starts that never became rounds
+            if multi.ready_lane().is_some() {
+                r.record(EventKind::RoundStart { part: part.map(|(_, p)| p).unwrap_or(0) });
+            }
+        }
         match multi.dispatch_next(&mut responses) {
             Ok(Some(d)) => {
                 consecutive_errors = 0;
+                if let Some(r) = &rec {
+                    let lane = to_global(d.lane);
+                    // deficit is post-charge: what the lane has LEFT
+                    // after paying for this round (ADR-006)
+                    r.record(EventKind::QosPick {
+                        lane,
+                        deficit: multi.lane_deficit(d.lane),
+                        urgent: d.urgent,
+                    });
+                    if d.lanes_served > 1 {
+                        r.record(EventKind::Coalesce { lane, members: d.lanes_served });
+                    }
+                    r.record(EventKind::RoundEnd {
+                        lane,
+                        lanes_served: d.lanes_served,
+                        responses: d.responses,
+                    });
+                }
                 let mut st = stats.lock();
                 st.rounds += 1;
                 // a merged round's responses span lanes; only a solo
@@ -543,7 +659,7 @@ fn dispatch_core<'f, E: RoundExecutor>(
                 } else {
                     to_global(d.lane)
                 };
-                route_responses(&mut responses, &mut routes, hint, &mut st);
+                route_responses(&mut responses, &mut routes, hint, &mut st, tracer.as_ref());
                 continue;
             }
             Ok(None) => {}
@@ -552,7 +668,17 @@ fn dispatch_core<'f, E: RoundExecutor>(
                 // before surfacing (a persistently failing fleet)
                 stats.lock().round_errors += 1;
                 consecutive_errors += 1;
+                if let Some(r) = &rec {
+                    r.record(EventKind::RoundError { consecutive: consecutive_errors });
+                }
                 if consecutive_errors >= MAX_CONSECUTIVE_ROUND_ERRORS {
+                    // the failing rounds are the newest events on the
+                    // ring — dump them before the loop dies (ADR-006)
+                    if let Some(hub) = &hub {
+                        hub.recorder.dump_now(&format!(
+                            "giving up after {consecutive_errors} consecutive round failures: {e}"
+                        ));
+                    }
                     // every admitted-but-unanswered request and every
                     // still-queued arrival gets its outcome frame
                     // before the loop dies — the one-outcome-per-
@@ -588,7 +714,7 @@ fn dispatch_core<'f, E: RoundExecutor>(
             let flushed = multi.drain(&mut responses)?;
             let mut st = stats.lock();
             st.rounds += 1; // at least one; exact count is in metrics
-            route_responses(&mut responses, &mut routes, usize::MAX, &mut st);
+            route_responses(&mut responses, &mut routes, usize::MAX, &mut st, tracer.as_ref());
             drop(st);
             debug_assert!(flushed > 0);
             continue;
@@ -606,10 +732,48 @@ fn dispatch_core<'f, E: RoundExecutor>(
         };
         if let Some(env) = bridge.pop_timeout(nap) {
             let local = to_local(env.lane);
-            admit(multi, env, local, &mut routes, &mut seq, &mut stats.lock());
+            admit(multi, env, local, &mut routes, &mut seq, &mut stats.lock(), rec.as_ref());
         }
     }
     Ok(())
+}
+
+/// Publish every non-retired lane's point-in-time gauge to the hub
+/// (retired slots drop theirs — a stale "draining" gauge would outlive
+/// the lane). Runs between rounds on the owning dispatch thread, so all
+/// fields of one gauge are mutually coherent.
+fn publish_lane_gauges<E: RoundExecutor>(
+    hub: &ObsHub,
+    multi: &MultiServer<E>,
+    part: Option<(&Topology, usize)>,
+) {
+    for local in 0..multi.lanes() {
+        let global = match part {
+            None => local,
+            Some((topo, p)) => topo.global(p, local),
+        };
+        let life = match multi.lane_life(local) {
+            LaneLife::Retired => {
+                hub.drop_gauge(global);
+                continue;
+            }
+            LaneLife::Live => "live",
+            LaneLife::Draining => "draining",
+        };
+        let lane = multi.lane(local);
+        hub.publish_gauge(LaneGauge {
+            global,
+            part: part.map(|(_, p)| p).unwrap_or(0),
+            local,
+            life,
+            weight: multi.qos(local).weight,
+            deficit: multi.lane_deficit(local),
+            boost_ns: u64::try_from(multi.lane_boost_margin(local).as_nanos())
+                .unwrap_or(u64::MAX),
+            pending: lane.pending(),
+            round_p99_s: lane.metrics.round_p99(),
+        });
+    }
 }
 
 /// Run a [`ParallelDispatcher`] to completion over the bridge: the
@@ -712,6 +876,15 @@ fn run_parallel_inner<'f, E: RoundExecutor>(
     let (parts, topo) = dispatcher.split_mut();
     let subs: Vec<IngressBridge> =
         (0..parts.len()).map(|_| IngressBridge::new(group_queue_cap)).collect();
+    // propagate the observability hub (ADR-006) to every partition's
+    // sub-bridge BEFORE the threads spawn — dispatch_core reads it once
+    // at entry; the router records its own reject decisions too
+    let router_rec = bridge.obs().map(|hub| {
+        for sub in &subs {
+            sub.attach_obs(Arc::clone(&hub));
+        }
+        hub.rec_handle()
+    });
 
     let results: Vec<Result<()>> = std::thread::scope(|s| {
         let mut threads = Vec::with_capacity(parts.len());
@@ -736,6 +909,12 @@ fn run_parallel_inner<'f, E: RoundExecutor>(
                     // partitions this run actually spawned
                     None => {
                         router_stats.lock().no_lane += 1;
+                        if let Some(r) = &router_rec {
+                            r.record(EventKind::Reject {
+                                code: RejectCode::NoLane,
+                                lane: env.lane,
+                            });
+                        }
                         env.reply.push(Frame::reject(
                             env.client_id,
                             env.lane as u32,
@@ -745,6 +924,12 @@ fn run_parallel_inner<'f, E: RoundExecutor>(
                     }
                     Some((p, _)) if p >= subs.len() => {
                         router_stats.lock().no_lane += 1;
+                        if let Some(r) = &router_rec {
+                            r.record(EventKind::Reject {
+                                code: RejectCode::NoLane,
+                                lane: env.lane,
+                            });
+                        }
                         env.reply.push(Frame::reject(
                             env.client_id,
                             env.lane as u32,
@@ -756,6 +941,12 @@ fn run_parallel_inner<'f, E: RoundExecutor>(
                         Ok(()) => {}
                         Err(SubmitError::Busy(env)) => {
                             router_stats.lock().group_busy += 1;
+                            if let Some(r) = &router_rec {
+                                r.record(EventKind::Reject {
+                                    code: RejectCode::Busy,
+                                    lane: env.lane,
+                                });
+                            }
                             env.reply.push(Frame::reject(
                                 env.client_id,
                                 env.lane as u32,
@@ -823,12 +1014,19 @@ fn admit<E: RoundExecutor>(
     routes: &mut HashMap<u64, Route>,
     seq: &mut u64,
     stats: &mut IngressStats,
+    rec: Option<&RecHandle>,
 ) {
+    let reject_ev = |code: RejectCode, lane: usize| {
+        if let Some(r) = rec {
+            r.record(EventKind::Reject { code, lane });
+        }
+    };
     let Envelope { lane, client_id, req, reply } = env;
     let Some(local) = local else {
         // unmapped wire lane (or an envelope misrouted to the wrong
         // partition): never offer, answer in-band
         stats.no_lane += 1;
+        reject_ev(RejectCode::NoLane, lane);
         reply.push(Frame::reject(client_id, lane as u32, RejectCode::NoLane, "no such lane"));
         return;
     };
@@ -841,6 +1039,7 @@ fn admit<E: RoundExecutor>(
     match multi.offer(local, req) {
         Err(_) => {
             stats.no_lane += 1;
+            reject_ev(RejectCode::NoLane, lane);
             reply.push(Frame::reject(client_id, lane as u32, RejectCode::NoLane, "no such lane"));
         }
         Ok(Admit::Queued) => {
@@ -849,10 +1048,12 @@ fn admit<E: RoundExecutor>(
         }
         Ok(Admit::Rejected) => {
             stats.lane_busy += 1;
+            reject_ev(RejectCode::Busy, lane);
             reply.push(Frame::reject(client_id, lane as u32, RejectCode::Busy, "lane queue full"));
         }
         Ok(Admit::Invalid) => {
             stats.invalid += 1;
+            reject_ev(RejectCode::Invalid, lane);
             reply.push(Frame::reject(
                 client_id,
                 lane as u32,
@@ -872,7 +1073,11 @@ fn route_responses(
     routes: &mut HashMap<u64, Route>,
     lane: usize,
     stats: &mut IngressStats,
+    tracer: Option<&StageTracer>,
 ) {
+    // one clock read per batch: the write seam's end stamp (the whole
+    // batch hands to reply queues "now", within stamp granularity)
+    let write_end = tracer.map(|_| Instant::now());
     for resp in responses.drain(..) {
         let Some(route) = routes.remove(&resp.id) else {
             // a request admitted outside this loop (foreign offer) has
@@ -881,6 +1086,11 @@ fn route_responses(
         };
         debug_assert!(lane == usize::MAX || route.lane == lane);
         stats.responses += 1;
+        if let (Some(t), Some(end)) = (tracer, write_end) {
+            // folded under the route's GLOBAL lane id — the same id
+            // space the gauges and the wire use
+            t.fold_stamps(route.lane, &resp.stamps, end);
+        }
         let (shape, data) = resp.output.into_parts();
         // a closed reply queue (client gone) drops the frame, which is
         // the correct delivery semantics for a vanished connection

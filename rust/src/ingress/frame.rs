@@ -12,6 +12,12 @@
 //!   tag 3 Reject  : u64 id, u32 lane, u8 code, u32 msg_len, msg (utf8)
 //!   tag 4 Eos     : (empty) — client is done sending; the server keeps
 //!                   the connection open until queued responses flush
+//!   tag 5 ObsQuery : u64 id — ask the server for an introspection
+//!                    snapshot (ADR-006); answered out of band with the
+//!                    matching ObsReport
+//!   tag 6 ObsReport: u64 id, u32 json_len, json (utf8) — the merged
+//!                    metrics / stage histograms / topology / gauges
+//!                    snapshot for query `id`
 //! ```
 //!
 //! Decoding is fully validated BEFORE the payload buffer is reserved:
@@ -51,6 +57,8 @@ const TAG_REQUEST: u8 = 1;
 const TAG_RESPONSE: u8 = 2;
 const TAG_REJECT: u8 = 3;
 const TAG_EOS: u8 = 4;
+const TAG_OBS_QUERY: u8 = 5;
+const TAG_OBS_REPORT: u8 = 6;
 
 /// Why an ingress request was refused (mirrors `coordinator::server::Admit`
 /// plus the bridge- and routing-level causes the wire adds).
@@ -117,6 +125,14 @@ pub enum Frame {
     },
     /// client -> server: end of request stream (graceful half-close)
     Eos,
+    /// client -> server: ask for an introspection snapshot (ADR-006).
+    /// Answered out of band by the next dispatch-loop poll; responses
+    /// and rejects for in-flight requests may interleave before it.
+    ObsQuery { id: u64 },
+    /// server -> client: the introspection snapshot for query `id` —
+    /// one JSON document (merged stats, per-lane stage histograms,
+    /// topology epoch, QoS gauges, arena in-flight, recorder state)
+    ObsReport { id: u64, json: String },
 }
 
 impl Frame {
@@ -153,6 +169,16 @@ impl Frame {
                 out.extend_from_slice(msg.as_bytes());
             }
             Frame::Eos => out.push(TAG_EOS),
+            Frame::ObsQuery { id } => {
+                out.push(TAG_OBS_QUERY);
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+            Frame::ObsReport { id, json } => {
+                out.push(TAG_OBS_REPORT);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&(json.len() as u32).to_le_bytes());
+                out.extend_from_slice(json.as_bytes());
+            }
         }
         let len = (out.len() - at - 4) as u32;
         out[at..at + 4].copy_from_slice(&len.to_le_bytes());
@@ -224,6 +250,12 @@ impl Frame {
                 18usize.checked_add(msg_len).context("reject message length overflows")?
             }
             TAG_EOS => 1,
+            TAG_OBS_QUERY => 9, // tag + id
+            TAG_OBS_REPORT => {
+                rd.take(8)?; // id
+                let json_len = rd.u32()? as usize;
+                13usize.checked_add(json_len).context("obs report length overflows")?
+            }
             t => bail!("unknown frame tag {t}"),
         };
         if expected != declared_len {
@@ -264,6 +296,14 @@ impl Frame {
                 Frame::Reject { id, lane, code, msg }
             }
             TAG_EOS => Frame::Eos,
+            TAG_OBS_QUERY => Frame::ObsQuery { id: rd.u64()? },
+            TAG_OBS_REPORT => {
+                let id = rd.u64()?;
+                let n = rd.u32()? as usize;
+                let json = String::from_utf8(rd.take(n)?.to_vec())
+                    .context("obs report is not utf8")?;
+                Frame::ObsReport { id, json }
+            }
             t => bail!("unknown frame tag {t}"),
         };
         rd.done()?;
@@ -401,6 +441,42 @@ mod tests {
         let j = Frame::reject(9, 2, RejectCode::Busy, "lane queue full");
         assert_eq!(roundtrip(&j), j);
         assert_eq!(roundtrip(&Frame::Eos), Frame::Eos);
+    }
+
+    #[test]
+    fn obs_frames_roundtrip() {
+        let q = Frame::ObsQuery { id: 42 };
+        assert_eq!(roundtrip(&q), q);
+        // a report whose JSON body crosses the HEADER_MAX window, so
+        // the split header-read path is exercised too
+        let r = Frame::ObsReport {
+            id: u64::MAX,
+            json: format!("{{\"lanes\":[{}]}}", "1,".repeat(60) + "1"),
+        };
+        assert_eq!(roundtrip(&r), r);
+        let empty = Frame::ObsReport { id: 0, json: String::new() };
+        assert_eq!(roundtrip(&empty), empty);
+    }
+
+    #[test]
+    fn inflated_obs_report_prefix_is_rejected_before_allocation() {
+        // an ObsReport claiming a huge declared length but whose header
+        // json_len field implies a small frame: the cross-check must
+        // catch the mismatch from the header window alone
+        let f = Frame::ObsReport { id: 1, json: "{}".to_string() };
+        let mut buf = Vec::new();
+        f.encode_into(&mut buf);
+        buf[..4].copy_from_slice(&((MAX_FRAME - 1) as u32).to_le_bytes());
+        buf.resize(4 + HEADER_MAX, 0);
+        let mut r = &buf[..];
+        let err = Frame::read_from(&mut r).unwrap_err().to_string();
+        assert!(err.contains("implies"), "want the header cross-check, got: {err}");
+
+        // and an ObsQuery with trailing bytes is malformed
+        let mut payload = vec![TAG_OBS_QUERY];
+        payload.extend_from_slice(&7u64.to_le_bytes());
+        payload.push(0xFF);
+        assert!(Frame::decode_payload(&payload).is_err());
     }
 
     #[test]

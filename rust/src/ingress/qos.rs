@@ -264,6 +264,14 @@ impl QosScheduler {
         self.lanes[lane].qos
     }
 
+    /// `lane`'s current WDRR deficit in [`CHARGE_UNIT`] fixed point
+    /// (negative = rider debt). Observability read (ADR-006): published
+    /// as a gauge and stamped on flight-recorder QoS-pick events; the
+    /// scheduling path never consults it from outside.
+    pub fn deficit(&self, lane: usize) -> i64 {
+        self.lanes[lane].deficit
+    }
+
     pub fn len(&self) -> usize {
         self.lanes.len()
     }

@@ -1,0 +1,244 @@
+//! Fixed-log-bucket latency histograms with **exact** merge-on-read
+//! (ADR-006).
+//!
+//! A [`Hist`] maps a nanosecond value to one of [`N_BUCKETS`] buckets:
+//! values below 16 get their own bucket (exact), and every octave above
+//! that is split into 16 sub-buckets, so the relative quantization
+//! error is bounded by 1/16 (~6.25%) everywhere. Bucketization is a
+//! pure function of the value, applied BEFORE sharding — so summing two
+//! histograms element-wise yields byte-for-byte the counts a single
+//! histogram fed the union would hold, and every rank statistic
+//! (nearest-rank percentiles included) computed from the merged counts
+//! equals the single-histogram answer exactly. That extends the
+//! `MetricsCore` merge-exactness proof (ADR-004) to stage timings
+//! without shipping raw samples around.
+//!
+//! The running `sum_ns` is kept exactly (not reconstructed from bucket
+//! midpoints), so means — and the "stages sum to end-to-end latency"
+//! acceptance check — are not subject to bucket resolution at all.
+//! Percentiles return the bucket's **lower bound**: the true value `v`
+//! satisfies `floor <= v < floor + floor/16` (exact below 16).
+
+use std::time::Duration;
+
+use super::shard::Shardable;
+
+/// Sub-buckets per octave (a power of two; 16 → ~6.25% resolution).
+const SUB: u64 = 16;
+/// log2(SUB)
+const SUB_BITS: u32 = 4;
+
+/// Total buckets: 16 exact low buckets + 16 per octave for exponents
+/// 4..=63, with the top octave's sub-buckets covering up to `u64::MAX`.
+pub const N_BUCKETS: usize = (64 - SUB_BITS as usize) * SUB as usize + SUB as usize;
+
+/// The bucket index of `v` nanoseconds (monotone in `v`).
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v < SUB {
+        v as usize
+    } else {
+        let exp = 63 - v.leading_zeros();
+        let sub = ((v >> (exp - SUB_BITS)) & (SUB - 1)) as usize;
+        (exp as usize - SUB_BITS as usize + 1) * SUB as usize + sub
+    }
+}
+
+/// The smallest value mapping to bucket `i` (inverse of [`bucket_of`]).
+#[inline]
+pub fn bucket_floor(i: usize) -> u64 {
+    if i < SUB as usize {
+        i as u64
+    } else {
+        let exp = (i / SUB as usize) as u32 + SUB_BITS - 1;
+        let sub = (i % SUB as usize) as u64;
+        (1u64 << exp) | (sub << (exp - SUB_BITS))
+    }
+}
+
+/// A fixed-log-bucket histogram of nanosecond durations. `Default` is
+/// empty; element-wise [`Hist::merge_from`] makes it [`Shardable`].
+#[derive(Clone, Debug)]
+pub struct Hist {
+    counts: Vec<u64>,
+    count: u64,
+    sum_ns: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { counts: vec![0; N_BUCKETS], count: 0, sum_ns: 0 }
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist::default()
+    }
+
+    /// Record one sample of `ns` nanoseconds.
+    #[inline]
+    pub fn record_ns(&mut self, ns: u64) {
+        self.counts[bucket_of(ns)] += 1;
+        self.count += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+    }
+
+    /// Record one sample (saturating at `u64::MAX` ns ≈ 584 years).
+    #[inline]
+    pub fn record(&mut self, d: Duration) {
+        self.record_ns(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact sum of all recorded samples, in nanoseconds.
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    /// Exact mean in nanoseconds (`None` when empty).
+    pub fn mean_ns(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.sum_ns as f64 / self.count as f64)
+    }
+
+    /// Nearest-rank percentile (`q` in (0, 1]): the lower bound of the
+    /// bucket holding the rank-`ceil(q * count)` sample. `None` when
+    /// empty. Same rank convention as `util::stats::Latencies`, so the
+    /// merged-equals-single exactness proof carries over unchanged.
+    pub fn percentile_ns(&self, q: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(bucket_floor(i));
+            }
+        }
+        unreachable!("cumulative count covers every rank")
+    }
+
+    pub fn p50_ns(&self) -> Option<u64> {
+        self.percentile_ns(0.50)
+    }
+
+    pub fn p95_ns(&self) -> Option<u64> {
+        self.percentile_ns(0.95)
+    }
+
+    pub fn p99_ns(&self) -> Option<u64> {
+        self.percentile_ns(0.99)
+    }
+
+    /// Element-wise merge: after merging, every count (and therefore
+    /// every rank statistic) equals what a single histogram fed both
+    /// sample streams would report.
+    pub fn merge_from(&mut self, other: &Hist) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+    }
+}
+
+impl Shardable for Hist {
+    fn merge_from(&mut self, other: &Self) {
+        Hist::merge_from(self, other);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_is_monotone_and_inverse_of_floor() {
+        // every bucket's floor maps back to that bucket, floors are
+        // strictly increasing, and the low range is exact
+        let mut prev = None;
+        for i in 0..N_BUCKETS {
+            let f = bucket_floor(i);
+            assert_eq!(bucket_of(f), i, "floor({i}) = {f} does not map back");
+            if let Some(p) = prev {
+                assert!(f > p, "bucket floors must be strictly increasing at {i}");
+            }
+            prev = Some(f);
+        }
+        for v in 0..16u64 {
+            assert_eq!(bucket_of(v), v as usize, "low range must be exact");
+        }
+        // continuity across the exact/log boundary and octave edges
+        assert_eq!(bucket_of(16), 16);
+        assert_eq!(bucket_of(31), 31);
+        assert_eq!(bucket_of(32), 32);
+        assert_eq!(bucket_of(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn resolution_bound_holds() {
+        // floor <= v, and v < floor + floor/16 for v >= 16
+        for v in [17u64, 100, 999, 12_345, 7_654_321, u64::MAX / 3] {
+            let f = bucket_floor(bucket_of(v));
+            assert!(f <= v);
+            assert!(v - f <= f / 16, "bucket {f} too coarse for {v}");
+        }
+    }
+
+    #[test]
+    fn pinned_percentiles_on_a_hand_built_distribution() {
+        // 1..=1000 ns, uniform: nearest-rank p50 is sample #500, which
+        // lands in the bucket whose floor is 496 (octave 256..512,
+        // sub-bucket 15); p99 is sample #990 -> floor 960.
+        let mut h = Hist::new();
+        for v in 1..=1000u64 {
+            h.record_ns(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.sum_ns(), 500_500);
+        assert_eq!(h.mean_ns(), Some(500.5));
+        assert_eq!(h.p50_ns(), Some(496));
+        assert_eq!(h.p95_ns(), Some(928));
+        assert_eq!(h.p99_ns(), Some(960));
+        assert_eq!(h.percentile_ns(1.0), Some(bucket_floor(bucket_of(1000))));
+        assert_eq!(Hist::new().p99_ns(), None, "empty histogram has no percentile");
+    }
+
+    #[test]
+    fn merged_shards_equal_a_single_histogram_exactly() {
+        // the ADR-004 exactness contract extended to hists: feed the
+        // same deterministic stream round-robin into 4 shards, merge,
+        // and every statistic must equal the single-fed histogram's
+        let mut single = Hist::new();
+        let mut shards: Vec<Hist> = (0..4).map(|_| Hist::new()).collect();
+        let mut x = 0x2545F491_4F6CDD1Du64;
+        for i in 0..10_000usize {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let v = x % 50_000_000; // up to 50 ms
+            single.record_ns(v);
+            shards[i % 4].record_ns(v);
+        }
+        let mut merged = Hist::new();
+        for s in &shards {
+            Shardable::merge_from(&mut merged, s);
+        }
+        assert_eq!(merged.count(), single.count());
+        assert_eq!(merged.sum_ns(), single.sum_ns());
+        assert_eq!(merged.counts, single.counts, "bucket counts must match exactly");
+        for q in [0.01, 0.25, 0.50, 0.90, 0.95, 0.99, 0.999, 1.0] {
+            assert_eq!(merged.percentile_ns(q), single.percentile_ns(q), "q = {q}");
+        }
+    }
+}

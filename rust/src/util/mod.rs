@@ -13,3 +13,4 @@ pub mod prop;
 pub mod bench;
 pub mod simd;
 pub mod shard;
+pub mod hist;

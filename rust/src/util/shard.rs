@@ -88,6 +88,16 @@ impl<T> ShardHandle<T> {
     }
 }
 
+impl<T: Shardable> ShardHandle<T> {
+    /// Fold every shard of the underlying [`Sharded`] into a fresh `T`
+    /// — the merged view, readable from any thread that only holds a
+    /// handle (the dispatch loops answer `ObsQuery` snapshots this
+    /// way without threading the `Arc` through their signatures).
+    pub fn merged(&self) -> T {
+        self.shared.read()
+    }
+}
+
 // manual impl: derive(Clone) would demand T: Clone
 impl<T> Clone for ShardHandle<T> {
     fn clone(&self) -> Self {
@@ -131,6 +141,8 @@ mod tests {
             Sharded::register(&s).lock().0 += add;
         }
         assert_eq!(s.read().0, 23);
+        let h = Sharded::register(&s);
+        assert_eq!(h.merged().0, 23, "a handle's merged view folds every shard");
     }
 
     #[test]

@@ -1,0 +1,575 @@
+//! Observability plane (ADR-006) integration tests: stage tracing
+//! through the full `run_dispatch_elastic` stack (per-lane stage
+//! histograms telescoping to the reported end-to-end latencies, and a
+//! byte-identity diff against an instrumentation-off oracle run),
+//! `ObsQuery`/`ObsReport` over a real TCP connection with counters
+//! matching the final `IngressStats` exactly, the flight recorder's
+//! merge-exactness property under concurrent recording, and the
+//! automatic dump on persistent round failure.
+//!
+//! Everything is artifact-free (`EchoExecutor` / `RingEcho` /
+//! `FailingEcho` lanes); the overhead side of observability is gated by
+//! `benches/observe.rs`.
+
+mod common;
+
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::{echo, request_frame, seeded_request, FailingEcho, RingEcho};
+use netfuse::coordinator::arena::{ArenaRing, Layout};
+use netfuse::coordinator::control::{ControlPlane, TopologyController};
+use netfuse::coordinator::metrics::MetricsHub;
+use netfuse::coordinator::mock::SWAP_SCALE;
+use netfuse::coordinator::multi::{GroupSpec, LaneSpec, MultiServer, ParallelDispatcher};
+use netfuse::coordinator::obs::{
+    CtrlKind, EventKind, FlightRecorder, ObsHub, RecHandle, Stage, DEFAULT_EVENT_CAP,
+};
+use netfuse::coordinator::server::ServerConfig;
+use netfuse::coordinator::StrategyKind;
+use netfuse::ingress::{
+    run_dispatch, run_dispatch_elastic, serve_conn, ChanTransport, Envelope, Frame, FrameQueue,
+    IngressBridge, IngressStats, LaneQos, RejectCode, TcpTransport, Transport,
+};
+use netfuse::util::json::Json;
+use netfuse::util::shard::Sharded;
+
+const FAR: Duration = Duration::from_secs(3600);
+const WAIT: Duration = Duration::from_secs(10);
+
+fn cfg() -> ServerConfig {
+    ServerConfig {
+        strategy: StrategyKind::NetFuse,
+        queue_cap: 4096,
+        max_wait: Duration::ZERO,
+    }
+}
+
+fn qos1() -> LaneQos {
+    LaneQos::new(1, FAR)
+}
+
+/// The seeded payload element `j` of request `(id, model)` — what an
+/// unswapped echo lane must return byte-for-byte.
+fn seeded_at(id: u64, model: usize, j: usize) -> f32 {
+    id as f32 * 1000.0 + model as f32 * 10.0 + j as f32
+}
+
+fn await_frames(reply: &FrameQueue, n: usize, sink: &mut Vec<Frame>) {
+    let deadline = Instant::now() + WAIT;
+    let mut got = 0;
+    while got < n {
+        if let Some(f) = reply.try_pop() {
+            sink.push(f);
+            got += 1;
+            continue;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {n} outcome frames");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Every counter in the report's `stats` object must equal the final
+/// merged [`IngressStats`] exactly — the report was taken after traffic
+/// quiesced, so nothing may tick between the snapshot and shutdown.
+fn assert_stats_eq(report: &Json, stats: &IngressStats) {
+    let pairs: [(&str, u64); 11] = [
+        ("admitted", stats.admitted),
+        ("lane_busy", stats.lane_busy),
+        ("group_busy", stats.group_busy),
+        ("invalid", stats.invalid),
+        ("no_lane", stats.no_lane),
+        ("responses", stats.responses),
+        ("rounds", stats.rounds),
+        ("coalesced_rounds", stats.coalesced_rounds),
+        ("round_errors", stats.round_errors),
+        ("idle_naps_avoided", stats.idle_naps_avoided),
+        ("ctrl_ops", stats.ctrl_ops),
+    ];
+    for (key, want) in pairs {
+        assert_eq!(
+            report.get("stats").get(key).as_usize(),
+            Some(want as usize),
+            "report stats.{key} must match the final counters"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// full stack: stage tracing + live report over elastic churn
+// ---------------------------------------------------------------------------
+
+/// One full churn scenario's outcome, for diffing obs-on vs obs-off.
+struct ChurnRun {
+    /// `(client_id, lane, model_idx, payload)` sorted by id — byte-exact
+    responses: Vec<(u64, u32, u32, Vec<f32>)>,
+    /// `(client_id, lane)` of every NoLane reject, sorted
+    rejects: Vec<(u64, u32)>,
+    /// per global lane: (response count, summed reported latency s)
+    lane_latency: HashMap<u32, (u64, f64)>,
+    stats: IngressStats,
+    epoch: u64,
+    report: Option<String>,
+}
+
+/// Drive identical seeded traffic + topology churn over
+/// `run_dispatch_elastic`: 36 requests over the three construction
+/// lanes (0,1 coalesce-grouped; 2 solo), add lane 3 and send 12, swap
+/// it to version 7 and send 12 more, remove lane 1 and bounce 6 off
+/// its dead global id. With a hub the run also issues one `ObsQuery`
+/// while the server is still live (traffic quiesced, loops polling).
+fn run_churn(hub: Option<&Arc<ObsHub>>) -> ChurnRun {
+    let bert0 = echo("bert", 2, Duration::ZERO);
+    let bert1 = echo("bert", 2, Duration::ZERO);
+    let group = echo("bert", 4, Duration::ZERO);
+    let solo = echo("solo", 2, Duration::ZERO);
+    let added = echo("fresh", 2, Duration::ZERO);
+
+    let mut d = ParallelDispatcher::new(
+        vec![
+            LaneSpec::new(&bert0, cfg(), qos1()),
+            LaneSpec::new(&bert1, cfg(), qos1()),
+            LaneSpec::new(&solo, cfg(), qos1()),
+        ],
+        vec![GroupSpec::new(&group, &[0, 1])],
+    )
+    .unwrap(); // p0 = group {0,1}, p1 = solo
+    d.add_spare_part(); // p2, for the runtime add
+    let metrics = Arc::new(MetricsHub::new(d.parts()));
+    let plane = Arc::new(ControlPlane::for_dispatcher(&d));
+    let ctl = TopologyController::new(d.topology_handle(), Arc::clone(&plane));
+    let stats: Arc<Sharded<IngressStats>> = Arc::new(Sharded::new(d.parts() + 1));
+    let bridge = IngressBridge::new(4096);
+    if let Some(h) = hub {
+        d.attach_metrics_hub(&metrics);
+        h.attach_metrics(Arc::clone(&metrics));
+        bridge.attach_obs(Arc::clone(h));
+    }
+    let reply = FrameQueue::new();
+    let mut frames: Vec<Frame> = Vec::new();
+    let mut want: HashMap<u64, (usize, usize, f32)> = HashMap::new();
+    let mut report: Option<String> = None;
+
+    std::thread::scope(|s| {
+        let runner = s.spawn(|| run_dispatch_elastic(&mut d, &bridge, 1024, &stats, &plane));
+        let submit = |id: u64, lane: usize, model: usize| {
+            let env = Envelope {
+                lane,
+                client_id: id,
+                req: seeded_request(id, model, &[4]),
+                reply: reply.clone(),
+            };
+            assert!(bridge.submit(env).is_ok(), "bridge sized for the test");
+        };
+        let mut id = 0u64;
+
+        // phase 1: steady traffic over the construction-time lanes
+        for i in 0..36 {
+            let (lane, model) = (i % 3, i % 2);
+            submit(id, lane, model);
+            want.insert(id, (lane, model, 0.0));
+            id += 1;
+        }
+        await_frames(&reply, 36, &mut frames);
+
+        // phase 2: grow under traffic
+        let (g_new, ticket) = ctl.add_lane(LaneSpec::new(&added, cfg(), qos1())).unwrap();
+        assert_eq!(g_new, 3, "global ids are monotone");
+        ticket.wait(WAIT).unwrap();
+        for i in 0..12 {
+            let model = i % 2;
+            submit(id, g_new, model);
+            want.insert(id, (g_new, model, 0.0));
+            id += 1;
+        }
+        await_frames(&reply, 12, &mut frames);
+
+        // phase 3: hot-swap the new lane; post-ack traffic serves v7
+        ctl.swap_model(g_new, 7).unwrap().wait(WAIT).unwrap();
+        for i in 0..12 {
+            let model = i % 2;
+            submit(id, g_new, model);
+            want.insert(id, (g_new, model, 7.0 * SWAP_SCALE));
+            id += 1;
+        }
+        await_frames(&reply, 12, &mut frames);
+
+        // phase 4: shrink; the removed global id answers NoLane
+        ctl.remove_lane(1).unwrap().wait(WAIT).unwrap();
+        for _ in 0..6 {
+            submit(id, 1, 0);
+            id += 1;
+        }
+        await_frames(&reply, 6, &mut frames);
+
+        // the introspection moment: the server is live (all dispatch
+        // loops polling) but traffic has quiesced, so every counter in
+        // the report must equal the final merged stats exactly
+        if let Some(h) = hub {
+            // lane gauges refresh at the idle-poll cadence per
+            // partition; give every thread a few cycles so the removed
+            // lane's gauge is dropped before the snapshot
+            std::thread::sleep(Duration::from_millis(50));
+            let q = FrameQueue::new();
+            h.enqueue_query(42, q.clone());
+            let deadline = Instant::now() + WAIT;
+            loop {
+                if let Some(Frame::ObsReport { id, json }) = q.try_pop() {
+                    assert_eq!(id, 42);
+                    report = Some(json);
+                    break;
+                }
+                assert!(Instant::now() < deadline, "ObsQuery went unanswered");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+
+        bridge.close();
+        runner.join().expect("dispatch runner panicked").expect("elastic dispatch failed");
+    });
+
+    // classify + byte-verify every outcome against the seeded oracle
+    let mut responses = Vec::new();
+    let mut rejects = Vec::new();
+    let mut lane_latency: HashMap<u32, (u64, f64)> = HashMap::new();
+    for f in frames {
+        match f {
+            Frame::Response { id, lane, model_idx, latency, data, .. } => {
+                let (wl, wm, offset) =
+                    want.remove(&id).unwrap_or_else(|| panic!("unexpected response id {id}"));
+                assert_eq!(lane as usize, wl, "id {id} quoted the wrong lane");
+                assert_eq!(model_idx as usize, wm);
+                for (j, &x) in data.iter().enumerate() {
+                    assert_eq!(x, seeded_at(id, wm, j) + offset, "id {id} byte {j}");
+                }
+                let e = lane_latency.entry(lane).or_insert((0, 0.0));
+                e.0 += 1;
+                e.1 += latency;
+                responses.push((id, lane, model_idx, data));
+            }
+            Frame::Reject { id, lane, code, .. } => {
+                assert_eq!(code, RejectCode::NoLane, "only the removed lane may reject");
+                assert_eq!(lane, 1);
+                rejects.push((id, lane));
+            }
+            other => panic!("unexpected frame: {other:?}"),
+        }
+    }
+    assert!(want.is_empty(), "submissions without a response: {want:?}");
+    responses.sort_by_key(|r| r.0);
+    rejects.sort_unstable();
+    ChurnRun { responses, rejects, lane_latency, stats: stats.read(), epoch: ctl.epoch(), report }
+}
+
+/// Tentpole acceptance: run the churn scenario instrumented and
+/// uninstrumented, diff the outcome streams byte-for-byte, check the
+/// stage histograms telescope to the reported end-to-end latencies,
+/// and validate the live `ObsReport` against the final merged state.
+#[test]
+fn stage_histograms_and_live_report_match_the_oracle_over_churn() {
+    let hub = Arc::new(ObsHub::new(4)); // three partitions + the router
+    let on = run_churn(Some(&hub));
+    let off = run_churn(None);
+
+    // instrumentation transparency: byte-identical outcome streams and
+    // identical deterministic counters
+    assert_eq!(on.responses, off.responses, "observability must not change a single byte");
+    assert_eq!(on.rejects, off.rejects);
+    assert_eq!(on.responses.len(), 60);
+    assert_eq!(on.rejects.len(), 6);
+    for run in [&on, &off] {
+        assert_eq!(run.stats.admitted, 60);
+        assert_eq!(run.stats.responses, 60);
+        assert_eq!(run.stats.no_lane, 6);
+        assert_eq!(run.stats.ctrl_ops, 3, "add + swap + remove");
+        assert_eq!(
+            run.stats.lane_busy
+                + run.stats.group_busy
+                + run.stats.invalid
+                + run.stats.round_errors,
+            0
+        );
+    }
+
+    // stage histograms: every response folded exactly once per stage,
+    // per lane, and the first four stages telescope to the summed
+    // reported latency (sum_ns is exact; only the f64 conversion of
+    // the wire latency separates the two)
+    let stages = hub.stages();
+    let lane_counts: Vec<u64> =
+        stages.lanes().iter().map(|l| l.stage(Stage::Queue).count()).collect();
+    assert_eq!(lane_counts, vec![12, 12, 12, 24], "per-lane stage coverage");
+    for (g, lane) in stages.lanes().iter().enumerate() {
+        let n = lane.stage(Stage::Queue).count();
+        let mut telescoped = 0.0f64;
+        for st in Stage::ALL {
+            assert_eq!(lane.stage(st).count(), n, "lane {g}: stage {} count", st.name());
+            if st != Stage::Write {
+                telescoped += lane.stage(st).sum_ns() as f64 / 1e9;
+            }
+        }
+        let (rn, rsum) = on.lane_latency[&(g as u32)];
+        assert_eq!(rn, n, "lane {g}: histogram covers every response");
+        assert!(
+            (telescoped - rsum).abs() < 1e-6,
+            "lane {g}: stages sum to {telescoped}s but responses reported {rsum}s"
+        );
+    }
+
+    // the live report: topology + gauges + exact counters
+    let r = Json::parse(on.report.as_ref().unwrap()).unwrap();
+    assert_eq!(r.get("epoch").as_usize(), Some(on.epoch as usize));
+    assert_eq!(r.get("parts").as_usize(), Some(3));
+    assert_stats_eq(&r, &on.stats);
+    let lanes = r.get("lanes").as_arr().unwrap();
+    let globals: Vec<usize> =
+        lanes.iter().map(|l| l.get("global").as_usize().unwrap()).collect();
+    assert_eq!(globals, vec![0, 2, 3], "removed lane's gauge gone; survivors + the add remain");
+    assert_eq!(r.get("unmapped").as_arr().unwrap().len(), 1);
+    assert_eq!(r.get("unmapped").idx(0).as_usize(), Some(1));
+    for l in lanes {
+        assert_eq!(l.get("life").as_str(), Some("live"));
+        assert_eq!(l.get("pending").as_usize(), Some(0), "traffic quiesced before the query");
+        assert!(l.get("round_p99_s").as_f64().unwrap() > 0.0, "every live lane served rounds");
+    }
+    // the added lane's wire-visible stage view equals the in-process one
+    let l3 = &lanes[2];
+    assert_eq!(l3.get("stages").get("queue").get("count").as_usize(), Some(24));
+    assert_eq!(
+        l3.get("stages").get("execute").get("sum_ns").as_usize(),
+        Some(stages.lane(3).unwrap().stage(Stage::Execute).sum_ns() as usize)
+    );
+
+    // aggregate metrics rode along
+    let m = r.get("metrics");
+    assert_eq!(m.get("completed_requests").as_usize(), Some(60));
+    assert!(m.get("rounds").as_usize().unwrap() >= 1);
+    assert!(m.get("request_p99_s").as_f64().unwrap() > 0.0);
+
+    // the flight recorder saw the whole story, in global order, and a
+    // clean (if churny) run must not trigger a dump
+    assert!(hub.recorder.last_dump().is_none(), "no false-alarm dumps");
+    let evs = hub.recorder.snapshot();
+    assert!(evs.windows(2).all(|w| w[0].seq < w[1].seq), "snapshot is in global seq order");
+    let ctrl: Vec<(CtrlKind, usize, u64)> = evs
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::CtrlOp { op, global, epoch } => Some((op, global, epoch)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(ctrl.len(), 3);
+    assert_eq!((ctrl[0].0, ctrl[0].1), (CtrlKind::Add, 3));
+    assert_eq!((ctrl[1].0, ctrl[1].1), (CtrlKind::Swap, 3));
+    assert_eq!((ctrl[2].0, ctrl[2].1), (CtrlKind::Remove, 1));
+    assert!(
+        ctrl[0].2 < ctrl[1].2 && ctrl[1].2 < ctrl[2].2,
+        "ctrl-op epochs must advance: {ctrl:?}"
+    );
+    let no_lane = evs
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Reject { code: RejectCode::NoLane, lane: 1 }))
+        .count();
+    assert_eq!(no_lane, 6, "every bounced envelope leaves a reject event");
+    let served: usize = evs
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::RoundEnd { responses, .. } => Some(responses),
+            _ => None,
+        })
+        .sum();
+    assert_eq!(served, 60, "round-end events account for every response");
+    assert!(evs.iter().any(|e| matches!(e.kind, EventKind::QosPick { .. })));
+}
+
+// ---------------------------------------------------------------------------
+// introspection over a real TCP connection
+// ---------------------------------------------------------------------------
+
+/// `ObsQuery` rides the same socket as traffic: after ten echoed
+/// requests the client asks for a snapshot and the report's counters
+/// must equal the final `IngressStats` of the whole run, field by
+/// field — plus the tracked `ArenaRing` gauge and the lane's stage
+/// histograms, all over the wire.
+#[test]
+fn obs_query_over_tcp_matches_the_final_stats_exactly() {
+    let ring = Arc::new(ArenaRing::new(Layout::Batch, 2, &[1, 4], 2).unwrap());
+    let fleet = RingEcho::new("ringed", Arc::clone(&ring), Duration::ZERO);
+    let mut multi: MultiServer<RingEcho> = MultiServer::new();
+    multi.add_lane(&fleet, cfg());
+    let metrics = Arc::new(MetricsHub::new(1));
+    multi.attach_metrics_sink(&metrics.register());
+    let hub = Arc::new(ObsHub::new(1));
+    hub.track_ring("fleet-ring", Arc::clone(&ring));
+    hub.attach_metrics(Arc::clone(&metrics));
+    let bridge = IngressBridge::new(256);
+    bridge.attach_obs(Arc::clone(&hub));
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let (json, stats) = std::thread::scope(|s| {
+        let dispatch = s.spawn(|| run_dispatch(&mut multi, &bridge));
+        let b2 = bridge.clone();
+        let server = s.spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let t: Box<dyn Transport> = Box::new(TcpTransport::from_stream(stream).unwrap());
+            serve_conn(b2, t).unwrap()
+        });
+
+        let t: Box<dyn Transport> = Box::new(TcpTransport::connect(addr).unwrap());
+        let (mut tx, mut rx) = t.split().unwrap();
+        for id in 0..10u64 {
+            tx.send(&request_frame(id, 0, (id % 2) as u32, &[1, 4])).unwrap();
+        }
+        let mut got = 0;
+        while got < 10 {
+            match rx.recv().unwrap() {
+                Some(Frame::Response { .. }) => got += 1,
+                other => panic!("expected ten responses first, got {other:?}"),
+            }
+        }
+        // traffic done; the introspection query rides the same socket
+        tx.send(&Frame::ObsQuery { id: 777 }).unwrap();
+        let json = match rx.recv().unwrap() {
+            Some(Frame::ObsReport { id, json }) => {
+                assert_eq!(id, 777, "report echoes the query id");
+                json
+            }
+            other => panic!("expected an ObsReport, got {other:?}"),
+        };
+        tx.send(&Frame::Eos).unwrap();
+        let conn = server.join().unwrap();
+        bridge.close();
+        let stats = dispatch.join().unwrap().unwrap();
+        conn.shutdown();
+        while rx.recv().unwrap().is_some() {}
+        (json, stats)
+    });
+
+    assert_eq!(stats.admitted, 10);
+    assert_eq!(stats.responses, 10);
+    let r = Json::parse(&json).unwrap();
+    assert_stats_eq(&r, &stats);
+    assert_eq!(r.get("epoch").as_usize(), Some(0), "unpartitioned run has no topology");
+    assert_eq!(r.get("parts").as_usize(), Some(1));
+    // the tracked ring gauge: idle at query time, depth as constructed
+    let rj = r.get("rings").idx(0);
+    assert_eq!(rj.get("label").as_str(), Some("fleet-ring"));
+    assert_eq!(rj.get("depth").as_usize(), Some(2));
+    assert_eq!(rj.get("in_flight").as_usize(), Some(0));
+    // one live lane, all ten responses staged through every seam
+    let lane = r.get("lanes").idx(0);
+    assert_eq!(lane.get("global").as_usize(), Some(0));
+    assert_eq!(lane.get("life").as_str(), Some("live"));
+    assert_eq!(lane.get("stages").get("queue").get("count").as_usize(), Some(10));
+    assert_eq!(lane.get("stages").get("write").get("count").as_usize(), Some(10));
+    assert!(lane.get("stages").get("execute").get("sum_ns").as_f64().unwrap() > 0.0);
+    assert_eq!(r.get("metrics").get("completed_requests").as_usize(), Some(10));
+    assert!(r.get("recorder").get("recorded").as_usize().unwrap() > 0);
+}
+
+/// Without an attached hub the query is refused in-band — typed, on
+/// the same connection, without poisoning it.
+#[test]
+fn obs_query_without_a_hub_is_rejected_in_band() {
+    let bridge = IngressBridge::new(8);
+    let (client, server_end) = ChanTransport::pair();
+    let conn = serve_conn(bridge.clone(), Box::new(server_end)).unwrap();
+    let (mut tx, mut rx) = (Box::new(client) as Box<dyn Transport>).split().unwrap();
+    tx.send(&Frame::ObsQuery { id: 9 }).unwrap();
+    tx.send(&Frame::Eos).unwrap();
+    match rx.recv().unwrap() {
+        Some(Frame::Reject { id, code, msg, .. }) => {
+            assert_eq!(id, 9);
+            assert_eq!(code, RejectCode::Invalid);
+            assert!(msg.contains("observability not enabled"), "{msg}");
+        }
+        other => panic!("expected an in-band reject, got {other:?}"),
+    }
+    conn.shutdown();
+    assert!(rx.recv().unwrap().is_none(), "connection closes cleanly after the reject");
+}
+
+// ---------------------------------------------------------------------------
+// flight recorder: merge exactness under concurrency + failure dumps
+// ---------------------------------------------------------------------------
+
+/// Property (satellite): with one global sequence counter, the merged
+/// snapshot of per-thread wrapped rings is EXACTLY the newest
+/// `DEFAULT_EVENT_CAP` events across all threads, in order — an event
+/// in the global tail has fewer than `cap` successors globally, hence
+/// fewer on its own shard, hence was never overwritten. This must hold
+/// under any interleaving, so the recording threads run concurrently.
+#[test]
+fn concurrent_recorder_retains_exactly_the_global_last_cap() {
+    const THREADS: usize = 4;
+    const PER_THREAD: u64 = 600; // 2400 total >> 512 retained
+    let rec = FlightRecorder::new(THREADS);
+    let handles: Vec<RecHandle> = (0..THREADS).map(|_| rec.handle()).collect();
+    std::thread::scope(|s| {
+        for (t, h) in handles.into_iter().enumerate() {
+            s.spawn(move || {
+                for _ in 0..PER_THREAD {
+                    h.record(EventKind::RoundStart { part: t });
+                }
+            });
+        }
+    });
+    let total = THREADS as u64 * PER_THREAD;
+    assert_eq!(rec.recorded(), total);
+    let evs = rec.snapshot();
+    assert_eq!(evs.len(), DEFAULT_EVENT_CAP);
+    let seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+    let want: Vec<u64> = (total - DEFAULT_EVENT_CAP as u64..total).collect();
+    assert_eq!(seqs, want, "merged rings must be exactly the newest cap events, in order");
+}
+
+/// A persistently failing fleet dumps the flight recorder before the
+/// loop dies, and the dump contains the failing rounds (the full error
+/// streak), while the client still gets its one typed outcome frame.
+#[test]
+fn persistent_round_failure_dumps_the_flight_recorder() {
+    let fleet = FailingEcho::new("flaky", 1, &[4]);
+    fleet.fail_rounds(3); // == the loop's consecutive-failure budget
+    let mut multi: MultiServer<FailingEcho> = MultiServer::new();
+    multi.add_lane(&fleet, cfg());
+    let hub = Arc::new(ObsHub::new(1));
+    let bridge = IngressBridge::new(8);
+    bridge.attach_obs(Arc::clone(&hub));
+    let reply = FrameQueue::new();
+
+    let result = std::thread::scope(|s| {
+        let runner = s.spawn(|| run_dispatch(&mut multi, &bridge));
+        bridge
+            .submit(Envelope {
+                lane: 0,
+                client_id: 1,
+                req: seeded_request(1, 0, &[4]),
+                reply: reply.clone(),
+            })
+            .unwrap();
+        runner.join().expect("dispatch thread panicked")
+    });
+    assert!(result.is_err(), "three consecutive round failures must surface");
+
+    // the admitted request still got exactly one outcome frame
+    match reply.try_pop() {
+        Some(Frame::Reject { code, .. }) => assert_eq!(code, RejectCode::Shutdown),
+        other => panic!("expected a Shutdown reject, got {other:?}"),
+    }
+
+    let dump = hub.recorder.last_dump().expect("persistent failure must auto-dump");
+    assert!(dump.reason.contains("consecutive round failures"), "{}", dump.reason);
+    let streaks: Vec<u32> = dump
+        .events
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::RoundError { consecutive } => Some(consecutive),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(streaks, vec![1, 2, 3], "the dump must contain the whole failing streak");
+}
