@@ -194,12 +194,13 @@ fn run(load: usize, pace: Duration, obs: bool) -> Result<RunOut> {
         Some(h) => {
             let json = report.as_ref().expect("instrumented run must carry a report");
             let r = Json::parse(json).map_err(|e| anyhow::anyhow!("bad report JSON: {e:?}"))?;
-            let pairs: [(&str, u64); 11] = [
+            let pairs: [(&str, u64); 12] = [
                 ("admitted", stats.admitted),
                 ("lane_busy", stats.lane_busy),
                 ("group_busy", stats.group_busy),
                 ("invalid", stats.invalid),
                 ("no_lane", stats.no_lane),
+                ("shed", stats.shed),
                 ("responses", stats.responses),
                 ("rounds", stats.rounds),
                 ("coalesced_rounds", stats.coalesced_rounds),

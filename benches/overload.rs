@@ -1,0 +1,368 @@
+//! Bench: overload robustness — the saturation study behind ADR-007.
+//!
+//! Sweeps offered load across multiples of the serving stack's
+//! estimated capacity and maps **served goodput** and **served p99**
+//! against offered load, locating the knee. With admission control
+//! (typed `Reject{Shed}` when a lane's projected queue wait exceeds its
+//! SLO) the served-goodput curve must stay flat past the knee instead
+//! of collapsing into queue bloat: every slot the server spends goes to
+//! a request that can still meet its deadline.
+//!
+//! Parts:
+//! 1. **Poisson sweep** — offered load at {0.5, 0.75, 1.0, 1.5, 2.0}x
+//!    estimated capacity through the full frame -> bridge -> QoS ->
+//!    response path. Gates (full mode): goodput at 2x overload >= 0.9x
+//!    the pre-knee plateau, and served p99 <= 1.5x SLO (admission
+//!    projects wait <= SLO at admit time; the adaptive-eps tail bound
+//!    covers the rest).
+//! 2. **Bursty + skewed passes** at 2x — the same stack under on/off
+//!    modulation and 90/10 lane skew, demonstrating per-lane shed
+//!    attribution (`IngressStats::lane_reject_rows`).
+//!
+//! Every mode (smoke included) gates the exactly-one-outcome contract:
+//! each submitted request gets a response XOR one typed reject.
+//! Results go to `BENCH_overload.json`.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use netfuse::coordinator::mock::EchoExecutor;
+use netfuse::coordinator::multi::MultiServer;
+use netfuse::coordinator::server::ServerConfig;
+use netfuse::coordinator::StrategyKind;
+use netfuse::ingress::{
+    run_dispatch, serve_conn, ChanTransport, Frame, IngressBridge, IngressStats, LaneQos, LoadGen,
+    RejectCode, TrafficShape, Transport, TransportRx, TransportTx,
+};
+use netfuse::util::json::Json;
+
+/// models per lane
+const M: usize = 2;
+const INPUT_SHAPE: [usize; 2] = [1, 4];
+/// modeled device time per round — capacity is M / ROUND_COST per lane
+/// round, but one dispatch thread serves both lanes, so the stack-wide
+/// estimate is M / ROUND_COST (rounds are serialized on the thread).
+const ROUND_COST: Duration = Duration::from_micros(200);
+/// both lanes' SLO: far above one round, well below a bloated queue, so
+/// the shed threshold sits at a backlog of ~SLO/ROUND_COST * M requests
+const SLO: Duration = Duration::from_millis(10);
+const PRODUCERS: usize = 2;
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn echo(name: &str) -> EchoExecutor {
+    EchoExecutor::new(name, M, &[4], ROUND_COST)
+}
+
+fn lane_config() -> ServerConfig {
+    ServerConfig {
+        strategy: StrategyKind::Sequential,
+        queue_cap: 512,
+        max_wait: Duration::ZERO,
+    }
+}
+
+/// Client-side outcome tally for one run.
+#[derive(Default, Clone, Copy)]
+struct Outcomes {
+    ok: u64,
+    shed: u64,
+    busy: u64,
+    other_reject: u64,
+}
+
+impl Outcomes {
+    fn total(&self) -> u64 {
+        self.ok + self.shed + self.busy + self.other_reject
+    }
+}
+
+struct Run {
+    sent: u64,
+    out: Outcomes,
+    stats: IngressStats,
+    elapsed: f64,
+    /// served p99 (seconds) and SLO violations per lane
+    lanes: Vec<(u64, f64, u64)>,
+}
+
+/// One open-loop pass: `shape` arrivals split across [`PRODUCERS`]
+/// in-proc connections into one QoS lane per `skew` entry, every
+/// outcome frame tallied on the client side. The saturation sweep uses
+/// ONE lane so the admission projection (per-lane backlog x round p99)
+/// matches the actual service rate — the dispatch thread is not shared;
+/// the skew pass uses two to exercise per-lane shed attribution.
+fn run_shape(shape: TrafficShape, skew: &[(usize, f64)], horizon: Duration, seed: u64) -> Result<Run> {
+    let fleets: Vec<EchoExecutor> = (0..skew.len()).map(|i| echo(&format!("lane-{i}"))).collect();
+    let mut multi = MultiServer::new();
+    for f in &fleets {
+        multi.add_lane_qos(f, lane_config(), LaneQos::new(1, SLO));
+    }
+    let bridge = IngressBridge::new(1024);
+
+    let shards = LoadGen::new(shape, skew, seed)?.shards(PRODUCERS);
+
+    let t0 = Instant::now();
+    let (stats, sent, out) = std::thread::scope(|s| -> Result<(IngressStats, u64, Outcomes)> {
+        let bridge_ref = &bridge;
+        let multi_ref = &mut multi;
+        let dispatch = s.spawn(move || run_dispatch(multi_ref, bridge_ref));
+
+        let mut conns = Vec::new();
+        let mut receivers = Vec::new();
+        let mut senders = Vec::new();
+        for shard in shards {
+            let (client, server_end) = ChanTransport::pair();
+            let conn = serve_conn(bridge.clone(), Box::new(server_end))
+                .expect("in-proc serve_conn cannot fail");
+            conns.push(conn);
+            let (mut tx, mut rx) = (Box::new(client) as Box<dyn Transport>)
+                .split()
+                .expect("in-proc split cannot fail");
+            receivers.push(s.spawn(move || {
+                let mut out = Outcomes::default();
+                loop {
+                    match rx.recv() {
+                        Ok(Some(Frame::Response { .. })) => out.ok += 1,
+                        Ok(Some(Frame::Reject { code, .. })) => match code {
+                            RejectCode::Shed => out.shed += 1,
+                            RejectCode::Busy => out.busy += 1,
+                            _ => out.other_reject += 1,
+                        },
+                        Ok(Some(_)) => {}
+                        Ok(None) | Err(_) => return out,
+                    }
+                }
+            }));
+            senders.push(s.spawn(move || {
+                let sent = shard.drive(horizon, |a| {
+                    let _ = tx.send(&Frame::Request {
+                        id: a.id,
+                        lane: a.lane as u32,
+                        model_idx: a.model_idx as u32,
+                        shape: INPUT_SHAPE.to_vec(),
+                        data: vec![0.0; 4],
+                    });
+                });
+                let _ = tx.send(&Frame::Eos);
+                sent
+            }));
+        }
+
+        let mut sent = 0u64;
+        for t in senders {
+            sent += t.join().unwrap();
+        }
+        bridge.close();
+        let stats_res = dispatch.join().unwrap();
+        for c in conns {
+            c.shutdown();
+        }
+        let mut out = Outcomes::default();
+        for r in receivers {
+            let o = r.join().unwrap();
+            out.ok += o.ok;
+            out.shed += o.shed;
+            out.busy += o.busy;
+            out.other_reject += o.other_reject;
+        }
+        Ok((stats_res?, sent, out))
+    })?;
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let lanes = (0..multi.lanes())
+        .map(|i| {
+            let met = &multi.lane(i).metrics;
+            (met.completed_requests, met.request_latency.p99(), met.slo_violations)
+        })
+        .collect();
+    Ok(Run { sent, out, stats, elapsed, lanes })
+}
+
+fn sweep_point_json(mult: f64, rate: f64, r: &Run) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("offered_mult".to_string(), num(mult));
+    o.insert("offered_rps".to_string(), num(rate));
+    o.insert("sent".to_string(), num(r.sent as f64));
+    o.insert("served".to_string(), num(r.out.ok as f64));
+    o.insert("shed".to_string(), num(r.out.shed as f64));
+    o.insert("busy".to_string(), num(r.out.busy as f64));
+    o.insert("goodput_rps".to_string(), num(r.out.ok as f64 / r.elapsed.max(1e-9)));
+    let p99 = r.lanes.iter().map(|&(_, p, _)| p).fold(0.0f64, f64::max);
+    let viol: u64 = r.lanes.iter().map(|&(_, _, v)| v).sum();
+    o.insert("served_p99_s".to_string(), if p99.is_finite() { num(p99) } else { Json::Null });
+    o.insert("slo_violations".to_string(), num(viol as f64));
+    Json::Obj(o)
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!("# overload: saturation sweep + shedding (ADR-007){}\n", if smoke { " (SMOKE)" } else { "" });
+
+    // one dispatch thread serves one round (M requests) per ROUND_COST
+    let capacity = M as f64 / ROUND_COST.as_secs_f64();
+    let solo = [(M, 1.0)];
+    let (multiples, horizon): (&[f64], Duration) = if smoke {
+        (&[0.5, 1.0, 2.0], Duration::from_millis(150))
+    } else {
+        (&[0.5, 0.75, 1.0, 1.5, 2.0], Duration::from_secs(1))
+    };
+
+    // --- part 1: Poisson sweep across offered-load multiples -----------
+    let mut points: Vec<(f64, Run)> = Vec::new();
+    for (i, &mult) in multiples.iter().enumerate() {
+        let rate = capacity * mult;
+        let run = run_shape(
+            TrafficShape::Poisson { rate },
+            &solo,
+            horizon,
+            0x0DE55 + i as u64,
+        )?;
+        let viol: u64 = run.lanes.iter().map(|&(_, _, v)| v).sum();
+        println!(
+            "poisson {mult:>4.2}x ({rate:>6.0} rps): sent {:>5} -> {:>5} served \
+             + {:>4} shed + {:>3} busy  goodput {:>6.0} rps  viol {viol}",
+            run.sent,
+            run.out.ok,
+            run.out.shed,
+            run.out.busy,
+            run.out.ok as f64 / run.elapsed,
+        );
+        points.push((mult, run));
+    }
+
+    // knee: the first multiple where served goodput stops tracking the
+    // offered rate (served / offered < 0.95)
+    let knee = points
+        .iter()
+        .find(|(_, r)| (r.out.ok as f64) < 0.95 * r.sent as f64)
+        .map(|&(m, _)| m);
+    println!("knee located at {:?}x offered load", knee);
+
+    // --- part 2: bursty + skewed passes at the top multiple ------------
+    let top = *multiples.last().unwrap();
+    let bursty = run_shape(
+        TrafficShape::Bursty {
+            rate: capacity * top * 2.0, // 2x during on-windows, 50% duty
+            on: Duration::from_millis(20),
+            off: Duration::from_millis(20),
+        },
+        &solo,
+        horizon,
+        0xB0257,
+    )?;
+    println!(
+        "bursty  {top:.1}x avg: sent {} -> {} served + {} shed + {} busy",
+        bursty.sent, bursty.out.ok, bursty.out.shed, bursty.out.busy
+    );
+    let skewed = run_shape(
+        TrafficShape::Poisson { rate: capacity * top },
+        &[(M, 9.0), (M, 1.0)],
+        horizon,
+        0x53E3D,
+    )?;
+    let rows = skewed.stats.lane_reject_rows();
+    println!(
+        "skewed  {top:.1}x 90/10: sent {} -> {} served + {} shed; per-lane rejects {:?}",
+        skewed.sent, skewed.out.ok, skewed.out.shed, rows
+    );
+
+    // --- BENCH_overload.json --------------------------------------------
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("overload".to_string()));
+    root.insert("smoke".to_string(), Json::Bool(smoke));
+    root.insert("capacity_est_rps".to_string(), num(capacity));
+    root.insert("slo_s".to_string(), num(SLO.as_secs_f64()));
+    root.insert("round_cost_s".to_string(), num(ROUND_COST.as_secs_f64()));
+    root.insert(
+        "sweep".to_string(),
+        Json::Arr(points.iter().map(|(m, r)| sweep_point_json(*m, capacity * m, r)).collect()),
+    );
+    root.insert("knee_mult".to_string(), knee.map(num).unwrap_or(Json::Null));
+    root.insert("bursty".to_string(), sweep_point_json(top, capacity * top, &bursty));
+    root.insert("skewed".to_string(), sweep_point_json(top, capacity * top, &skewed));
+    root.insert(
+        "skewed_lane_rejects".to_string(),
+        Json::Arr(
+            rows.iter()
+                .map(|(l, r)| {
+                    let mut o = BTreeMap::new();
+                    o.insert("lane".to_string(), num(*l as f64));
+                    o.insert("busy".to_string(), num(r.busy as f64));
+                    o.insert("shed".to_string(), num(r.shed as f64));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    let path = "BENCH_overload.json";
+    std::fs::write(path, Json::Obj(root).dump())?;
+    println!("report written to {path}");
+
+    // --- gates (report written first so failing runs leave numbers) ----
+    // every mode: exactly one outcome frame per submitted request
+    for (m, r) in points.iter().chain([(top, bursty), (top, skewed)].iter()) {
+        ensure!(
+            r.out.total() == r.sent,
+            "at {m}x: {} outcomes ({} ok + {} shed + {} busy + {} other) != {} sent \
+             — the one-outcome-per-submission contract broke",
+            r.out.total(),
+            r.out.ok,
+            r.out.shed,
+            r.out.busy,
+            r.out.other_reject,
+            r.sent
+        );
+        // shed attribution: dispatch-side counters match the wire
+        ensure!(
+            r.stats.shed == r.out.shed,
+            "at {m}x: stats.shed {} != {} Shed frames on the wire",
+            r.stats.shed,
+            r.out.shed
+        );
+        let row_shed: u64 = r.stats.lane_reject_rows().iter().map(|(_, lr)| lr.shed).sum();
+        ensure!(
+            row_shed == r.stats.shed,
+            "per-lane shed rows sum to {row_shed}, scalar says {}",
+            r.stats.shed
+        );
+    }
+
+    // timing gates only in full runs (smoke must not flake on CI noise)
+    if !smoke {
+        let plateau = points
+            .iter()
+            .filter(|(m, _)| *m <= 1.0)
+            .map(|(_, r)| r.out.ok as f64 / r.elapsed)
+            .fold(0.0f64, f64::max);
+        let (top_mult, top_run) = points.last().unwrap();
+        let top_goodput = top_run.out.ok as f64 / top_run.elapsed;
+        ensure!(
+            top_goodput >= 0.9 * plateau,
+            "goodput at {top_mult}x overload ({top_goodput:.0} rps) fell below 0.9x \
+             the pre-knee plateau ({plateau:.0} rps): shedding is not protecting \
+             served throughput"
+        );
+        ensure!(
+            top_run.out.shed > 0,
+            "a {top_mult}x overload run must shed — admission control never engaged"
+        );
+        // served tail: admission projects wait <= SLO at admit time and
+        // the adaptive eps is clamped to slo/2, so served p99 must stay
+        // within 1.5x SLO even past the knee
+        let p99 = top_run.lanes.iter().map(|&(_, p, _)| p).fold(0.0f64, f64::max);
+        ensure!(
+            p99 <= 1.5 * SLO.as_secs_f64(),
+            "served p99 {:.1}ms at {top_mult}x exceeds the 1.5x SLO bound ({:.0}ms): \
+             shedding admitted doomed requests",
+            p99 * 1e3,
+            1.5 * SLO.as_secs_f64() * 1e3
+        );
+    }
+    println!("\noverload gates passed");
+    Ok(())
+}

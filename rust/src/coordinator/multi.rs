@@ -177,6 +177,17 @@ pub struct MultiServer<'f, E: RoundExecutor = Fleet> {
     group_outs: Vec<Option<Tensor>>,
     /// per-round served-lane charge scratch, reused across dispatches
     charges: Vec<LaneCharge>,
+    /// the lane whose round most recently failed (set by
+    /// [`MultiServer::dispatch_next`] on its error paths, consumed by
+    /// [`MultiServer::take_failed_lane`]) — the dispatch loop's failure
+    /// cooldown needs to know WHICH lane to back off from, and the
+    /// `Result` error type carries no lane
+    last_failed_lane: Option<usize>,
+    /// per-lane failure cooldown deadline (ADR-007), parallel to
+    /// `lanes`: while in the future, the lane is invisible to QoS
+    /// selection and the deadline scan — its requeued work waits out
+    /// the cooldown instead of busy-spinning the dispatch loop
+    cooldown: Vec<Option<Instant>>,
 }
 
 impl<'f, E: RoundExecutor> Default for MultiServer<'f, E> {
@@ -191,6 +202,25 @@ fn snapshot<E: RoundExecutor>(lane: &Server<'_, E>) -> LaneSnapshot {
         pending: lane.pending(),
         oldest_wait: lane.oldest_wait(),
     }
+}
+
+/// [`snapshot`] with the failure cooldown applied (ADR-007): a lane
+/// cooling until after `now` reads as neither round-ready nor
+/// boost-eligible — selection skips it and the deadline scan does not
+/// pin `next_due_in` to zero on its requeued work — while its real
+/// `pending` stays visible so WDRR replenish bookkeeping never mistakes
+/// it for an idle (credit-resetting) lane.
+fn snapshot_gated<E: RoundExecutor>(
+    lane: &Server<'_, E>,
+    cooling_until: Option<Instant>,
+    now: Instant,
+) -> LaneSnapshot {
+    let mut s = snapshot(lane);
+    if cooling_until.is_some_and(|t| t > now) {
+        s.ready = false;
+        s.oldest_wait = None;
+    }
+    s
 }
 
 impl<'f, E: RoundExecutor> MultiServer<'f, E> {
@@ -213,6 +243,8 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
             metrics_sink: None,
             group_outs: Vec::new(),
             charges: Vec::new(),
+            last_failed_lane: None,
+            cooldown: Vec::new(),
         }
     }
 
@@ -236,6 +268,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         self.group_of.push(None);
         self.life.push(LaneLife::Live);
         self.swap_tag.push(0);
+        self.cooldown.push(None);
         self.sched.add_lane(qos)
     }
 
@@ -388,10 +421,108 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         self.sched.deficit(lane)
     }
 
-    /// The effective SLO boost margin ε for `lane` (its own override or
-    /// the scheduler default) — published as a gauge (ADR-006).
+    /// The effective SLO boost margin ε for `lane` (operator pin,
+    /// adaptive estimate, or the scheduler default, in that order) —
+    /// published as a gauge (ADR-006).
     pub fn lane_boost_margin(&self, lane: usize) -> Duration {
         self.sched.lane_boost_margin(lane)
+    }
+
+    /// The adaptive ε currently derived for `lane` from its observed
+    /// round tails (ADR-007), `None` until the lane has completed a
+    /// round. A pinned [`LaneQos::boost_margin`] overrides it.
+    pub fn lane_adaptive_margin(&self, lane: usize) -> Option<Duration> {
+        self.sched.adaptive_margin(lane)
+    }
+
+    /// Close the ε control loop (ADR-007): derive each live lane's SLO
+    /// boost margin from its observed round-time p99, EWMA-smoothed
+    /// (α = 1/4: a shift in the tail settles within a handful of
+    /// refreshes without one outlier round yanking the margin) and
+    /// clamped to `[min_eps, slo/2]` — the floor keeps a fast lane from
+    /// shrinking its window below scheduling resolution, the ceiling
+    /// keeps a slow lane from going permanently "urgent" and starving
+    /// WDRR. Lanes with no completed round yet keep resolving to the
+    /// static default; operator pins (`LaneQos::with_boost_margin`)
+    /// always win regardless of what this installs. Called by the
+    /// dispatch loops between rounds (same cadence as gauge refresh).
+    pub fn refresh_adaptive_eps(&mut self, min_eps: Duration) {
+        for lane in 0..self.lanes.len() {
+            if self.life[lane] == LaneLife::Retired {
+                continue;
+            }
+            let Some(p99) = self.lanes[lane].metrics.round_p99() else {
+                continue;
+            };
+            let slo = self.sched.qos(lane).slo;
+            let ceil = slo / 2;
+            let floor = min_eps.min(ceil); // keep floor <= ceiling for tiny SLOs
+            let target = Duration::from_secs_f64(p99.max(0.0)).clamp(floor, ceil);
+            let next = match self.sched.adaptive_margin(lane) {
+                Some(prev) => Duration::from_secs_f64(
+                    prev.as_secs_f64() * 0.75 + target.as_secs_f64() * 0.25,
+                )
+                .clamp(floor, ceil),
+                None => target,
+            };
+            self.sched.set_adaptive_margin(lane, Some(next));
+        }
+    }
+
+    /// Queue-wait projection for one more request on `lane` (ADR-007):
+    /// the rounds the current backlog needs (`ceil(pending / m)`) times
+    /// the lane's observed round-time p99. `None` while the lane has no
+    /// observed rounds or no backlog — admission control never sheds on
+    /// a cold or empty lane (it has no evidence the wait is doomed).
+    pub fn projected_wait(&self, lane: usize) -> Option<Duration> {
+        if lane >= self.lanes.len() || self.life[lane] != LaneLife::Live {
+            return None;
+        }
+        let pending = self.lanes[lane].pending();
+        if pending == 0 {
+            return None;
+        }
+        let p99 = self.lanes[lane].metrics.round_p99()?;
+        let m = self.lanes[lane].fleet().m().max(1);
+        let rounds_ahead = pending.div_ceil(m);
+        Some(Duration::from_secs_f64(p99.max(0.0) * rounds_ahead as f64))
+    }
+
+    /// Admission-control decision for `lane` (ADR-007): `true` when the
+    /// projected queue wait already exceeds the lane's SLO, i.e. a
+    /// request admitted now is doomed to miss its deadline before its
+    /// round even starts — the bridge sheds it with a typed
+    /// `Reject{Shed}` instead of letting it consume a slot and QoS
+    /// credit.
+    pub fn should_shed(&self, lane: usize) -> bool {
+        match self.projected_wait(lane) {
+            Some(wait) => wait > self.sched.qos(lane).slo,
+            None => false,
+        }
+    }
+
+    /// The lane whose round most recently failed, consumed (one-shot:
+    /// the next call answers `None` until another round fails). The
+    /// dispatch loop reads this right after a
+    /// [`MultiServer::dispatch_next`] error to know which lane to place
+    /// in failure cooldown.
+    pub fn take_failed_lane(&mut self) -> Option<usize> {
+        self.last_failed_lane.take()
+    }
+
+    /// Place `lane` in failure cooldown until `until` (ADR-007): it is
+    /// skipped by QoS selection and the deadline scan until then — its
+    /// requeued work waits out the cooldown instead of being re-picked
+    /// the very next iteration — while admission and its queues are
+    /// untouched. Bounded by construction: the caller passes a short
+    /// deadline, and expiry is purely time-based (no reset required).
+    pub fn set_lane_cooldown(&mut self, lane: usize, until: Instant) {
+        self.cooldown[lane] = Some(until);
+    }
+
+    /// Whether `lane` is currently in failure cooldown.
+    pub fn lane_cooling(&self, lane: usize) -> bool {
+        self.cooldown[lane].is_some_and(|t| t > Instant::now())
     }
 
     // -----------------------------------------------------------------
@@ -430,6 +561,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
                 self.sched.restore_lane(i, qos, deficit);
                 self.life[i] = LaneLife::Live;
                 self.swap_tag[i] = 0;
+                self.cooldown[i] = None;
                 i
             }
             None => {
@@ -437,6 +569,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
                 self.group_of.push(None);
                 self.life.push(LaneLife::Live);
                 self.swap_tag.push(0);
+                self.cooldown.push(None);
                 let i = self.sched.add_lane_carrying(qos, deficit);
                 debug_assert_eq!(i + 1, self.lanes.len(), "scheduler/lane slot drift");
                 i
@@ -532,6 +665,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         }
         self.life[lane] = LaneLife::Retired;
         self.swap_tag[lane] = 0;
+        self.cooldown[lane] = None;
         Ok(self.sched.remove_lane(lane))
     }
 
@@ -599,7 +733,9 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// an actual [`MultiServer::dispatch_next`].
     pub fn ready_lane(&self) -> Option<usize> {
         let lanes = &self.lanes;
-        self.sched.select(&|i| snapshot(&lanes[i])).map(|p| p.lane)
+        let cd = &self.cooldown;
+        let now = Instant::now();
+        self.sched.select(&|i| snapshot_gated(&lanes[i], cd[i], now)).map(|p| p.lane)
     }
 
     /// How long until some lane becomes due (batching deadline or SLO
@@ -612,8 +748,10 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// of their own.
     pub fn next_due_in(&self) -> Option<Duration> {
         let lanes = &self.lanes;
+        let cd = &self.cooldown;
+        let now = Instant::now();
         self.sched.next_due_in(
-            &|i| snapshot(&lanes[i]),
+            &|i| snapshot_gated(&lanes[i], cd[i], now),
             &|i| lanes[i].config().max_wait,
         )
     }
@@ -649,7 +787,9 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     ) -> Result<Option<Dispatched>> {
         let pick = {
             let lanes = &self.lanes;
-            match self.sched.select(&|i| snapshot(&lanes[i])) {
+            let cd = &self.cooldown;
+            let now = Instant::now();
+            match self.sched.select(&|i| snapshot_gated(&lanes[i], cd[i], now)) {
                 Some(p) => p,
                 None => return Ok(None),
             }
@@ -678,6 +818,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
                         Err(e) => {
                             let (lanes, sched) = (&self.lanes, &mut self.sched);
                             sched.commit(&pick, &|i| snapshot(&lanes[i]));
+                            self.last_failed_lane = Some(pick.lane);
                             return Err(e);
                         }
                     }
@@ -689,9 +830,16 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
         let result = self.lanes[pick.lane].dispatch_into(responses);
         let (lanes, sched) = (&self.lanes, &mut self.sched);
         sched.commit(&pick, &|i| snapshot(&lanes[i]));
+        let n = match result {
+            Ok(n) => n,
+            Err(e) => {
+                self.last_failed_lane = Some(pick.lane);
+                return Err(e);
+            }
+        };
         Ok(Some(Dispatched {
             lane: pick.lane,
-            responses: result?,
+            responses: n,
             lanes_served: 1,
             urgent: pick.urgent,
         }))

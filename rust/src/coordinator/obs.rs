@@ -588,6 +588,7 @@ impl ObsHub {
             ("group_busy", num(stats.group_busy as f64)),
             ("invalid", num(stats.invalid as f64)),
             ("no_lane", num(stats.no_lane as f64)),
+            ("shed", num(stats.shed as f64)),
             ("responses", num(stats.responses as f64)),
             ("rounds", num(stats.rounds as f64)),
             ("coalesced_rounds", num(stats.coalesced_rounds as f64)),
@@ -595,6 +596,13 @@ impl ObsHub {
             ("idle_naps_avoided", num(stats.idle_naps_avoided as f64)),
             ("ctrl_ops", num(stats.ctrl_ops as f64)),
         ]);
+        let lane_rejects = arr(stats.lane_reject_rows().into_iter().map(|(lane, r)| {
+            obj(vec![
+                ("lane", num(lane as f64)),
+                ("busy", num(r.busy as f64)),
+                ("shed", num(r.shed as f64)),
+            ])
+        }));
         let metrics = self.metrics.lock().unwrap().as_ref().map(|hub| {
             let m = hub.read();
             obj(vec![
@@ -633,6 +641,7 @@ impl ObsHub {
             ("unmapped", unmapped),
             ("rings", rings),
             ("stats", stats_json),
+            ("lane_rejects", lane_rejects),
             ("metrics", metrics.unwrap_or(Json::Null)),
             ("recorder", recorder),
         ])

@@ -316,6 +316,18 @@ pub fn serve_conn(bridge: IngressBridge, transport: Box<dyn Transport>) -> Resul
 // the dispatch loop (single consumer)
 // ---------------------------------------------------------------------------
 
+/// Per-lane typed-reject attribution (ADR-007, keyed by the client's
+/// wire lane id). Without this, shed load was invisible exactly when
+/// admission control acted: the scalar totals said HOW MUCH was
+/// refused, but not WHICH tenant was over its knee.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct LaneRejects {
+    /// `Reject{Busy}` frames: lane queue or dispatch-group queue full
+    pub busy: u64,
+    /// `Reject{Shed}` frames: admission control projected an SLO miss
+    pub shed: u64,
+}
+
 /// Counters from one [`run_dispatch`] run.
 #[derive(Debug, Default, Clone)]
 pub struct IngressStats {
@@ -330,6 +342,10 @@ pub struct IngressStats {
     pub invalid: u64,
     /// envelopes addressed to a lane that does not exist
     pub no_lane: u64,
+    /// envelopes shed by admission control: the lane's projected queue
+    /// wait already exceeded its SLO (ADR-007) — refused with a typed
+    /// `Reject{Shed}` before consuming a queue slot or QoS credit
+    pub shed: u64,
     /// responses routed back to connections
     pub responses: u64,
     /// rounds dispatched
@@ -347,6 +363,10 @@ pub struct IngressStats {
     /// control-plane commands applied between rounds (lane add /
     /// remove / swap — elastic dispatch only)
     pub ctrl_ops: u64,
+    /// per-wire-lane reject attribution (Busy + Shed). Merged exactly
+    /// across shards like every scalar above: lane totals over the
+    /// merged read equal the sum of every thread's local counts.
+    pub lane_rejects: HashMap<usize, LaneRejects>,
 }
 
 impl IngressStats {
@@ -358,12 +378,37 @@ impl IngressStats {
         self.group_busy += o.group_busy;
         self.invalid += o.invalid;
         self.no_lane += o.no_lane;
+        self.shed += o.shed;
         self.responses += o.responses;
         self.rounds += o.rounds;
         self.coalesced_rounds += o.coalesced_rounds;
         self.round_errors += o.round_errors;
         self.idle_naps_avoided += o.idle_naps_avoided;
         self.ctrl_ops += o.ctrl_ops;
+        for (&lane, r) in &o.lane_rejects {
+            let e = self.lane_rejects.entry(lane).or_default();
+            e.busy += r.busy;
+            e.shed += r.shed;
+        }
+    }
+
+    /// Record one Busy reject against `lane` (wire lane id).
+    pub fn note_busy(&mut self, lane: usize) {
+        self.lane_rejects.entry(lane).or_default().busy += 1;
+    }
+
+    /// Record one Shed reject against `lane` (wire lane id).
+    pub fn note_shed(&mut self, lane: usize) {
+        self.lane_rejects.entry(lane).or_default().shed += 1;
+    }
+
+    /// Per-lane reject rows sorted by wire lane id — the deterministic
+    /// order report lines and `ObsReport` JSON emit.
+    pub fn lane_reject_rows(&self) -> Vec<(usize, LaneRejects)> {
+        let mut rows: Vec<(usize, LaneRejects)> =
+            self.lane_rejects.iter().map(|(&l, &r)| (l, r)).collect();
+        rows.sort_unstable_by_key(|&(l, _)| l);
+        rows
     }
 }
 
@@ -386,6 +431,22 @@ const IDLE_POLL: Duration = Duration::from_millis(5);
 /// Consecutive failed rounds tolerated (requests are requeued by the
 /// lane each time) before the loop gives up and surfaces the error.
 const MAX_CONSECUTIVE_ROUND_ERRORS: u32 = 3;
+/// How long a lane that just failed a round is skipped by selection
+/// (ADR-007). Before this, a failed round was re-picked immediately:
+/// three consecutive failures burned in microseconds — the loop died
+/// before a sibling's deadline could interleave a healthy round — and
+/// the doomed lane's WDRR credit was destroyed while healthy lanes
+/// waited. Kept under [`IDLE_POLL`] so a cooldown never outlives the
+/// loop's own worst-case reaction time.
+const FAILURE_COOLDOWN: Duration = Duration::from_millis(2);
+/// Floor for the adaptive SLO boost margin ε (ADR-007): even a lane
+/// with microsecond round tails keeps a margin above scheduling noise.
+const ADAPTIVE_EPS_FLOOR: Duration = Duration::from_micros(200);
+/// Arrivals admitted per loop iteration before dispatch gets a turn. A
+/// saturating producer used to pin the loop in the drain-arrivals
+/// phase indefinitely — rounds, gauges, and the ε refresh all starved
+/// exactly when an operator most needs them (ADR-007 satellite).
+const MAX_ARRIVALS_PER_ITER: usize = 256;
 
 /// Run the dispatch side of the bridge to completion: admit arrivals,
 /// dispatch QoS-picked rounds, route responses, and return once the
@@ -508,6 +569,7 @@ fn dispatch_core<'f, E: RoundExecutor>(
     let tracer = hub.as_ref().map(|h| h.tracer());
     let rec = hub.as_ref().map(|h| h.rec_handle());
     let mut last_gauges: Option<Instant> = None;
+    let mut last_eps: Option<Instant> = None;
 
     loop {
         // 0) control plane: apply queued lane commands strictly BETWEEN
@@ -593,29 +655,45 @@ fn dispatch_core<'f, E: RoundExecutor>(
             }
         }
 
+        // 0.4) ε control loop (ADR-007): refresh each lane's adaptive
+        // SLO boost margin from its observed round-time tail
+        // (EWMA-smoothed p99, clamped to [floor, slo/2]) on the same
+        // time budget as the gauges — between rounds, never inside one.
+        // Runs hub or no hub: the margin is a scheduling input, not an
+        // observability nicety.
+        if last_eps.is_none_or(|t| t.elapsed() >= IDLE_POLL) {
+            multi.refresh_adaptive_eps(ADAPTIVE_EPS_FLOOR);
+            last_eps = Some(Instant::now());
+        }
+
         // 0.5) observability (ADR-006): refresh this partition's lane
-        // gauges at the idle-poll cadence (the p99 read sorts a sample
-        // clone — cheap at this rate, not per round), then answer any
-        // pending introspection queries with the exactly merged
-        // counters. Whichever thread polls first answers ALL pending
-        // queries; other partitions' gauges are at most one gauge
-        // cadence plus one round stale (documented bound).
+        // gauges on a time budget (the p99 read sorts a sample clone —
+        // cheap at this rate, not per round). The budget is re-checked
+        // in the round path too, and the arrival drain below is
+        // bounded, so a saturated loop — the exact moment an operator
+        // queries — still republishes within one cadence instead of
+        // only at idle polls. Then answer any pending introspection
+        // queries with the exactly merged counters. Whichever thread
+        // polls first answers ALL pending queries; other partitions'
+        // gauges are at most one gauge cadence plus one round stale
+        // (documented bound).
         if let Some(hub) = &hub {
-            let stale = last_gauges.is_none_or(|t| t.elapsed() >= IDLE_POLL);
-            if stale || hub.has_queries() {
-                publish_lane_gauges(hub, multi, part);
-                last_gauges = Some(Instant::now());
-            }
+            refresh_gauges_if_stale(hub, multi, part, &mut last_gauges, hub.has_queries());
             if hub.has_queries() {
                 let snap = part.map(|(topo, _)| topo.snapshot());
                 hub.answer(&stats.merged(), snap.as_ref());
             }
         }
 
-        // 1) drain arrivals without blocking
-        while let Some(env) = bridge.try_pop() {
+        // 1) drain arrivals without blocking — bounded per iteration so
+        // a saturating producer cannot pin the loop in this phase while
+        // dispatch, gauges, and the ε refresh starve
+        let mut drained = 0usize;
+        while drained < MAX_ARRIVALS_PER_ITER {
+            let Some(env) = bridge.try_pop() else { break };
             let local = to_local(env.lane);
             admit(multi, env, local, &mut routes, &mut seq, &mut stats.lock(), rec.as_ref());
+            drained += 1;
         }
 
         // 2) dispatch whatever the QoS scheduler says is due — a
@@ -660,12 +738,20 @@ fn dispatch_core<'f, E: RoundExecutor>(
                     to_global(d.lane)
                 };
                 route_responses(&mut responses, &mut routes, hint, &mut st, tracer.as_ref());
+                drop(st);
+                // the stale-gauge fix (ADR-007 satellite): the gauge
+                // time budget is checked in the round path as well, so
+                // back-to-back rounds cannot outrun the refresh cadence
+                if let Some(hub) = &hub {
+                    refresh_gauges_if_stale(hub, multi, part, &mut last_gauges, false);
+                }
                 continue;
             }
             Ok(None) => {}
             Err(e) => {
-                // the lane requeued its requests; retry a few times
-                // before surfacing (a persistently failing fleet)
+                // the lane requeued its requests; retry — after a
+                // bounded cooldown — a few times before surfacing (a
+                // persistently failing fleet)
                 stats.lock().round_errors += 1;
                 consecutive_errors += 1;
                 if let Some(r) = &rec {
@@ -700,6 +786,30 @@ fn dispatch_core<'f, E: RoundExecutor>(
                         ));
                     }
                     return Err(e).context("dispatch loop: rounds failing persistently");
+                }
+                // failure cooldown (ADR-007 satellite): before this,
+                // the failed lane was re-picked IMMEDIATELY — three
+                // failures burned in microseconds (the loop died before
+                // any sibling deadline could interleave a healthy
+                // round) and the doomed lane's WDRR credit was shredded
+                // while healthy lanes waited. Cooling the lane drops it
+                // out of selection AND the deadline scan, so the
+                // next_due_in below reflects the SIBLINGS' deadlines.
+                if let Some(lane) = multi.take_failed_lane() {
+                    multi.set_lane_cooldown(lane, Instant::now() + FAILURE_COOLDOWN);
+                }
+                // short back-off capped by the next real deadline: a
+                // due sibling dispatches immediately; a sole failing
+                // lane naps instead of busy-spinning its requeue.
+                // Arrivals still wake the nap early.
+                let nap = match multi.next_due_in() {
+                    Some(d) if d.is_zero() => continue,
+                    Some(d) => d.min(FAILURE_COOLDOWN),
+                    None => FAILURE_COOLDOWN,
+                };
+                if let Some(env) = bridge.pop_timeout(nap) {
+                    let local = to_local(env.lane);
+                    admit(multi, env, local, &mut routes, &mut seq, &mut stats.lock(), rec.as_ref());
                 }
                 continue;
             }
@@ -736,6 +846,27 @@ fn dispatch_core<'f, E: RoundExecutor>(
         }
     }
     Ok(())
+}
+
+/// Republish lane gauges when the time budget (`IDLE_POLL`) has
+/// elapsed since the last publish, or unconditionally with `force`
+/// (a pending query must never read stale gauges). Returns whether a
+/// publish happened. Called both at the loop top AND on the
+/// round-dispatch path (ADR-007 satellite): a saturated loop that
+/// never reaches an idle poll still refreshes within one cadence.
+fn refresh_gauges_if_stale<E: RoundExecutor>(
+    hub: &ObsHub,
+    multi: &MultiServer<E>,
+    part: Option<(&Topology, usize)>,
+    last: &mut Option<Instant>,
+    force: bool,
+) -> bool {
+    if force || last.is_none_or(|t| t.elapsed() >= IDLE_POLL) {
+        publish_lane_gauges(hub, multi, part);
+        *last = Some(Instant::now());
+        return true;
+    }
+    false
 }
 
 /// Publish every non-retired lane's point-in-time gauge to the hub
@@ -940,7 +1071,11 @@ fn run_parallel_inner<'f, E: RoundExecutor>(
                     Some((p, _)) => match subs[p].submit(env) {
                         Ok(()) => {}
                         Err(SubmitError::Busy(env)) => {
-                            router_stats.lock().group_busy += 1;
+                            {
+                                let mut st = router_stats.lock();
+                                st.group_busy += 1;
+                                st.note_busy(env.lane);
+                            }
                             if let Some(r) = &router_rec {
                                 r.record(EventKind::Reject {
                                     code: RejectCode::Busy,
@@ -1030,6 +1165,24 @@ fn admit<E: RoundExecutor>(
         reply.push(Frame::reject(client_id, lane as u32, RejectCode::NoLane, "no such lane"));
         return;
     };
+    // admission control (ADR-007): when the lane's projected queue
+    // wait — backlog rounds times observed round p99 — already exceeds
+    // its SLO, serving this request can only produce a late answer.
+    // Shed NOW with a typed Reject{Shed}, before the request consumes
+    // a queue slot, a server id, or QoS credit. Distinct from Busy: a
+    // Busy lane wants a quick retry, a shedding lane is past its knee.
+    if multi.should_shed(local) {
+        stats.shed += 1;
+        stats.note_shed(lane);
+        reject_ev(RejectCode::Shed, lane);
+        reply.push(Frame::reject(
+            client_id,
+            lane as u32,
+            RejectCode::Shed,
+            "projected queue wait exceeds lane SLO",
+        ));
+        return;
+    }
     // admission-boundary stamp: queue-wait math must not inherit the
     // producer's construction time (or a cloned request's stale stamp)
     let mut req = req.arrived_now();
@@ -1048,6 +1201,7 @@ fn admit<E: RoundExecutor>(
         }
         Ok(Admit::Rejected) => {
             stats.lane_busy += 1;
+            stats.note_busy(lane);
             reject_ev(RejectCode::Busy, lane);
             reply.push(Frame::reject(client_id, lane as u32, RejectCode::Busy, "lane queue full"));
         }

@@ -72,6 +72,12 @@ pub enum RejectCode {
     NoLane,
     /// the server is shutting down
     Shutdown,
+    /// admission control: the lane's projected queue wait already
+    /// exceeds its SLO, so serving this request would only produce a
+    /// late answer — shed now rather than waste a slot. Unlike `Busy`
+    /// (a transient capacity signal: retry soon), `Shed` says the lane
+    /// is over its knee: back off harder or try another lane.
+    Shed,
 }
 
 impl RejectCode {
@@ -81,6 +87,7 @@ impl RejectCode {
             RejectCode::Invalid => 2,
             RejectCode::NoLane => 3,
             RejectCode::Shutdown => 4,
+            RejectCode::Shed => 5,
         }
     }
 
@@ -90,6 +97,7 @@ impl RejectCode {
             2 => RejectCode::Invalid,
             3 => RejectCode::NoLane,
             4 => RejectCode::Shutdown,
+            5 => RejectCode::Shed,
             _ => bail!("bad reject code {b}"),
         })
     }
@@ -441,6 +449,27 @@ mod tests {
         let j = Frame::reject(9, 2, RejectCode::Busy, "lane queue full");
         assert_eq!(roundtrip(&j), j);
         assert_eq!(roundtrip(&Frame::Eos), Frame::Eos);
+    }
+
+    #[test]
+    fn every_reject_code_roundtrips() {
+        for code in [
+            RejectCode::Busy,
+            RejectCode::Invalid,
+            RejectCode::NoLane,
+            RejectCode::Shutdown,
+            RejectCode::Shed,
+        ] {
+            let f = Frame::reject(1, 0, code, "x");
+            assert_eq!(roundtrip(&f), f);
+        }
+        // unknown wire codes stay errors, not silent remaps
+        let mut payload = vec![TAG_REJECT];
+        payload.extend_from_slice(&1u64.to_le_bytes());
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        payload.push(99);
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        assert!(Frame::decode_payload(&payload).is_err());
     }
 
     #[test]

@@ -43,7 +43,7 @@ pub mod transport;
 
 pub use bridge::{
     run_dispatch, run_dispatch_elastic, run_dispatch_parallel, run_dispatch_parallel_observed,
-    serve_conn, ConnHandle, Envelope, IngressBridge, IngressStats, SubmitError,
+    serve_conn, ConnHandle, Envelope, IngressBridge, IngressStats, LaneRejects, SubmitError,
 };
 pub use frame::{Frame, RejectCode};
 pub use loadgen::{Arrival, LoadGen, TrafficShape};

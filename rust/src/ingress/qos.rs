@@ -162,6 +162,14 @@ struct LaneState {
     /// are positional across `MultiServer` — and waits for reuse via
     /// [`QosScheduler::restore_lane`].
     live: bool,
+    /// ε derived from the lane's *observed* round-time tail (ADR-007):
+    /// the dispatch loop feeds EWMA-smoothed round p99 through
+    /// [`QosScheduler::set_adaptive_margin`] between rounds. Resolution
+    /// order in [`QosScheduler::lane_boost_margin`] is
+    /// pin (`qos.boost_margin`) > adaptive > scheduler default, so an
+    /// operator pin always wins and lanes with no observations yet fall
+    /// back to the static default.
+    adaptive_eps: Option<Duration>,
 }
 
 /// Weighted-deficit round-robin + SLO-boost lane scheduler.
@@ -187,19 +195,39 @@ impl QosScheduler {
         self.eps
     }
 
-    /// The effective ε for one lane: its own margin if set, else the
-    /// scheduler default. Deadline math (`MultiServer::next_due_in`)
-    /// must use this, not [`QosScheduler::boost_margin`], or a per-lane
-    /// margin would nap the dispatch thread past its boost window.
+    /// The effective ε for one lane: its pinned margin if set, else the
+    /// adaptive margin the dispatch loop derived from observed round
+    /// tails, else the scheduler default. Deadline math
+    /// (`MultiServer::next_due_in`) must use this, not
+    /// [`QosScheduler::boost_margin`], or a per-lane margin would nap
+    /// the dispatch thread past its boost window.
     pub fn lane_boost_margin(&self, lane: usize) -> Duration {
-        self.lanes[lane].qos.boost_margin.unwrap_or(self.eps)
+        let st = &self.lanes[lane];
+        st.qos.boost_margin.or(st.adaptive_eps).unwrap_or(self.eps)
+    }
+
+    /// Install (or clear, with `None`) the adaptive ε for one lane —
+    /// the control-loop write (ADR-007): the dispatch loop smooths the
+    /// lane's observed round-time p99 and clamps it to
+    /// `[min_eps, slo/2]` before calling this. A pinned
+    /// [`LaneQos::boost_margin`] still overrides whatever is installed
+    /// here, so operators keep the last word.
+    pub fn set_adaptive_margin(&mut self, lane: usize, eps: Option<Duration>) {
+        self.lanes[lane].adaptive_eps = eps;
+    }
+
+    /// The adaptive ε currently installed for `lane` (observability
+    /// read; `None` until the control loop has observed a round tail,
+    /// or after the lane was retired).
+    pub fn adaptive_margin(&self, lane: usize) -> Option<Duration> {
+        self.lanes[lane].adaptive_eps
     }
 
     /// Register a lane; returns its index. Weight 0 is clamped to 1 (a
     /// zero-share lane would starve forever).
     pub fn add_lane(&mut self, qos: LaneQos) -> usize {
         let qos = LaneQos { weight: qos.weight.max(1), ..qos };
-        self.lanes.push(LaneState { qos, deficit: 0, live: true });
+        self.lanes.push(LaneState { qos, deficit: 0, live: true, adaptive_eps: None });
         self.lanes.len() - 1
     }
 
@@ -232,6 +260,7 @@ impl QosScheduler {
         st.live = false;
         st.deficit = 0;
         st.qos = LaneQos::default();
+        st.adaptive_eps = None; // a reused id must not inherit a tail estimate
         carried
     }
 
@@ -247,6 +276,7 @@ impl QosScheduler {
             qos,
             deficit: deficit.clamp(-w.saturating_mul(2), w.saturating_mul(2)),
             live: true,
+            adaptive_eps: None,
         };
     }
 
@@ -606,6 +636,46 @@ mod tests {
         assert_eq!(s.lane_boost_margin(0), Duration::from_millis(20));
         let pick = s.select(&at(slo - Duration::from_millis(10))).unwrap();
         assert!(pick.urgent, "20ms margin must boost 10ms before the SLO");
+    }
+
+    #[test]
+    fn adaptive_margin_resolution_order_is_pin_adaptive_default() {
+        // ADR-007: pin (`with_boost_margin`) > adaptive > scheduler
+        // default, and the adaptive slot is live — it both widens the
+        // boost window (select) and clears on lane retirement.
+        let slo = Duration::from_millis(50);
+        let mut s = QosScheduler::new(Duration::from_millis(1));
+        s.add_lane(LaneQos::new(1, slo)); // unpinned: adaptive applies
+        s.add_lane(LaneQos::new(1, slo).with_boost_margin(Duration::from_millis(2))); // pinned
+
+        // before any observation, both resolve statically
+        assert_eq!(s.lane_boost_margin(0), Duration::from_millis(1));
+        assert_eq!(s.lane_boost_margin(1), Duration::from_millis(2));
+
+        s.set_adaptive_margin(0, Some(Duration::from_millis(10)));
+        s.set_adaptive_margin(1, Some(Duration::from_millis(10)));
+        assert_eq!(s.lane_boost_margin(0), Duration::from_millis(10), "adaptive beats default");
+        assert_eq!(s.lane_boost_margin(1), Duration::from_millis(2), "pin beats adaptive");
+        assert_eq!(s.adaptive_margin(0), Some(Duration::from_millis(10)));
+
+        // the widened window is a real dispatch trigger: 8ms from the
+        // SLO is outside the 1ms default but inside the 10ms adaptive ε
+        let at = |wait: Duration| {
+            move |i: usize| LaneSnapshot {
+                ready: false,
+                pending: if i == 0 { 1 } else { 0 },
+                oldest_wait: if i == 0 { Some(wait) } else { None },
+            }
+        };
+        let pick = s.select(&at(slo - Duration::from_millis(8))).expect("adaptive ε boosts");
+        assert_eq!(pick.lane, 0);
+        assert!(pick.urgent);
+
+        // retirement clears the estimate; a new tenant starts static
+        s.remove_lane(0);
+        s.restore_lane(0, LaneQos::new(1, slo), 0);
+        assert_eq!(s.adaptive_margin(0), None, "retired tenant's tail must not leak");
+        assert_eq!(s.lane_boost_margin(0), Duration::from_millis(1));
     }
 
     #[test]

@@ -75,12 +75,13 @@ fn await_frames(reply: &FrameQueue, n: usize, sink: &mut Vec<Frame>) {
 /// merged [`IngressStats`] exactly — the report was taken after traffic
 /// quiesced, so nothing may tick between the snapshot and shutdown.
 fn assert_stats_eq(report: &Json, stats: &IngressStats) {
-    let pairs: [(&str, u64); 11] = [
+    let pairs: [(&str, u64); 12] = [
         ("admitted", stats.admitted),
         ("lane_busy", stats.lane_busy),
         ("group_busy", stats.group_busy),
         ("invalid", stats.invalid),
         ("no_lane", stats.no_lane),
+        ("shed", stats.shed),
         ("responses", stats.responses),
         ("rounds", stats.rounds),
         ("coalesced_rounds", stats.coalesced_rounds),

@@ -1,0 +1,517 @@
+//! Overload robustness (ADR-007): admission-control projection,
+//! adaptive ε, failure cooldown, gauge freshness under saturation, and
+//! the 120-seed exactly-one-outcome property with an unshedded oracle.
+
+mod common;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::{drain_all, echo, payload, seeded_request, FailingEcho};
+use netfuse::coordinator::multi::MultiServer;
+use netfuse::coordinator::server::ServerConfig;
+use netfuse::coordinator::{ObsHub, Request, StrategyKind};
+use netfuse::ingress::{
+    run_dispatch, Envelope, Frame, FrameQueue, IngressBridge, LaneQos, RejectCode, SubmitError,
+};
+use netfuse::util::rng::Rng;
+
+/// The dispatch loop's gauge/ε refresh cadence (`IDLE_POLL` in
+/// bridge.rs — private, mirrored here so the freshness test states its
+/// contract explicitly).
+const CADENCE: Duration = Duration::from_millis(5);
+
+fn cfg(queue_cap: usize) -> ServerConfig {
+    ServerConfig { strategy: StrategyKind::Sequential, queue_cap, ..Default::default() }
+}
+
+/// Non-blocking frame wait with a hard deadline, so a broken dispatch
+/// path fails the test with a message instead of hanging it.
+fn pop_within(q: &FrameQueue, deadline: Duration, what: &str) -> Frame {
+    let t0 = Instant::now();
+    loop {
+        if let Some(f) = q.try_pop() {
+            return f;
+        }
+        assert!(t0.elapsed() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// admission projection (tentpole b)
+// ---------------------------------------------------------------------------
+
+/// The projection is evidence-gated: no observed rounds or no backlog
+/// means no shed, and once both exist the decision is
+/// `ceil(pending / m) * round_p99 > slo`.
+#[test]
+fn shed_decision_requires_evidence_then_tracks_backlog() {
+    let fleet = echo("slow", 2, Duration::from_millis(2));
+    let mut multi = MultiServer::new();
+    multi.add_lane_qos(&fleet, cfg(64), LaneQos::new(1, Duration::from_millis(1)));
+
+    // cold and empty: nothing to project from
+    assert_eq!(multi.projected_wait(0), None);
+    assert!(!multi.should_shed(0));
+    // unknown lane: never sheds (the bridge answers NoLane instead)
+    assert!(!multi.should_shed(7));
+
+    // backlogged but COLD — no completed round, no p99, no shedding:
+    // admission control must not guess on a lane it has no evidence for
+    for id in 0..4 {
+        multi.offer(0, Request::new(id, (id % 2) as usize, payload())).unwrap();
+    }
+    assert_eq!(multi.projected_wait(0), None);
+    assert!(!multi.should_shed(0));
+
+    // serve the backlog: p99 is now ~2ms (the round cost)
+    let mut out = Vec::new();
+    drain_all(&mut multi, &mut out).unwrap();
+    assert_eq!(out.len(), 4);
+
+    // warm but EMPTY: an idle lane never sheds
+    assert_eq!(multi.projected_wait(0), None);
+    assert!(!multi.should_shed(0));
+
+    // warm and backlogged: 4 pending / m=2 -> 2 rounds x ~2ms = ~4ms,
+    // far past the 1ms SLO
+    for id in 10..14 {
+        multi.offer(0, Request::new(id, (id % 2) as usize, payload())).unwrap();
+    }
+    let wait = multi.projected_wait(0).expect("backlog + observed rounds must project");
+    assert!(wait >= Duration::from_millis(3), "projection {wait:?} lost the round cost");
+    assert!(multi.should_shed(0));
+}
+
+// ---------------------------------------------------------------------------
+// adaptive ε (tentpole a)
+// ---------------------------------------------------------------------------
+
+/// The ε control loop derives each lane's boost margin from its own
+/// observed tail, clamps it to `[min_eps, slo/2]`, and never overrides
+/// an operator pin.
+#[test]
+fn adaptive_eps_tracks_round_tail_clamps_and_respects_pins() {
+    let floor = Duration::from_micros(200);
+    let fleet = echo("slow", 2, Duration::from_millis(2));
+    let mut multi = MultiServer::new();
+    // lane 0: tight SLO -> the 2ms tail clamps to slo/2
+    multi.add_lane_qos(&fleet, cfg(64), LaneQos::new(1, Duration::from_millis(1)));
+    // lane 1: same SLO, operator-pinned ε -> adaptation must not win
+    multi.add_lane_qos(
+        &fleet,
+        cfg(64),
+        LaneQos::new(1, Duration::from_millis(1)).with_boost_margin(Duration::from_micros(123)),
+    );
+    // lane 2: huge SLO -> the estimate passes through unclamped
+    multi.add_lane_qos(&fleet, cfg(64), LaneQos::default());
+
+    // no completed rounds: the refresh is a no-op, lanes keep resolving
+    // to their static margins
+    multi.refresh_adaptive_eps(floor);
+    for lane in 0..3 {
+        assert_eq!(multi.lane_adaptive_margin(lane), None);
+    }
+
+    // one round per lane establishes each tail
+    let mut out = Vec::new();
+    for lane in 0..3 {
+        multi.offer(lane, Request::new(100 + lane as u64, 0, payload())).unwrap();
+        multi.offer(lane, Request::new(200 + lane as u64, 1, payload())).unwrap();
+    }
+    drain_all(&mut multi, &mut out).unwrap();
+    assert_eq!(out.len(), 6);
+
+    multi.refresh_adaptive_eps(floor);
+
+    // lane 0: tail ~2ms, ceiling slo/2 = 500us -> clamped exactly there
+    assert_eq!(multi.lane_adaptive_margin(0), Some(Duration::from_micros(500)));
+    assert_eq!(multi.lane_boost_margin(0), Duration::from_micros(500));
+
+    // lane 1: adaptation runs, but the pin stays the effective ε
+    assert!(multi.lane_adaptive_margin(1).is_some());
+    assert_eq!(multi.lane_boost_margin(1), Duration::from_micros(123));
+
+    // lane 2: unclamped tracking — ε is the observed ~2ms tail itself
+    let eps2 = multi.lane_adaptive_margin(2).expect("lane 2 completed a round");
+    assert!(eps2 >= Duration::from_millis(2), "ε {eps2:?} below the observed tail");
+    assert!(eps2 < Duration::from_millis(500), "ε {eps2:?} not a plausible tail");
+    assert_eq!(multi.lane_boost_margin(2), eps2);
+
+    // steady state: with an unchanged tail the EWMA is a fixed point
+    multi.refresh_adaptive_eps(floor);
+    assert_eq!(multi.lane_adaptive_margin(0), Some(Duration::from_micros(500)));
+}
+
+// ---------------------------------------------------------------------------
+// failure cooldown (satellite 1)
+// ---------------------------------------------------------------------------
+
+/// A cooling lane disappears from QoS selection AND the deadline scan;
+/// siblings keep flowing; expiry is purely time-based.
+#[test]
+fn cooldown_masks_lane_from_selection_and_deadline_scan() {
+    let fleet = echo("mock", 2, Duration::ZERO);
+    let mut multi = MultiServer::new();
+    multi.add_lane(&fleet, cfg(16));
+    multi.add_lane(&fleet, cfg(16));
+
+    multi.offer(0, Request::new(1, 0, payload())).unwrap();
+    multi.offer(0, Request::new(2, 1, payload())).unwrap();
+    assert_eq!(multi.ready_lane(), Some(0));
+
+    // cool lane 0: it must vanish from selection and the deadline scan
+    multi.set_lane_cooldown(0, Instant::now() + Duration::from_secs(60));
+    assert!(multi.lane_cooling(0));
+    assert_eq!(multi.ready_lane(), None, "a cooling lane must not be selectable");
+    assert_eq!(multi.next_due_in(), None, "a cooling lane must not drive the nap deadline");
+
+    // a healthy sibling is unaffected
+    multi.offer(1, Request::new(3, 0, payload())).unwrap();
+    multi.offer(1, Request::new(4, 1, payload())).unwrap();
+    assert_eq!(multi.ready_lane(), Some(1));
+    let mut out = Vec::new();
+    let d = multi.dispatch_next(&mut out).unwrap().expect("sibling round is due");
+    assert_eq!(d.lane, 1);
+
+    // expiry is time-based: re-arm with an already-past deadline
+    multi.set_lane_cooldown(0, Instant::now());
+    std::thread::sleep(Duration::from_micros(50));
+    assert!(!multi.lane_cooling(0));
+    assert_eq!(multi.ready_lane(), Some(0));
+    drain_all(&mut multi, &mut out).unwrap();
+    assert_eq!(multi.pending(), 0);
+    assert_eq!(out.len(), 4);
+}
+
+/// `take_failed_lane` is one-shot, and a failed round requeues its
+/// requests so a later attempt serves them.
+#[test]
+fn failed_lane_attribution_is_one_shot_and_requests_survive() {
+    let flaky = FailingEcho::new("flaky", 2, &[4]);
+    flaky.fail_rounds(1);
+    let mut multi = MultiServer::new();
+    multi.add_lane(&flaky, cfg(16));
+    multi.offer(0, Request::new(1, 0, payload())).unwrap();
+    multi.offer(0, Request::new(2, 1, payload())).unwrap();
+
+    let mut out = Vec::new();
+    assert!(multi.dispatch_next(&mut out).is_err());
+    assert_eq!(multi.take_failed_lane(), Some(0));
+    assert_eq!(multi.take_failed_lane(), None, "attribution must be consumed exactly once");
+
+    // the failed round's requests were requeued in order
+    assert_eq!(multi.pending(), 2);
+    multi.dispatch_next(&mut out).unwrap().expect("recovered round");
+    assert_eq!(out.len(), 2);
+}
+
+/// The regression the cooldown fixes (satellite 1): a lane whose fleet
+/// fails 6 rounds in a row — twice the loop's consecutive-error budget
+/// of 3 — must neither kill the dispatch loop nor starve its healthy
+/// sibling, because each failure cools the lane long enough for
+/// sibling rounds to interleave and reset the error streak. Before the
+/// fix, the failed lane was re-picked immediately: three failures
+/// burned in microseconds and the loop died.
+#[test]
+fn persistently_failing_lane_neither_kills_loop_nor_starves_sibling() {
+    let flaky = FailingEcho::new("flaky", 2, &[4]);
+    flaky.fail_rounds(6);
+    // a MultiServer's lanes share one executor type, so the healthy
+    // sibling is a FailingEcho that simply never has failures armed
+    let steady = FailingEcho::new("steady", 2, &[4]);
+
+    let mut multi = MultiServer::new();
+    multi.add_lane(&flaky, cfg(16));
+    multi.add_lane(&steady, cfg(64));
+    let bridge = IngressBridge::new(256);
+
+    let flaky_reply = FrameQueue::new();
+    let steady_reply = FrameQueue::new();
+    let stop = AtomicBool::new(false);
+
+    let stats = std::thread::scope(|s| {
+        let dispatch = s.spawn(|| run_dispatch(&mut multi, &bridge));
+
+        // the doomed backlog: one full round on lane 0
+        for id in [1000u64, 1001] {
+            let env = Envelope {
+                lane: 0,
+                client_id: id,
+                req: Request::new(id, (id % 2) as usize, payload()),
+                reply: flaky_reply.clone(),
+            };
+            assert!(bridge.submit(env).is_ok());
+        }
+
+        // sibling traffic: keep lane 1 topped up (one pair per 200us —
+        // many pairs per 2ms cooldown window) until the flaky lane
+        // finally serves, so every failure has a healthy round after it
+        let producer = s.spawn(|| {
+            let mut sent = 0u64;
+            let mut id = 0u64;
+            while !stop.load(Ordering::Acquire) && sent < 50_000 {
+                for _ in 0..2 {
+                    let env = Envelope {
+                        lane: 1,
+                        client_id: id,
+                        req: Request::new(id, (id % 2) as usize, payload()),
+                        reply: steady_reply.clone(),
+                    };
+                    match bridge.submit(env) {
+                        Ok(()) => sent += 1,
+                        Err(SubmitError::Busy(_)) => {}
+                        Err(SubmitError::Closed(_)) => return sent,
+                    }
+                    id += 1;
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            sent
+        });
+
+        // both doomed requests must eventually be SERVED — 6 failures
+        // (requeue + cooldown each time), then the recovered round
+        for _ in 0..2 {
+            match pop_within(&flaky_reply, Duration::from_secs(10), "flaky lane responses") {
+                Frame::Response { id, .. } => assert!(id == 1000 || id == 1001),
+                f => panic!("flaky lane request must be served after recovery, got {f:?}"),
+            }
+        }
+        stop.store(true, Ordering::Release);
+        let sent = producer.join().unwrap();
+        bridge.close();
+        let stats = dispatch
+            .join()
+            .unwrap()
+            .expect("6 failures with cooldown must not kill the dispatch loop");
+
+        // the sibling was never starved: every submission got exactly
+        // one outcome, and virtually all of them were served (a Busy
+        // from a transiently full queue is backpressure, not starvation)
+        let (mut steady_served, mut steady_busy) = (0u64, 0u64);
+        while let Some(f) = steady_reply.try_pop() {
+            match f {
+                Frame::Response { lane: 1, .. } => steady_served += 1,
+                Frame::Reject { code: RejectCode::Busy, .. } => steady_busy += 1,
+                f => panic!("healthy sibling got an unexpected outcome: {f:?}"),
+            }
+        }
+        assert_eq!(steady_served + steady_busy, sent, "healthy sibling lost outcomes");
+        assert!(
+            steady_served >= sent - sent / 10,
+            "sibling starved: only {steady_served}/{sent} served"
+        );
+        stats
+    });
+
+    assert_eq!(stats.round_errors, 6, "all six injected failures must surface as retries");
+    assert_eq!(stats.shed, 0);
+}
+
+// ---------------------------------------------------------------------------
+// gauge freshness under saturation (satellite 2)
+// ---------------------------------------------------------------------------
+
+/// A saturated loop — always a round due, never reaching the idle
+/// poll — still republishes gauges within 2x the refresh cadence,
+/// because the time budget is also checked on the round path.
+#[test]
+fn saturated_loop_refreshes_gauges_within_twice_cadence() {
+    let fleet = echo("busy", 2, Duration::from_micros(500));
+    let mut multi = MultiServer::new();
+    multi.add_lane_qos(&fleet, cfg(8192), LaneQos::default());
+    let bridge = IngressBridge::new(8192);
+    let hub = Arc::new(ObsHub::new(1));
+    bridge.attach_obs(Arc::clone(&hub));
+
+    let reply = FrameQueue::new();
+    let stop = AtomicBool::new(false);
+
+    std::thread::scope(|s| {
+        let dispatch = s.spawn(|| run_dispatch(&mut multi, &bridge));
+
+        // oversubscribe ~5x: the backlog grows monotonically, so every
+        // gauge publish carries a new `pending` value
+        let producer = s.spawn(|| {
+            let mut id = 0u64;
+            while !stop.load(Ordering::Acquire) && id < 50_000 {
+                for _ in 0..2 {
+                    let env = Envelope {
+                        lane: 0,
+                        client_id: id,
+                        req: Request::new(id, (id % 2) as usize, payload()),
+                        reply: reply.clone(),
+                    };
+                    let _ = bridge.submit(env);
+                    id += 1;
+                }
+                std::thread::sleep(Duration::from_micros(100));
+            }
+        });
+
+        // wait for the first publish, then time gaps between observed
+        // gauge changes; the loop is saturated the whole time
+        let t0 = Instant::now();
+        let mut last = loop {
+            if let Some(g) = hub.gauges().first() {
+                break g.pending;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(2), "gauges never appeared");
+            std::thread::sleep(Duration::from_micros(100));
+        };
+        let mut gaps = Vec::new();
+        let mut mark = Instant::now();
+        while gaps.len() < 6 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "gauges went stale under load");
+            let now = hub.gauges().first().map(|g| g.pending).unwrap_or(last);
+            if now != last {
+                gaps.push(mark.elapsed());
+                mark = Instant::now();
+                last = now;
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        stop.store(true, Ordering::Release);
+        producer.join().unwrap();
+        bridge.close();
+        dispatch.join().unwrap().unwrap();
+
+        // the contract is the cadence bound; the min over six intervals
+        // tolerates individual scheduler hiccups without weakening it
+        let fastest = gaps.iter().min().unwrap();
+        assert!(
+            *fastest <= CADENCE * 2,
+            "saturated loop republished gauges every {fastest:?} at best — \
+             budget is 2x the {CADENCE:?} cadence"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// the overload property (satellite 4)
+// ---------------------------------------------------------------------------
+
+/// 120 seeded overload trials: with admission control active, every
+/// submission gets EXACTLY one outcome frame (served xor a typed
+/// reject), the shed counters match the frames bit-for-bit, and the
+/// served stream is byte-identical to an unshedded oracle restricted
+/// to the served set.
+#[test]
+fn overload_property_every_submission_one_outcome_and_serves_match_oracle() {
+    let mut total_shed = 0u64;
+    for seed in 0..120u64 {
+        let mut rng = Rng::new(0x51ED5 + seed);
+        let fleet = echo("prop", 2, Duration::from_micros(300));
+        let mut multi = MultiServer::new();
+        // SLO 500us against a 300us round: backlogs of >= 4 project past
+        // the deadline, so bursts shed their tails once the lane is warm
+        multi.add_lane_qos(&fleet, cfg(64), LaneQos::new(1, Duration::from_micros(500)));
+        let bridge = IngressBridge::new(256);
+        let reply = FrameQueue::new();
+        let mut submitted: Vec<(u64, usize)> = Vec::new();
+
+        let stats = std::thread::scope(|s| {
+            let dispatch = s.spawn(|| run_dispatch(&mut multi, &bridge));
+            let mut id = 0u64;
+            for _ in 0..6 {
+                for _ in 0..4 + rng.usize_below(9) {
+                    let model = rng.usize_below(2);
+                    let env = Envelope {
+                        lane: 0,
+                        client_id: id,
+                        req: seeded_request(id, model, &[4]),
+                        reply: reply.clone(),
+                    };
+                    match bridge.submit(env) {
+                        Ok(()) => submitted.push((id, model)),
+                        Err(_) => panic!("bridge cap 256 cannot fill at this volume"),
+                    }
+                    id += 1;
+                }
+                std::thread::sleep(Duration::from_micros(800));
+            }
+            bridge.close();
+            dispatch.join().unwrap().unwrap()
+        });
+
+        // exactly one outcome per submission, no spurious extras
+        let mut served: HashMap<u64, (u32, Vec<f32>)> = HashMap::new();
+        let mut rejected: HashMap<u64, RejectCode> = HashMap::new();
+        while let Some(f) = reply.try_pop() {
+            match f {
+                Frame::Response { id, model_idx, data, .. } => {
+                    assert!(
+                        served.insert(id, (model_idx, data)).is_none(),
+                        "seed {seed}: duplicate response for {id}"
+                    );
+                }
+                Frame::Reject { id, code, .. } => {
+                    assert!(
+                        matches!(
+                            code,
+                            RejectCode::Shed | RejectCode::Busy | RejectCode::Shutdown
+                        ),
+                        "seed {seed}: untyped overload reject {code:?} for {id}"
+                    );
+                    assert!(
+                        rejected.insert(id, code).is_none(),
+                        "seed {seed}: duplicate reject for {id}"
+                    );
+                }
+                f => panic!("seed {seed}: unexpected outcome frame {f:?}"),
+            }
+        }
+        assert_eq!(
+            served.len() + rejected.len(),
+            submitted.len(),
+            "seed {seed}: outcome count drifted from submissions"
+        );
+        for (id, _) in &submitted {
+            assert_ne!(
+                served.contains_key(id),
+                rejected.contains_key(id),
+                "seed {seed}: submission {id} must be served XOR rejected"
+            );
+        }
+
+        // counter exactness: scalar, per-lane row, and frames all agree
+        let shed_frames =
+            rejected.values().filter(|&&c| c == RejectCode::Shed).count() as u64;
+        let busy_frames =
+            rejected.values().filter(|&&c| c == RejectCode::Busy).count() as u64;
+        assert_eq!(stats.shed, shed_frames, "seed {seed}: shed counter != shed frames");
+        assert_eq!(stats.lane_busy, busy_frames, "seed {seed}: busy counter != busy frames");
+        let row = stats.lane_rejects.get(&0).copied().unwrap_or_default();
+        assert_eq!(row.shed, shed_frames, "seed {seed}: per-lane shed row drifted");
+        assert_eq!(row.busy, busy_frames, "seed {seed}: per-lane busy row drifted");
+        assert_eq!(stats.admitted, served.len() as u64, "seed {seed}: admitted != served");
+        assert_eq!(stats.responses, served.len() as u64);
+
+        // unshedded oracle: the same arrivals through a plain MultiServer
+        // with headroom — served ids must match byte-for-byte
+        let oracle_fleet = echo("prop", 2, Duration::ZERO);
+        let mut oracle = MultiServer::new();
+        oracle.add_lane(&oracle_fleet, cfg(4096));
+        let mut oresp = Vec::new();
+        for &(id, model) in &submitted {
+            oracle.offer(0, seeded_request(id, model, &[4])).unwrap();
+        }
+        drain_all(&mut oracle, &mut oresp).unwrap();
+        let odata: HashMap<u64, Vec<f32>> =
+            oresp.into_iter().map(|r| (r.id, r.output.data().to_vec())).collect();
+        for (id, (_, data)) in &served {
+            assert_eq!(
+                Some(data.as_slice()),
+                odata.get(id).map(|v| v.as_slice()),
+                "seed {seed}: served stream diverged from the unshedded oracle at {id}"
+            );
+        }
+
+        total_shed += shed_frames;
+    }
+    assert!(total_shed > 0, "120 overload trials never shed — the property is vacuous");
+}
