@@ -1,0 +1,33 @@
+//! `pallas-lint`: run the in-repo invariant lint (ADR-008) over
+//! `rust/src` and exit nonzero on any finding. Wired into CI as a
+//! required step *before* the build, so invariant violations fail fast.
+//!
+//! Usage: `pallas-lint [ROOT]` — ROOT defaults to this crate's `src/`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use netfuse::util::lint;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src"));
+    let findings = match lint::lint_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("pallas-lint: cannot lint {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if findings.is_empty() {
+        println!("pallas-lint: {} clean", root.display());
+        return ExitCode::SUCCESS;
+    }
+    for f in &findings {
+        eprintln!("{}", f.render());
+    }
+    eprintln!("pallas-lint: {} finding(s)", findings.len());
+    ExitCode::FAILURE
+}

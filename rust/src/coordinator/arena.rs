@@ -47,12 +47,13 @@
 //! instance count) through them is a ROADMAP follow-up.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, MutexGuard};
+use std::sync::Condvar;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
+use crate::util::lock::{LockGuard, LockRank, OrderedMutex};
 use crate::util::simd;
 
 /// How M per-instance inputs pack into the merged input (paper §3.1):
@@ -126,21 +127,25 @@ impl SlotMap {
     }
 
     /// Total group slots (the merged megabatch's instance count).
+    // LINT-ALLOW(offsets always holds lanes+1 entries, so last() exists)
     pub fn total(&self) -> usize {
         *self.offsets.last().unwrap()
     }
 
     /// First group slot of lane `k`.
+    // LINT-ALLOW(lane ids are validated against the map by callers; offsets holds lanes+1 entries)
     pub fn offset(&self, lane: usize) -> usize {
         self.offsets[lane]
     }
 
     /// Lane `k`'s window of group slots.
+    // LINT-ALLOW(lane ids are validated against the map by callers; offsets holds lanes+1 entries)
     pub fn slots_of(&self, lane: usize) -> std::ops::Range<usize> {
         self.offsets[lane]..self.offsets[lane + 1]
     }
 
     /// Lane `k`'s local slot `local` in group-slot space.
+    // LINT-ALLOW(lane ids are validated against the map by callers; offsets holds lanes+1 entries)
     pub fn group_slot(&self, lane: usize, local: usize) -> usize {
         debug_assert!(local < self.slots_of(lane).len(), "local slot out of lane window");
         self.offsets[lane] + local
@@ -149,6 +154,7 @@ impl SlotMap {
     /// `(lane, local_slot)` owning group slot `g` — the scatter
     /// direction: which lane's response routing a merged output window
     /// belongs to.
+    // LINT-ALLOW(partition_point over offsets yields an index below offsets.len())
     pub fn locate(&self, group_slot: usize) -> (usize, usize) {
         debug_assert!(group_slot < self.total(), "group slot out of range");
         // offsets is strictly increasing; find the last offset <= g
@@ -183,6 +189,7 @@ pub struct RoundArena {
 impl RoundArena {
     /// Allocate every buffer the round pipeline needs for `m` instances
     /// with per-request shape `request_shape` (`[bs, ...]`).
+    // LINT-ALLOW(shape vectors are length-validated right above the adjustment)
     pub fn new(layout: Layout, m: usize, request_shape: &[usize]) -> Result<RoundArena> {
         if m == 0 {
             bail!("arena needs at least one instance");
@@ -262,6 +269,7 @@ impl RoundArena {
     /// block, instance) windows — no allocation, no intermediate
     /// concat/stack. A slot that was already padded in the previous
     /// round keeps its zero window and skips even the zero-fill.
+    // LINT-ALLOW(pack iterates 0..m over the arena's own occupancy table)
     pub fn pack_with<'a>(
         &mut self,
         get: &(dyn Fn(usize) -> Option<&'a Tensor> + Sync),
@@ -304,6 +312,7 @@ impl RoundArena {
 
     /// Pack a full round given one payload per instance (bench/test
     /// convenience around [`RoundArena::pack_with`]).
+    // LINT-ALLOW(xs length equals m, checked before delegation to pack_with)
     pub fn pack_full(&mut self, xs: &[&Tensor]) -> Result<()> {
         if xs.len() != self.m {
             bail!("pack wants {} inputs, got {}", self.m, xs.len());
@@ -344,6 +353,7 @@ impl RoundArena {
     /// How many of member lane `lane`'s slots held payload in the last
     /// pack — the per-lane share of a coalesced megabatch (metrics
     /// attribution and pad-skip observability).
+    // LINT-ALLOW(slots_of yields in-range group slots by SlotMap construction)
     pub fn lane_occupied(&self, map: &SlotMap, lane: usize) -> usize {
         map.slots_of(lane).filter(|&g| self.occupied[g]).count()
     }
@@ -365,7 +375,7 @@ impl RoundArena {
 ///
 /// [`StagedInput`]: crate::runtime::StagedInput
 pub struct ArenaRing {
-    slots: Vec<Mutex<RoundArena>>,
+    slots: Vec<OrderedMutex<RoundArena>>,
     /// round-robin hint so concurrent rounds start on different slots
     next: AtomicUsize,
     /// rounds currently holding a reservation (observability: a gauge
@@ -375,7 +385,7 @@ pub struct ArenaRing {
     /// not on one arbitrary slot's mutex, which could be the longest-
     /// lived in-flight round while a neighboring slot frees first
     released: Condvar,
-    release_lock: Mutex<()>,
+    release_lock: OrderedMutex<()>,
     /// configuration cached outside the locks so load-time cross-checks
     /// and sharing validation never contend with in-flight rounds
     layout: Layout,
@@ -387,7 +397,7 @@ pub struct ArenaRing {
 /// One reserved ring slot: derefs to its [`RoundArena`] and releases
 /// the reservation (and the in-flight gauge) on drop.
 pub struct RingSlot<'a> {
-    guard: MutexGuard<'a, RoundArena>,
+    guard: LockGuard<'a, RoundArena>,
     index: usize,
     ring: &'a ArenaRing,
 }
@@ -416,8 +426,10 @@ impl Drop for RingSlot<'_> {
     fn drop(&mut self) {
         self.ring.in_flight.fetch_sub(1, Ordering::Relaxed);
         // pair the notify with the lock so an acquirer that failed its
-        // sweep and is about to park cannot miss this release
-        let _g = self.ring.release_lock.lock().unwrap();
+        // sweep and is about to park cannot miss this release. The slot
+        // guard is still held here, which is why ArenaSlot < ArenaRelease
+        // in the declared hierarchy (ADR-008).
+        let _g = self.ring.release_lock.lock();
         self.ring.released.notify_one();
     }
 }
@@ -427,6 +439,7 @@ impl ArenaRing {
     /// shape `request_shape` (`[bs, ...]`). `depth >= 2` — a one-deep
     /// "ring" is the PR 1 lock-spanning arena, which serializes rounds
     /// end to end and defeats the type's purpose.
+    // LINT-ALLOW(depth >= 2 is validated, so slots[0] exists)
     pub fn new(
         layout: Layout,
         m: usize,
@@ -437,15 +450,18 @@ impl ArenaRing {
             bail!("arena ring needs depth >= 2, got {depth} (depth 1 cannot overlap rounds)");
         }
         let slots = (0..depth)
-            .map(|_| RoundArena::new(layout, m, request_shape).map(Mutex::new))
+            .map(|_| {
+                RoundArena::new(layout, m, request_shape)
+                    .map(|a| OrderedMutex::new(LockRank::ArenaSlot, a))
+            })
             .collect::<Result<Vec<_>>>()?;
-        let merged_shape = slots[0].lock().unwrap().merged_shape().to_vec();
+        let merged_shape = slots[0].lock().merged_shape().to_vec();
         Ok(ArenaRing {
             slots,
             next: AtomicUsize::new(0),
             in_flight: AtomicUsize::new(0),
             released: Condvar::new(),
-            release_lock: Mutex::new(()),
+            release_lock: OrderedMutex::new(LockRank::ArenaRelease, ()),
             layout,
             m,
             request_shape: request_shape.to_vec(),
@@ -498,9 +514,9 @@ impl ArenaRing {
             // decrements BEFORE taking the lock); the 1ms timeout is a
             // backstop against notify_one going to a thread that then
             // loses the re-acquire race.
-            let g = self.release_lock.lock().unwrap();
+            let g = self.release_lock.lock();
             if self.in_flight.load(Ordering::Relaxed) >= self.slots.len() {
-                let _ = self.released.wait_timeout(g, Duration::from_millis(1)).unwrap();
+                let _ = g.wait_timeout(&self.released, Duration::from_millis(1));
             }
         }
     }
@@ -508,12 +524,13 @@ impl ArenaRing {
     /// Acquire a free slot without blocking, or `None` when every slot
     /// has a round in flight (lets a dispatch thread choose other work
     /// over waiting on the ring).
+    // LINT-ALLOW(scan iterates 0..depth over the slot vec)
     pub fn try_acquire(&self) -> Option<RingSlot<'_>> {
         let depth = self.slots.len();
         let start = self.next.fetch_add(1, Ordering::Relaxed);
         for k in 0..depth {
             let i = (start + k) % depth;
-            if let Ok(guard) = self.slots[i].try_lock() {
+            if let Some(guard) = self.slots[i].try_lock() {
                 self.in_flight.fetch_add(1, Ordering::Relaxed);
                 return Some(RingSlot { guard, index: i, ring: self });
             }

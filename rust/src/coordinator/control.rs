@@ -45,12 +45,13 @@
 //! [`Topology`]: super::multi::Topology
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::ingress::qos::LaneQos;
+use crate::util::lock::{LockRank, OrderedMutex};
 
 use super::multi::{LaneSpec, ParallelDispatcher, Topology, TopologySnapshot};
 use super::server::ServerConfig;
@@ -61,7 +62,7 @@ use super::service::{Fleet, RoundExecutor};
 // ---------------------------------------------------------------------------
 
 struct Cell<T> {
-    slot: Mutex<Option<std::result::Result<T, String>>>,
+    slot: OrderedMutex<Option<std::result::Result<T, String>>>,
     done: Condvar,
 }
 
@@ -76,7 +77,10 @@ pub struct Ack<T>(Option<Arc<Cell<T>>>);
 
 /// A fresh, unresolved completion pair.
 pub fn ticket<T>() -> (Ticket<T>, Ack<T>) {
-    let cell = Arc::new(Cell { slot: Mutex::new(None), done: Condvar::new() });
+    let cell = Arc::new(Cell {
+        slot: OrderedMutex::new(LockRank::Ticket, None),
+        done: Condvar::new(),
+    });
     (Ticket(Arc::clone(&cell)), Ack(Some(cell)))
 }
 
@@ -86,7 +90,7 @@ impl<T> Ticket<T> {
     /// result is then discarded).
     pub fn wait(self, timeout: Duration) -> Result<T> {
         let deadline = Instant::now() + timeout;
-        let mut slot = self.0.slot.lock().unwrap();
+        let mut slot = self.0.slot.lock();
         loop {
             if let Some(res) = slot.take() {
                 return res.map_err(|e| anyhow!(e)).context("control command failed");
@@ -95,7 +99,7 @@ impl<T> Ticket<T> {
             if now >= deadline {
                 bail!("control command not acknowledged within {timeout:?}");
             }
-            let (next, _) = self.0.done.wait_timeout(slot, deadline - now).unwrap();
+            let (next, _) = slot.wait_timeout(&self.0.done, deadline - now);
             slot = next;
         }
     }
@@ -105,7 +109,6 @@ impl<T> Ticket<T> {
         self.0
             .slot
             .lock()
-            .unwrap()
             .take()
             .map(|res| res.map_err(|e| anyhow!(e).context("control command failed")))
     }
@@ -116,7 +119,7 @@ impl<T> Ack<T> {
     /// because `complete` consumes the ack).
     pub fn complete(mut self, res: std::result::Result<T, String>) {
         if let Some(cell) = self.0.take() {
-            *cell.slot.lock().unwrap() = Some(res);
+            *cell.slot.lock() = Some(res);
             cell.done.notify_all();
         }
     }
@@ -125,7 +128,7 @@ impl<T> Ack<T> {
 impl<T> Drop for Ack<T> {
     fn drop(&mut self) {
         if let Some(cell) = self.0.take() {
-            *cell.slot.lock().unwrap() =
+            *cell.slot.lock() =
                 Some(Err("control command dropped without acknowledgement".to_string()));
             cell.done.notify_all();
         }
@@ -198,28 +201,28 @@ impl<'f, E: RoundExecutor> LaneCmd<'f, E> {
 /// One partition's command queue: controller threads push, the
 /// partition's dispatch thread pops between rounds.
 pub struct PartControl<'f, E: RoundExecutor = Fleet> {
-    q: Mutex<VecDeque<LaneCmd<'f, E>>>,
+    q: OrderedMutex<VecDeque<LaneCmd<'f, E>>>,
 }
 
 impl<'f, E: RoundExecutor> Default for PartControl<'f, E> {
     fn default() -> Self {
-        PartControl { q: Mutex::new(VecDeque::new()) }
+        PartControl { q: OrderedMutex::new(LockRank::ControlQueue, VecDeque::new()) }
     }
 }
 
 impl<'f, E: RoundExecutor> PartControl<'f, E> {
     pub(crate) fn push(&self, cmd: LaneCmd<'f, E>) {
-        self.q.lock().unwrap().push_back(cmd);
+        self.q.lock().push_back(cmd);
     }
 
     /// Pop the next pending command (dispatch-thread side).
     pub fn pop(&self) -> Option<LaneCmd<'f, E>> {
-        self.q.lock().unwrap().pop_front()
+        self.q.lock().pop_front()
     }
 
     /// Commands waiting to be applied.
     pub fn len(&self) -> usize {
-        self.q.lock().unwrap().len()
+        self.q.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {

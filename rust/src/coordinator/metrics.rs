@@ -17,6 +17,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::util::lock::LockRank;
 use crate::util::shard::{ShardHandle, Shardable, Sharded};
 use crate::util::stats::{fmt_secs, Latencies};
 
@@ -110,6 +111,10 @@ impl MetricsCore {
 }
 
 impl Shardable for MetricsCore {
+    // read by `ObsHub::report` while the hub's `metrics` registration
+    // slot (ObsMeta) is held, so metrics shards rank above it (ADR-008)
+    const RANK: LockRank = LockRank::MetricsShard;
+
     fn merge_from(&mut self, other: &Self) {
         self.request_latency.merge_from(&other.request_latency);
         self.round_latency.merge_from(&other.round_latency);

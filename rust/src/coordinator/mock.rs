@@ -19,12 +19,12 @@
 //! the tests that need them (see `rust/tests/coordinator_tests.rs`).
 
 use std::ops::Range;
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
+use crate::util::lock::{LockRank, OrderedMutex};
 
 use super::service::RoundExecutor;
 use super::strategy::StrategyKind;
@@ -44,7 +44,7 @@ pub struct EchoExecutor {
     input_shape: Vec<usize>,
     round_cost: Duration,
     swap_cost: Duration,
-    versions: Mutex<Vec<u64>>,
+    versions: OrderedMutex<Vec<u64>>,
 }
 
 impl EchoExecutor {
@@ -55,7 +55,7 @@ impl EchoExecutor {
             input_shape: input_shape.to_vec(),
             round_cost,
             swap_cost: Duration::ZERO,
-            versions: Mutex::new(vec![0; m]),
+            versions: OrderedMutex::new(LockRank::ModelState, vec![0; m]),
         }
     }
 
@@ -68,7 +68,7 @@ impl EchoExecutor {
 
     /// Current weight version of slot `i` (0 = never swapped).
     pub fn version(&self, i: usize) -> u64 {
-        self.versions.lock().unwrap()[i]
+        self.versions.lock()[i]
     }
 }
 
@@ -95,7 +95,7 @@ impl RoundExecutor for EchoExecutor {
         if !self.round_cost.is_zero() {
             std::thread::sleep(self.round_cost);
         }
-        let versions = self.versions.lock().unwrap();
+        let versions = self.versions.lock();
         outs.clear();
         for i in 0..self.m {
             let mut out = get(i).cloned();
@@ -124,7 +124,7 @@ impl RoundExecutor for EchoExecutor {
         if !self.swap_cost.is_zero() {
             std::thread::sleep(self.swap_cost);
         }
-        let mut versions = self.versions.lock().unwrap();
+        let mut versions = self.versions.lock();
         for v in &mut versions[slots] {
             *v = tag;
         }

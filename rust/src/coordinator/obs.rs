@@ -32,7 +32,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::ingress::bridge::IngressStats;
@@ -40,6 +40,7 @@ use crate::ingress::frame::{Frame, RejectCode};
 use crate::ingress::transport::FrameQueue;
 use crate::util::hist::Hist;
 use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::lock::{LockRank, OrderedMutex};
 use crate::util::shard::{ShardHandle, Shardable, Sharded};
 
 use super::arena::ArenaRing;
@@ -128,6 +129,10 @@ impl ObsCore {
 }
 
 impl Shardable for ObsCore {
+    // tracer shards are folded while the admit path's stats-shard
+    // guard is held, so they rank above StatsShard (ADR-008)
+    const RANK: LockRank = LockRank::ObsShard;
+
     fn merge_from(&mut self, other: &Self) {
         if other.lanes.len() > self.lanes.len() {
             self.lanes.resize_with(other.lanes.len(), LaneStages::default);
@@ -299,6 +304,10 @@ impl EventRing {
 }
 
 impl Shardable for EventRing {
+    // recorder rings are pushed to under the same held stats-shard
+    // guard as the tracer shards (ADR-008)
+    const RANK: LockRank = LockRank::ObsShard;
+
     fn merge_from(&mut self, other: &Self) {
         let cap = self.cap.max(other.cap);
         let mut all = self.events();
@@ -327,7 +336,7 @@ pub struct FlightRecorder {
     epoch: Instant,
     seq: Arc<AtomicU64>,
     rings: Arc<Sharded<EventRing>>,
-    last: Mutex<Option<Dump>>,
+    last: OrderedMutex<Option<Dump>>,
 }
 
 impl FlightRecorder {
@@ -336,7 +345,7 @@ impl FlightRecorder {
             epoch: Instant::now(),
             seq: Arc::new(AtomicU64::new(0)),
             rings: Arc::new(Sharded::new(threads)),
-            last: Mutex::new(None),
+            last: OrderedMutex::new(LockRank::ObsMeta, None),
         }
     }
 
@@ -371,12 +380,12 @@ impl FlightRecorder {
             events.len(),
             events.last().map(|e| e.seq).map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
         );
-        *self.last.lock().unwrap() = Some(Dump { reason: reason.to_string(), events });
+        *self.last.lock() = Some(Dump { reason: reason.to_string(), events });
     }
 
     /// The most recent dump, if any was taken.
     pub fn last_dump(&self) -> Option<Dump> {
-        self.last.lock().unwrap().clone()
+        self.last.lock().clone()
     }
 }
 
@@ -445,10 +454,14 @@ pub struct LaneGauge {
 pub struct ObsHub {
     stages: Arc<Sharded<ObsCore>>,
     pub recorder: FlightRecorder,
-    gauges: Mutex<HashMap<usize, LaneGauge>>,
-    queries: Mutex<VecDeque<(u64, FrameQueue)>>,
-    rings: Mutex<Vec<(String, Arc<ArenaRing>)>>,
-    metrics: Mutex<Option<Arc<MetricsHub>>>,
+    // all four registries share the ObsMeta rank: none is ever held
+    // while another is acquired (each accessor's guard is transient),
+    // and the one nested acquisition — `report` reading the MetricsHub
+    // shards under the `metrics` guard — goes UP to MetricsShard
+    gauges: OrderedMutex<HashMap<usize, LaneGauge>>,
+    queries: OrderedMutex<VecDeque<(u64, FrameQueue)>>,
+    rings: OrderedMutex<Vec<(String, Arc<ArenaRing>)>>,
+    metrics: OrderedMutex<Option<Arc<MetricsHub>>>,
 }
 
 impl ObsHub {
@@ -458,10 +471,10 @@ impl ObsHub {
         ObsHub {
             stages: Arc::new(Sharded::new(threads)),
             recorder: FlightRecorder::new(threads),
-            gauges: Mutex::new(HashMap::new()),
-            queries: Mutex::new(VecDeque::new()),
-            rings: Mutex::new(Vec::new()),
-            metrics: Mutex::new(None),
+            gauges: OrderedMutex::new(LockRank::ObsMeta, HashMap::new()),
+            queries: OrderedMutex::new(LockRank::ObsMeta, VecDeque::new()),
+            rings: OrderedMutex::new(LockRank::ObsMeta, Vec::new()),
+            metrics: OrderedMutex::new(LockRank::ObsMeta, None),
         }
     }
 
@@ -482,38 +495,38 @@ impl ObsHub {
 
     /// Publish (or refresh) one lane's gauge, keyed by global lane id.
     pub fn publish_gauge(&self, g: LaneGauge) {
-        self.gauges.lock().unwrap().insert(g.global, g);
+        self.gauges.lock().insert(g.global, g);
     }
 
     /// Drop a retired lane's gauge.
     pub fn drop_gauge(&self, global: usize) {
-        self.gauges.lock().unwrap().remove(&global);
+        self.gauges.lock().remove(&global);
     }
 
     pub fn gauges(&self) -> Vec<LaneGauge> {
-        let mut v: Vec<LaneGauge> = self.gauges.lock().unwrap().values().copied().collect();
+        let mut v: Vec<LaneGauge> = self.gauges.lock().values().copied().collect();
         v.sort_by_key(|g| g.global);
         v
     }
 
     /// Track an [`ArenaRing`]'s in-flight gauge in reports.
     pub fn track_ring(&self, label: &str, ring: Arc<ArenaRing>) {
-        self.rings.lock().unwrap().push((label.to_string(), ring));
+        self.rings.lock().push((label.to_string(), ring));
     }
 
     /// Include a [`MetricsHub`]'s merged aggregates in reports.
     pub fn attach_metrics(&self, hub: Arc<MetricsHub>) {
-        *self.metrics.lock().unwrap() = Some(hub);
+        *self.metrics.lock() = Some(hub);
     }
 
     /// Queue one `ObsQuery` for the next dispatch-loop poll; the answer
     /// goes to `reply` as a `Frame::ObsReport` with the same `id`.
     pub fn enqueue_query(&self, id: u64, reply: FrameQueue) {
-        self.queries.lock().unwrap().push_back((id, reply));
+        self.queries.lock().push_back((id, reply));
     }
 
     pub fn has_queries(&self) -> bool {
-        !self.queries.lock().unwrap().is_empty()
+        !self.queries.lock().is_empty()
     }
 
     /// Answer every pending query with one report built from `stats`
@@ -522,7 +535,7 @@ impl ObsHub {
     /// the lock, so concurrent answering threads never double-answer.
     pub fn answer(&self, stats: &IngressStats, topo: Option<&TopologySnapshot>) -> usize {
         let waiting: Vec<(u64, FrameQueue)> = {
-            let mut q = self.queries.lock().unwrap();
+            let mut q = self.queries.lock();
             if q.is_empty() {
                 return 0;
             }
@@ -575,7 +588,7 @@ impl ObsHub {
                 .filter(|(_, m)| m.is_none())
                 .map(|(i, _)| num(i as f64))
         }));
-        let rings = arr(self.rings.lock().unwrap().iter().map(|(label, ring)| {
+        let rings = arr(self.rings.lock().iter().map(|(label, ring)| {
             obj(vec![
                 ("label", s(label)),
                 ("depth", num(ring.depth() as f64)),
@@ -603,7 +616,7 @@ impl ObsHub {
                 ("shed", num(r.shed as f64)),
             ])
         }));
-        let metrics = self.metrics.lock().unwrap().as_ref().map(|hub| {
+        let metrics = self.metrics.lock().as_ref().map(|hub| {
             let m = hub.read();
             obj(vec![
                 ("completed_requests", num(m.completed_requests as f64)),

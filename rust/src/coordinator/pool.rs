@@ -25,32 +25,34 @@
 use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Result};
+
+use crate::util::lock::{LockRank, OrderedMutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 struct Shared {
     /// (pending jobs, shutdown flag)
-    queue: Mutex<(VecDeque<Job>, bool)>,
+    queue: OrderedMutex<(VecDeque<Job>, bool)>,
     ready: Condvar,
 }
 
 /// Count-down latch: one round's completion barrier.
 struct Latch {
-    remaining: Mutex<usize>,
+    remaining: OrderedMutex<usize>,
     done: Condvar,
 }
 
 impl Latch {
     fn new(n: usize) -> Latch {
-        Latch { remaining: Mutex::new(n), done: Condvar::new() }
+        Latch { remaining: OrderedMutex::new(LockRank::PoolLatch, n), done: Condvar::new() }
     }
 
     fn count_down(&self) {
-        let mut g = self.remaining.lock().unwrap();
+        let mut g = self.remaining.lock();
         *g -= 1;
         if *g == 0 {
             self.done.notify_all();
@@ -58,9 +60,9 @@ impl Latch {
     }
 
     fn wait(&self) {
-        let mut g = self.remaining.lock().unwrap();
+        let mut g = self.remaining.lock();
         while *g > 0 {
-            g = self.done.wait(g).unwrap();
+            g = g.wait(&self.done);
         }
     }
 }
@@ -81,13 +83,13 @@ impl Drop for LatchGuard {
 /// many threads as its strategies actually request.
 pub struct WorkerPool {
     shared: Arc<Shared>,
-    handles: Mutex<Vec<JoinHandle<()>>>,
+    handles: OrderedMutex<Vec<JoinHandle<()>>>,
 }
 
 fn worker_loop(shared: Arc<Shared>) {
     loop {
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = shared.queue.lock();
             loop {
                 if let Some(j) = q.0.pop_front() {
                     break j;
@@ -95,7 +97,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 if q.1 {
                     return;
                 }
-                q = shared.ready.wait(q).unwrap();
+                q = q.wait(&shared.ready);
             }
         };
         // A panicking job must not kill the worker: the panic is caught
@@ -122,10 +124,10 @@ impl WorkerPool {
     pub fn new(workers: usize) -> WorkerPool {
         let pool = WorkerPool {
             shared: Arc::new(Shared {
-                queue: Mutex::new((VecDeque::new(), false)),
+                queue: OrderedMutex::new(LockRank::PoolQueue, (VecDeque::new(), false)),
                 ready: Condvar::new(),
             }),
-            handles: Mutex::new(Vec::new()),
+            handles: OrderedMutex::new(LockRank::PoolHandles, Vec::new()),
         };
         pool.ensure_workers(workers);
         pool
@@ -158,7 +160,7 @@ impl WorkerPool {
     /// for — `Hybrid {procs: 2}` costs 2 threads, not M — while a later
     /// `Concurrent` round can still widen it.
     pub fn ensure_workers(&self, n: usize) {
-        let mut handles = self.handles.lock().unwrap();
+        let mut handles = self.handles.lock();
         while handles.len() < n.max(1) {
             let shared = self.shared.clone();
             handles.push(std::thread::spawn(move || worker_loop(shared)));
@@ -166,7 +168,7 @@ impl WorkerPool {
     }
 
     pub fn workers(&self) -> usize {
-        self.handles.lock().unwrap().len()
+        self.handles.lock().len()
     }
 
     /// Run a batch of borrowed jobs to completion on the pool.
@@ -180,7 +182,7 @@ impl WorkerPool {
         let latch = Arc::new(Latch::new(jobs.len()));
         let n_jobs = jobs.len();
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = self.shared.queue.lock();
             for job in jobs {
                 // SAFETY: `job` only needs to live for 'scope; the latch
                 // wait below keeps this stack frame alive until every
@@ -225,7 +227,8 @@ impl WorkerPool {
         }
         let procs = procs.max(1).min(n);
         let chunk = n.div_ceil(procs);
-        let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let slots: Vec<OrderedMutex<Option<Result<T>>>> =
+            (0..n).map(|_| OrderedMutex::new(LockRank::PoolResult, None)).collect();
         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(procs);
         for p in 0..procs {
             let lo = p * chunk;
@@ -244,7 +247,7 @@ impl WorkerPool {
                         |p| Err(anyhow!("worker job {i} panicked: {}", panic_message(&*p))),
                     );
                     let failed = r.is_err();
-                    *slots[i].lock().unwrap() = Some(r);
+                    *slots[i].lock() = Some(r);
                     if failed {
                         break;
                     }
@@ -254,7 +257,7 @@ impl WorkerPool {
         self.scope(jobs);
         let mut out = Vec::with_capacity(n);
         for (i, slot) in slots.into_iter().enumerate() {
-            match slot.into_inner().unwrap() {
+            match slot.into_inner() {
                 Some(Ok(t)) => out.push(t),
                 Some(Err(e)) => return Err(e),
                 None => bail!("worker produced no output for item {i}"),
@@ -267,11 +270,11 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = self.shared.queue.lock();
             q.1 = true;
             self.shared.ready.notify_all();
         }
-        for h in self.handles.get_mut().unwrap().drain(..) {
+        for h in self.handles.get_mut().drain(..) {
             let _ = h.join();
         }
     }

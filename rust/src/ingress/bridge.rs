@@ -39,7 +39,7 @@
 //! [`QosScheduler`]: super::qos::QosScheduler
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -52,6 +52,7 @@ use crate::coordinator::request::{Request, Response};
 use crate::coordinator::server::Admit;
 use crate::coordinator::service::RoundExecutor;
 use crate::tensor::Tensor;
+use crate::util::lock::{LockRank, OrderedMutex};
 use crate::util::shard::{ShardHandle, Shardable, Sharded};
 
 use super::frame::{Frame, RejectCode};
@@ -85,12 +86,14 @@ struct BridgeState {
 }
 
 struct BridgeInner {
-    state: Mutex<BridgeState>,
+    // Bridge sits at the bottom of the lock hierarchy (ADR-008):
+    // producers and the dispatch thread take it with nothing else held.
+    state: OrderedMutex<BridgeState>,
     cap: usize,
     ready: Condvar,
     /// observability plane (ADR-006) — attach BEFORE dispatch starts:
     /// the dispatch loops read it once at entry
-    obs: Mutex<Option<Arc<ObsHub>>>,
+    obs: OrderedMutex<Option<Arc<ObsHub>>>,
 }
 
 /// Bounded MPSC handoff: many producers, one dispatch thread.
@@ -105,10 +108,13 @@ impl IngressBridge {
     pub fn new(cap: usize) -> IngressBridge {
         IngressBridge {
             inner: Arc::new(BridgeInner {
-                state: Mutex::new(BridgeState { q: VecDeque::new(), closed: false }),
+                state: OrderedMutex::new(
+                    LockRank::Bridge,
+                    BridgeState { q: VecDeque::new(), closed: false },
+                ),
                 cap: cap.max(1),
                 ready: Condvar::new(),
-                obs: Mutex::new(None),
+                obs: OrderedMutex::new(LockRank::BridgeObs, None),
             }),
         }
     }
@@ -118,18 +124,18 @@ impl IngressBridge {
     /// entry (attaching later silently observes nothing). Size the hub
     /// to the dispatch thread count (`parts + 1` for parallel runs).
     pub fn attach_obs(&self, hub: Arc<ObsHub>) {
-        *self.inner.obs.lock().unwrap() = Some(hub);
+        *self.inner.obs.lock() = Some(hub);
     }
 
     /// The attached observability hub, if any.
     pub fn obs(&self) -> Option<Arc<ObsHub>> {
-        self.inner.obs.lock().unwrap().clone()
+        self.inner.obs.lock().clone()
     }
 
     /// Non-blocking submit (producer side). Never parks the caller: a
     /// full or closed bridge returns the envelope for a rejection frame.
     pub fn submit(&self, env: Envelope) -> std::result::Result<(), SubmitError> {
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = self.inner.state.lock();
         if st.closed {
             return Err(SubmitError::Closed(env));
         }
@@ -143,14 +149,14 @@ impl IngressBridge {
 
     /// Non-blocking pop (dispatch side).
     pub fn try_pop(&self) -> Option<Envelope> {
-        self.inner.state.lock().unwrap().q.pop_front()
+        self.inner.state.lock().q.pop_front()
     }
 
     /// Pop, blocking up to `timeout` for an arrival. `None` on timeout
     /// or when the bridge is closed and drained.
     pub fn pop_timeout(&self, timeout: Duration) -> Option<Envelope> {
         let deadline = std::time::Instant::now() + timeout;
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = self.inner.state.lock();
         loop {
             if let Some(env) = st.q.pop_front() {
                 return Some(env);
@@ -162,9 +168,9 @@ impl IngressBridge {
             if now >= deadline {
                 return None;
             }
-            let (next, res) = self.inner.ready.wait_timeout(st, deadline - now).unwrap();
+            let (next, timed_out) = st.wait_timeout(&self.inner.ready, deadline - now);
             st = next;
-            if res.timed_out() && st.q.is_empty() {
+            if timed_out && st.q.is_empty() {
                 return None;
             }
         }
@@ -173,16 +179,16 @@ impl IngressBridge {
     /// Close the bridge: new submits fail `Closed`, queued envelopes
     /// remain poppable, blocked pops wake.
     pub fn close(&self) {
-        self.inner.state.lock().unwrap().closed = true;
+        self.inner.state.lock().closed = true;
         self.inner.ready.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.state.lock().unwrap().closed
+        self.inner.state.lock().closed
     }
 
     pub fn len(&self) -> usize {
-        self.inner.state.lock().unwrap().q.len()
+        self.inner.state.lock().q.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -413,6 +419,11 @@ impl IngressStats {
 }
 
 impl Shardable for IngressStats {
+    // StatsShard is held while the dispatch loop folds tracer stamps /
+    // recorder events (ObsShard) and pushes frames (ReplyQueue) — both
+    // rank above it (ADR-008 edges StatsShard < ObsShard, < ReplyQueue).
+    const RANK: LockRank = LockRank::StatsShard;
+
     fn merge_from(&mut self, other: &Self) {
         self.merge(other);
     }
@@ -535,6 +546,7 @@ fn dispatch_loop<'f, E: RoundExecutor>(
 /// The loop body of [`dispatch_loop`]; `retiring` is owned by the
 /// wrapper so outstanding quiesces survive an early return and get
 /// resolved there.
+// LINT-ALLOW(retiring[k] iterates indices of the local retiring vec)
 fn dispatch_core<'f, E: RoundExecutor>(
     multi: &mut MultiServer<'f, E>,
     bridge: &IngressBridge,
@@ -727,16 +739,20 @@ fn dispatch_core<'f, E: RoundExecutor>(
                         responses: d.responses,
                     });
                 }
-                let mut st = stats.lock();
-                st.rounds += 1;
                 // a merged round's responses span lanes; only a solo
-                // round's batch can be pinned to the picked lane
+                // round's batch can be pinned to the picked lane. The
+                // hint (a Topology read) is computed BEFORE the stats
+                // guard: StatsShard ranks above Topology (ADR-008).
                 let hint = if d.lanes_served > 1 {
-                    st.coalesced_rounds += 1;
                     usize::MAX
                 } else {
                     to_global(d.lane)
                 };
+                let mut st = stats.lock();
+                st.rounds += 1;
+                if d.lanes_served > 1 {
+                    st.coalesced_rounds += 1;
+                }
                 route_responses(&mut responses, &mut routes, hint, &mut st, tracer.as_ref());
                 drop(st);
                 // the stale-gauge fix (ADR-007 satellite): the gauge
@@ -996,6 +1012,7 @@ pub fn run_dispatch_elastic<'f, E: RoundExecutor>(
     run_parallel_inner(dispatcher, bridge, group_queue_cap, stats, Some(plane))
 }
 
+// LINT-ALLOW(partition ids come from the topology this fn built; join propagates worker panics deliberately)
 fn run_parallel_inner<'f, E: RoundExecutor>(
     dispatcher: &mut ParallelDispatcher<'f, E>,
     bridge: &IngressBridge,

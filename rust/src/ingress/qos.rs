@@ -201,6 +201,7 @@ impl QosScheduler {
     /// (`MultiServer::next_due_in`) must use this, not
     /// [`QosScheduler::boost_margin`], or a per-lane margin would nap
     /// the dispatch thread past its boost window.
+    // LINT-ALLOW(lane ids are issued by add_lane; callers pass back what we issued)
     pub fn lane_boost_margin(&self, lane: usize) -> Duration {
         let st = &self.lanes[lane];
         st.qos.boost_margin.or(st.adaptive_eps).unwrap_or(self.eps)
@@ -212,6 +213,7 @@ impl QosScheduler {
     /// `[min_eps, slo/2]` before calling this. A pinned
     /// [`LaneQos::boost_margin`] still overrides whatever is installed
     /// here, so operators keep the last word.
+    // LINT-ALLOW(lane ids are issued by add_lane; callers pass back what we issued)
     pub fn set_adaptive_margin(&mut self, lane: usize, eps: Option<Duration>) {
         self.lanes[lane].adaptive_eps = eps;
     }
@@ -219,6 +221,7 @@ impl QosScheduler {
     /// The adaptive ε currently installed for `lane` (observability
     /// read; `None` until the control loop has observed a round tail,
     /// or after the lane was retired).
+    // LINT-ALLOW(lane ids are issued by add_lane; callers pass back what we issued)
     pub fn adaptive_margin(&self, lane: usize) -> Option<Duration> {
         self.lanes[lane].adaptive_eps
     }
@@ -236,6 +239,7 @@ impl QosScheduler {
     /// with it (clamped to the new weight's ±2-cycle bounds), so
     /// weighted shares hold *across* the rebalance instead of the
     /// migrated lane restarting from zero and jumping the WDRR queue.
+    // LINT-ALLOW(indexes the slot this call just pushed)
     pub fn add_lane_carrying(&mut self, qos: LaneQos, deficit: i64) -> usize {
         let lane = self.add_lane(qos);
         let w = self.lanes[lane].qos.weight as i64 * CHARGE_UNIT;
@@ -254,6 +258,7 @@ impl QosScheduler {
     /// boost margin, weight — is cleared HERE, not lazily at reuse: a
     /// later lane reusing the id must start from zero credit, never from
     /// the previous tenant's inherited debt (or banked boost window).
+    // LINT-ALLOW(the control plane retires ids it previously added)
     pub fn remove_lane(&mut self, lane: usize) -> i64 {
         let st = &mut self.lanes[lane];
         let carried = st.deficit;
@@ -269,6 +274,7 @@ impl QosScheduler {
     /// [`QosScheduler::remove_lane`] returned when the same tenant is
     /// migrating in from another partition (clamped to the new weight's
     /// ±2-cycle bounds, mirroring the credit cap and debt floor).
+    // LINT-ALLOW(the control plane restores ids it previously retired)
     pub fn restore_lane(&mut self, lane: usize, qos: LaneQos, deficit: i64) {
         let qos = LaneQos { weight: qos.weight.max(1), ..qos };
         let w = qos.weight as i64 * CHARGE_UNIT;
@@ -281,6 +287,7 @@ impl QosScheduler {
     }
 
     /// Whether `lane` is currently schedulable (not retired).
+    // LINT-ALLOW(lane ids are issued by add_lane; callers pass back what we issued)
     pub fn is_live(&self, lane: usize) -> bool {
         self.lanes[lane].live
     }
@@ -290,6 +297,7 @@ impl QosScheduler {
         self.lanes.iter().filter(|l| l.live).count()
     }
 
+    // LINT-ALLOW(lane ids are issued by add_lane; callers pass back what we issued)
     pub fn qos(&self, lane: usize) -> LaneQos {
         self.lanes[lane].qos
     }
@@ -298,6 +306,7 @@ impl QosScheduler {
     /// (negative = rider debt). Observability read (ADR-006): published
     /// as a gauge and stamped on flight-recorder QoS-pick events; the
     /// scheduling path never consults it from outside.
+    // LINT-ALLOW(lane ids are issued by add_lane; callers pass back what we issued)
     pub fn deficit(&self, lane: usize) -> i64 {
         self.lanes[lane].deficit
     }
@@ -324,6 +333,7 @@ impl QosScheduler {
     /// Pure: charging happens in [`QosScheduler::commit`], so readiness
     /// probes can call this from `&self` without perturbing the WDRR
     /// state.
+    // LINT-ALLOW(select iterates 0..lanes.len() over the scheduler's own tables)
     pub fn select(&self, snap: &dyn Fn(usize) -> LaneSnapshot) -> Option<Pick> {
         let n = self.lanes.len();
         if n == 0 {
@@ -410,6 +420,7 @@ impl QosScheduler {
     /// share. A rider served beyond its remaining credit goes negative
     /// (debt), bounded at two cycles' worth like the credit cap, and
     /// works the debt off before its next pick.
+    // LINT-ALLOW(charges and picks reference lanes the scheduler itself produced)
     pub fn commit_served(
         &mut self,
         pick: &Pick,
@@ -477,6 +488,7 @@ impl QosScheduler {
     /// deadline for a sleep). The caller owns lane->group topology;
     /// this scan is deliberately topology-free so no lane class can be
     /// accidentally excluded from the nap cap.
+    // LINT-ALLOW(iterates 0..lanes.len() over the scheduler's own tables)
     pub fn next_due_in(
         &self,
         snap: &dyn Fn(usize) -> LaneSnapshot,

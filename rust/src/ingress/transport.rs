@@ -16,9 +16,11 @@
 use std::collections::VecDeque;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 
 use anyhow::{bail, Context, Result};
+
+use crate::util::lock::{LockRank, OrderedMutex};
 
 use super::frame::Frame;
 
@@ -56,7 +58,10 @@ pub struct FrameQueue {
 }
 
 struct Fq {
-    state: Mutex<FqState>,
+    // ReplyQueue is the top of the lock hierarchy: the dispatch thread
+    // pushes responses here while still holding its stats-shard guard
+    // (ADR-008 edge StatsShard < ReplyQueue).
+    state: OrderedMutex<FqState>,
     ready: Condvar,
 }
 
@@ -75,7 +80,10 @@ impl FrameQueue {
     pub fn new() -> FrameQueue {
         FrameQueue {
             inner: Arc::new(Fq {
-                state: Mutex::new(FqState { q: VecDeque::new(), closed: false }),
+                state: OrderedMutex::new(
+                    LockRank::ReplyQueue,
+                    FqState { q: VecDeque::new(), closed: false },
+                ),
                 ready: Condvar::new(),
             }),
         }
@@ -84,7 +92,7 @@ impl FrameQueue {
     /// Enqueue a frame. Returns `false` (frame dropped) if the queue is
     /// closed — the receiver is gone, so there is nobody to deliver to.
     pub fn push(&self, frame: Frame) -> bool {
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = self.inner.state.lock();
         if st.closed {
             return false;
         }
@@ -96,7 +104,7 @@ impl FrameQueue {
     /// Blocking pop: the next frame, or `None` once the queue is closed
     /// AND drained (frames queued before `close` are still delivered).
     pub fn pop(&self) -> Option<Frame> {
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = self.inner.state.lock();
         loop {
             if let Some(f) = st.q.pop_front() {
                 return Some(f);
@@ -104,27 +112,27 @@ impl FrameQueue {
             if st.closed {
                 return None;
             }
-            st = self.inner.ready.wait(st).unwrap();
+            st = st.wait(&self.inner.ready);
         }
     }
 
     pub fn try_pop(&self) -> Option<Frame> {
-        self.inner.state.lock().unwrap().q.pop_front()
+        self.inner.state.lock().q.pop_front()
     }
 
     /// Close the queue: pending frames stay deliverable, new pushes are
     /// dropped, and blocked poppers wake.
     pub fn close(&self) {
-        self.inner.state.lock().unwrap().closed = true;
+        self.inner.state.lock().closed = true;
         self.inner.ready.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.state.lock().unwrap().closed
+        self.inner.state.lock().closed
     }
 
     pub fn len(&self) -> usize {
-        self.inner.state.lock().unwrap().q.len()
+        self.inner.state.lock().q.len()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -28,11 +28,12 @@ use self::backend as xla;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::tensor::Tensor;
+use crate::util::lock::{LockRank, OrderedMutex};
 pub use manifest::{Artifact, Manifest, ModelEntry};
 
 /// Tensor -> host literal.
@@ -55,10 +56,14 @@ pub struct Module {
     exe: xla::PjRtLoadedExecutable,
 }
 
-// PJRT CPU executions are internally synchronized; the wrapper types are
-// plain pointers. Concurrency across threads mirrors the paper's
+// SAFETY: `Module` is immutable after compile (the executable is only
+// read), and PJRT CPU executions are internally synchronized; the
+// wrapper types are plain pointers into runtime-owned memory that lives
+// as long as the client. Concurrency across threads mirrors the paper's
 // process-per-model Concurrent baseline.
 unsafe impl Send for Module {}
+// SAFETY: see the Send impl above — `&Module` only exposes execute
+// paths PJRT already serializes internally.
 unsafe impl Sync for Module {}
 
 impl Module {
@@ -87,7 +92,12 @@ pub struct Bound {
     params: Vec<xla::PjRtBuffer>,
 }
 
+// SAFETY: `Bound` is an `Arc<Module>` plus device buffers that are
+// never mutated after bind; PJRT device buffers are plain handles whose
+// use (execute argument lists) is internally synchronized by PJRT.
 unsafe impl Send for Bound {}
+// SAFETY: see the Send impl above — shared access only reads the
+// immutable binding.
 unsafe impl Sync for Bound {}
 
 /// A device-resident input buffer produced by [`Bound::stage`]. The
@@ -102,6 +112,10 @@ pub struct StagedInput<'a> {
     _host: std::marker::PhantomData<&'a [f32]>,
 }
 
+// SAFETY: the staged buffer is a PJRT handle safe to move across
+// threads; the `PhantomData<&'a [f32]>` borrow keeps the host staging
+// memory pinned for exactly as long as the handle exists, so the
+// deferred host→device copy can run from any thread.
 unsafe impl Send for StagedInput<'_> {}
 
 impl Bound {
@@ -172,10 +186,14 @@ pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<Module>>>,
+    cache: OrderedMutex<HashMap<String, Arc<Module>>>,
 }
 
+// SAFETY: the PJRT client is thread-safe per the PJRT C API contract
+// (the stub backend is trivially so); the only interior mutability is
+// the compile cache, which is behind its own mutex.
 unsafe impl Send for Runtime {}
+// SAFETY: see the Send impl above.
 unsafe impl Sync for Runtime {}
 
 impl Runtime {
@@ -188,7 +206,7 @@ impl Runtime {
             client,
             dir: dir.to_path_buf(),
             manifest,
-            cache: Mutex::new(HashMap::new()),
+            cache: OrderedMutex::new(LockRank::RuntimeCache, HashMap::new()),
         })
     }
 
@@ -200,7 +218,7 @@ impl Runtime {
     /// most once per Runtime, amortized like the paper's offline merge).
     pub fn compile(&self, name: &str) -> Result<Arc<Module>> {
         {
-            let cache = self.cache.lock().unwrap();
+            let cache = self.cache.lock();
             if let Some(m) = cache.get(name) {
                 return Ok(m.clone());
             }
@@ -213,7 +231,7 @@ impl Runtime {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
         let m = Arc::new(Module { art, exe });
-        self.cache.lock().unwrap().insert(name.to_string(), m.clone());
+        self.cache.lock().insert(name.to_string(), m.clone());
         Ok(m)
     }
 

@@ -25,25 +25,37 @@ pub mod counting_alloc {
     /// (including growth via `realloc`).
     pub struct CountingAlloc;
 
+    // SAFETY: every method delegates verbatim to `System`, which
+    // upholds the `GlobalAlloc` contract; the only additions are
+    // relaxed atomic counter bumps, which allocate nothing and cannot
+    // unwind.
     unsafe impl GlobalAlloc for CountingAlloc {
+        // SAFETY: caller contract (valid `layout`) is forwarded
+        // unchanged to `System.alloc`.
         unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
             BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
             System.alloc(layout)
         }
 
+        // SAFETY: caller contract is forwarded unchanged to
+        // `System.alloc_zeroed`.
         unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
             BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
             System.alloc_zeroed(layout)
         }
 
+        // SAFETY: caller contract (ptr from this allocator, matching
+        // `layout`) is forwarded unchanged to `System.realloc`.
         unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
             BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
             System.realloc(ptr, layout, new_size)
         }
 
+        // SAFETY: caller contract (ptr from this allocator, matching
+        // `layout`) is forwarded unchanged to `System.dealloc`.
         unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
             System.dealloc(ptr, layout)
         }

@@ -1,0 +1,677 @@
+//! In-repo invariant lint (ADR-008): the engine behind `pallas-lint`.
+//!
+//! Four rules, each encoding a repo-wide invariant the compiler cannot
+//! check, run over every `.rs` file under `rust/src` by the
+//! `pallas-lint` binary (a required CI step before the build):
+//!
+//! 1. **`unsafe-needs-safety-comment`** — every line containing the
+//!    `unsafe` keyword must have a `SAFETY` note in the contiguous
+//!    comment/attribute block directly above it (doc comments count).
+//! 2. **`target-feature-call-outside-simd`** — functions declared with
+//!    `#[target_feature]` may only be called from `util/simd.rs`, the
+//!    one place with the runtime CPU-feature dispatch; a direct call
+//!    anywhere else can execute illegal instructions on older CPUs.
+//! 3. **`raw-lock-outside-util-lock`** — `std::sync::Mutex`/`RwLock`
+//!    may only be named inside `util/lock.rs`: everything else takes
+//!    rank-checked `OrderedMutex`/`OrderedRwLock` wrappers, which is
+//!    what makes the lockdep tracker's coverage total. (`Condvar` stays
+//!    raw — it carries no ordering of its own.)
+//! 4. **`hot-path-panic`** — in the hot-path modules (the dispatch
+//!    loop's per-round code: `coordinator/multi.rs`,
+//!    `ingress/bridge.rs`, `ingress/qos.rs`, `coordinator/arena.rs`),
+//!    `.unwrap()`, `.expect(...)` and slice indexing `x[i]` are banned:
+//!    a panic there kills a dispatch thread and strands every queued
+//!    request. `#[cfg(test)] mod` bodies are exempt.
+//!
+//! Suppression is explicit and audited: a comment
+//! `// LINT-ALLOW(reason)` — the reason is mandatory — exempts the
+//! next item (the whole body, brace-matched, when that item is a
+//! `fn`), or only its own line when it trails code. The lexer is
+//! hand-rolled (the offline registry has no syn/proc-macro stack): it
+//! tracks line/block comments (nested), string/char/raw-string
+//! literals, attributes and brace depth, which is exactly enough
+//! syntax for these four token-level rules.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Rule 1: `unsafe` without a `SAFETY` comment directly above.
+pub const RULE_SAFETY: &str = "unsafe-needs-safety-comment";
+/// Rule 2: direct `#[target_feature]` kernel call outside `util/simd.rs`.
+pub const RULE_KERNEL: &str = "target-feature-call-outside-simd";
+/// Rule 3: raw `std::sync` lock named outside `util/lock.rs`.
+pub const RULE_RAW_LOCK: &str = "raw-lock-outside-util-lock";
+/// Rule 4: panic-capable construct in a hot-path module.
+pub const RULE_HOT_PANIC: &str = "hot-path-panic";
+
+/// Modules where rule 4 applies (path suffix match): the code a
+/// dispatch thread runs per round or per admitted request.
+pub const HOT_PATH_SUFFIXES: &[&str] = &[
+    "coordinator/multi.rs",
+    "ingress/bridge.rs",
+    "ingress/qos.rs",
+    "coordinator/arena.rs",
+];
+
+const KERNEL_HOME_SUFFIX: &str = "util/simd.rs";
+const LOCK_HOME_SUFFIX: &str = "util/lock.rs";
+
+/// One lint violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Lint every `.rs` file under `root` (recursively, sorted for
+/// deterministic output).
+pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in paths {
+        let text = fs::read_to_string(&p)?;
+        files.push((p.to_string_lossy().replace('\\', "/"), text));
+    }
+    Ok(lint_sources(&files))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let p = entry?.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint a set of `(path, source)` pairs. Paths only matter as
+/// suffixes (hot-path membership, `util/simd.rs`, `util/lock.rs`), so
+/// tests can lint fixtures under any logical path they choose.
+pub fn lint_sources(files: &[(String, String)]) -> Vec<Finding> {
+    let scrubbed: Vec<(&str, Vec<Line>)> =
+        files.iter().map(|(p, s)| (p.as_str(), scrub(s))).collect();
+    let kernels = collect_kernels(&scrubbed);
+    let mut out = Vec::new();
+    for (path, lines) in &scrubbed {
+        check_file(path, lines, &kernels, &mut out);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// lexer: one source file -> per-line (code, comment) with literals blanked
+// ---------------------------------------------------------------------------
+
+struct Line {
+    /// Source text with comments removed and string/char literal
+    /// contents blanked (delimiters kept).
+    code: String,
+    /// Comment text on this line (line, doc, and block comments).
+    comment: String,
+}
+
+#[derive(Clone, Copy)]
+enum St {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(usize),
+    Char,
+}
+
+fn scrub(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(st, St::LineComment) {
+                st = St::Code;
+            }
+            lines.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    st = St::Str;
+                    i += 1;
+                } else if c == 'b' && next == Some('"') && !prev_is_ident(&code) {
+                    code.push('"');
+                    st = St::Str;
+                    i += 2;
+                } else if (c == 'r' || (c == 'b' && next == Some('r'))) && !prev_is_ident(&code) {
+                    let mut j = if c == 'b' { i + 2 } else { i + 1 };
+                    let mut hashes = 0usize;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        code.push('"');
+                        st = St::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    if next == Some('\\') {
+                        code.push('\'');
+                        st = St::Char;
+                        i += 1;
+                    } else if chars.get(i + 2) == Some(&'\'') && next != Some('\'') {
+                        code.push('\'');
+                        code.push('\'');
+                        i += 3; // 'x'
+                    } else {
+                        code.push('\''); // lifetime
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            St::BlockComment(d) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    st = St::BlockComment(d + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    st = if d == 1 { St::Code } else { St::BlockComment(d - 1) };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    code.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' && (0..h).all(|k| chars.get(i + 1 + k) == Some(&'#')) {
+                    code.push('"');
+                    st = St::Code;
+                    i += 1 + h;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Char => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    code.push('\'');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(Line { code, comment });
+    lines
+}
+
+/// Whether the last pushed code character continues an identifier —
+/// distinguishes the `r`/`b` of a raw/byte string prefix from the
+/// trailing letter of a plain ident (`for`, `attr`, ...).
+fn prev_is_ident(code: &str) -> bool {
+    code.chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte ranges of the identifiers in a scrubbed code line.
+fn idents(code: &str) -> Vec<(usize, usize)> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        if is_ident_char(c) && !c.is_ascii_digit() {
+            let start = i;
+            while i < bytes.len() && is_ident_char(bytes[i] as char) {
+                i += 1;
+            }
+            out.push((start, i));
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn has_ident(code: &str, name: &str) -> bool {
+    idents(code).iter().any(|&(s, e)| &code[s..e] == name)
+}
+
+// ---------------------------------------------------------------------------
+// scopes: #[cfg(test)] mod bodies and LINT-ALLOW ranges
+// ---------------------------------------------------------------------------
+
+/// Line index where the brace opened at/after `start` closes; stops at
+/// a `;` seen before any `{` (braceless items like `mod tests;`).
+fn brace_match(lines: &[Line], start: usize) -> usize {
+    let mut depth = 0i64;
+    let mut opened = false;
+    for (k, line) in lines.iter().enumerate().skip(start) {
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                ';' if !opened => return k,
+                _ => {}
+            }
+            if opened && depth == 0 {
+                return k;
+            }
+        }
+    }
+    lines.len().saturating_sub(1)
+}
+
+/// Index of the next line holding real code (skipping blanks and
+/// attribute-only lines), or `None`.
+fn next_code_line(lines: &[Line], from: usize) -> Option<usize> {
+    (from..lines.len()).find(|&j| {
+        let t = lines[j].code.trim();
+        !t.is_empty() && !t.starts_with("#[")
+    })
+}
+
+/// Mark the body of every `#[cfg(test)] mod` (rule 4's exemption; the
+/// other rules skip them too — tests are not hot paths and in-file
+/// test mods routinely unwrap).
+fn test_mod_lines(lines: &[Line]) -> Vec<bool> {
+    let mut skip = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if lines[i].code.contains("#[cfg(test)]") {
+            if let Some(j) = next_code_line(lines, i + 1) {
+                let t = lines[j].code.trim();
+                if t.starts_with("mod ") || t.starts_with("pub mod ") {
+                    let end = brace_match(lines, j);
+                    for s in skip.iter_mut().take(end + 1).skip(i) {
+                        *s = true;
+                    }
+                    i = end + 1;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    skip
+}
+
+/// Mark the lines each `LINT-ALLOW(reason)` comment covers. The reason
+/// is mandatory — an empty `LINT-ALLOW()` suppresses nothing.
+fn allow_lines(lines: &[Line]) -> Vec<bool> {
+    let mut allow = vec![false; lines.len()];
+    for i in 0..lines.len() {
+        let Some(pos) = lines[i].comment.find("LINT-ALLOW(") else {
+            continue;
+        };
+        let rest = &lines[i].comment[pos + "LINT-ALLOW(".len()..];
+        let Some(close) = rest.find(')') else {
+            continue;
+        };
+        if rest[..close].trim().is_empty() {
+            continue;
+        }
+        if !lines[i].code.trim().is_empty() {
+            allow[i] = true; // trailing comment: its own line only
+            continue;
+        }
+        let Some(j) = next_code_line(lines, i + 1) else {
+            continue;
+        };
+        let end = if has_ident(&lines[j].code, "fn") {
+            brace_match(lines, j)
+        } else {
+            j
+        };
+        for a in allow.iter_mut().take(end + 1).skip(i) {
+            *a = true;
+        }
+    }
+    allow
+}
+
+// ---------------------------------------------------------------------------
+// the rules
+// ---------------------------------------------------------------------------
+
+/// Names of functions declared under a `#[target_feature]` attribute
+/// anywhere in the linted set.
+fn collect_kernels(files: &[(&str, Vec<Line>)]) -> Vec<String> {
+    let mut names = Vec::new();
+    for (_, lines) in files {
+        let mut pending = false;
+        for line in lines {
+            let t = line.code.trim();
+            if t.is_empty() {
+                continue;
+            }
+            if t.contains("#[target_feature") {
+                pending = true;
+                continue;
+            }
+            if pending {
+                if t.starts_with("#[") {
+                    continue; // more attributes between
+                }
+                if let Some(name) = declared_fn_name(&line.code) {
+                    names.push(name.to_string());
+                }
+                pending = false;
+            }
+        }
+    }
+    names.sort();
+    names.dedup();
+    names
+}
+
+/// The identifier right after a `fn` keyword, if this line declares one.
+fn declared_fn_name(code: &str) -> Option<&str> {
+    let ids = idents(code);
+    let at = ids.iter().position(|&(s, e)| &code[s..e] == "fn")?;
+    let &(s, e) = ids.get(at + 1)?;
+    Some(&code[s..e])
+}
+
+/// Whether `code` calls `name` directly (ident followed by `(`, not a
+/// declaration).
+fn calls(code: &str, name: &str) -> bool {
+    let ids = idents(code);
+    for (k, &(s, e)) in ids.iter().enumerate() {
+        if &code[s..e] != name {
+            continue;
+        }
+        if k > 0 {
+            let (ps, pe) = ids[k - 1];
+            if &code[ps..pe] == "fn" {
+                continue; // the declaration itself
+            }
+        }
+        if code[e..].trim_start().starts_with('(') {
+            return true;
+        }
+    }
+    false
+}
+
+/// Whether the `unsafe` on line `i` has a `SAFETY` note on its own
+/// line or in the contiguous comment/attribute block directly above.
+fn safety_documented(lines: &[Line], i: usize) -> bool {
+    if lines[i].comment.contains("SAFETY") {
+        return true;
+    }
+    for j in (0..i).rev() {
+        let t = lines[j].code.trim();
+        let is_attr = t.starts_with("#[");
+        let is_comment_only = t.is_empty() && !lines[j].comment.is_empty();
+        if !is_attr && !is_comment_only {
+            return false; // blank line or real code breaks the block
+        }
+        if lines[j].comment.contains("SAFETY") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Whether `code` contains a slice/array indexing expression: a `[`
+/// whose previous non-space character ends a value (ident, `)`, `]`).
+/// Attribute `#[...]`, array types `[T; N]`, `vec![...]`, and slice
+/// types after a keyword (`&mut [T]`, `dyn [..]`-style positions) all
+/// have a non-value token before the bracket and do not match.
+fn has_indexing(code: &str) -> bool {
+    const KEYWORDS: &[&[u8]] = &[b"mut", b"dyn", b"in", b"as", b"return", b"else", b"const"];
+    let bytes = code.as_bytes();
+    for (p, &b) in bytes.iter().enumerate() {
+        if b != b'[' {
+            continue;
+        }
+        let mut q = p;
+        while q > 0 && bytes[q - 1] == b' ' {
+            q -= 1;
+        }
+        if q == 0 {
+            continue;
+        }
+        let prev = bytes[q - 1] as char;
+        if prev == ')' || prev == ']' {
+            return true;
+        }
+        if is_ident_char(prev) {
+            let mut s = q;
+            while s > 0 && is_ident_char(bytes[s - 1] as char) {
+                s -= 1;
+            }
+            if !KEYWORDS.contains(&&bytes[s..q]) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+fn check_file(path: &str, lines: &[Line], kernels: &[String], out: &mut Vec<Finding>) {
+    let skip = test_mod_lines(lines);
+    let allow = allow_lines(lines);
+    let hot = HOT_PATH_SUFFIXES.iter().any(|s| path.ends_with(s));
+    let kernel_home = path.ends_with(KERNEL_HOME_SUFFIX);
+    let lock_home = path.ends_with(LOCK_HOME_SUFFIX);
+    let mut push = |line: usize, rule: &'static str, msg: String| {
+        out.push(Finding { file: path.to_string(), line: line + 1, rule, msg });
+    };
+    for (i, line) in lines.iter().enumerate() {
+        if skip[i] || allow[i] {
+            continue;
+        }
+        let code = &line.code;
+        if has_ident(code, "unsafe") && !safety_documented(lines, i) {
+            push(
+                i,
+                RULE_SAFETY,
+                "`unsafe` without a `// SAFETY:` comment directly above".to_string(),
+            );
+        }
+        if !kernel_home {
+            for k in kernels {
+                if calls(code, k) {
+                    push(
+                        i,
+                        RULE_KERNEL,
+                        format!(
+                            "direct call to `#[target_feature]` fn `{k}` outside \
+                             util/simd.rs dispatch"
+                        ),
+                    );
+                }
+            }
+        }
+        if !lock_home && (has_ident(code, "Mutex") || has_ident(code, "RwLock")) {
+            push(
+                i,
+                RULE_RAW_LOCK,
+                "raw std::sync lock outside util/lock.rs; use OrderedMutex/OrderedRwLock"
+                    .to_string(),
+            );
+        }
+        if hot {
+            if code.contains(".unwrap()") {
+                push(i, RULE_HOT_PANIC, "`.unwrap()` in a hot-path module".to_string());
+            }
+            if code.contains(".expect(") {
+                push(i, RULE_HOT_PANIC, "`.expect(...)` in a hot-path module".to_string());
+            }
+            if has_indexing(code) {
+                push(i, RULE_HOT_PANIC, "slice indexing in a hot-path module".to_string());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_one(path: &str, src: &str) -> Vec<Finding> {
+        lint_sources(&[(path.to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn scrubber_strips_comments_and_literals() {
+        let src = "let a = \"unsafe [0] // not code\"; // Mutex in comment\nlet b = 'x';\n";
+        let lines = scrub(src);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(!lines[0].code.contains("Mutex"));
+        assert!(lines[0].comment.contains("Mutex"));
+        assert!(!has_indexing(&lines[0].code));
+        assert_eq!(lines[1].code.trim(), "let b = '';");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lines = scrub("fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        assert!(lines[0].code.contains("fn f<'a>"));
+    }
+
+    #[test]
+    fn unsafe_without_safety_is_flagged_and_with_is_not() {
+        let bad = lint_one("a.rs", "fn f() {\n    unsafe { g() }\n}\n");
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].rule, RULE_SAFETY);
+        assert_eq!(bad[0].line, 2);
+        let good = lint_one(
+            "a.rs",
+            "fn f() {\n    // SAFETY: g has no preconditions\n    unsafe { g() }\n}\n",
+        );
+        assert!(good.is_empty(), "{good:?}");
+    }
+
+    #[test]
+    fn safety_scan_crosses_attributes_but_not_code() {
+        let good = "/// SAFETY: caller passes valid pointers\n#[inline]\nunsafe fn f() {}\n";
+        assert!(lint_one("a.rs", good).is_empty());
+        let bad = "// SAFETY: stale, detached by real code\nlet x = 1;\nunsafe fn f() {}\n";
+        let f = lint_one("a.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RULE_SAFETY);
+    }
+
+    #[test]
+    fn kernel_calls_flagged_outside_simd_only() {
+        let src = "/// SAFETY: n valid elements\n#[target_feature(enable = \"avx2\")]\n\
+                   unsafe fn k(p: *mut f32) {}\nfn call() { k(p) }\n";
+        let f = lint_one("src/other.rs", src);
+        assert_eq!(f.iter().filter(|f| f.rule == RULE_KERNEL).count(), 1);
+        assert!(lint_one("src/util/simd.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_locks_flagged_outside_lock_home_only() {
+        let src = "use std::sync::Mutex;\nfn f() { let m = Mutex::new(0); }\n";
+        let f = lint_one("src/x.rs", src);
+        assert_eq!(f.iter().filter(|f| f.rule == RULE_RAW_LOCK).count(), 2);
+        assert!(lint_one("src/util/lock.rs", src).is_empty());
+        // OrderedMutex is a different identifier, not a match
+        assert!(lint_one("src/x.rs", "fn f(m: &OrderedMutex<u32>) {}\n").is_empty());
+    }
+
+    #[test]
+    fn hot_path_rules_apply_by_suffix() {
+        let src = "fn f(v: &[u32]) -> u32 { v.first().unwrap() + v[0] }\n";
+        assert!(lint_one("src/x.rs", src).is_empty());
+        let f = lint_one("src/ingress/qos.rs", src);
+        assert_eq!(f.iter().filter(|f| f.rule == RULE_HOT_PANIC).count(), 2);
+    }
+
+    #[test]
+    fn cfg_test_mods_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(v: &[u32]) -> u32 { v[0] }\n}\n";
+        assert!(lint_one("src/ingress/qos.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lint_allow_scopes_one_fn_with_reason() {
+        let allowed = "// LINT-ALLOW(index proven in bounds by construction)\n\
+                       fn f(v: &[u32]) -> u32 {\n    v[0]\n}\nfn g(v: &[u32]) -> u32 { v[1] }\n";
+        let f = lint_one("src/ingress/qos.rs", allowed);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 5, "only the un-allowed fn is flagged");
+        // the reason is mandatory
+        let bare = "// LINT-ALLOW()\nfn f(v: &[u32]) -> u32 { v[0] }\n";
+        assert_eq!(lint_one("src/ingress/qos.rs", bare).len(), 1);
+    }
+
+    #[test]
+    fn indexing_heuristic_spares_types_attrs_and_macros() {
+        for ok in [
+            "fn f(x: [f32; 4]) {}",
+            "#[derive(Debug)]",
+            "let v = vec![1, 2];",
+            "let s: &[u8] = b\"x\";",
+            "fn g(x: &mut [u32]) -> &mut [u32] { x }",
+        ] {
+            assert!(!has_indexing(&scrub(ok)[0].code), "{ok}");
+        }
+        for bad in ["v[0]", "f()[1]", "a[0][1]"] {
+            assert!(has_indexing(&scrub(bad)[0].code), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,702 @@
+//! Lockdep-style lock-order tracking (ADR-008).
+//!
+//! Every blocking lock in the serving stack is an [`OrderedMutex`] or
+//! [`OrderedRwLock`] carrying a static [`LockRank`] from the single
+//! declared hierarchy below. Debug builds (and release builds with the
+//! `lockcheck` feature) record the per-thread set of held ranks on
+//! every acquisition and panic — with the source locations and
+//! backtraces of BOTH acquisitions — the moment any thread acquires a
+//! lock whose rank is not strictly greater than everything it already
+//! holds. Rank inversion across two threads is how every real deadlock
+//! in this codebase would start, so the entire existing test suite
+//! doubles as a deadlock detector: a violating interleaving does not
+//! need to actually deadlock in CI to be caught, one thread merely has
+//! to *attempt* the inverted order once.
+//!
+//! Release builds without `lockcheck` compile the wrappers to
+//! `#[repr(transparent)]` passthroughs over `std::sync` with
+//! `#[inline]` methods — zero cost on the hot paths.
+//!
+//! Two deliberate policy points:
+//!
+//! - **Same-rank double-acquire panics (for blocking acquisitions).**
+//!   Two locks of equal rank blocking-held by one thread is either a
+//!   self-deadlock (same lock) or an unordered pair (two instances),
+//!   both bugs. Code that needs nested locking declares distinct ranks
+//!   — see the `*Shard` ranks, one per `Sharded` instance type,
+//!   because a stats-shard guard is held across tracer/recorder shard
+//!   folds on the admit path. `try_lock` follows lockdep's trylock
+//!   rule instead: exempt from the check (it cannot block, so it
+//!   cannot close a cycle) but recorded as held — which is how one
+//!   dispatch thread may hold several `ArenaSlot` ring reservations.
+//! - **Poison is absorbed, not propagated.** Every historical call
+//!   site immediately `unwrap()`ed poison into a panic anyway; the
+//!   wrappers recover the inner guard so hot-path modules need no
+//!   per-site `unwrap()` (which `pallas-lint` bans there). A panic
+//!   while holding a lock still unwinds loudly through its own test.
+//!
+//! Condvar waits go through [`LockGuard::wait`] /
+//! [`LockGuard::wait_timeout`]. The rank stays registered for the
+//! whole wait: a parked thread acquires nothing, and on wake it holds
+//! the lock again — exactly the invariant the held-set models.
+
+use std::time::Duration;
+
+/// The declared lock hierarchy, lowest first: a thread may only
+/// acquire a lock of strictly GREATER rank than everything it holds.
+///
+/// The edges that force this order (each is a real held-while-acquired
+/// nesting on a hot path; the full table with rationale is
+/// `docs/ADR-008-correctness-tooling.md`):
+///
+/// - `ArenaSlot < ArenaRelease`: `RingSlot::drop` notifies waiters
+///   under `release_lock` while the slot mutex is still held.
+/// - `ArenaSlot < PoolQueue/PoolLatch/PoolHandles`: a NETFUSE round
+///   holds its ring slot across pack → stage → execute, and execution
+///   fans out through `WorkerPool::scope`.
+/// - `ObsMeta < MetricsShard`: `ObsHub::report` reads the merged
+///   metrics hub while holding the hub's `metrics` registration slot.
+/// - `StatsShard < ObsShard`: `admit`/`route_responses` hold the
+///   ingress-stats shard while folding tracer stamps and recording
+///   flight-recorder events.
+/// - `StatsShard < ReplyQueue`: reject/response frames are pushed to
+///   per-connection reply queues under the stats-shard guard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LockRank {
+    /// `IngressBridge` admission queue (+ its condvar).
+    Bridge,
+    /// `IngressBridge`'s observability-hub registration slot.
+    BridgeObs,
+    /// `PartControl` per-partition command queue.
+    ControlQueue,
+    /// `control::Ticket`/`Ack` one-shot completion cell.
+    Ticket,
+    /// `multi::Topology` routing tables (RwLock).
+    Topology,
+    /// `ObsHub` gauges/queries/rings/metrics slots and the
+    /// `FlightRecorder` last-dump cell.
+    ObsMeta,
+    /// One `ArenaRing` slot (`RoundArena` behind it).
+    ArenaSlot,
+    /// `ArenaRing`'s release wakeup lock (+ condvar).
+    ArenaRelease,
+    /// `WorkerPool` job queue (+ condvar).
+    PoolQueue,
+    /// `pool::Latch` completion counter (+ condvar).
+    PoolLatch,
+    /// `WorkerPool::run_chunked` per-chunk result slots.
+    PoolResult,
+    /// `WorkerPool` join-handle registry.
+    PoolHandles,
+    /// `runtime::Runtime` compiled-module cache.
+    RuntimeCache,
+    /// Mock executor weight-version table (`EchoExecutor`).
+    ModelState,
+    /// `Sharded<IngressStats>` shards.
+    StatsShard,
+    /// `Sharded<ObsCore>` / `Sharded<EventRing>` shards (tracer and
+    /// flight recorder — folded under a held stats-shard guard).
+    ObsShard,
+    /// `Sharded<MetricsCore>` shards (read under `ObsMeta`).
+    MetricsShard,
+    /// `transport::FrameQueue` (reply routing and in-proc transport).
+    ReplyQueue,
+}
+
+#[cfg(any(debug_assertions, feature = "lockcheck"))]
+mod checked {
+    use std::backtrace::Backtrace;
+    use std::cell::RefCell;
+    use std::ops::{Deref, DerefMut};
+    use std::panic::Location;
+    use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, RwLock};
+    use std::time::Duration;
+
+    use super::LockRank;
+
+    struct HeldLock {
+        rank: LockRank,
+        token: u64,
+        location: &'static Location<'static>,
+        backtrace: Backtrace,
+    }
+
+    thread_local! {
+        static HELD: RefCell<(u64, Vec<HeldLock>)> = const { RefCell::new((0, Vec::new())) };
+    }
+
+    /// Register an acquisition of `rank`, panicking on any ordering
+    /// violation against this thread's currently held set. Returns the
+    /// token `release` later removes (0 = thread-local gone, skip).
+    ///
+    /// `blocking` is false for try-acquisitions: lockdep's trylock
+    /// rule. A non-blocking acquire can never complete a deadlock
+    /// cycle (it fails instead of waiting), so it is exempt from the
+    /// ordering check — but it IS recorded, so every later *blocking*
+    /// acquisition is checked against it. This is what lets one thread
+    /// legitimately hold several `ArenaSlot` ring reservations (slot
+    /// acquisition is try-lock-only by construction).
+    fn acquire(rank: LockRank, location: &'static Location<'static>, blocking: bool) -> u64 {
+        let mut violation: Option<String> = None;
+        let token = HELD
+            .try_with(|cell| {
+                let mut held = cell.borrow_mut();
+                if let Some(prior) =
+                    held.1.iter().rev().find(|h| blocking && h.rank >= rank)
+                {
+                    let kind = if prior.rank == rank {
+                        format!("same-rank double-acquire of {rank:?}")
+                    } else {
+                        format!("acquiring {rank:?} above held {:?}", prior.rank)
+                    };
+                    let ranks: Vec<LockRank> = held.1.iter().map(|h| h.rank).collect();
+                    violation = Some(format!(
+                        "lock-order violation: {kind}\n  this acquisition: {location}\n  \
+                         conflicting hold: {:?} acquired at {}\n  held ranks: {ranks:?}\n  \
+                         backtrace of the conflicting hold:\n{}\n  \
+                         backtrace of this acquisition:\n{}\n  \
+                         (run with RUST_BACKTRACE=1 for resolved backtraces)",
+                        prior.rank,
+                        prior.location,
+                        prior.backtrace,
+                        Backtrace::capture(),
+                    ));
+                    return 0;
+                }
+                held.0 += 1;
+                let token = held.0;
+                held.1.push(HeldLock {
+                    rank,
+                    token,
+                    location,
+                    backtrace: Backtrace::capture(),
+                });
+                token
+            })
+            .unwrap_or(0);
+        if let Some(msg) = violation {
+            panic!("{msg}");
+        }
+        token
+    }
+
+    fn release(token: u64) {
+        if token == 0 {
+            return;
+        }
+        let _ = HELD.try_with(|cell| {
+            let mut held = cell.borrow_mut();
+            if let Some(i) = held.1.iter().rposition(|h| h.token == token) {
+                held.1.remove(i);
+            }
+        });
+    }
+
+    /// Rank-checked mutex (debug/`lockcheck` form; see module doc).
+    pub struct OrderedMutex<T: ?Sized> {
+        rank: LockRank,
+        inner: Mutex<T>,
+    }
+
+    /// Guard of an [`OrderedMutex`]; releases the rank on drop.
+    pub struct LockGuard<'a, T: ?Sized> {
+        // `Option` so condvar waits can move the std guard out and
+        // back without touching the rank registration.
+        inner: Option<MutexGuard<'a, T>>,
+        token: u64,
+    }
+
+    impl<T> OrderedMutex<T> {
+        pub fn new(rank: LockRank, value: T) -> OrderedMutex<T> {
+            OrderedMutex { rank, inner: Mutex::new(value) }
+        }
+
+        pub fn into_inner(self) -> T {
+            self.inner.into_inner().unwrap_or_else(PoisonError::into_inner)
+        }
+    }
+
+    impl<T: ?Sized> OrderedMutex<T> {
+        #[track_caller]
+        pub fn lock(&self) -> LockGuard<'_, T> {
+            let token = acquire(self.rank, Location::caller(), true);
+            let inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            LockGuard { inner: Some(inner), token }
+        }
+
+        /// Non-blocking acquire. `None` when contended. Per lockdep's
+        /// trylock rule this is exempt from the ordering check (it
+        /// cannot block, so it cannot close a deadlock cycle) but the
+        /// hold is recorded: later blocking acquisitions are checked
+        /// against it like any other held rank.
+        #[track_caller]
+        pub fn try_lock(&self) -> Option<LockGuard<'_, T>> {
+            match self.inner.try_lock() {
+                Ok(inner) => {
+                    let token = acquire(self.rank, Location::caller(), false);
+                    Some(LockGuard { inner: Some(inner), token })
+                }
+                Err(std::sync::TryLockError::Poisoned(p)) => {
+                    let token = acquire(self.rank, Location::caller(), false);
+                    Some(LockGuard { inner: Some(p.into_inner()), token })
+                }
+                Err(std::sync::TryLockError::WouldBlock) => None,
+            }
+        }
+
+        pub fn get_mut(&mut self) -> &mut T {
+            self.inner.get_mut().unwrap_or_else(PoisonError::into_inner)
+        }
+    }
+
+    impl<'a, T: ?Sized> LockGuard<'a, T> {
+        fn std(&self) -> &MutexGuard<'a, T> {
+            self.inner.as_ref().expect("guard emptied mid-wait")
+        }
+
+        fn std_mut(&mut self) -> &mut MutexGuard<'a, T> {
+            self.inner.as_mut().expect("guard emptied mid-wait")
+        }
+
+        /// Block on `cv`, releasing the mutex while parked and
+        /// re-holding it on wake. The rank stays registered across the
+        /// wait: a parked thread acquires nothing, so the held-set
+        /// stays truthful for everything this thread does next.
+        pub fn wait(mut self, cv: &Condvar) -> LockGuard<'a, T> {
+            let std = self.inner.take().expect("guard emptied mid-wait");
+            let std = cv.wait(std).unwrap_or_else(PoisonError::into_inner);
+            self.inner = Some(std);
+            self
+        }
+
+        /// [`LockGuard::wait`] with a timeout; the bool is "timed out".
+        pub fn wait_timeout(mut self, cv: &Condvar, dur: Duration) -> (LockGuard<'a, T>, bool) {
+            let std = self.inner.take().expect("guard emptied mid-wait");
+            let (std, res) = cv
+                .wait_timeout(std, dur)
+                .unwrap_or_else(PoisonError::into_inner);
+            self.inner = Some(std);
+            (self, res.timed_out())
+        }
+    }
+
+    impl<T: ?Sized> Deref for LockGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.std()
+        }
+    }
+
+    impl<T: ?Sized> DerefMut for LockGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.std_mut()
+        }
+    }
+
+    impl<T: ?Sized> Drop for LockGuard<'_, T> {
+        fn drop(&mut self) {
+            release(self.token);
+        }
+    }
+
+    /// Rank-checked RwLock (debug/`lockcheck` form). Reads are tracked
+    /// with the same strictness as writes: a read held while another
+    /// same-or-lower rank is acquired is still an ordering bug (a
+    /// writer queued between two readers deadlocks them).
+    pub struct OrderedRwLock<T: ?Sized> {
+        rank: LockRank,
+        inner: RwLock<T>,
+    }
+
+    pub struct ReadGuard<'a, T: ?Sized> {
+        inner: std::sync::RwLockReadGuard<'a, T>,
+        token: u64,
+    }
+
+    pub struct WriteGuard<'a, T: ?Sized> {
+        inner: std::sync::RwLockWriteGuard<'a, T>,
+        token: u64,
+    }
+
+    impl<T> OrderedRwLock<T> {
+        pub fn new(rank: LockRank, value: T) -> OrderedRwLock<T> {
+            OrderedRwLock { rank, inner: RwLock::new(value) }
+        }
+    }
+
+    impl<T: ?Sized> OrderedRwLock<T> {
+        #[track_caller]
+        pub fn read(&self) -> ReadGuard<'_, T> {
+            let token = acquire(self.rank, Location::caller(), true);
+            let inner = self.inner.read().unwrap_or_else(PoisonError::into_inner);
+            ReadGuard { inner, token }
+        }
+
+        #[track_caller]
+        pub fn write(&self) -> WriteGuard<'_, T> {
+            let token = acquire(self.rank, Location::caller(), true);
+            let inner = self.inner.write().unwrap_or_else(PoisonError::into_inner);
+            WriteGuard { inner, token }
+        }
+    }
+
+    impl<T: ?Sized> Deref for ReadGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            &self.inner
+        }
+    }
+
+    impl<T: ?Sized> Drop for ReadGuard<'_, T> {
+        fn drop(&mut self) {
+            release(self.token);
+        }
+    }
+
+    impl<T: ?Sized> Deref for WriteGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            &self.inner
+        }
+    }
+
+    impl<T: ?Sized> DerefMut for WriteGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            &mut self.inner
+        }
+    }
+
+    impl<T: ?Sized> Drop for WriteGuard<'_, T> {
+        fn drop(&mut self) {
+            release(self.token);
+        }
+    }
+}
+
+#[cfg(not(any(debug_assertions, feature = "lockcheck")))]
+mod passthrough {
+    use std::ops::{Deref, DerefMut};
+    use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, RwLock};
+    use std::time::Duration;
+
+    use super::LockRank;
+
+    /// Release passthrough: the rank is compile-time documentation
+    /// only, the layout and codegen are `std::sync::Mutex`'s.
+    #[repr(transparent)]
+    pub struct OrderedMutex<T: ?Sized> {
+        inner: Mutex<T>,
+    }
+
+    pub struct LockGuard<'a, T: ?Sized> {
+        inner: MutexGuard<'a, T>,
+    }
+
+    impl<T> OrderedMutex<T> {
+        #[inline]
+        pub fn new(rank: LockRank, value: T) -> OrderedMutex<T> {
+            let _ = rank;
+            OrderedMutex { inner: Mutex::new(value) }
+        }
+
+        #[inline]
+        pub fn into_inner(self) -> T {
+            self.inner.into_inner().unwrap_or_else(PoisonError::into_inner)
+        }
+    }
+
+    impl<T: ?Sized> OrderedMutex<T> {
+        #[inline]
+        pub fn lock(&self) -> LockGuard<'_, T> {
+            LockGuard { inner: self.inner.lock().unwrap_or_else(PoisonError::into_inner) }
+        }
+
+        #[inline]
+        pub fn try_lock(&self) -> Option<LockGuard<'_, T>> {
+            match self.inner.try_lock() {
+                Ok(inner) => Some(LockGuard { inner }),
+                Err(std::sync::TryLockError::Poisoned(p)) => {
+                    Some(LockGuard { inner: p.into_inner() })
+                }
+                Err(std::sync::TryLockError::WouldBlock) => None,
+            }
+        }
+
+        #[inline]
+        pub fn get_mut(&mut self) -> &mut T {
+            self.inner.get_mut().unwrap_or_else(PoisonError::into_inner)
+        }
+    }
+
+    impl<'a, T: ?Sized> LockGuard<'a, T> {
+        #[inline]
+        pub fn wait(self, cv: &Condvar) -> LockGuard<'a, T> {
+            LockGuard { inner: cv.wait(self.inner).unwrap_or_else(PoisonError::into_inner) }
+        }
+
+        #[inline]
+        pub fn wait_timeout(self, cv: &Condvar, dur: Duration) -> (LockGuard<'a, T>, bool) {
+            let (inner, res) = cv
+                .wait_timeout(self.inner, dur)
+                .unwrap_or_else(PoisonError::into_inner);
+            (LockGuard { inner }, res.timed_out())
+        }
+    }
+
+    impl<T: ?Sized> Deref for LockGuard<'_, T> {
+        type Target = T;
+        #[inline]
+        fn deref(&self) -> &T {
+            &self.inner
+        }
+    }
+
+    impl<T: ?Sized> DerefMut for LockGuard<'_, T> {
+        #[inline]
+        fn deref_mut(&mut self) -> &mut T {
+            &mut self.inner
+        }
+    }
+
+    /// Release passthrough over `std::sync::RwLock`.
+    #[repr(transparent)]
+    pub struct OrderedRwLock<T: ?Sized> {
+        inner: RwLock<T>,
+    }
+
+    pub struct ReadGuard<'a, T: ?Sized> {
+        inner: std::sync::RwLockReadGuard<'a, T>,
+    }
+
+    pub struct WriteGuard<'a, T: ?Sized> {
+        inner: std::sync::RwLockWriteGuard<'a, T>,
+    }
+
+    impl<T> OrderedRwLock<T> {
+        #[inline]
+        pub fn new(rank: LockRank, value: T) -> OrderedRwLock<T> {
+            let _ = rank;
+            OrderedRwLock { inner: RwLock::new(value) }
+        }
+    }
+
+    impl<T: ?Sized> OrderedRwLock<T> {
+        #[inline]
+        pub fn read(&self) -> ReadGuard<'_, T> {
+            ReadGuard { inner: self.inner.read().unwrap_or_else(PoisonError::into_inner) }
+        }
+
+        #[inline]
+        pub fn write(&self) -> WriteGuard<'_, T> {
+            WriteGuard { inner: self.inner.write().unwrap_or_else(PoisonError::into_inner) }
+        }
+    }
+
+    impl<T: ?Sized> Deref for ReadGuard<'_, T> {
+        type Target = T;
+        #[inline]
+        fn deref(&self) -> &T {
+            &self.inner
+        }
+    }
+
+    impl<T: ?Sized> Deref for WriteGuard<'_, T> {
+        type Target = T;
+        #[inline]
+        fn deref(&self) -> &T {
+            &self.inner
+        }
+    }
+
+    impl<T: ?Sized> DerefMut for WriteGuard<'_, T> {
+        #[inline]
+        fn deref_mut(&mut self) -> &mut T {
+            &mut self.inner
+        }
+    }
+}
+
+#[cfg(any(debug_assertions, feature = "lockcheck"))]
+pub use checked::{LockGuard, OrderedMutex, OrderedRwLock, ReadGuard, WriteGuard};
+#[cfg(not(any(debug_assertions, feature = "lockcheck")))]
+pub use passthrough::{LockGuard, OrderedMutex, OrderedRwLock, ReadGuard, WriteGuard};
+
+/// Compile-time check that the passthrough really is transparent: the
+/// release wrapper must add nothing to `std::sync::Mutex`'s layout.
+#[cfg(not(any(debug_assertions, feature = "lockcheck")))]
+const _: () = {
+    assert!(
+        std::mem::size_of::<OrderedMutex<u64>>()
+            == std::mem::size_of::<std::sync::Mutex<u64>>()
+    );
+    assert!(
+        std::mem::size_of::<OrderedRwLock<u64>>()
+            == std::mem::size_of::<std::sync::RwLock<u64>>()
+    );
+};
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Condvar;
+    use std::time::Duration;
+
+    use super::{LockRank, OrderedMutex, OrderedRwLock};
+
+    #[test]
+    fn in_order_acquisition_is_clean() {
+        let low = OrderedMutex::new(LockRank::Bridge, 1u32);
+        let high = OrderedMutex::new(LockRank::StatsShard, 2u32);
+        let a = low.lock();
+        let b = high.lock();
+        assert_eq!(*a + *b, 3);
+        drop(b);
+        drop(a);
+        // and again, proving release really clears the held set
+        let b = high.lock();
+        drop(b);
+        let a = low.lock();
+        drop(a);
+    }
+
+    #[test]
+    fn lower_rank_is_fine_once_the_higher_guard_dropped() {
+        let low = OrderedMutex::new(LockRank::Bridge, ());
+        let high = OrderedMutex::new(LockRank::ReplyQueue, ());
+        drop(high.lock());
+        drop(low.lock()); // no longer held: not an inversion
+    }
+
+    #[test]
+    fn guards_may_release_out_of_order() {
+        let a = OrderedMutex::new(LockRank::Bridge, ());
+        let b = OrderedMutex::new(LockRank::Topology, ());
+        let c = OrderedMutex::new(LockRank::ReplyQueue, ());
+        let ga = a.lock();
+        let gb = b.lock();
+        let gc = c.lock();
+        drop(gb); // middle first: the held-set removal is by token
+        drop(ga);
+        drop(gc);
+        drop(a.lock());
+    }
+
+    #[test]
+    fn try_lock_contended_returns_none() {
+        let m = OrderedMutex::new(LockRank::ArenaSlot, 7u32);
+        let held = m.lock();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                assert!(m.try_lock().is_none(), "contended try_lock must not block");
+            });
+        });
+        drop(held);
+        let g = m.try_lock().expect("uncontended try_lock succeeds");
+        assert_eq!(*g, 7);
+    }
+
+    #[test]
+    fn try_lock_may_stack_same_rank_holds() {
+        // lockdep trylock rule: a non-blocking acquire cannot close a
+        // deadlock cycle, so stacking ring-slot reservations is legal
+        let a = OrderedMutex::new(LockRank::ArenaSlot, ());
+        let b = OrderedMutex::new(LockRank::ArenaSlot, ());
+        let ga = a.try_lock().expect("uncontended");
+        let gb = b.try_lock().expect("uncontended");
+        drop(ga);
+        drop(gb);
+    }
+
+    #[test]
+    fn threads_have_independent_held_sets() {
+        let high = OrderedMutex::new(LockRank::ReplyQueue, ());
+        let low = OrderedMutex::new(LockRank::Bridge, ());
+        let g = high.lock();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // this thread holds nothing: low rank is fine here
+                drop(low.lock());
+            });
+        });
+        drop(g);
+    }
+
+    #[test]
+    fn condvar_wait_timeout_returns_a_live_guard() {
+        let m = OrderedMutex::new(LockRank::PoolQueue, 5u32);
+        let cv = Condvar::new();
+        let g = m.lock();
+        let (mut g, timed_out) = g.wait_timeout(&cv, Duration::from_millis(1));
+        assert!(timed_out);
+        *g += 1;
+        assert_eq!(*g, 6);
+        drop(g);
+        // the rank released cleanly after the round-trip through wait
+        drop(m.lock());
+    }
+
+    #[test]
+    fn rwlock_read_and_write_are_tracked_in_order() {
+        let topo = OrderedRwLock::new(LockRank::Topology, 1u32);
+        let shard = OrderedMutex::new(LockRank::StatsShard, ());
+        {
+            let r = topo.read();
+            let _s = shard.lock(); // Topology < StatsShard: fine
+            assert_eq!(*r, 1);
+        }
+        {
+            let mut w = topo.write();
+            *w = 2;
+        }
+        assert_eq!(*topo.read(), 2);
+    }
+
+    #[test]
+    fn into_inner_and_get_mut_bypass_locking() {
+        let mut m = OrderedMutex::new(LockRank::PoolResult, 3u32);
+        *m.get_mut() += 1;
+        assert_eq!(m.into_inner(), 4);
+    }
+
+    // The negative tests only exist where the checker is compiled in:
+    // a release build without `lockcheck` is a pure passthrough and
+    // must NOT panic (that is the point of the cfg split).
+    #[cfg(any(debug_assertions, feature = "lockcheck"))]
+    #[test]
+    #[should_panic(expected = "lock-order violation")]
+    fn detects_two_lock_rank_inversion() {
+        let low = OrderedMutex::new(LockRank::Bridge, ());
+        let high = OrderedMutex::new(LockRank::ArenaSlot, ());
+        let _g = high.lock();
+        let _bad = low.lock(); // Bridge under ArenaSlot: inverted
+    }
+
+    #[cfg(any(debug_assertions, feature = "lockcheck"))]
+    #[test]
+    #[should_panic(expected = "same-rank double-acquire")]
+    fn detects_same_rank_double_acquire() {
+        let a = OrderedMutex::new(LockRank::ArenaSlot, ());
+        let b = OrderedMutex::new(LockRank::ArenaSlot, ());
+        let _g = a.lock();
+        let _bad = b.lock(); // two ArenaSlot holds on one thread
+    }
+
+    #[cfg(any(debug_assertions, feature = "lockcheck"))]
+    #[test]
+    #[should_panic(expected = "lock-order violation")]
+    fn blocking_acquires_are_checked_against_try_holds() {
+        let slot = OrderedMutex::new(LockRank::ArenaSlot, ());
+        let bridge = OrderedMutex::new(LockRank::Bridge, ());
+        let _g = slot.try_lock().expect("uncontended");
+        let _bad = bridge.lock(); // Bridge under a try-held ArenaSlot
+    }
+
+    #[cfg(any(debug_assertions, feature = "lockcheck"))]
+    #[test]
+    #[should_panic(expected = "lock-order violation")]
+    fn detects_inversion_through_rwlock_reads() {
+        let topo = OrderedRwLock::new(LockRank::Topology, ());
+        let ctrl = OrderedMutex::new(LockRank::ControlQueue, ());
+        let _r = topo.read();
+        let _bad = ctrl.lock(); // ControlQueue under Topology: inverted
+    }
+}

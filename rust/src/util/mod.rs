@@ -14,3 +14,5 @@ pub mod bench;
 pub mod simd;
 pub mod shard;
 pub mod hist;
+pub mod lint;
+pub mod lock;

@@ -18,21 +18,29 @@
 //! parallel.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::Arc;
+
+use crate::util::lock::{LockGuard, LockRank, OrderedMutex};
 
 /// An accumulator whose per-shard states can be folded into one.
 /// Merging must commute with recording: merging shards A and B must
 /// equal a single accumulator that saw both record streams (in any
 /// interleaving) — that is what makes merge-on-read exact.
 pub trait Shardable: Default {
+    /// Lock rank every shard of this accumulator type acquires at
+    /// (ADR-008). Distinct `Sharded` instance types that nest — the
+    /// admit path folds tracer and recorder shards while its
+    /// stats-shard guard is held — override this so the lock tracker
+    /// sees the real hierarchy instead of a same-rank double-acquire.
+    const RANK: LockRank = LockRank::StatsShard;
+
     fn merge_from(&mut self, other: &Self);
 }
 
 /// Pad each shard to its own cache line so two threads recording into
 /// adjacent shards never false-share.
 #[repr(align(64))]
-#[derive(Default)]
-struct CacheLine<T>(Mutex<T>);
+struct CacheLine<T>(OrderedMutex<T>);
 
 /// A fixed set of cache-line-padded shards of `T`.
 pub struct Sharded<T> {
@@ -44,7 +52,8 @@ impl<T: Shardable> Sharded<T> {
     /// `shards` is clamped to at least 1.
     pub fn new(shards: usize) -> Self {
         let n = shards.max(1);
-        Sharded { shards: (0..n).map(|_| CacheLine::default()).collect(), next: AtomicUsize::new(0) }
+        let shards = (0..n).map(|_| CacheLine(OrderedMutex::new(T::RANK, T::default()))).collect();
+        Sharded { shards, next: AtomicUsize::new(0) }
     }
 
     pub fn shards(&self) -> usize {
@@ -64,7 +73,7 @@ impl<T: Shardable> Sharded<T> {
     pub fn read(&self) -> T {
         let mut out = T::default();
         for s in &self.shards {
-            out.merge_from(&s.0.lock().unwrap());
+            out.merge_from(&s.0.lock());
         }
         out
     }
@@ -79,8 +88,8 @@ pub struct ShardHandle<T> {
 impl<T> ShardHandle<T> {
     /// Lock this handle's shard. Uncontended unless handles share a
     /// shard (registration wrapped) or a reader is mid-merge on it.
-    pub fn lock(&self) -> MutexGuard<'_, T> {
-        self.shared.shards[self.index].0.lock().unwrap()
+    pub fn lock(&self) -> LockGuard<'_, T> {
+        self.shared.shards[self.index].0.lock()
     }
 
     pub fn index(&self) -> usize {

@@ -455,6 +455,7 @@ mod x86 {
         copy_tail(dst, src, i, n);
     }
 
+    /// SAFETY: as [`copy_avx2`] — `n` valid elements, no overlap.
     #[target_feature(enable = "sse2")]
     pub unsafe fn copy_sse2(dst: *mut f32, src: *const f32, n: usize) {
         let mut i = 0usize;
@@ -472,6 +473,7 @@ mod x86 {
         copy_tail(dst, src, i, n);
     }
 
+    /// SAFETY: `dst` valid for `n` f32 writes; any alignment.
     #[target_feature(enable = "avx2")]
     pub unsafe fn fill_avx2(dst: *mut f32, n: usize) {
         let z = _mm256_setzero_ps();
@@ -486,6 +488,7 @@ mod x86 {
         }
     }
 
+    /// SAFETY: `dst` valid for `n` f32 writes; any alignment.
     #[target_feature(enable = "sse2")]
     pub unsafe fn fill_sse2(dst: *mut f32, n: usize) {
         let z = _mm_setzero_ps();
@@ -500,6 +503,7 @@ mod x86 {
         }
     }
 
+    /// SAFETY: `n` valid bytes behind each pointer, no overlap.
     #[target_feature(enable = "avx2")]
     pub unsafe fn copy_bytes_avx2(dst: *mut u8, src: *const u8, n: usize) {
         let mut i = 0usize;
@@ -514,6 +518,7 @@ mod x86 {
         }
     }
 
+    /// SAFETY: `n` valid bytes behind each pointer, no overlap.
     #[target_feature(enable = "sse2")]
     pub unsafe fn copy_bytes_sse2(dst: *mut u8, src: *const u8, n: usize) {
         let mut i = 0usize;
@@ -557,6 +562,7 @@ mod arm {
         copy_tail(dst, src, i, n);
     }
 
+    /// SAFETY: `dst` valid for `n` f32 writes; any alignment.
     #[target_feature(enable = "neon")]
     pub unsafe fn fill_neon(dst: *mut f32, n: usize) {
         let z = vdupq_n_f32(0.0);
@@ -571,6 +577,7 @@ mod arm {
         }
     }
 
+    /// SAFETY: `n` valid bytes behind each pointer, no overlap.
     #[target_feature(enable = "neon")]
     pub unsafe fn copy_bytes_neon(dst: *mut u8, src: *const u8, n: usize) {
         let mut i = 0usize;

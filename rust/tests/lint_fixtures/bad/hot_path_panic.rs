@@ -1,0 +1,14 @@
+// BAD fixture: linted under a hot-path logical path
+// (coordinator/multi.rs) — unwrap, indexing, and expect each flag.
+
+pub fn head(xs: &[u32]) -> u32 {
+    *xs.first().unwrap()
+}
+
+pub fn pick(xs: &[u32], i: usize) -> u32 {
+    xs[i]
+}
+
+pub fn must(xs: &[u32]) -> u32 {
+    xs.iter().copied().max().expect("nonempty")
+}

@@ -1,0 +1,13 @@
+// BAD fixture: a `#[target_feature]` kernel called directly from a
+// module that is not util/simd.rs — no feature dispatch in sight.
+
+/// SAFETY: `dst` must be valid for `n` writes.
+#[target_feature(enable = "avx2")]
+unsafe fn fill_fast(dst: *mut f32, n: usize) {
+    let _ = (dst, n);
+}
+
+pub fn fill(dst: &mut [f32]) {
+    // SAFETY: pointer/len come from the slice.
+    unsafe { fill_fast(dst.as_mut_ptr(), dst.len()) }
+}

@@ -1,0 +1,8 @@
+// BAD fixture: raw std::sync lock named outside util/lock.rs — this
+// bypasses the lockdep rank tracker entirely.
+
+use std::sync::Mutex;
+
+pub struct Counter {
+    inner: Mutex<u64>,
+}

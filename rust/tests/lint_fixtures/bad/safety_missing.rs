@@ -1,0 +1,4 @@
+// BAD fixture: `unsafe` with no SAFETY comment anywhere near it.
+pub fn read_first(xs: &[f32]) -> f32 {
+    unsafe { *xs.as_ptr() }
+}

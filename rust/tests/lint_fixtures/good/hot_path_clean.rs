@@ -1,0 +1,14 @@
+// GOOD fixture: hot-path code that either avoids panicking constructs
+// or carries a reasoned, fn-scoped LINT-ALLOW.
+
+pub fn head_or_zero(xs: &[u32]) -> u32 {
+    xs.first().copied().unwrap_or(0)
+}
+
+// LINT-ALLOW(index is bounds-checked at entry)
+pub fn checked_pick(xs: &[u32], i: usize) -> u32 {
+    if i >= xs.len() {
+        return 0;
+    }
+    xs[i]
+}

@@ -1,0 +1,16 @@
+// GOOD fixture: the same kernel + call shape is fine when it lives in
+// util/simd.rs (the tests lint this file under that logical path),
+// because that module owns the runtime CPU-feature dispatch.
+
+/// SAFETY: `dst` must be valid for `n` writes.
+#[target_feature(enable = "avx2")]
+unsafe fn fill_fast(dst: *mut f32, n: usize) {
+    let _ = (dst, n);
+}
+
+pub fn fill(dst: &mut [f32]) {
+    if is_x86_feature_detected!("avx2") {
+        // SAFETY: avx2 presence checked above; pointer/len from the slice.
+        unsafe { fill_fast(dst.as_mut_ptr(), dst.len()) }
+    }
+}

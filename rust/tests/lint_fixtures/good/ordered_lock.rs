@@ -1,0 +1,20 @@
+// GOOD fixture: the rank-checked wrappers are the sanctioned way to
+// lock; their names do not collide with the banned raw identifiers.
+
+use crate::util::lock::{LockRank, OrderedMutex};
+
+pub struct Counter {
+    inner: OrderedMutex<u64>,
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter { inner: OrderedMutex::new(LockRank::StatsShard, 0) }
+    }
+
+    pub fn bump(&self) -> u64 {
+        let mut v = self.inner.lock();
+        *v += 1;
+        *v
+    }
+}

@@ -1,0 +1,12 @@
+// GOOD fixture: every `unsafe` carries a SAFETY note in the contiguous
+// comment/attribute block directly above it (doc comments count).
+
+/// Copies `n` floats.
+///
+/// SAFETY: caller guarantees `dst` and `src` are valid for `n`
+/// elements and do not overlap.
+#[inline]
+pub unsafe fn copy(dst: *mut f32, src: *const f32, n: usize) {
+    // SAFETY: forwarded caller contract.
+    unsafe { std::ptr::copy_nonoverlapping(src, dst, n) }
+}

@@ -1,0 +1,95 @@
+//! Self-tests for the in-repo invariant lint (ADR-008): every rule has
+//! at least one failing and one passing fixture under
+//! `tests/lint_fixtures/` (cargo never compiles those — only the lint
+//! reads them), and the real `src/` tree must come back clean, which is
+//! the same gate CI enforces via the `pallas-lint` binary.
+
+use std::fs;
+use std::path::Path;
+
+use netfuse::util::lint::{
+    self, Finding, RULE_HOT_PANIC, RULE_KERNEL, RULE_RAW_LOCK, RULE_SAFETY,
+};
+
+fn fixture(rel: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures").join(rel);
+    fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+/// Lint one fixture under a chosen logical path — the path-sensitive
+/// rules (hot-path set, util/simd.rs, util/lock.rs) key off suffixes,
+/// so the test decides which regime each fixture is judged under.
+fn lint_as(logical: &str, src: String) -> Vec<Finding> {
+    lint::lint_sources(&[(logical.to_string(), src)])
+}
+
+#[test]
+fn every_bad_fixture_is_flagged_with_its_rule() {
+    let cases = [
+        ("bad/safety_missing.rs", "src/x.rs", RULE_SAFETY, 1),
+        ("bad/kernel_direct_call.rs", "src/coordinator/other.rs", RULE_KERNEL, 1),
+        ("bad/raw_mutex.rs", "src/x.rs", RULE_RAW_LOCK, 2),
+        ("bad/hot_path_panic.rs", "src/coordinator/multi.rs", RULE_HOT_PANIC, 3),
+    ];
+    for (file, logical, rule, want) in cases {
+        let findings = lint_as(logical, fixture(file));
+        assert_eq!(findings.len(), want, "{file}: {findings:?}");
+        assert!(findings.iter().all(|f| f.rule == rule), "{file}: {findings:?}");
+        assert!(findings.iter().all(|f| f.line > 0), "{file}: {findings:?}");
+    }
+}
+
+#[test]
+fn every_good_fixture_passes_clean() {
+    let cases = [
+        ("good/safety_comment.rs", "src/x.rs"),
+        ("good/kernel_dispatch.rs", "src/util/simd.rs"),
+        ("good/ordered_lock.rs", "src/x.rs"),
+        ("good/hot_path_clean.rs", "src/ingress/qos.rs"),
+    ];
+    for (file, logical) in cases {
+        let findings = lint_as(logical, fixture(file));
+        assert!(findings.is_empty(), "{file}: {findings:?}");
+    }
+}
+
+#[test]
+fn hot_path_fixture_is_clean_outside_the_hot_set() {
+    // The same panicking constructs are fine in a non-hot module.
+    let findings = lint_as("src/merge/mod.rs", fixture("bad/hot_path_panic.rs"));
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn kernel_fixture_is_clean_inside_simd_home() {
+    let findings = lint_as("src/util/simd.rs", fixture("bad/kernel_direct_call.rs"));
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn raw_lock_fixture_is_clean_inside_lock_home() {
+    let findings = lint_as("src/util/lock.rs", fixture("bad/raw_mutex.rs"));
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn findings_render_with_path_line_and_rule() {
+    let findings = lint_as("src/x.rs", "fn f() {\n    unsafe { g() }\n}\n".to_string());
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    let s = findings[0].render();
+    assert!(s.contains("src/x.rs:2") && s.contains(RULE_SAFETY), "{s}");
+}
+
+/// The acceptance gate: `pallas-lint` must be clean on the real tree.
+/// CI runs the binary before the build; this test keeps `cargo test`
+/// equivalent to that gate.
+#[test]
+fn the_real_src_tree_is_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let findings = lint::lint_tree(&src).expect("lint walks src");
+    assert!(
+        findings.is_empty(),
+        "pallas-lint findings:\n{}",
+        findings.iter().map(Finding::render).collect::<Vec<_>>().join("\n")
+    );
+}
